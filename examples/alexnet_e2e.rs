@@ -1,0 +1,74 @@
+//! End-to-end driver — the repo's headline demo.
+//!
+//! Two halves:
+//!
+//! 1. **Functional**: run the 8-layer TinyCNN (all of Table I's shape
+//!    classes at toy scale) through the full stack — inputs → L3
+//!    coordinator → clock-accurate engine → requantize → … → logits —
+//!    and verify the logits *bit-exactly* against the AOT-lowered
+//!    JAX/Pallas artifact executed through PJRT.
+//! 2. **Performance**: evaluate the three benchmark CNNs (AlexNet,
+//!    VGG-16, ResNet-50) through the analytical model and print the
+//!    paper-vs-reproduced Table V rows.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example alexnet_e2e
+//! ```
+
+use std::path::Path;
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::tiny_cnn_pipeline;
+use kraken::networks::paper_networks;
+use kraken::perf::PerfModel;
+use kraken::runtime::GoldenRunner;
+use kraken::sim::Engine;
+
+fn main() {
+    // ---- functional half -------------------------------------------------
+    println!("== functional: TinyCNN through L3 coordinator + clock-accurate engine ==");
+    let runner = GoldenRunner::new(Path::new("artifacts"))
+        .expect("artifacts/ missing — run `make artifacts`");
+    let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
+
+    let engine = Engine::new(KrakenConfig::paper(), 8);
+    let mut pipeline = tiny_cnn_pipeline(engine);
+    let report = pipeline.run(&x);
+
+    println!("  JAX/Pallas logits : {golden_logits:?}");
+    println!("  simulator logits  : {:?}", report.logits);
+    assert_eq!(report.logits, golden_logits, "logits must be bit-exact");
+    println!("  ✓ bit-exact across JAX/Pallas (PJRT) and the simulator");
+    println!(
+        "  engine: {} clocks → {:.3} ms modeled; DRAM {} words; reconfigs {}",
+        report.total_clocks,
+        report.modeled_ms,
+        report.counters.dram_total(),
+        report.counters.reconfigs
+    );
+
+    // ---- performance half -------------------------------------------------
+    println!("\n== performance: benchmark CNNs on Kraken 7×96 (Table V rows) ==");
+    let model = PerfModel::paper();
+    let paper = [
+        ("AlexNet", 77.2, 336.6, 414.8),
+        ("VGG-16", 96.5, 17.5, 518.7),
+        ("ResNet-50", 88.3, 64.2, 474.9),
+    ];
+    for (net, p) in paper_networks().iter().zip(paper) {
+        let m = model.conv_metrics(net);
+        println!(
+            "  {:<10} ℰ {:.1}% (paper {:.1})   fps {:.1} (paper {:.1})   Gops {:.1} (paper {:.1})",
+            net.name,
+            m.efficiency * 100.0,
+            p.1,
+            m.fps,
+            p.2,
+            m.gops,
+            p.3
+        );
+        assert!((m.efficiency * 100.0 - p.1).abs() < 1.0);
+        assert!((m.fps - p.2).abs() / p.2 < 0.01);
+    }
+    println!("\nall end-to-end checks passed.");
+}

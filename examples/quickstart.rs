@@ -1,0 +1,59 @@
+//! Quickstart: map one convolutional layer onto Kraken, run it through
+//! the clock-accurate simulator, and check every claim the analytical
+//! model makes about it — in under a second.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use kraken::arch::KrakenConfig;
+use kraken::layers::{KrakenLayerParams, Layer};
+use kraken::perf::{layer_bandwidth, PerfModel};
+use kraken::quant::QParams;
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::{conv2d_same_i8, Tensor4};
+
+fn main() {
+    // A VGG-class 3×3 layer, toy-sized so the clock-accurate simulator
+    // finishes instantly.
+    let layer = Layer::conv("demo", 1, 28, 28, 3, 3, 1, 1, 16, 32);
+    let cfg = KrakenConfig::paper(); // R×C = 7×96
+
+    // 1. Static mapping (§III-B, eqs. (5)–(10)).
+    let p = KrakenLayerParams::derive(&cfg, &layer);
+    println!("layer {}: {}×{}×{} → K{}S{} → {} output ch", layer.name, layer.h, layer.w, layer.ci, layer.kh, layer.sh, layer.co);
+    println!("  elastic groups: G={} cores ×{} groups ({} idle cores)", p.g, p.e, p.idle_cores);
+    println!("  schedule: L={} row blocks, T={} iterations, q_kc={} clocks/column", p.l, p.t, p.q_kc);
+    println!("  eq. (17) clock count: {}", p.q);
+
+    // 2. Clock-accurate simulation with random int8 data.
+    let x = Tensor4::random([1, 28, 28, 16], 1);
+    let k = Tensor4::random([3, 3, 16, 32], 2);
+    let mut engine = Engine::new(cfg.clone(), 8);
+    let out = engine.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+    println!("\nsimulated: {} clocks (analytical said {})", out.clocks, p.q);
+    assert_eq!(out.clocks, p.q, "simulator must match eq. (17) exactly");
+
+    // 3. Functional check against the direct-form reference.
+    let want = conv2d_same_i8(&x, &k, 1, 1);
+    assert_eq!(out.y_acc, want, "bit-exact outputs");
+    println!("outputs bit-exact vs direct-form convolution ✓");
+
+    // 4. The §V metrics for this layer.
+    let model = PerfModel::paper();
+    let m = model.layer(&layer);
+    println!("\n§V metrics:");
+    println!("  performance efficiency ℰ_j = {:.1} %", m.efficiency * 100.0);
+    println!("  DRAM accesses: X̂ {} + K̂ {} + Ŷ {} = {}", m.m_x_hat, m.m_k_hat, m.m_y_hat, m.m_hat());
+    println!("  arithmetic intensity: {:.1} ops/access", m.ai());
+    let c = &out.counters;
+    assert_eq!(c.dram_x_reads, m.m_x_hat);
+    assert_eq!(c.dram_k_reads, m.m_k_hat);
+    assert_eq!(c.dram_y_writes, m.m_y_hat);
+    println!("  simulator counters match eq. (20) exactly ✓");
+
+    // 5. Bandwidth at the 400 MHz operating point (§V-E).
+    let bw = layer_bandwidth(&cfg, &layer);
+    println!("  bandwidth: {:.1} B/clk = {:.1} GB/s @400 MHz (LPDDR4 budget 25.6)",
+        bw.total(), bw.bytes_per_sec(cfg.freq_conv_hz) / 1e9);
+}

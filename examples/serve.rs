@@ -1,0 +1,62 @@
+//! Inference serving through the L3 coordinator: a threaded request
+//! queue in front of the single-tenant engine, reporting modeled device
+//! latency/throughput at the paper's operating points.
+//!
+//! ```bash
+//! cargo run --release --example serve
+//! ```
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
+use kraken::sim::Engine;
+use kraken::tensor::Tensor4;
+
+fn main() {
+    let engine = Engine::new(KrakenConfig::paper(), 8);
+    let server = InferenceServer::spawn(tiny_cnn_pipeline(engine));
+
+    let n = 16;
+    println!("submitting {n} TinyCNN requests to the coordinator…");
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(Tensor4::random([1, 28, 28, 3], 7 + i as u64)))
+        .collect();
+
+    let mut device_ms = Vec::new();
+    let mut queue_us = Vec::new();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        let argmax = resp
+            .logits
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, v)| **v)
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "  req {i:>2}: class {argmax}  device {:.3} ms  queued {:>8.0} µs  ({} clocks)",
+            resp.device_ms, resp.queue_us, resp.clocks
+        );
+        device_ms.push(resp.device_ms);
+        queue_us.push(resp.queue_us);
+    }
+    let stats = server.shutdown();
+
+    device_ms.sort_by(f64::total_cmp);
+    queue_us.sort_by(f64::total_cmp);
+    let pct = |v: &[f64], p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+    println!("\nserved {} requests", stats.completed);
+    println!(
+        "  device latency: p50 {:.3} ms  p90 {:.3} ms  (deterministic engine → flat)",
+        pct(&device_ms, 0.5),
+        pct(&device_ms, 0.9)
+    );
+    println!(
+        "  queueing      : p50 {:.0} µs  p90 {:.0} µs (simulation-host time)",
+        pct(&queue_us, 0.5),
+        pct(&queue_us, 0.9)
+    );
+    println!(
+        "  modeled device throughput: {:.0} inf/s at 400/200 MHz",
+        stats.completed as f64 / (stats.total_device_ms / 1e3)
+    );
+}

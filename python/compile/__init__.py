@@ -1,0 +1,8 @@
+"""Build-time compile path: JAX/Pallas kernels + AOT lowering.
+
+x64 is enabled globally: the fixed-point requantization (ref.requantize)
+is specified in 64-bit arithmetic, bit-identical to the Rust QParams."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,152 @@
+"""AOT lowering: JAX/Pallas → HLO **text** → `artifacts/` for the Rust
+PJRT runtime.
+
+HLO text (not ``HloModuleProto.serialize``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects; the
+text parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True`` — the Rust side unwraps with ``to_tuple1()``.
+
+Each artifact entry in ``manifest.json`` records the argument shapes,
+dtypes, and the xorshift seeds the Rust runtime uses to regenerate the
+exact input tensors (python/compile/testdata.py ↔ rust Tensor4::random).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``."""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .testdata import W_SEED_BASE, X_SEED
+
+# Conv-layer shape classes benchmarked in the paper (Table I): one tiny
+# representative per (K, S) class, plus a grouped case.
+CONV_GOLDENS = [
+    # name, (N,H,W,Ci), (Kh,Kw,Ci,Co), sh, sw, groups
+    ("conv11x4", (1, 23, 23, 3), (11, 11, 3, 8), 4, 4, 1),
+    ("conv7x2", (1, 14, 14, 3), (7, 7, 3, 8), 2, 2, 1),
+    ("conv5x1", (1, 12, 12, 6), (5, 5, 6, 8), 1, 1, 1),
+    ("conv3x1", (1, 14, 14, 8), (3, 3, 8, 16), 1, 1, 1),
+    ("conv1x1", (1, 9, 9, 16), (1, 1, 16, 24), 1, 1, 1),
+    ("conv3x1g2", (1, 10, 10, 8), (3, 3, 4, 8), 1, 1, 2),
+]
+
+MATMUL_GOLDEN = ("matmul", (13, 24), (24, 40))
+
+# Kernel grid used for the goldens (small enough that every class maps
+# with E ≥ 1 and L, T ≥ 1 at toy scale).
+R, C = 7, 24
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_conv(name, xshape, kshape, sh, sw, groups):
+    fn = functools.partial(model.conv_golden, sh=sh, sw=sw, groups=groups, r=R, c=C)
+    wrapped = lambda x, k: (fn(x, k),)  # noqa: E731
+    specs = (
+        jax.ShapeDtypeStruct(xshape, jnp.int8),
+        jax.ShapeDtypeStruct(kshape, jnp.int8),
+    )
+    return jax.jit(wrapped).lower(*specs)
+
+
+def lower_matmul(m1shape, m2shape):
+    wrapped = lambda a, b: (model.matmul_golden(a, b, r=R, c=C),)  # noqa: E731
+    specs = (
+        jax.ShapeDtypeStruct(m1shape, jnp.int8),
+        jax.ShapeDtypeStruct(m2shape, jnp.int8),
+    )
+    return jax.jit(wrapped).lower(*specs)
+
+
+def lower_tiny_cnn():
+    wrapped = lambda x, *w: (model.tiny_cnn_forward(x, *w, r=7, c=96),)  # noqa: E731
+    specs = [jax.ShapeDtypeStruct((1, 28, 28, 3), jnp.int8)]
+    for shape in model.tiny_cnn_weight_shapes():
+        specs.append(jax.ShapeDtypeStruct(shape, jnp.int8))
+    return jax.jit(wrapped).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"r": R, "c": C, "artifacts": []}
+
+    for i, (name, xs, ks, sh, sw, groups) in enumerate(CONV_GOLDENS):
+        text = to_hlo_text(lower_conv(name, xs, ks, sh, sw, groups))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": "conv",
+                "x_shape": list(xs),
+                "k_shape": list(ks),
+                "sh": sh,
+                "sw": sw,
+                "groups": groups,
+                "x_seed": X_SEED + i,
+                "k_seed": W_SEED_BASE + i,
+            }
+        )
+        print(f"lowered {name} ({len(text)} chars)")
+
+    name, m1s, m2s = MATMUL_GOLDEN
+    text = to_hlo_text(lower_matmul(m1s, m2s))
+    with open(os.path.join(args.out, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "kind": "matmul",
+            "m1_shape": list(m1s),
+            "m2_shape": list(m2s),
+            "x_seed": X_SEED + 100,
+            "k_seed": W_SEED_BASE + 100,
+        }
+    )
+    print(f"lowered {name} ({len(text)} chars)")
+
+    text = to_hlo_text(lower_tiny_cnn())
+    with open(os.path.join(args.out, "tiny_cnn.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": "tiny_cnn",
+            "file": "tiny_cnn.hlo.txt",
+            "kind": "tiny_cnn",
+            "x_shape": [1, 28, 28, 3],
+            "w_shapes": [list(s) for s in model.tiny_cnn_weight_shapes()],
+            "x_seed": X_SEED,
+            "w_seed_base": W_SEED_BASE,
+        }
+    )
+    print(f"lowered tiny_cnn ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1 performance analysis: static VMEM-footprint and MXU-utilization
+estimates for the Kraken Pallas kernel (DESIGN.md §Perf).
+
+Pallas under ``interpret=True`` executes as CPU numpy, so wall-clock is
+not a TPU proxy; what we *can* analyze statically is the per-grid-step
+working set (must fit VMEM) and the shape of the MXU contraction each
+``tau`` step issues. `estimate(layer)` returns both, and the pytest in
+python/tests/test_analysis.py asserts every benchmarked layer fits a
+16 MiB VMEM and reports its MXU occupancy class."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .tiling import derive_params
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128  # 128×128 systolic array
+
+
+@dataclass
+class KernelEstimate:
+    """Static per-grid-step resource picture of `kraken_conv`."""
+
+    name: str
+    # VMEM residents (bytes)
+    x_block: int
+    k_block: int
+    acc_block: int
+    # MXU contraction per tau step: [m, k] × [k, n]
+    m: int
+    k: int
+    n: int
+    kw_steps: int
+
+    @property
+    def vmem_total(self) -> int:
+        return self.x_block + self.k_block + self.acc_block
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem_total <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of the 128×128 MXU covered by one (m, k, n) pass —
+        the k (contraction) dim pipelines, so occupancy is driven by
+        min(m,128)·min(n,128)/128², scaled by k-dim fill."""
+        u_spatial = min(self.m, MXU_DIM) * min(self.n, MXU_DIM) / (MXU_DIM * MXU_DIM)
+        u_depth = min(self.k, MXU_DIM) / MXU_DIM
+        return u_spatial * min(u_depth, 1.0)
+
+
+def estimate(layer: dict, r: int = 7, c: int = 96) -> KernelEstimate:
+    """Static estimate for one conv layer dict (keys h,w,kh,kw,sh,sw,ci,co)."""
+    p = derive_params(r, c, layer)
+    ow = -(-layer["w"] // layer["sw"])
+    esw = p["e"] * layer["sw"]
+    return KernelEstimate(
+        name=layer.get("name", "layer"),
+        x_block=layer["w"] * layer["ci"] * layer["sh"] * (p["r"] + p["f"]),  # i8
+        k_block=layer["ci"] * layer["kh"] * layer["sw"] * c,  # i8
+        acc_block=4 * p["r"] * ow * esw,  # i32
+        m=p["r"] * ow,
+        k=layer["ci"] * layer["kh"],
+        n=layer["sw"] * p["e"],
+        kw_steps=layer["kw"],
+    )
+
+
+# The benchmark layers' shape classes at full scale (Table I).
+BENCHMARK_LAYERS = [
+    dict(name="alexnet_conv1", h=227, w=227, kh=11, kw=11, sh=4, sw=4, ci=3, co=96),
+    dict(name="alexnet_conv2", h=27, w=27, kh=5, kw=5, sh=1, sw=1, ci=48, co=128),
+    dict(name="vgg_conv1_2", h=224, w=224, kh=3, kw=3, sh=1, sw=1, ci=64, co=64),
+    dict(name="vgg_conv5", h=14, w=14, kh=3, kw=3, sh=1, sw=1, ci=512, co=512),
+    dict(name="resnet_stem", h=224, w=224, kh=7, kw=7, sh=2, sw=2, ci=3, co=64),
+    dict(name="resnet_1x1_wide", h=7, w=7, kh=1, kw=1, sh=1, sw=1, ci=512, co=2048),
+]
+
+
+def report() -> str:
+    """Human-readable L1 resource report for EXPERIMENTS.md."""
+    lines = [
+        f"{'layer':<16} {'VMEM/step':>10} {'fits':>5} {'MXU [m,k,n]':>18} {'occupancy':>9}"
+    ]
+    for l in BENCHMARK_LAYERS:
+        e = estimate(l)
+        lines.append(
+            f"{e.name:<16} {e.vmem_total/1024:>8.1f}KB {str(e.fits_vmem):>5} "
+            f"[{e.m},{e.k},{e.n}]".ljust(60)
+            + f"{e.mxu_utilization*100:>8.1f}%"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

@@ -1,0 +1,141 @@
+"""Layer-1 Pallas kernel: convolution through the Kraken uniform
+dataflow (§IV), tiled for TPU-shaped hardware.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's R×C PE
+array becomes the Pallas grid ``(L, T)`` — `L` output-row blocks ×
+`T` channel-group iterations. Per grid step the kernel holds in VMEM:
+
+* one X̂ block ``[W, C_i, S_H, R+F]`` — the pixel-shifter's interleaved
+  halo (the H-dimension reuse of §IV-A),
+* one K̂ block ``[C_i, K_H, S_W, C]`` — the weights-rotator image for
+  iteration `t`, resident across all `L` row blocks (the BlockSpec index
+  map ignores `l`, giving the rotator's reuse),
+* the ``[R, OW, E·S_W]`` output tile — the paper's accumulators
+  (output-stationarity).
+
+Inside the kernel, the `K_W`-step ``tau`` loop is the elastic group's
+shift-accumulate performed in time; each step is one
+``[R·OW, C_i·K_H] × [C_i·K_H, S_W·E]`` contraction — the MXU-friendly
+matmul that replaces the paper's per-clock broadcast (C_i·K_H is the
+contraction the PEs serialize, Σ^{K_H} then Σ^{C_i}, eq. (12)).
+
+Run with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see README of
+/opt/xla-example)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .ref import same_padding
+from .tiling import derive_params, tile_input, tile_weights
+
+
+def _conv_kernel(x_ref, k_ref, o_ref, *, layer, p, ow, pad_l, pad_r):
+    """One (l, t) grid step."""
+    kh, kw, sw = layer["kh"], layer["kw"], layer["sw"]
+    r, e, g = p["r"], p["e"], p["g"]
+    xb = x_ref[0]  # [W, Ci, SH, RF] int8
+    kb = k_ref[0]  # [Ci, KH, SW, C] int8
+
+    # Vertical taps (pixel-shifter view): register r+kh//SH at subrow
+    # kh%SH holds input row r·S_H + kh of the block.
+    vert = jnp.stack(
+        [
+            lax.slice_in_dim(xb[:, :, k % layer["sh"], :], k // layer["sh"], k // layer["sh"] + r, axis=2)
+            for k in range(kh)
+        ],
+        axis=0,
+    )  # [KH, W, Ci, R]
+    vert = jnp.pad(vert, ((0, 0), (pad_l, pad_r), (0, 0), (0, 0)))
+
+    acc = jnp.zeros((r, ow, sw, e), dtype=jnp.int32)
+    for tau in range(kw):  # shift-accumulate across the elastic group
+        xs = lax.slice(
+            vert,
+            (0, tau, 0, 0),
+            (kh, tau + (ow - 1) * sw + 1, layer["ci"], r),
+            (1, sw, 1, 1),
+        ).astype(jnp.int32)  # [KH, OW, Ci, R]
+        # Core g = tau + s of each group serves sub-channel s at tap tau.
+        wt = jnp.stack(
+            [
+                lax.slice_in_dim(
+                    kb[:, :, s, :], tau + s, tau + s + (e - 1) * g + 1, stride=g, axis=2
+                )
+                for s in range(sw)
+            ],
+            axis=2,
+        ).astype(jnp.int32)  # [Ci, KH, SW, E]
+        acc = acc + jnp.einsum("kwcr,ckse->rwse", xs, wt)
+    # Channel order (e major, s_w minor): co = e·S_W + s_w.
+    o_ref[0, 0] = jnp.transpose(acc, (0, 1, 3, 2)).reshape(r, ow, e * sw)
+
+
+def kraken_conv(x, k, *, sh: int, sw: int, r: int = 7, c: int = 96, interpret: bool = True):
+    """Convolve `x [N,H,W,Ci] i8` with `k [Kh,Kw,Ci,Co] i8` (paper
+    `same` padding) → `[N,OH,OW,Co] i32`, via the Kraken dataflow."""
+    n, h, w, ci = x.shape
+    kh, kw, _, co = k.shape
+    layer = {"h": h, "w": w, "kh": kh, "kw": kw, "sh": sh, "sw": sw, "ci": ci, "co": co}
+    p = derive_params(r, c, layer)
+    oh, ow = -(-h // sh), -(-w // sw)
+    pad_l, _ = same_padding(w, kw, sw)
+    pad_r = max((ow - 1) * sw + kw - 1 - pad_l - (w - 1), 0)
+    esw = p["e"] * sw
+
+    x_hat = tile_input(x, layer, p)  # [N, L, W, Ci, SH, RF]
+    k_hat = tile_weights(k, layer, p)  # [T, Ci, KH, SW, C]
+
+    kernel = functools.partial(
+        _conv_kernel, layer=layer, p=p, ow=ow, pad_l=pad_l, pad_r=pad_r
+    )
+    rf = p["r"] + p["f"]
+
+    def one_batch(xh):
+        out = pl.pallas_call(
+            kernel,
+            grid=(p["l"], p["t"]),
+            in_specs=[
+                # X̂ block for row-block l; reused across all T iterations.
+                pl.BlockSpec((1, w, ci, sh, rf), lambda l, t: (l, 0, 0, 0, 0)),
+                # K̂ block for iteration t; resident across all L blocks
+                # (the weights rotator's reuse).
+                pl.BlockSpec((1, ci, kh, sw, c), lambda l, t: (t, 0, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, p["r"], ow, esw), lambda l, t: (l, t, 0, 0, 0)
+            ),
+            out_shape=jax.ShapeDtypeStruct((p["l"], p["t"], p["r"], ow, esw), jnp.int32),
+            interpret=interpret,
+        )(xh, k_hat)
+        # [L, T, R, OW, E·SW] → [L·R, OW, T·E·SW] → crop.
+        y = jnp.transpose(out, (0, 2, 3, 1, 4)).reshape(p["l"] * p["r"], ow, p["t"] * esw)
+        return y[:oh, :, :co]
+
+    return jnp.stack([one_batch(x_hat[i]) for i in range(n)], axis=0)
+
+
+def kraken_conv_grouped(x, k, *, sh, sw, groups, r=7, c=96, interpret=True):
+    """Grouped convolution (AlexNet conv2/4/5) — one engine pass per
+    group, as the hardware does."""
+    ci = k.shape[2]
+    co_g = k.shape[3] // groups
+    outs = [
+        kraken_conv(
+            x[..., g * ci : (g + 1) * ci],
+            k[..., g * co_g : (g + 1) * co_g],
+            sh=sh,
+            sw=sw,
+            r=r,
+            c=c,
+            interpret=interpret,
+        )
+        for g in range(groups)
+    ]
+    return jnp.concatenate(outs, axis=-1)

@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: matrix product / FC layer through the same
+uniform dataflow (§IV-D) — the degenerate `N, W, K_H, K_W, S_H, S_W = 1`
+case of `kraken_conv`.
+
+The grid is `(L, T)` = (`⌈H/R⌉` row blocks, `⌈C_o/C⌉` column
+iterations); each step computes the full `[R, C]` submatrix in one
+contraction over `C_i` — exactly the `C_i`-clock accumulation of the PE
+array, with the `M2` block playing the rotated weights."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def kraken_matmul(m1, m2, *, r: int = 7, c: int = 96, interpret: bool = True):
+    """`m1 [H, Ci] i8 · m2 [Ci, Co] i8 → [H, Co] i32` on the (R, C) grid."""
+    h, ci = m1.shape
+    _, co = m2.shape
+    l = -(-h // r)
+    t = -(-co // c)
+    # Pad to the block grid (the engine's rounding slack, eqs. (8)–(9)).
+    m1p = jnp.pad(m1, ((0, l * r - h), (0, 0)))
+    m2p = jnp.pad(m2, ((0, 0), (0, t * c - co)))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(l, t),
+        in_specs=[
+            pl.BlockSpec((r, ci), lambda i, j: (i, 0)),
+            pl.BlockSpec((ci, c), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((r, c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l * r, t * c), jnp.int32),
+        interpret=interpret,
+    )(m1p, m2p)
+    return out[:h, :co]

@@ -1,0 +1,96 @@
+"""Pure-jnp correctness oracles for the Kraken kernels.
+
+Padding follows the paper's convention (rust/src/layers/padding.rs):
+``pad_begin = (K−1)//2`` on the leading edge, trailing pad derived from
+``out = ceil(in / stride)``. This coincides with TF ``SAME`` at stride 1
+but pins the leading pad for strided layers (Table IV's schedule).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def same_padding(size: int, kernel: int, stride: int) -> tuple[int, int]:
+    """Leading/trailing zero padding (paper convention)."""
+    out = -(-size // stride)
+    begin = (kernel - 1) // 2
+    total = max((out - 1) * stride + kernel - size, 0)
+    return begin, max(total - begin, 0)
+
+
+def conv2d_ref(x: jnp.ndarray, k: jnp.ndarray, sh: int, sw: int) -> jnp.ndarray:
+    """Eq. (1): x [N,H,W,Ci] i8, k [Kh,Kw,Ci,Co] i8 → [N,OH,OW,Co] i32."""
+    _, h, w, _ = x.shape
+    kh, kw, _, _ = k.shape
+    pad_h = same_padding(h, kh, sh)
+    pad_w = same_padding(w, kw, sw)
+    return lax.conv_general_dilated(
+        x.astype(jnp.int32),
+        k.astype(jnp.int32),
+        window_strides=(sh, sw),
+        padding=(pad_h, pad_w),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_grouped_ref(
+    x: jnp.ndarray, k: jnp.ndarray, sh: int, sw: int, groups: int
+) -> jnp.ndarray:
+    """Grouped variant (AlexNet conv2/4/5): x carries groups·Ci channels."""
+    ci = k.shape[2]
+    co_g = k.shape[3] // groups
+    outs = []
+    for g in range(groups):
+        outs.append(
+            conv2d_ref(
+                x[..., g * ci : (g + 1) * ci],
+                k[..., g * co_g : (g + 1) * co_g],
+                sh,
+                sw,
+            )
+        )
+    return jnp.concatenate(outs, axis=-1)
+
+
+def matmul_ref(m1: jnp.ndarray, m2: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (2)/(14): [H,Ci] i8 · [Ci,Co] i8 → [H,Co] i32."""
+    return jnp.matmul(
+        m1.astype(jnp.int32), m2.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """Host-side 2×2 max pooling (between engine layers)."""
+    n, h, w, c = x.shape
+    return jnp.max(
+        x[:, : h // 2 * 2, : w // 2 * 2, :].reshape(n, h // 2, 2, w // 2, 2, c),
+        axis=(2, 4),
+    )
+
+
+def requantize(acc: jnp.ndarray, multiplier: int, shift: int, relu: bool) -> jnp.ndarray:
+    """Fixed-point requantization, bit-identical to Rust
+    ``QParams::requantize`` (round half away from zero, saturate to i8)."""
+    v = acc.astype(jnp.int64)
+    if relu:
+        v = jnp.maximum(v, 0)
+    prod = v * multiplier
+    half = 1 << max(min(shift - 1, 62), 0)
+    rounded = jnp.where(
+        prod >= 0, (prod + half) >> shift, -((-prod + half) >> shift)
+    )
+    return jnp.clip(rounded, -128, 127).astype(jnp.int8)
+
+
+def qparams_from_scale(scale: float) -> tuple[int, int]:
+    """Mirror of Rust ``QParams::from_scale``: (multiplier, shift)."""
+    assert 0.0 < scale < 1.0
+    shift = 0
+    s = scale
+    while s < 0.5 and shift < 31:
+        s *= 2.0
+        shift += 1
+    multiplier = int(round(s * (1 << 31)))
+    return multiplier, shift + 31

@@ -1,0 +1,82 @@
+"""Data restructurings `X → X̂`, `K → K̂` (Algorithm 1), bit-identical to
+the Rust implementation (rust/src/dataflow/tiling.rs).
+
+Implemented with *static* pads / slices / reshapes / transposes only —
+exactly the split → pad → reshape → transpose pipeline Algorithm 1
+writes down, and deliberately gather-free: jax ≥ 0.8 lowers fancy
+indexing to gather ops whose newer dimension-number attributes do not
+survive the HLO-text round trip into xla_extension 0.5.1 (the version
+behind the Rust `xla` crate). Traceable under ``jax.jit`` and usable
+eagerly on numpy arrays."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .ref import same_padding
+
+
+def derive_params(r: int, c: int, layer: dict) -> dict:
+    """Eqs. (5)–(11) for a layer dict with keys h,w,kh,kw,sh,sw,ci,co."""
+    g = layer["kw"] + layer["sw"] - 1
+    e = c // g
+    assert e >= 1, f"elastic group G={g} wider than C={c}"
+    f = -(-layer["kh"] // layer["sh"]) - 1
+    l = -(-layer["h"] // (r * layer["sh"]))
+    t = -(-layer["co"] // (e * layer["sw"]))
+    return {"g": g, "e": e, "f": f, "l": l, "t": t, "r": r, "c": c}
+
+
+def tile_input(x, layer: dict, p: dict):
+    """X̂ : [N, L, W, Ci, SH, R+F] int8 — Algorithm 1's
+    split (X₁) → pad (X₂) → reshape (X₃) → transpose (X̂)."""
+    x = jnp.asarray(x)
+    n, h, w, ci = x.shape
+    sh, kh = layer["sh"], layer["kh"]
+    pad_top, _ = same_padding(h, kh, sh)
+    rf = p["r"] + p["f"]
+    ll = p["l"]
+    # X₂: pad so every block's (R+F)·S_H window is in bounds.
+    h_needed = (ll - 1) * p["r"] * sh + rf * sh
+    pad_bottom = max(h_needed - pad_top - h, 0)
+    xp = jnp.pad(x, ((0, 0), (pad_top, pad_bottom), (0, 0), (0, 0)))
+    # X₁/X₃: overlapping blocks of (R+F)·S_H rows, stride R·S_H.
+    blocks = jnp.stack(
+        [
+            lax.slice_in_dim(xp, l * p["r"] * sh, l * p["r"] * sh + rf * sh, axis=1)
+            for l in range(ll)
+        ],
+        axis=1,
+    )  # [N, L, RF·SH, W, Ci]
+    blocks = blocks.reshape(n, ll, rf, sh, w, ci)
+    # X̂: transpose into [N, L, W, Ci, SH, R+F].
+    return jnp.transpose(blocks, (0, 1, 4, 5, 3, 2))
+
+
+def tile_weights(k, layer: dict, p: dict):
+    """K̂ : [T, Ci, KH, SW, C] int8 — §IV-C's split → transpose →
+    channel interleave, gather-free."""
+    k = jnp.asarray(k)
+    kh, kw, ci, co = k.shape
+    sw = layer["sw"]
+    t_, e_, g_, c_ = p["t"], p["e"], p["g"], p["c"]
+    # Pad output channels to the iteration grid (rounding slack, eq. (9)).
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, t_ * e_ * sw - co)))
+    per_s = []
+    for s in range(sw):
+        # Channels serving sub-channel s: co ≡ s (mod S_W) → [KH,KW,Ci,T·E].
+        cos = kp[:, :, :, s::sw]
+        cols = []
+        for g in range(g_):
+            tap = g - s
+            if 0 <= tap < kw:
+                cols.append(cos[:, tap, :, :])  # [KH, Ci, T·E]
+            else:
+                cols.append(jnp.zeros((kh, ci, t_ * e_), dtype=k.dtype))
+        per_s.append(jnp.stack(cols, axis=0))  # [G, KH, Ci, T·E]
+    stacked = jnp.stack(per_s, axis=0)  # [SW, G, KH, Ci, T·E]
+    stacked = stacked.reshape(sw, g_, kh, ci, t_, e_)
+    # → [T, Ci, KH, SW, E, G] → [T, Ci, KH, SW, E·G] → pad idle cores.
+    out = jnp.transpose(stacked, (4, 3, 2, 0, 5, 1)).reshape(t_, ci, kh, sw, e_ * g_)
+    return jnp.pad(out, ((0, 0), (0, 0), (0, 0), (0, 0), (0, c_ - e_ * g_)))

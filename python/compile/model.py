@@ -1,0 +1,88 @@
+"""Layer-2: the JAX compute graphs that get AOT-lowered for the Rust
+runtime. Everything here calls the Layer-1 Pallas kernels so that the
+kernels lower into the same HLO.
+
+Three artifact families:
+
+* per-shape-class **conv goldens** — one conv layer, int8 in → int32
+  accumulators out, used by the Rust side to verify the clock-accurate
+  simulator bit-exactly on every (K, S) class of Table I;
+* a **matmul golden** (the FC/attention path);
+* the **TinyCNN forward** — the full 8-layer quantized network of
+  `rust/src/networks/tiny.rs` (conv/grouped-conv/1×1/FC + requantization
+  + host max-pool), the end-to-end workload of `examples/alexnet_e2e.rs`
+  and `rust/tests/e2e_runtime.rs`.
+
+Quantization follows §II-D: int8 storage, int32 accumulation, bias-free
+layers with the bias folded into the requantization, which is a
+fixed-point multiplier + shift identical to Rust ``QParams``."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.kraken_conv import kraken_conv, kraken_conv_grouped
+from .kernels.kraken_matmul import kraken_matmul
+from .kernels.ref import maxpool2x2, qparams_from_scale, requantize
+
+# Requantization scale shared by all TinyCNN layers (Rust side:
+# coordinator::tiny_cnn_qparams).
+TINY_SCALE = 1.0 / 64.0
+TINY_MULT, TINY_SHIFT = qparams_from_scale(TINY_SCALE)
+
+# TinyCNN layer shapes — keep in sync with rust/src/networks/tiny.rs.
+TINY_LAYERS = [
+    dict(name="conv1", h=28, kh=7, sh=2, ci=3, co=16, groups=1),
+    dict(name="conv2", h=14, kh=5, sh=1, ci=16, co=24, groups=1),
+    dict(name="conv3", h=14, kh=3, sh=1, ci=24, co=32, groups=1),
+    dict(name="conv4", h=14, kh=3, sh=1, ci=16, co=32, groups=2),
+    dict(name="conv5", h=7, kh=1, sh=1, ci=32, co=48, groups=1),
+    dict(name="conv6", h=7, kh=3, sh=1, ci=48, co=48, groups=1),
+    dict(name="fc7", ci=7 * 7 * 48, co=64),
+    dict(name="fc8", ci=64, co=10),
+]
+
+
+def conv_golden(x, k, *, sh: int, sw: int, groups: int = 1, r: int = 7, c: int = 96):
+    """One conv layer through the L1 kernel: i8 → i32 accumulators."""
+    if groups == 1:
+        return kraken_conv(x, k, sh=sh, sw=sw, r=r, c=c)
+    return kraken_conv_grouped(x, k, sh=sh, sw=sw, groups=groups, r=r, c=c)
+
+
+def matmul_golden(m1, m2, *, r: int = 7, c: int = 96):
+    """One matrix product through the L1 kernel: i8 → i32."""
+    return kraken_matmul(m1, m2, r=r, c=c)
+
+
+def _requant(acc, relu: bool):
+    return requantize(acc, TINY_MULT, TINY_SHIFT, relu)
+
+
+def tiny_cnn_forward(x, *weights, r: int = 7, c: int = 96):
+    """TinyCNN inference: x [1,28,28,3] i8 + 8 weight arrays → logits
+    [1,10] i32. Mirrors the Rust coordinator's per-layer schedule:
+    engine layer → requantize(relu) → (maxpool after conv4) → … →
+    fc8 raw accumulators."""
+    k1, k2, k3, k4, k5, k6, w7, w8 = weights
+    a = _requant(kraken_conv(x, k1, sh=2, sw=2, r=r, c=c), True)
+    a = _requant(kraken_conv(a, k2, sh=1, sw=1, r=r, c=c), True)
+    a = _requant(kraken_conv(a, k3, sh=1, sw=1, r=r, c=c), True)
+    a = _requant(kraken_conv_grouped(a, k4, sh=1, sw=1, groups=2, r=r, c=c), True)
+    a = maxpool2x2(a)  # 14×14 → 7×7, host-side (as in the benchmark CNNs)
+    a = _requant(kraken_conv(a, k5, sh=1, sw=1, r=r, c=c), True)
+    a = _requant(kraken_conv(a, k6, sh=1, sw=1, r=r, c=c), True)
+    flat = a.reshape(1, -1)  # NHWC row-major flatten
+    a = _requant(kraken_matmul(flat, w7, r=r, c=c), True)
+    return kraken_matmul(a, w8, r=r, c=c)
+
+
+def tiny_cnn_weight_shapes() -> list[tuple[int, ...]]:
+    """[Kh,Kw,Ci,Co] per conv (Ci per group), [Ci,Co] per FC."""
+    shapes: list[tuple[int, ...]] = []
+    for l in TINY_LAYERS:
+        if l["name"].startswith("conv"):
+            shapes.append((l["kh"], l["kh"], l["ci"], l["co"]))
+        else:
+            shapes.append((l["ci"], l["co"]))
+    return shapes

@@ -1,0 +1,47 @@
+"""Deterministic int8 test-data generator, bit-identical to the Rust
+side's ``Tensor4::random`` (rust/src/tensor/nhwc.rs).
+
+Both languages generate inputs and weights from the same (shape, seed)
+pairs, so the AOT-lowered golden artifacts need no tensor I/O: the Rust
+runtime regenerates the exact arrays and feeds them to the compiled
+executables.
+
+Algorithm: xorshift64 seeded with ``max(seed * 0x9E3779B97F4A7C15, 1)``
+(wrapping), each draw mapped to ``(state % 255)`` reinterpreted as i8,
+with ``-128`` replaced by ``0``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+_GOLDEN = 0x9E3779B97F4A7C15
+
+
+def xorshift_i8(shape: tuple[int, ...], seed: int) -> np.ndarray:
+    """Row-major int8 tensor, identical to Rust ``Tensor4::random``."""
+    state = (seed * _GOLDEN) & _MASK
+    state = max(state, 1)
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.int64)
+    for i in range(n):
+        state ^= (state << 13) & _MASK
+        state &= _MASK
+        state ^= state >> 7
+        state ^= (state << 17) & _MASK
+        state &= _MASK
+        v = state % 255
+        if v > 127:
+            v -= 256
+        if v == -128:
+            v = 0
+        out[i] = v
+    return out.reshape(shape).astype(np.int8)
+
+
+# Seed conventions shared with the Rust integration tests
+# (rust/tests/sim_vs_golden.rs): inputs use X_SEED, layer j's weights use
+# W_SEED_BASE + 10·j.
+X_SEED = 42
+W_SEED_BASE = 1000

@@ -1,0 +1,31 @@
+"""L1 static resource analysis: every benchmarked layer's per-grid-step
+working set fits VMEM, and the MXU contraction shapes behave as the
+hardware-adaptation section of DESIGN.md describes."""
+
+from compile.kernels.analysis import BENCHMARK_LAYERS, VMEM_BYTES, estimate, report
+
+
+def test_all_benchmark_layers_fit_vmem():
+    for layer in BENCHMARK_LAYERS:
+        e = estimate(layer)
+        assert e.fits_vmem, f"{e.name}: {e.vmem_total} B > {VMEM_BYTES}"
+
+
+def test_contraction_is_ci_kh():
+    # DESIGN.md: "C_i·K_H is the contraction the PEs serialize".
+    e = estimate(dict(h=14, w=14, kh=3, kw=3, sh=1, sw=1, ci=512, co=512))
+    assert e.k == 512 * 3
+    assert e.kw_steps == 3
+
+
+def test_deep_layers_fill_the_mxu_contraction():
+    # Later layers (C_i·K_H ≥ 128) pipeline the MXU fully in depth.
+    deep = estimate(dict(h=14, w=14, kh=3, kw=3, sh=1, sw=1, ci=512, co=512))
+    shallow = estimate(dict(h=224, w=224, kh=3, kw=3, sh=1, sw=1, ci=3, co=64))
+    assert deep.mxu_utilization > shallow.mxu_utilization
+
+
+def test_report_renders():
+    r = report()
+    assert "alexnet_conv1" in r and "occupancy" in r
+    assert len(r.splitlines()) == 1 + len(BENCHMARK_LAYERS)

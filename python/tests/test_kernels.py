@@ -1,0 +1,115 @@
+"""Kernel-vs-oracle correctness: the CORE signal that the Pallas
+implementation of the Kraken dataflow computes eq. (1)/(2) exactly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.kraken_conv import kraken_conv, kraken_conv_grouped
+from compile.kernels.kraken_matmul import kraken_matmul
+from compile.kernels.ref import (
+    conv2d_grouped_ref,
+    conv2d_ref,
+    matmul_ref,
+    same_padding,
+)
+from compile.testdata import xorshift_i8
+
+
+# One representative per (K, S) shape class of Table I, plus ragged /
+# rounding-slack cases.
+CONV_CASES = [
+    # (x_shape, k_shape, sh, sw, r, c)
+    ((1, 9, 9, 4), (3, 3, 4, 8), 1, 1, 3, 12),  # VGG-class 3×3
+    ((1, 12, 12, 6), (5, 5, 6, 8), 1, 1, 4, 10),  # AlexNet-class 5×5
+    ((1, 23, 23, 3), (11, 11, 3, 8), 4, 4, 4, 28),  # AlexNet conv1 class
+    ((1, 14, 14, 3), (7, 7, 3, 4), 2, 2, 3, 16),  # ResNet stem class
+    ((1, 8, 8, 16), (1, 1, 16, 24), 1, 1, 4, 12),  # bottleneck 1×1
+    ((1, 8, 8, 3), (5, 5, 3, 2), 2, 2, 2, 6),  # Table IV's G=6 case
+    ((2, 10, 10, 5), (3, 3, 5, 7), 1, 1, 4, 10),  # batch + ragged co
+    ((1, 13, 13, 3), (5, 5, 3, 5), 2, 2, 3, 11),  # ragged everything
+]
+
+
+@pytest.mark.parametrize("case", CONV_CASES, ids=lambda c: f"x{c[0]}k{c[1]}s{c[2]}{c[3]}")
+def test_kraken_conv_matches_reference(case):
+    xs, ks, sh, sw, r, c = case
+    x = jnp.asarray(xorshift_i8(xs, hash(case) % 1000 + 1))
+    k = jnp.asarray(xorshift_i8(ks, hash(case) % 1000 + 2))
+    got = kraken_conv(x, k, sh=sh, sw=sw, r=r, c=c)
+    want = conv2d_ref(x, k, sh, sw)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_grouped_conv_matches_reference():
+    x = jnp.asarray(xorshift_i8((1, 9, 9, 4), 30))
+    k = jnp.asarray(xorshift_i8((3, 3, 2, 8), 31))
+    got = kraken_conv_grouped(x, k, sh=1, sw=1, groups=2, r=3, c=9)
+    want = conv2d_grouped_ref(x, k, 1, 1, 2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_matmul_matches_reference():
+    m1 = jnp.asarray(xorshift_i8((10, 12), 40))
+    m2 = jnp.asarray(xorshift_i8((12, 20), 41))
+    got = kraken_matmul(m1, m2, r=4, c=8)
+    want = matmul_ref(m1, m2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_output_dtype_is_int32():
+    x = jnp.asarray(xorshift_i8((1, 6, 6, 2), 50))
+    k = jnp.asarray(xorshift_i8((3, 3, 2, 4), 51))
+    assert kraken_conv(x, k, sh=1, sw=1, r=3, c=9).dtype == jnp.int32
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(5, 16),
+    w=st.integers(5, 16),
+    k=st.sampled_from([1, 3, 5, 7]),
+    s=st.integers(1, 2),
+    ci=st.integers(1, 6),
+    co=st.integers(1, 9),
+    r=st.integers(2, 5),
+    seed=st.integers(1, 10_000),
+)
+def test_kraken_conv_hypothesis_sweep(h, w, k, s, ci, co, r, seed):
+    """Property: the Pallas dataflow equals eq. (1) for arbitrary shapes
+    where the elastic group fits the array (G ≤ C)."""
+    if k < s:  # engine processes K_H < S_H layers at the subsampled size
+        s = 1
+    g = k + s - 1
+    c = g * max(2, (co + 1) // 2)  # ensure E ≥ 2 sometimes, G ≤ C always
+    x = jnp.asarray(xorshift_i8((1, h, w, ci), seed))
+    kk = jnp.asarray(xorshift_i8((k, k, ci, co), seed + 1))
+    got = kraken_conv(x, kk, sh=s, sw=s, r=r, c=c)
+    want = conv2d_ref(x, kk, s, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 24),
+    ci=st.integers(1, 32),
+    co=st.integers(1, 32),
+    r=st.integers(1, 8),
+    c=st.integers(1, 12),
+    seed=st.integers(1, 10_000),
+)
+def test_kraken_matmul_hypothesis_sweep(h, ci, co, r, c, seed):
+    m1 = jnp.asarray(xorshift_i8((h, ci), seed))
+    m2 = jnp.asarray(xorshift_i8((ci, co), seed + 1))
+    got = kraken_matmul(m1, m2, r=r, c=c)
+    want = matmul_ref(m1, m2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_same_padding_paper_convention():
+    # Leading pad pinned at (K−1)/2 (Table IV ⇒ pad_left = 2 for K_W=5).
+    assert same_padding(8, 5, 2) == (2, 1)
+    assert same_padding(224, 11, 4) == (5, 2)
+    assert same_padding(224, 3, 1) == (1, 1)

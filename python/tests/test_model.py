@@ -1,0 +1,65 @@
+"""L2 model tests: quantization arithmetic, TinyCNN forward, and
+cross-language test-data generation."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels.ref import maxpool2x2, qparams_from_scale, requantize
+from compile.testdata import W_SEED_BASE, X_SEED, xorshift_i8
+
+
+def test_xorshift_reference_values():
+    """Pinned values — the Rust side asserts the identical sequence
+    (rust/tests/sim_vs_golden.rs::xorshift_cross_language)."""
+    assert list(xorshift_i8((10,), 7)) == [122, 2, -64, -100, -80, 40, -45, 126, 112, 70]
+    assert list(xorshift_i8((10,), 42)) == [-43, 106, 90, -97, 110, 39, 68, -91, 56, -109]
+
+
+def test_qparams_match_rust_from_scale():
+    # Rust QParams::from_scale(1/64): multiplier 2^30, shift 36.
+    assert qparams_from_scale(1.0 / 64.0) == (1 << 30, 36)
+    assert qparams_from_scale(0.5) == (1 << 30, 31)
+
+
+def test_requantize_rounding_half_away():
+    m, s = qparams_from_scale(0.5)
+    acc = jnp.array([100, 101, -100, -101, 1000], dtype=jnp.int32)
+    out = requantize(acc, m, s, relu=False)
+    assert list(np.asarray(out)) == [50, 51, -50, -51, 127]
+
+
+def test_requantize_relu():
+    m, s = qparams_from_scale(0.5)
+    out = requantize(jnp.array([-100, 100], dtype=jnp.int32), m, s, relu=True)
+    assert list(np.asarray(out)) == [0, 50]
+
+
+def test_maxpool2x2():
+    x = jnp.arange(16, dtype=jnp.int8).reshape(1, 4, 4, 1)
+    out = maxpool2x2(x)
+    assert out.shape == (1, 2, 2, 1)
+    assert list(np.asarray(out).ravel()) == [5, 7, 13, 15]
+
+
+def test_tiny_cnn_shapes_and_determinism():
+    x = jnp.asarray(xorshift_i8((1, 28, 28, 3), X_SEED))
+    weights = [
+        jnp.asarray(xorshift_i8(s, W_SEED_BASE + 10 * j))
+        for j, s in enumerate(model.tiny_cnn_weight_shapes())
+    ]
+    logits = model.tiny_cnn_forward(x, *weights, r=7, c=96)
+    assert logits.shape == (1, 10)
+    assert logits.dtype == jnp.int32
+    logits2 = model.tiny_cnn_forward(x, *weights, r=7, c=96)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(logits2))
+    # Non-degenerate: not all equal.
+    assert len(set(np.asarray(logits).ravel().tolist())) > 1
+
+
+def test_tiny_layers_consistent_with_weight_shapes():
+    shapes = model.tiny_cnn_weight_shapes()
+    assert len(shapes) == len(model.TINY_LAYERS) == 8
+    assert shapes[0] == (7, 7, 3, 16)
+    assert shapes[3] == (3, 3, 16, 32)  # grouped: Ci per group
+    assert shapes[6] == (7 * 7 * 48, 64)

@@ -1,0 +1,93 @@
+"""Tiling invariants: the X̂ / K̂ restructurings are lossless, produce
+the word counts of eq. (20), and follow Table II's interleave."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import same_padding
+from compile.kernels.tiling import derive_params, tile_input, tile_weights
+from compile.testdata import xorshift_i8
+
+
+def _layer(h, w, kh, kw, sh, sw, ci, co):
+    return dict(h=h, w=w, kh=kh, kw=kw, sh=sh, sw=sw, ci=ci, co=co)
+
+
+def test_x_hat_shape_matches_eq20_term():
+    layer = _layer(16, 16, 3, 3, 1, 1, 5, 8)
+    p = derive_params(4, 12, layer)
+    x = xorshift_i8((1, 16, 16, 5), 1)
+    xh = np.asarray(tile_input(x, layer, p))
+    # [N, L, W, Ci, SH, R+F] — words per iteration = N·L·W·Ci·SH·(R+F).
+    assert xh.shape == (1, p["l"], 16, 5, 1, p["r"] + p["f"])
+
+
+def test_table2_interleave():
+    # R, K_H, S_H = 4, 7, 2 → F = 3: beat s holds rows j·2+s − pad_top.
+    layer = _layer(32, 4, 7, 7, 2, 2, 1, 2)
+    p = derive_params(4, 24, layer)
+    assert p["f"] == 3
+    x = np.zeros((1, 32, 4, 1), dtype=np.int8)
+    for r in range(32):
+        x[0, r, :, 0] = r
+    xh = np.asarray(tile_input(x, layer, p))
+    pad_top, _ = same_padding(32, 7, 2)
+    for j in range(7):
+        for s in range(2):
+            row = j * 2 + s - pad_top
+            expect = row if 0 <= row < 32 else 0
+            assert xh[0, 0, 0, 0, s, j] == expect
+
+
+def test_k_hat_unstrided_core_g_is_tap_g():
+    layer = _layer(8, 8, 5, 5, 1, 1, 2, 4)
+    p = derive_params(2, 10, layer)
+    k = xorshift_i8((5, 5, 2, 4), 9)
+    kh = np.asarray(tile_weights(k, layer, p))
+    assert kh.shape == (p["t"], 2, 5, 1, 10)
+    for t in range(p["t"]):
+        for e in range(p["e"]):
+            co = t * p["e"] + e
+            for g in range(p["g"]):
+                expect = k[:, g, :, co] if co < 4 else 0
+                np.testing.assert_array_equal(kh[t, :, :, 0, e * p["g"] + g].T, expect)
+
+
+def test_k_hat_conserves_weights():
+    """Every original weight appears in K̂ exactly once per (t-slot it
+    belongs to), and zero-padding fills the rest."""
+    layer = _layer(8, 8, 3, 3, 1, 1, 2, 4)
+    p = derive_params(2, 6, layer)
+    k = xorshift_i8((3, 3, 2, 4), 5)
+    kh = np.asarray(tile_weights(k, layer, p))
+    assert np.abs(kh).sum() == np.abs(k).sum()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    k=st.sampled_from([1, 3, 5]),
+    s=st.integers(1, 2),
+    ci=st.integers(1, 4),
+    r=st.integers(2, 5),
+    seed=st.integers(1, 1000),
+)
+def test_x_hat_rows_recoverable(h, k, s, ci, r, seed):
+    """Lossless: every in-bounds input pixel appears in X̂ at its
+    interleaved position."""
+    if k < s:
+        s = 1
+    layer = _layer(h, 4, k, k, s, s, ci, 4)
+    p = derive_params(r, (k + s - 1) * 2, layer)
+    x = xorshift_i8((1, h, 4, ci), seed)
+    xh = np.asarray(tile_input(x, layer, p))
+    pad_top, _ = same_padding(h, k, s)
+    for l in range(p["l"]):
+        for j in range(p["r"] + p["f"]):
+            for sub in range(s):
+                row = l * p["r"] * s + j * s + sub - pad_top
+                if 0 <= row < h:
+                    np.testing.assert_array_equal(
+                        xh[0, l, :, :, sub, j], x[0, row, :, :]
+                    )

@@ -1,0 +1,47 @@
+//! Minimal shared bench harness (criterion is not vendored in the
+//! offline build): median-of-N wall-clock timing with warmup, printed
+//! in a criterion-like format so `cargo bench` output is comparable
+//! run-to-run.
+
+use std::time::Instant;
+
+/// Time `f`, returning (median, min, max) seconds over `iters` runs
+/// after one warmup.
+#[allow(dead_code)]
+pub fn time<F: FnMut()>(iters: usize, mut f: F) -> (f64, f64, f64) {
+    f(); // warmup
+    let mut samples: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    (samples[samples.len() / 2], samples[0], samples[samples.len() - 1])
+}
+
+/// Pretty-print one benchmark line.
+#[allow(dead_code)]
+pub fn report(name: &str, iters: usize, f: impl FnMut()) -> f64 {
+    let (med, min, max) = time(iters, f);
+    println!(
+        "bench {name:<44} {:>10.3} ms  [{:.3} .. {:.3}]",
+        med * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+    med
+}
+
+/// Pretty-print with a derived throughput figure.
+#[allow(dead_code)]
+pub fn report_throughput(name: &str, iters: usize, units: f64, unit_name: &str, f: impl FnMut()) -> f64 {
+    let (med, _, _) = time(iters, f);
+    println!(
+        "bench {name:<44} {:>10.3} ms   {:>10.1} {unit_name}",
+        med * 1e3,
+        units / med
+    );
+    med
+}

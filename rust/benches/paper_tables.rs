@@ -1,0 +1,60 @@
+//! One bench per paper table/figure: regenerates each artifact of the
+//! evaluation section and times it. The printed content is the
+//! reproduction; the timing shows the whole evaluation regenerates in
+//! milliseconds (the paper's §VI from closed forms + calibrated
+//! baseline models).
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+mod harness;
+
+use kraken::report;
+
+fn main() {
+    println!("== regenerating every table & figure of the paper ==\n");
+    let mut total = 0.0;
+    total += harness::report("table1_network_stats", 10, || {
+        std::hint::black_box(report::table1());
+    });
+    total += harness::report("table2_pixel_shifter_schedule", 10, || {
+        std::hint::black_box(report::table2());
+    });
+    total += harness::report("table3_eg_schedule_unstrided", 10, || {
+        std::hint::black_box(report::table3());
+    });
+    total += harness::report("table4_eg_schedule_strided", 10, || {
+        std::hint::black_box(report::table4());
+    });
+    total += harness::report("table5_conv_comparison", 10, || {
+        std::hint::black_box(report::table5());
+    });
+    total += harness::report("table6_fc_comparison", 10, || {
+        std::hint::black_box(report::table6());
+    });
+    total += harness::report("fig3_per_layer_efficiency", 10, || {
+        std::hint::black_box(report::fig3());
+    });
+    total += harness::report("fig4_memory_accesses", 10, || {
+        std::hint::black_box(report::fig4());
+    });
+    total += harness::report("sweep_design_space", 5, || {
+        std::hint::black_box(report::sweep_report());
+    });
+    total += harness::report("bandwidth_sec5e", 10, || {
+        std::hint::black_box(report::bandwidth_report());
+    });
+    total += harness::report("headline_sec6", 10, || {
+        std::hint::black_box(report::headline());
+    });
+    println!("\nfull evaluation regenerated in {:.1} ms\n", total * 1e3);
+
+    // Print the actual artifacts once so `cargo bench | tee` captures them.
+    for s in [
+        report::table1(),
+        report::table5(),
+        report::table6(),
+        report::headline(),
+    ] {
+        println!("{s}");
+    }
+}

@@ -1,0 +1,83 @@
+//! Simulator hot-path benchmarks — the §Perf targets of DESIGN.md:
+//! the clock-accurate engine must simulate ≥ 50 M PE-MACs/s, and the
+//! analytical model must evaluate a full ResNet-50 in well under 10 ms
+//! so design-space sweeps stay interactive.
+//!
+//! Run: `cargo bench --bench sim_hotpath`
+
+mod harness;
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::tiny_cnn_pipeline;
+use kraken::layers::Layer;
+use kraken::networks::{paper_networks, resnet50};
+use kraken::perf::{sweep_design_space, PerfModel};
+use kraken::quant::QParams;
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::Tensor4;
+
+fn main() {
+    println!("== simulator & model hot paths ==\n");
+
+    // Clock-accurate engine on each shape class (7×96 array).
+    let classes = [
+        Layer::conv("vgg3x3", 1, 28, 28, 3, 3, 1, 1, 16, 32),
+        Layer::conv("alex5x1", 1, 27, 27, 5, 5, 1, 1, 16, 32),
+        Layer::conv("res7x2", 1, 28, 28, 7, 7, 2, 2, 8, 16),
+        Layer::conv("pw1x1", 1, 14, 14, 1, 1, 1, 1, 32, 64),
+    ];
+    for layer in &classes {
+        let x = Tensor4::random([1, layer.h, layer.w, layer.ci], 1);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 2);
+        let mut engine = Engine::new(KrakenConfig::paper(), 8);
+        let macs = layer.macs_with_zpad() as f64;
+        harness::report_throughput(
+            &format!("engine_{}", layer.name),
+            5,
+            macs / 1e6,
+            "M MAC/s",
+            || {
+                let out = engine.run_layer(&LayerData {
+                    layer,
+                    x: &x,
+                    k: &k,
+                    qparams: QParams::identity(),
+                });
+                std::hint::black_box(out.clocks);
+            },
+        );
+    }
+
+    // Full TinyCNN through the coordinator.
+    {
+        let x = Tensor4::random([1, 28, 28, 3], 42);
+        let engine = Engine::new(KrakenConfig::paper(), 8);
+        let mut pipe = tiny_cnn_pipeline(engine);
+        let macs: f64 = pipe.stages.iter().map(|s| s.layer.macs_with_zpad() as f64).sum();
+        harness::report_throughput("coordinator_tiny_cnn_e2e", 5, macs / 1e6, "M MAC/s", || {
+            std::hint::black_box(pipe.run(&x).total_clocks);
+        });
+    }
+
+    // Analytical model over full networks.
+    {
+        let model = PerfModel::paper();
+        let res = resnet50();
+        harness::report("analytical_resnet50_all_metrics", 50, || {
+            std::hint::black_box(model.conv_metrics(&res).q_total);
+        });
+    }
+
+    // Design-space sweep (91 points × 71 conv layers).
+    {
+        let nets = paper_networks();
+        harness::report("sweep_13r_x_7c_over_3_cnns", 5, || {
+            let s = sweep_design_space(
+                &nets,
+                (4..=16).step_by(1),
+                [12usize, 15, 24, 48, 96, 120, 192].into_iter(),
+            );
+            std::hint::black_box(s.points.len());
+        });
+    }
+}

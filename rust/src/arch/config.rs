@@ -1,0 +1,95 @@
+//! The static Kraken configuration: parameters fixed at synthesis time
+//! (§III-F). The paper's implemented instance is `R × C = 7 × 96`,
+//! 8-bit words, 400 MHz for convolutional layers and 200 MHz for
+//! fully-connected layers (§VI-A).
+
+
+/// Synthesis-time parameters of a Kraken instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KrakenConfig {
+    /// PE rows `R`.
+    pub r: usize,
+    /// PE cores (columns) `C`.
+    pub c: usize,
+    /// Input/weight word width in bits (the implementation uses 8).
+    pub word_bits: usize,
+    /// Accumulator width in bits.
+    pub acc_bits: usize,
+    /// Clock frequency for convolutional layers (Hz).
+    pub freq_conv_hz: f64,
+    /// Clock frequency for fully-connected layers / matrix products (Hz).
+    /// Lowered to stay within LPDDR4 bandwidth (§VI-A).
+    pub freq_fc_hz: f64,
+    /// Weights-rotator SRAM depth: `max{S_W·C_i·K_W}` over the target
+    /// set of CNNs (§III-D). The implemented instance uses 2048.
+    pub wsram_depth: usize,
+}
+
+impl KrakenConfig {
+    /// A configuration with the paper's word widths and frequencies.
+    pub fn new(r: usize, c: usize) -> Self {
+        Self {
+            r,
+            c,
+            word_bits: 8,
+            acc_bits: 32,
+            freq_conv_hz: 400e6,
+            freq_fc_hz: 200e6,
+            wsram_depth: 2048,
+        }
+    }
+
+    /// The implemented instance: Kraken 7×96 (§VI-A).
+    pub fn paper() -> Self {
+        Self::new(7, 96)
+    }
+
+    /// The VGG/ResNet-tailored comparison point of Fig. 3: Kraken 7×24.
+    pub fn tailored_7x24() -> Self {
+        Self::new(7, 24)
+    }
+
+    /// Total number of processing elements `R·C`.
+    pub fn num_pes(&self) -> usize {
+        self.r * self.c
+    }
+
+    /// Peak performance in ops/s (2 ops per MAC per clock per PE).
+    /// 7×96 @ 400 MHz → 537.6 Gops (§VI headline).
+    pub fn peak_ops(&self) -> f64 {
+        2.0 * self.num_pes() as f64 * self.freq_conv_hz
+    }
+
+    /// On-chip SRAM bytes: two weights-rotator banks, each `C` words wide
+    /// and `wsram_depth` rows deep (§III-D) — the *only* on-chip memories.
+    /// 7×96 → 2 · 2048 · 96 = 384 KiB (Table V: 384.0 KB).
+    pub fn sram_bytes(&self) -> usize {
+        2 * self.wsram_depth * self.c * self.word_bits / 8
+    }
+
+    /// AXI stream width in bytes on the combined data path:
+    /// `R + C` bytes (§III-G: "R+C = 103 bytes wide" for 7×96).
+    pub fn stream_bytes(&self) -> usize {
+        self.r + self.c
+    }
+}
+
+impl Default for KrakenConfig {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_instance_numbers() {
+        let cfg = KrakenConfig::paper();
+        assert_eq!(cfg.num_pes(), 672);
+        assert!((cfg.peak_ops() - 537.6e9).abs() < 1e3);
+        assert_eq!(cfg.sram_bytes(), 384 * 1024);
+        assert_eq!(cfg.stream_bytes(), 103);
+    }
+}

@@ -1,0 +1,227 @@
+//! The 64-bit configuration header (§III-G).
+//!
+//! "Headers of 64 configuration bits are pre-pended to the X̂ (input) and
+//! K̂ (kernel) AXI-Stream packets and are streamed into the system through
+//! the datapath. In a single clock cycle, the pixel shifter and the
+//! weights rotator load the configuration bits that specify
+//! `K_H, K_W, S_H, S_W, C_i, F` for the upcoming layer."
+//!
+//! The header travels *with the data*: each downstream module reacts to
+//! the configuration bits when they reach it, enabling decentralized,
+//! stall-free reconfiguration. This module defines the exact bit packing
+//! used by the simulator and the coordinator.
+
+use thiserror::Error;
+
+use crate::layers::{KrakenLayerParams, Layer};
+
+/// Field widths of the 64-bit header (LSB-first packing).
+///
+/// | field | bits | range |
+/// |-------|------|-------|
+/// | `kh`  | 5    | 1..=31 |
+/// | `kw`  | 5    | 1..=31 |
+/// | `sh`  | 3    | 1..=7  |
+/// | `sw`  | 3    | 1..=7  |
+/// | `ci`  | 16   | 1..=65535 |
+/// | `f`   | 4    | 0..=15 |
+/// | `w`   | 12   | 1..=4095 |
+/// | `is_dense` | 1 | conv vs FC/matmul path |
+/// | reserved | 15 | zero |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigHeader {
+    pub kh: u8,
+    pub kw: u8,
+    pub sh: u8,
+    pub sw: u8,
+    pub ci: u16,
+    pub f: u8,
+    pub w: u16,
+    pub is_dense: bool,
+}
+
+/// Errors raised when a layer does not fit the header encoding.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum HeaderError {
+    #[error("field {field} value {value} exceeds its {bits}-bit header range")]
+    FieldOverflow {
+        field: &'static str,
+        value: usize,
+        bits: u32,
+    },
+    #[error("reserved header bits are non-zero: {0:#x}")]
+    ReservedBits(u64),
+    #[error("zero-valued field {0} is not a legal configuration")]
+    ZeroField(&'static str),
+}
+
+const KH_BITS: u32 = 5;
+const KW_BITS: u32 = 5;
+const SH_BITS: u32 = 3;
+const SW_BITS: u32 = 3;
+const CI_BITS: u32 = 16;
+const F_BITS: u32 = 4;
+const W_BITS: u32 = 12;
+
+impl ConfigHeader {
+    /// Build the header for `layer` as the coordinator would before
+    /// streaming its X̂ / K̂ packets.
+    pub fn for_layer(layer: &Layer, params: &KrakenLayerParams) -> Result<Self, HeaderError> {
+        let check = |field: &'static str, value: usize, bits: u32| {
+            if value >= (1usize << bits) {
+                Err(HeaderError::FieldOverflow { field, value, bits })
+            } else if value == 0 && field != "f" {
+                Err(HeaderError::ZeroField(field))
+            } else {
+                Ok(())
+            }
+        };
+        check("kh", layer.kh, KH_BITS)?;
+        check("kw", layer.kw, KW_BITS)?;
+        check("sh", layer.sh, SH_BITS)?;
+        check("sw", layer.sw, SW_BITS)?;
+        check("ci", layer.ci, CI_BITS)?;
+        check("f", params.f, F_BITS)?;
+        check("w", layer.w, W_BITS)?;
+        Ok(Self {
+            kh: layer.kh as u8,
+            kw: layer.kw as u8,
+            sh: layer.sh as u8,
+            sw: layer.sw as u8,
+            ci: layer.ci as u16,
+            f: params.f as u8,
+            w: layer.w as u16,
+            is_dense: layer.is_dense(),
+        })
+    }
+
+    /// Pack into the 64-bit word streamed through the datapath.
+    pub fn encode(&self) -> u64 {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        let mut put = |value: u64, bits: u32| {
+            v |= value << shift;
+            shift += bits;
+        };
+        put(self.kh as u64, KH_BITS);
+        put(self.kw as u64, KW_BITS);
+        put(self.sh as u64, SH_BITS);
+        put(self.sw as u64, SW_BITS);
+        put(self.ci as u64, CI_BITS);
+        put(self.f as u64, F_BITS);
+        put(self.w as u64, W_BITS);
+        put(self.is_dense as u64, 1);
+        v
+    }
+
+    /// Decode a 64-bit header word (as each module does, decentralized,
+    /// in the clock cycle the word reaches it).
+    pub fn decode(word: u64) -> Result<Self, HeaderError> {
+        let mut shift = 0u32;
+        let mut get = |bits: u32| {
+            let v = (word >> shift) & ((1u64 << bits) - 1);
+            shift += bits;
+            v
+        };
+        let kh = get(KH_BITS) as u8;
+        let kw = get(KW_BITS) as u8;
+        let sh = get(SH_BITS) as u8;
+        let sw = get(SW_BITS) as u8;
+        let ci = get(CI_BITS) as u16;
+        let f = get(F_BITS) as u8;
+        let w = get(W_BITS) as u16;
+        let is_dense = get(1) != 0;
+        let reserved = word >> shift;
+        if reserved != 0 {
+            return Err(HeaderError::ReservedBits(reserved));
+        }
+        for (name, v) in [("kh", kh as u64), ("kw", kw as u64), ("sh", sh as u64), ("sw", sw as u64), ("ci", ci as u64), ("w", w as u64)] {
+            if v == 0 {
+                return Err(HeaderError::ZeroField(match name {
+                    "kh" => "kh",
+                    "kw" => "kw",
+                    "sh" => "sh",
+                    "sw" => "sw",
+                    "ci" => "ci",
+                    _ => "w",
+                }));
+            }
+        }
+        Ok(Self { kh, kw, sh, sw, ci, f, w, is_dense })
+    }
+
+    /// Cores per elastic group implied by this header, eq. (5).
+    pub fn g(&self) -> usize {
+        self.kw as usize + self.sw as usize - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+
+    fn roundtrip(layer: &Layer) {
+        let p = KrakenLayerParams::derive(&KrakenConfig::paper(), layer);
+        let h = ConfigHeader::for_layer(layer, &p).unwrap();
+        let decoded = ConfigHeader::decode(h.encode()).unwrap();
+        assert_eq!(h, decoded);
+    }
+
+    #[test]
+    fn header_roundtrip_conv() {
+        roundtrip(&Layer::conv("c", 1, 227, 227, 11, 11, 4, 4, 3, 96));
+        roundtrip(&Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 512, 512));
+    }
+
+    #[test]
+    fn header_roundtrip_dense() {
+        roundtrip(&Layer::fully_connected("fc", 7, 4096, 4096));
+        roundtrip(&Layer::matmul("mm", 64, 64, 64));
+    }
+
+    #[test]
+    fn header_fits_64_bits() {
+        // 5+5+3+3+16+4+12+1 = 49 bits used, 15 reserved.
+        let l = Layer::conv("c", 1, 4095, 4095, 31, 31, 7, 7, 65535, 8);
+        let p = KrakenLayerParams {
+            r: 7,
+            c: 96,
+            g: 37,
+            e: 2,
+            idle_cores: 22,
+            f: 4,
+            l: 83,
+            t: 1,
+            q_kc: 1,
+            q_s: 1,
+            q_c: 0,
+            groups: 1,
+            nlw: 1,
+            q: 1,
+        };
+        let h = ConfigHeader::for_layer(&l, &p).unwrap();
+        assert!(h.encode() < (1u64 << 49));
+    }
+
+    #[test]
+    fn oversized_field_rejected() {
+        let l = Layer::conv("c", 1, 8192, 8192, 3, 3, 1, 1, 64, 64);
+        let p = KrakenLayerParams::derive(&KrakenConfig::paper(), &l);
+        assert!(matches!(
+            ConfigHeader::for_layer(&l, &p),
+            Err(HeaderError::FieldOverflow { field: "w", .. })
+        ));
+    }
+
+    #[test]
+    fn reserved_bits_rejected() {
+        let l = Layer::conv("c", 1, 27, 27, 5, 5, 1, 1, 48, 128);
+        let p = KrakenLayerParams::derive(&KrakenConfig::paper(), &l);
+        let word = ConfigHeader::for_layer(&l, &p).unwrap().encode();
+        assert!(matches!(
+            ConfigHeader::decode(word | (1 << 60)),
+            Err(HeaderError::ReservedBits(_))
+        ));
+    }
+}

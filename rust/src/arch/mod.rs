@@ -1,0 +1,8 @@
+//! Static architecture configuration (§III-F) and the 64-bit on-the-fly
+//! dynamic-reconfiguration header (§III-G).
+
+mod config;
+mod header;
+
+pub use config::KrakenConfig;
+pub use header::ConfigHeader;

@@ -1,0 +1,158 @@
+//! Analytical models of the prior-work accelerators Kraken is compared
+//! against (Table V/VI, Figs. 3–4): Eyeriss (JSSC'17), MMIE/ZASCAD
+//! (TCOMP'20) and CARLA (TCAS'21).
+//!
+//! The paper itself computes these comparisons analytically — "the
+//! number of valid MACs (Table I) and formulae presented in respective
+//! papers for the number of clock cycles" (§VI-B) — so the reproduction
+//! target here is the *same kind* of model. The baselines' silicon
+//! constants (PEs, area, power, frequency, on-chip RAM, and their
+//! Table V reported rows) are carried verbatim from the paper; their
+//! per-layer efficiency models are **reconstructions** from each
+//! architecture's documented structure, with the under-determined
+//! constants calibrated once against the overall efficiencies the paper
+//! reports. Each module documents exactly what is reconstructed vs
+//! reported. The comparison *shape* — who wins, by roughly what factor,
+//! where the crossovers fall — is the reproduction target, not the
+//! baselines' third decimal.
+
+pub mod carla;
+pub mod eyeriss;
+pub mod zascad;
+
+use crate::layers::Layer;
+
+/// A baseline accelerator's per-layer analytical model + constants.
+pub trait Accelerator {
+    /// Display name with venue tag, e.g. `"Eyeriss (JSSC'17)"`.
+    fn name(&self) -> &'static str;
+    /// Number of PEs.
+    fn num_pes(&self) -> usize;
+    /// Clock frequency (Hz).
+    fn freq_hz(&self) -> f64;
+    /// Per-layer performance efficiency ℰ_j ∈ (0, 1].
+    fn layer_efficiency(&self, layer: &Layer) -> f64;
+    /// Clock cycles for a layer: `MAC_valid / (PEs · ℰ_j)`.
+    fn layer_cycles(&self, layer: &Layer) -> f64 {
+        layer.macs_valid() as f64 / (self.num_pes() as f64 * self.layer_efficiency(layer))
+    }
+    /// Overall efficiency across layers, clock-weighted (eq. (18)).
+    fn overall_efficiency<'a>(&self, layers: impl Iterator<Item = &'a Layer>) -> f64 {
+        let (mut macs, mut cycles) = (0f64, 0f64);
+        for l in layers {
+            macs += l.macs_valid() as f64;
+            cycles += self.layer_cycles(l);
+        }
+        macs / (self.num_pes() as f64 * cycles)
+    }
+    /// Frames/s over a set of layers.
+    fn fps<'a>(&self, layers: impl Iterator<Item = &'a Layer>) -> f64 {
+        let cycles: f64 = layers.map(|l| self.layer_cycles(l)).sum();
+        self.freq_hz() / cycles
+    }
+}
+
+/// A Table V column as the paper reports it (baseline silicon numbers
+/// are carried as constants — we have no access to their testbeds).
+#[derive(Debug, Clone)]
+pub struct ReportedRow {
+    pub accelerator: &'static str,
+    pub network: &'static str,
+    pub efficiency_pct: f64,
+    pub fps: f64,
+    pub latency_ms: f64,
+    pub power_mw: f64,
+    pub gops: f64,
+    pub gops_per_mm2: f64,
+    pub gops_per_w: f64,
+    pub ma_per_frame_millions: f64,
+    pub ai: f64,
+}
+
+/// Table V's baseline rows, verbatim from the paper.
+pub fn table5_reported() -> Vec<ReportedRow> {
+    vec![
+        ReportedRow { accelerator: "Eyeriss", network: "AlexNet", efficiency_pct: 63.6, fps: 34.7, latency_ms: 115.3, power_mw: 278.0, gops: 42.8, gops_per_mm2: 3.5, gops_per_w: 153.8, ma_per_frame_millions: 2.0, ai: 610.6 },
+        ReportedRow { accelerator: "Eyeriss", network: "VGG-16", efficiency_pct: 30.8, fps: 0.7, latency_ms: 4309.5, power_mw: 236.0, gops: 20.7, gops_per_mm2: 1.7, gops_per_w: 87.6, ma_per_frame_millions: 56.1, ai: 529.1 },
+        ReportedRow { accelerator: "ZASCAD", network: "AlexNet", efficiency_pct: 66.4, fps: 48.1, latency_ms: 20.8, power_mw: 265.0, gops: 59.3, gops_per_mm2: 9.9, gops_per_w: 223.7, ma_per_frame_millions: 8.7, ai: 142.2 },
+        ReportedRow { accelerator: "ZASCAD", network: "VGG-16", efficiency_pct: 78.7, fps: 2.2, latency_ms: 421.8, power_mw: 301.0, gops: 65.3, gops_per_mm2: 10.9, gops_per_w: 217.0, ma_per_frame_millions: 205.2, ai: 144.7 },
+        ReportedRow { accelerator: "ZASCAD", network: "ResNet-50", efficiency_pct: 51.9, fps: 9.6, latency_ms: 103.6, power_mw: 248.0, gops: 71.0, gops_per_mm2: 11.8, gops_per_w: 286.2, ma_per_frame_millions: 102.1, ai: 72.4 },
+        ReportedRow { accelerator: "CARLA", network: "VGG-16", efficiency_pct: 96.4, fps: 2.5, latency_ms: 396.9, power_mw: 247.0, gops: 74.2, gops_per_mm2: 12.0, gops_per_w: 300.5, ma_per_frame_millions: 129.4, ai: 229.4 },
+        ReportedRow { accelerator: "CARLA", network: "ResNet-50", efficiency_pct: 89.5, fps: 10.8, latency_ms: 92.7, power_mw: 247.0, gops: 79.8, gops_per_mm2: 12.9, gops_per_w: 323.3, ma_per_frame_millions: 69.1, ai: 107.0 },
+    ]
+}
+
+/// Table VI's ZASCAD FC rows, verbatim from the paper.
+pub fn table6_reported() -> Vec<ReportedRow> {
+    vec![
+        ReportedRow { accelerator: "ZASCAD", network: "AlexNet", efficiency_pct: 96.8, fps: 131.6, latency_ms: 7.6, power_mw: 37.0, gops: 14.6, gops_per_mm2: 2.4, gops_per_w: 395.0, ma_per_frame_millions: 55.8, ai: 2.0 },
+        ReportedRow { accelerator: "ZASCAD", network: "VGG-16", efficiency_pct: 96.6, fps: 61.0, latency_ms: 16.4, power_mw: 40.0, gops: 15.1, gops_per_mm2: 2.5, gops_per_w: 377.1, ma_per_frame_millions: 124.3, ai: 2.0 },
+        ReportedRow { accelerator: "ZASCAD", network: "ResNet-50", efficiency_pct: 86.8, fps: 3300.0, latency_ms: 0.3, power_mw: 36.0, gops: 13.5, gops_per_mm2: 2.3, gops_per_w: 380.8, ma_per_frame_millions: 2.1, ai: 2.0 },
+    ]
+}
+
+pub use carla::Carla;
+pub use eyeriss::Eyeriss;
+pub use zascad::Zascad;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::{alexnet, resnet50, vgg16};
+
+    #[test]
+    fn reconstructed_overall_efficiencies_match_paper() {
+        // Calibration check: each baseline's clock-weighted overall ℰ on
+        // its benchmarked networks lands near the paper's Table V values.
+        let e = Eyeriss::new();
+        let a = e.overall_efficiency(alexnet().conv_layers()) * 100.0;
+        let v = e.overall_efficiency(vgg16().conv_layers()) * 100.0;
+        assert!((a - 63.6).abs() < 3.0, "Eyeriss AlexNet ℰ={a:.1}");
+        assert!((v - 30.8).abs() < 3.0, "Eyeriss VGG ℰ={v:.1}");
+
+        let z = Zascad::new();
+        let a = z.overall_efficiency(alexnet().conv_layers()) * 100.0;
+        let v = z.overall_efficiency(vgg16().conv_layers()) * 100.0;
+        let r = z.overall_efficiency(resnet50().conv_layers()) * 100.0;
+        assert!((a - 66.4).abs() < 3.0, "ZASCAD AlexNet ℰ={a:.1}");
+        assert!((v - 78.7).abs() < 3.0, "ZASCAD VGG ℰ={v:.1}");
+        assert!((r - 51.9).abs() < 3.0, "ZASCAD ResNet ℰ={r:.1}");
+
+        let c = Carla::new();
+        let v = c.overall_efficiency(vgg16().conv_layers()) * 100.0;
+        let r = c.overall_efficiency(resnet50().conv_layers()) * 100.0;
+        assert!((v - 96.4).abs() < 2.0, "CARLA VGG ℰ={v:.1}");
+        assert!((r - 89.5).abs() < 3.0, "CARLA ResNet ℰ={r:.1}");
+    }
+
+    #[test]
+    fn kraken_beats_baselines_where_paper_says() {
+        // Table V ordering: Kraken's overall ℰ ≥ every baseline on
+        // AlexNet & VGG; CARLA edges Kraken on ResNet-50 (89.5 vs 88.3).
+        let model = crate::perf::PerfModel::paper();
+        let k_alex = model.conv_metrics(&alexnet()).efficiency;
+        let k_vgg = model.conv_metrics(&vgg16()).efficiency;
+        let k_res = model.conv_metrics(&resnet50()).efficiency;
+        assert!(k_alex > Eyeriss::new().overall_efficiency(alexnet().conv_layers()));
+        assert!(k_alex > Zascad::new().overall_efficiency(alexnet().conv_layers()));
+        assert!(k_vgg > Zascad::new().overall_efficiency(vgg16().conv_layers()));
+        assert!(k_vgg > Carla::new().overall_efficiency(vgg16().conv_layers()) - 0.01);
+        let carla_res = Carla::new().overall_efficiency(resnet50().conv_layers());
+        assert!(carla_res > k_res, "paper: CARLA 89.5 > Kraken 88.3 on ResNet-50");
+    }
+
+    #[test]
+    fn headline_factors_vs_carla() {
+        // §VI: 5.8× more Gops/mm² and 1.6× more Gops/W than CARLA.
+        let model = crate::perf::PerfModel::paper();
+        let k = model.conv_metrics(&vgg16());
+        let carla = table5_reported()
+            .into_iter()
+            .find(|r| r.accelerator == "CARLA" && r.network == "VGG-16")
+            .unwrap();
+        let area_factor = k.gops_per_mm2 / carla.gops_per_mm2;
+        let power_factor = k.gops_per_w / carla.gops_per_w;
+        assert!((area_factor - 5.8).abs() < 0.2, "Gops/mm² factor {area_factor:.2}");
+        assert!((power_factor - 1.6).abs() < 0.15, "Gops/W factor {power_factor:.2}");
+    }
+}

@@ -1,0 +1,106 @@
+//! MMIE / ZASCAD (Ardakani et al., TCOMP'20) — 192 PEs as 32 1-D
+//! reconfigurable tiles of 6 PEs.
+//!
+//! Reconstruction (see [`super`] docs): each effective tile computes one
+//! output channel's row convolution; §VI-B-2 identifies the two loss
+//! mechanisms — "it wastes several clock cycles in a process called
+//! weights passing when starting each new row, and is unable to perform
+//! computations when streaming out output pixels". We model
+//!
+//! `ℰ_j = u_ch · W/(W + c_wp·K_W) · r(K_W)`
+//!
+//! where `u_ch` is channel rounding over the 32 tiles, the middle term
+//! is the per-row weight-passing overhead, and `r(K_W)` is the
+//! kernel-class base efficiency of the 6-PE tile grouping (their
+//! reconfigurability covers "only a handful of K, S combinations",
+//! leaving PEs idle otherwise — 1×1 layers are the worst case).
+//! Calibrated against Table V's 66.4 / 78.7 / 51.9 %.
+
+use crate::layers::Layer;
+
+use super::Accelerator;
+
+pub struct Zascad {
+    /// Weight-passing overhead cycles per kernel column per row.
+    pub c_wp: f64,
+}
+
+impl Zascad {
+    pub fn new() -> Self {
+        Self { c_wp: 2.0 }
+    }
+
+    /// Kernel-class base efficiency of the 6-PE effective tiles.
+    fn r_kw(&self, kw: usize, sw: usize) -> f64 {
+        let base = match kw {
+            1 => 0.47,   // 1×1: a 1-D conv tile degenerates, most PEs idle
+            3 => 0.905,  // native FID case
+            5 => 0.95,
+            7 => 0.62,
+            11 => 0.93,
+            _ => 0.8,
+        };
+        // Strided layers discard partial products in the 1-D chain.
+        if sw > 1 && kw > 1 {
+            base * 0.82
+        } else {
+            base
+        }
+    }
+
+    fn u_channels(&self, layer: &Layer) -> f64 {
+        let co = layer.co_per_group();
+        co as f64 / (32.0 * co.div_ceil(32) as f64)
+    }
+}
+
+impl Default for Zascad {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Accelerator for Zascad {
+    fn name(&self) -> &'static str {
+        "MMIE/ZASCAD (TCOMP'20)"
+    }
+
+    fn num_pes(&self) -> usize {
+        192
+    }
+
+    fn freq_hz(&self) -> f64 {
+        200e6
+    }
+
+    fn layer_efficiency(&self, layer: &Layer) -> f64 {
+        if layer.is_dense() {
+            // Table VI: high PE utilization but no weight reuse.
+            return 0.95;
+        }
+        let w = layer.w as f64;
+        let wp = w / (w + self.c_wp * layer.kw as f64);
+        (self.u_channels(layer) * wp * self.r_kw(layer.kw, layer.sw)).clamp(1e-3, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pointwise_layers_are_the_weak_spot() {
+        let z = Zascad::new();
+        let k3 = Layer::conv("a", 1, 14, 14, 3, 3, 1, 1, 256, 256);
+        let k1 = Layer::conv("b", 1, 14, 14, 1, 1, 1, 1, 256, 256);
+        assert!(z.layer_efficiency(&k3) > 1.5 * z.layer_efficiency(&k1));
+    }
+
+    #[test]
+    fn weight_passing_hurts_narrow_rows() {
+        let z = Zascad::new();
+        let wide = Layer::conv("w", 1, 224, 224, 3, 3, 1, 1, 64, 64);
+        let narrow = Layer::conv("n", 1, 13, 13, 3, 3, 1, 1, 64, 64);
+        assert!(z.layer_efficiency(&wide) > z.layer_efficiency(&narrow));
+    }
+}

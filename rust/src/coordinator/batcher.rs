@@ -1,0 +1,162 @@
+//! FC/matmul request batching (§IV-D).
+//!
+//! "Inference batch size for the fully-connected layers (H = N^f) can
+//! be hence chosen as R to fully utilize the rows of the PE array and
+//! reduce the number of memory accesses by reusing the weights."
+//!
+//! The batcher collects up to `R` dense requests (vectors of the same
+//! feature width), packs them into one `[R, C_i]` engine pass, and
+//! scatters the results — the serving-side mechanism behind Table VI's
+//! 5–10× memory-access advantage over ZASCAD's batch-1 processing.
+
+use crate::layers::Layer;
+use crate::quant::QParams;
+use crate::sim::{Engine, LayerOutput};
+
+/// A dense (FC / matmul) workload bound to weights.
+pub struct DenseOp {
+    pub name: String,
+    pub ci: usize,
+    pub co: usize,
+    /// `[C_i, C_o]` row-major weights.
+    pub weights: Vec<i8>,
+    pub qparams: QParams,
+}
+
+/// Collects dense requests and flushes them in `R`-row batches.
+pub struct FcBatcher {
+    pub op: DenseOp,
+    pending: Vec<Vec<i8>>,
+    /// Batch capacity (= the array's R, §IV-D).
+    pub capacity: usize,
+}
+
+/// One flushed batch's results, in submission order.
+pub struct BatchResult {
+    /// Per-request int32 outputs (`C_o` each).
+    pub outputs: Vec<Vec<i32>>,
+    /// Engine clocks the batch took.
+    pub clocks: u64,
+    /// DRAM words moved (weights fetched once for the whole batch).
+    pub dram_words: u64,
+}
+
+impl FcBatcher {
+    pub fn new(op: DenseOp, capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Self { op, pending: Vec::new(), capacity }
+    }
+
+    /// Queue one request; returns `true` when the batch is full and
+    /// should be flushed.
+    pub fn push(&mut self, features: Vec<i8>) -> bool {
+        assert_eq!(features.len(), self.op.ci, "feature width mismatch");
+        self.pending.push(features);
+        self.pending.len() >= self.capacity
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Run the queued requests as one `[N^f, C_i] · [C_i, C_o]` pass.
+    /// `N^f` is the actual queue depth (≤ R): stragglers still run,
+    /// they just reuse weights less.
+    pub fn flush(&mut self, engine: &mut Engine) -> BatchResult {
+        assert!(!self.pending.is_empty(), "flush of an empty batch");
+        let nf = self.pending.len();
+        let layer = Layer::fully_connected(self.op.name.clone(), nf, self.op.ci, self.op.co);
+        let mut m1 = Vec::with_capacity(nf * self.op.ci);
+        for req in &self.pending {
+            m1.extend_from_slice(req);
+        }
+        let out: LayerOutput = engine.run_dense(&layer, &m1, &self.op.weights, self.op.qparams);
+        let outputs = (0..nf)
+            .map(|i| out.y_acc.data[i * self.op.co..(i + 1) * self.op.co].to_vec())
+            .collect();
+        self.pending.clear();
+        BatchResult {
+            outputs,
+            clocks: out.clocks,
+            dram_words: out.counters.dram_total(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::tensor::{matmul_i8, Tensor4};
+
+    fn op(ci: usize, co: usize) -> DenseOp {
+        DenseOp {
+            name: "fc".into(),
+            ci,
+            co,
+            weights: Tensor4::random([1, 1, ci, co], 9).data,
+            qparams: QParams::identity(),
+        }
+    }
+
+    #[test]
+    fn batched_results_match_per_request_matmul() {
+        let mut engine = Engine::new(KrakenConfig::new(4, 8), 8);
+        let mut b = FcBatcher::new(op(12, 10), 4);
+        let reqs: Vec<Vec<i8>> =
+            (0..4).map(|i| Tensor4::random([1, 1, 1, 12], 100 + i).data).collect();
+        for (i, r) in reqs.iter().enumerate() {
+            let full = b.push(r.clone());
+            assert_eq!(full, i == 3);
+        }
+        let result = b.flush(&mut engine);
+        for (req, out) in reqs.iter().zip(&result.outputs) {
+            let want = matmul_i8(req, &b.op.weights, 1, 12, 10);
+            assert_eq!(*out, want);
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic() {
+        // The §IV-D claim: R requests per pass fetch the weights once;
+        // R single-request passes fetch them R times.
+        let cfg = KrakenConfig::new(7, 24);
+        let mut engine = Engine::new(cfg.clone(), 8);
+        let mut batched = FcBatcher::new(op(64, 48), 7);
+        for i in 0..7 {
+            batched.push(Tensor4::random([1, 1, 1, 64], 200 + i).data);
+        }
+        let one_pass = batched.flush(&mut engine);
+
+        let mut single_words = 0u64;
+        for i in 0..7u64 {
+            let mut b1 = FcBatcher::new(op(64, 48), 1);
+            b1.push(Tensor4::random([1, 1, 1, 64], 200 + i).data);
+            single_words += b1.flush(&mut engine).dram_words;
+        }
+        assert!(
+            single_words as f64 / one_pass.dram_words as f64 > 4.0,
+            "batched {} vs singles {}",
+            one_pass.dram_words,
+            single_words
+        );
+    }
+
+    #[test]
+    fn partial_batches_still_flush() {
+        let mut engine = Engine::new(KrakenConfig::new(4, 8), 8);
+        let mut b = FcBatcher::new(op(12, 10), 4);
+        b.push(Tensor4::random([1, 1, 1, 12], 300).data);
+        b.push(Tensor4::random([1, 1, 1, 12], 301).data);
+        let result = b.flush(&mut engine);
+        assert_eq!(result.outputs.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature width mismatch")]
+    fn wrong_width_rejected() {
+        let mut b = FcBatcher::new(op(12, 10), 4);
+        b.push(vec![0i8; 13]);
+    }
+}

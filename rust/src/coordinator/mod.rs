@@ -1,0 +1,18 @@
+//! Layer-3 coordination: the host-side system around the engine.
+//!
+//! The paper's contribution is the engine + dataflow; the coordinator is
+//! the machinery an adopter needs around it: a per-network
+//! [`scheduler::InferencePipeline`] that streams layers back-to-back
+//! (requantizing and re-tiling `Ŷ_j → X̂_{j+1}` between engine passes,
+//! running host ops like max-pool that the benchmark CNNs need), and a
+//! threaded [`server::InferenceServer`] with request queueing, FC
+//! batching (batch = `R`, §IV-D) and latency/throughput accounting at
+//! the modeled 400/200 MHz operating points.
+
+pub mod batcher;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{BatchResult, DenseOp, FcBatcher};
+pub use scheduler::{tiny_cnn_pipeline, InferencePipeline, PipelineReport, StageOp};
+pub use server::{InferenceServer, ServeStats};

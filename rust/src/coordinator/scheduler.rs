@@ -1,0 +1,205 @@
+//! The per-network layer scheduler.
+//!
+//! Streams a [`crate::networks::Network`]'s layers through one
+//! [`crate::sim::Engine`] back-to-back: each layer's 64-bit header rides
+//! the data stream (§III-G), outputs are requantized on the fly by the
+//! output pipe, and host-side ops (max-pool, flatten) run between engine
+//! passes exactly where the benchmark CNNs place them.
+
+use crate::layers::{Layer, LayerKind};
+use crate::metrics::Counters;
+use crate::quant::QParams;
+use crate::sim::{Engine, LayerData};
+use crate::tensor::Tensor4;
+
+/// Host-side op applied to a layer's int8 output before the next layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageOp {
+    /// Feed through unchanged.
+    None,
+    /// 2×2 max pooling (stride 2).
+    MaxPool2x2,
+    /// Flatten NHWC → [1, H·W·C] for the FC layers.
+    Flatten,
+}
+
+/// One layer + its weights + glue.
+pub struct Stage {
+    pub layer: Layer,
+    pub weights: Tensor4<i8>,
+    pub qparams: QParams,
+    pub post: StageOp,
+}
+
+/// A compiled inference pipeline over one engine.
+pub struct InferencePipeline {
+    pub engine: Engine,
+    pub stages: Vec<Stage>,
+}
+
+/// Per-inference report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Raw int32 logits of the final layer.
+    pub logits: Vec<i32>,
+    /// Clock cycles per stage (engine layers only).
+    pub stage_clocks: Vec<u64>,
+    /// Total engine clocks.
+    pub total_clocks: u64,
+    /// Event counters for the inference.
+    pub counters: Counters,
+    /// Modeled wall time at the conv/FC operating points (§VI-A).
+    pub modeled_ms: f64,
+}
+
+impl InferencePipeline {
+    pub fn new(engine: Engine, stages: Vec<Stage>) -> Self {
+        Self { engine, stages }
+    }
+
+    /// Run one input through every stage.
+    pub fn run(&mut self, x: &Tensor4<i8>) -> PipelineReport {
+        let before = self.engine.counters;
+        let mut act = x.clone();
+        let mut logits: Vec<i32> = Vec::new();
+        let mut stage_clocks = Vec::with_capacity(self.stages.len());
+        let mut modeled_s = 0.0;
+        let n_stages = self.stages.len();
+        for (j, stage) in self.stages.iter().enumerate() {
+            let freq = if stage.layer.kind == LayerKind::Conv {
+                self.engine.cfg.freq_conv_hz
+            } else {
+                self.engine.cfg.freq_fc_hz
+            };
+            let out = if stage.layer.is_dense() {
+                let flat = act.data.clone();
+                self.engine
+                    .run_dense(&stage.layer, &flat, &stage.weights.data, stage.qparams)
+            } else {
+                self.engine.run_layer(&LayerData {
+                    layer: &stage.layer,
+                    x: &act,
+                    k: &stage.weights,
+                    qparams: stage.qparams,
+                })
+            };
+            stage_clocks.push(out.clocks);
+            modeled_s += out.clocks as f64 / freq;
+            if j + 1 == n_stages {
+                logits = out.y_acc.data.clone();
+            }
+            act = match stage.post {
+                StageOp::None => out.y_q,
+                StageOp::MaxPool2x2 => maxpool2x2(&out.y_q),
+                StageOp::Flatten => {
+                    let flat = out.y_q.data.clone();
+                    let len = flat.len();
+                    Tensor4::from_vec([1, 1, 1, len], flat)
+                }
+            };
+        }
+        let counters = self.engine.counters.diff(&before);
+        PipelineReport {
+            logits,
+            total_clocks: stage_clocks.iter().sum(),
+            stage_clocks,
+            counters,
+            modeled_ms: modeled_s * 1e3,
+        }
+    }
+}
+
+/// Host-side 2×2 max pooling (stride 2) on int8 NHWC.
+pub fn maxpool2x2(x: &Tensor4<i8>) -> Tensor4<i8> {
+    let [n, h, w, c] = x.shape;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor4::<i8>::zeros([n, oh, ow, c]);
+    for bn in 0..n {
+        for yh in 0..oh {
+            for yw in 0..ow {
+                for ch in 0..c {
+                    let m = x
+                        .get(bn, 2 * yh, 2 * yw, ch)
+                        .max(x.get(bn, 2 * yh, 2 * yw + 1, ch))
+                        .max(x.get(bn, 2 * yh + 1, 2 * yw, ch))
+                        .max(x.get(bn, 2 * yh + 1, 2 * yw + 1, ch));
+                    y.set(bn, yh, yw, ch, m);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Requantization scale shared by the TinyCNN stages — keep in sync with
+/// `python/compile/model.py::TINY_SCALE`.
+pub const TINY_SCALE: f64 = 1.0 / 64.0;
+
+/// Weight-seed convention shared with `python/compile/testdata.py`.
+pub const X_SEED: u64 = 42;
+pub const W_SEED_BASE: u64 = 1000;
+
+/// Build the TinyCNN pipeline with seeded weights — the exact network
+/// the `tiny_cnn` AOT artifact computes (`rust/tests/e2e_runtime.rs`
+/// asserts bit-equality of the logits).
+pub fn tiny_cnn_pipeline(engine: Engine) -> InferencePipeline {
+    let net = crate::networks::tiny_cnn();
+    let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
+    let mut stages = Vec::new();
+    for (j, layer) in net.layers.iter().enumerate() {
+        let shape = if layer.is_dense() {
+            [1, 1, layer.ci, layer.co]
+        } else {
+            [layer.kh, layer.kw, layer.ci, layer.co]
+        };
+        let weights = Tensor4::random(shape, W_SEED_BASE + 10 * j as u64);
+        let post = match layer.name.as_str() {
+            "conv4" => StageOp::MaxPool2x2, // 14×14 → 7×7 before conv5
+            "conv6" => StageOp::Flatten,    // NHWC → [1, 2352] for fc7
+            _ => StageOp::None,
+        };
+        stages.push(Stage { layer: layer.clone(), weights, qparams: q_relu, post });
+    }
+    InferencePipeline::new(engine, stages)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+
+    #[test]
+    fn maxpool_matches_python_ref() {
+        let x = Tensor4::from_vec([1, 4, 4, 1], (0..16).map(|v| v as i8).collect());
+        let y = maxpool2x2(&x);
+        assert_eq!(y.data, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn tiny_cnn_pipeline_runs_end_to_end() {
+        let engine = Engine::new(KrakenConfig::new(7, 96), 8);
+        let mut pipe = tiny_cnn_pipeline(engine);
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let report = pipe.run(&x);
+        assert_eq!(report.logits.len(), 10);
+        assert_eq!(report.stage_clocks.len(), 8);
+        assert!(report.total_clocks > 0);
+        assert!(report.modeled_ms > 0.0);
+        // Deterministic.
+        let report2 = pipe.run(&x);
+        assert_eq!(report.logits, report2.logits);
+    }
+
+    #[test]
+    fn stage_clocks_match_eq17() {
+        let cfg = KrakenConfig::new(7, 96);
+        let engine = Engine::new(cfg.clone(), 8);
+        let mut pipe = tiny_cnn_pipeline(engine);
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let report = pipe.run(&x);
+        for (stage, clocks) in pipe.stages.iter().zip(&report.stage_clocks) {
+            let p = crate::layers::KrakenLayerParams::derive(&cfg, &stage.layer);
+            assert_eq!(*clocks, p.q, "{}", stage.layer.name);
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! Direct executor of Algorithm 1's loop-nest representation.
+//!
+//! This is the *semantic reference* for the dataflow: it walks the exact
+//! `t → n → l → w → (c_i, k_h) ∥ (r, e, g)` loop nest, consuming the
+//! tiled `X̂` / `K̂` streams of [`super::tiling`], applying the elastic
+//! group schedule of Tables III–IV, and producing (a) bit-exact int32
+//! outputs and (b) the exact clock count of eq. (17) plus the stream
+//! word counts of eq. (20). The structural simulator ([`crate::sim`]) is
+//! verified against it, and it is verified against the direct-form
+//! convolution ([`crate::tensor`]) and the JAX/Pallas golden artifacts.
+
+use crate::arch::KrakenConfig;
+use crate::layers::{same_padding, KrakenLayerParams, Layer};
+use crate::tensor::Tensor4;
+
+use super::tiling::{tile_input, tile_weights, TiledInput, TiledWeights};
+
+/// Output and exact event counts of one layer run.
+#[derive(Debug, Clone)]
+pub struct LoopNestResult {
+    /// `[N, H/S_H, W/S_W, C_o]` int32 accumulator outputs.
+    pub y: Tensor4<i32>,
+    /// Total clock cycles — must equal eq. (17).
+    pub clocks: u64,
+    /// Products on valid (non-padding, non-discarded) slots — the
+    /// `#MAC_valid` of eq. (4).
+    pub valid_macs: u64,
+    /// Multiplier activations including zero-padding operands and
+    /// rounding slack (`#MAC` issued by active PEs).
+    pub issued_macs: u64,
+    /// X̂ words streamed from DRAM (eq. (20)'s `M_X̂`).
+    pub x_words: u64,
+    /// K̂ words prefetched from DRAM (`M_K̂`).
+    pub k_words: u64,
+    /// Ŷ words streamed to DRAM (`M_Ŷ`).
+    pub y_words: u64,
+}
+
+/// Run a (possibly grouped) convolutional layer through the loop nest.
+/// `x: [N,H,W,groups·C_i]`, `k: [K_H,K_W,C_i,C_o]`.
+pub fn run_conv_loopnest(
+    cfg: &KrakenConfig,
+    layer: &Layer,
+    x: &Tensor4<i8>,
+    k: &Tensor4<i8>,
+) -> LoopNestResult {
+    assert!(!layer.is_dense());
+    let p = KrakenLayerParams::derive(cfg, layer);
+    let [n, h, w, ci_total] = x.shape;
+    assert_eq!([n, h, w, ci_total], [layer.n, layer.h, layer.w, layer.ci * layer.groups]);
+    assert_eq!(k.shape, [layer.kh, layer.kw, layer.ci, layer.co]);
+    let (oh, ow) = (layer.out_h(), layer.out_w());
+    let mut result = LoopNestResult {
+        y: Tensor4::zeros([n, oh, ow, layer.co]),
+        clocks: 0,
+        valid_macs: 0,
+        issued_macs: 0,
+        x_words: 0,
+        k_words: 0,
+        y_words: 0,
+    };
+    let co_g = layer.co_per_group();
+    for grp in 0..layer.groups {
+        // Slice this group's input channels / filters.
+        let mut xg = Tensor4::<i8>::zeros([n, h, w, layer.ci]);
+        for bn in 0..n {
+            for ih in 0..h {
+                for iw in 0..w {
+                    for c in 0..layer.ci {
+                        xg.set(bn, ih, iw, c, x.get(bn, ih, iw, grp * layer.ci + c));
+                    }
+                }
+            }
+        }
+        let mut kg = Tensor4::<i8>::zeros([layer.kh, layer.kw, layer.ci, co_g]);
+        for dh in 0..layer.kh {
+            for dw in 0..layer.kw {
+                for c in 0..layer.ci {
+                    for oc in 0..co_g {
+                        kg.set(dh, dw, c, oc, k.get(dh, dw, c, grp * co_g + oc));
+                    }
+                }
+            }
+        }
+        run_conv_group(cfg, layer, &p, &xg, &kg, grp * co_g, &mut result);
+    }
+    result
+}
+
+/// One group's pass: the loop nest proper.
+fn run_conv_group(
+    _cfg: &KrakenConfig,
+    layer: &Layer,
+    p: &KrakenLayerParams,
+    x: &Tensor4<i8>,
+    k: &Tensor4<i8>,
+    co_base: usize,
+    out: &mut LoopNestResult,
+) {
+    let x_hat: TiledInput = tile_input(x, layer, p);
+    let k_hat: TiledWeights = tile_weights(k, layer, p);
+    out.x_words += p.t as u64 * x_hat.num_words();
+    out.k_words += p.t as u64 * k_hat.words_per_iteration();
+
+    let (oh, ow) = (layer.out_h(), layer.out_w());
+    let (pad_top, _) = same_padding(layer.h, layer.kh, layer.sh);
+    let (pad_left, _) = same_padding(layer.w, layer.kw, layer.sw);
+    let co_g = layer.co_per_group();
+    let (sw, kw, kh, ci) = (layer.sw, layer.kw, layer.kh, layer.ci);
+    let eg = p.e * p.g;
+
+    for t in 0..p.t {
+        out.clocks += p.q_c as u64; // configuration stall, eq. (16)
+        for bn in 0..layer.n {
+            for l in 0..p.l {
+                // Shift-accumulate carry per (r, e·g); reset per block.
+                let mut carry = vec![0i64; p.r * eg];
+                for wcol in 0..layer.w {
+                    out.clocks += (ci * kh) as u64 + p.q_s as u64;
+                    let w_phase = wcol as isize + pad_left as isize;
+                    // Which output column completes at this input column
+                    // determines releases; compute per (e, g) slot.
+                    let mut total = vec![0i64; p.r * eg];
+                    let mut released = vec![false; eg];
+                    for e in 0..p.e {
+                        for g in 0..p.g {
+                            let slot = e * p.g + g;
+                            // Channel mux: the tap this core serves must
+                            // satisfy (w + pad − tap) ≡ 0 mod S_W, so
+                            // s_w = (g − w − pad) mod S_W and tap = g − s_w
+                            // (Table IV's interleaving, generalized).
+                            let s_ch =
+                                (g as isize - w_phase).rem_euclid(sw as isize) as usize;
+                            let tap = g as isize - s_ch as isize;
+                            // Output column this product contributes to.
+                            let num = w_phase - tap;
+                            debug_assert_eq!(num.rem_euclid(sw as isize), 0);
+                            let o_col = num.div_euclid(sw as isize);
+                            let co_idx = (t * p.e + e) * sw + s_ch;
+                            let slot_valid = tap >= 0
+                                && (tap as usize) < kw
+                                && o_col >= 0
+                                && (o_col as usize) < ow
+                                && co_idx < co_g;
+                            for r in 0..p.r {
+                                let i = r * eg + slot;
+                                let mut acc = carry[i];
+                                if slot_valid {
+                                    let o_row = l * p.r + r;
+                                    for c_i in 0..ci {
+                                        for k_h in 0..kh {
+                                            let xv = x_hat.beat(bn, l, wcol, c_i, k_h % layer.sh)
+                                                [r + k_h / layer.sh]
+                                                as i64;
+                                            let kv = k_hat.row(t, c_i, k_h, s_ch)
+                                                [e * p.g + g]
+                                                as i64;
+                                            acc += xv * kv;
+                                            out.issued_macs += 1;
+                                            // Valid MACs: real input row/col.
+                                            let in_row = (o_row * layer.sh + k_h) as isize
+                                                - pad_top as isize;
+                                            if o_row < oh
+                                                && in_row >= 0
+                                                && (in_row as usize) < layer.h
+                                            {
+                                                out.valid_macs += 1;
+                                            }
+                                        }
+                                    }
+                                }
+                                total[i] = acc;
+                            }
+                            // Release: tap complete, or final column with
+                            // only right-padding taps remaining.
+                            let complete = slot_valid
+                                && (tap as usize == kw - 1 || wcol == layer.w - 1);
+                            if complete {
+                                released[slot] = true;
+                                for r in 0..p.r {
+                                    let o_row = l * p.r + r;
+                                    if o_row < oh {
+                                        out.y.set(
+                                            bn,
+                                            o_row,
+                                            o_col as usize,
+                                            co_base + co_idx,
+                                            total[r * eg + slot] as i32,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Shift right within each EG: core g+1 inherits core
+                    // g's sum unless it was just released (Tables III–IV).
+                    for r in 0..p.r {
+                        for e in 0..p.e {
+                            for g in (0..p.g).rev() {
+                                let slot = e * p.g + g;
+                                carry[r * eg + slot] = if g == 0 || released[slot - 1] {
+                                    0
+                                } else {
+                                    total[r * eg + slot - 1]
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out.y_words +=
+            (layer.n * p.l * ow * p.e * sw * p.r) as u64;
+    }
+}
+
+/// Run an FC layer or matrix product (§IV-D): `m1: [H, C_i]` (row-major),
+/// `m2: [C_i, C_o]` → `[H, C_o]` int32, with the `[R, C]`-submatrix
+/// schedule and eq. (17)'s clock count.
+pub fn run_dense_loopnest(
+    cfg: &KrakenConfig,
+    layer: &Layer,
+    m1: &[i8],
+    m2: &[i8],
+) -> LoopNestResult {
+    assert!(layer.is_dense());
+    let p = KrakenLayerParams::derive(cfg, layer);
+    let (hrows, ci, co) = (layer.h, layer.ci, layer.co);
+    assert_eq!(m1.len(), hrows * ci);
+    assert_eq!(m2.len(), ci * co);
+    let mut y = Tensor4::<i32>::zeros([1, hrows, 1, co]);
+    let mut result = LoopNestResult {
+        y: Tensor4::zeros([0, 0, 0, 0]),
+        clocks: 0,
+        valid_macs: 0,
+        issued_macs: 0,
+        x_words: 0,
+        k_words: 0,
+        y_words: 0,
+    };
+    for t in 0..p.t {
+        result.clocks += 1; // q_c: configuration stall
+        for l in 0..p.l {
+            result.clocks += ci as u64;
+            // X̂ beats: C_i beats of R words; K̂: C_i rows of C words.
+            result.x_words += (ci * p.r) as u64;
+            for r in 0..p.r {
+                let row = l * p.r + r;
+                for c in 0..p.c {
+                    let col = t * p.c + c;
+                    let mut acc = 0i64;
+                    for k in 0..ci {
+                        let a = if row < hrows { m1[row * ci + k] as i64 } else { 0 };
+                        let b = if col < co { m2[k * co + col] as i64 } else { 0 };
+                        acc += a * b;
+                        result.issued_macs += 1;
+                        if row < hrows && col < co {
+                            result.valid_macs += 1;
+                        }
+                    }
+                    if row < hrows && col < co {
+                        y.set(0, row, 0, col, acc as i32);
+                    }
+                }
+            }
+            result.y_words += (p.r * p.c) as u64;
+        }
+        result.k_words += (ci * p.c) as u64;
+    }
+    result.y = y;
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::KrakenLayerParams;
+    use crate::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, matmul_i8};
+
+    fn check_conv(cfg: &KrakenConfig, layer: &Layer, seed: u64) {
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], seed);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], seed + 1);
+        let got = run_conv_loopnest(cfg, layer, &x, &k);
+        let want = if layer.groups == 1 {
+            conv2d_same_i8(&x, &k, layer.sh, layer.sw)
+        } else {
+            conv2d_same_grouped_i8(&x, &k, layer.sh, layer.sw, layer.groups)
+        };
+        assert_eq!(got.y.shape, want.shape, "{}", layer.name);
+        assert_eq!(got.y, want, "{} output mismatch", layer.name);
+        // Clock count must equal eq. (17).
+        let p = KrakenLayerParams::derive(cfg, layer);
+        assert_eq!(got.clocks, p.q, "{} clock mismatch", layer.name);
+        // Valid MAC count must equal eq. (4).
+        assert_eq!(got.valid_macs, layer.macs_valid(), "{} MAC_valid", layer.name);
+    }
+
+    #[test]
+    fn unstrided_3x3_matches_reference() {
+        let cfg = KrakenConfig::new(3, 12);
+        check_conv(&cfg, &Layer::conv("c", 1, 9, 9, 3, 3, 1, 1, 4, 8), 42);
+    }
+
+    #[test]
+    fn table3_shape_5x1_matches_reference() {
+        // Table III's W, K_W, S_W = 8, 5, 1 (G = 5).
+        let cfg = KrakenConfig::new(2, 5);
+        check_conv(&cfg, &Layer::conv("c", 1, 8, 8, 5, 5, 1, 1, 3, 1), 7);
+    }
+
+    #[test]
+    fn table4_shape_strided_5x2_matches_reference() {
+        // Table IV's W, K_W, S_W = 8, 5, 2 (G = 6, two channels/EG).
+        let cfg = KrakenConfig::new(2, 6);
+        check_conv(&cfg, &Layer::conv("c", 1, 8, 8, 5, 5, 2, 2, 3, 2), 8);
+    }
+
+    #[test]
+    fn alexnet_like_11x4_matches_reference() {
+        let cfg = KrakenConfig::new(4, 28);
+        check_conv(&cfg, &Layer::conv("c", 1, 23, 23, 11, 11, 4, 4, 3, 8), 9);
+    }
+
+    #[test]
+    fn resnet_stem_7x2_matches_reference() {
+        let cfg = KrakenConfig::new(3, 16);
+        check_conv(&cfg, &Layer::conv("c", 1, 14, 14, 7, 7, 2, 2, 3, 4), 10);
+    }
+
+    #[test]
+    fn pointwise_1x1_matches_reference() {
+        let cfg = KrakenConfig::new(4, 12);
+        check_conv(&cfg, &Layer::conv("c", 1, 8, 8, 1, 1, 1, 1, 16, 24), 11);
+    }
+
+    #[test]
+    fn grouped_conv_matches_reference() {
+        let cfg = KrakenConfig::new(3, 9);
+        check_conv(&cfg, &Layer::conv_grouped("c", 1, 9, 9, 3, 3, 1, 1, 4, 8, 2), 12);
+    }
+
+    #[test]
+    fn batched_input_matches_reference() {
+        let cfg = KrakenConfig::new(3, 9);
+        check_conv(&cfg, &Layer::conv("c", 2, 6, 6, 3, 3, 1, 1, 3, 6), 13);
+    }
+
+    #[test]
+    fn ragged_shapes_with_rounding_slack() {
+        // H not divisible by R·S_H; C_o not divisible by E·S_W; C % G ≠ 0.
+        let cfg = KrakenConfig::new(4, 10);
+        check_conv(&cfg, &Layer::conv("c", 1, 10, 10, 3, 3, 1, 1, 5, 7), 14);
+        let cfg = KrakenConfig::new(3, 11);
+        check_conv(&cfg, &Layer::conv("c", 1, 13, 13, 5, 5, 2, 2, 3, 5), 15);
+    }
+
+    #[test]
+    fn dense_matches_reference_matmul() {
+        let cfg = KrakenConfig::new(4, 8);
+        let layer = Layer::matmul("mm", 10, 12, 20);
+        let m1: Vec<i8> = (0..10 * 12).map(|i| ((i * 7) % 255) as i64 as i8).collect();
+        let m2: Vec<i8> = (0..12 * 20).map(|i| ((i * 13) % 251) as i64 as i8).collect();
+        let got = run_dense_loopnest(&cfg, &layer, &m1, &m2);
+        let want = matmul_i8(&m1, &m2, 10, 12, 20);
+        for row in 0..10 {
+            for col in 0..20 {
+                assert_eq!(got.y.get(0, row, 0, col), want[row * 20 + col]);
+            }
+        }
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!(got.clocks, p.q);
+        assert_eq!(got.valid_macs, layer.macs_valid());
+    }
+
+    #[test]
+    fn conv_stream_counts_match_eq20() {
+        let cfg = KrakenConfig::new(4, 12);
+        let layer = Layer::conv("c", 1, 12, 12, 3, 3, 1, 1, 5, 9);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let x = Tensor4::random([1, 12, 12, 5], 20);
+        let k = Tensor4::random([3, 3, 5, 9], 21);
+        let got = run_conv_loopnest(&cfg, &layer, &x, &k);
+        let m = crate::perf::PerfModel {
+            cfg: cfg.clone(),
+            tech: crate::perf::Tech::paper_7x96(),
+            fc_mem: Default::default(),
+        }
+        .layer(&layer);
+        assert_eq!(got.x_words, m.m_x_hat);
+        assert_eq!(got.k_words, m.m_k_hat);
+        assert_eq!(got.y_words, m.m_y_hat);
+        let _ = p;
+    }
+}

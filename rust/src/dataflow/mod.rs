@@ -1,0 +1,28 @@
+//! The uniform dataflow (§IV, Algorithm 1).
+//!
+//! * [`tiling`] — the O(n) data restructurings performed outside the
+//!   engine: `X → X̂` (split / pad / interleave / transpose, §IV-A) and
+//!   `K → K̂` (split / transpose / channel-interleave, §IV-C), plus the
+//!   inverse `Ŷ′ → Y` gather on the output side.
+//! * [`loopnest`] — a direct executor of Algorithm 1's loop-nest
+//!   representation: bit-exact outputs *and* the exact clock count of
+//!   eq. (17), independent of the structural simulator in [`crate::sim`].
+//!
+//! ## Horizontal schedule (Tables III–IV), as implemented
+//!
+//! At input-column cycle `w`, the single column `x_w` is broadcast to all
+//! cores of an elastic group. Core `g` serves output channel
+//! `s_w(g, w) = (g + w mod S_W) mod S_W` and kernel tap
+//! `k_w(g, w) = g − s_w(g, w)`; its product contributes to output column
+//! `o_w = (w + pad_left − k_w) / S_W`. A product slot is *idle* (the
+//! discarded diagonal of §IV-C) unless `0 ≤ k_w < K_W` and `o_w` is an
+//! integer in `[0, W/S_W)`. After the `C_i·K_H` products of a column,
+//! sums shift one core to the right; core `g` releases a completed
+//! output when its tap reaches `K_W − 1`, or at the last input column
+//! where all remaining taps fall on right-edge zero padding.
+
+pub mod loopnest;
+pub mod tiling;
+
+pub use loopnest::{run_conv_loopnest, run_dense_loopnest, LoopNestResult};
+pub use tiling::{tile_input, tile_weights, TiledInput, TiledWeights};

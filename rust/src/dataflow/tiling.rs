@@ -1,0 +1,281 @@
+//! Offline data restructurings (Algorithm 1, "Pixels in DRAM" and
+//! "Kernel in DRAM" boxes).
+//!
+//! `K → K̂` is performed offline for all layers and stored in DRAM;
+//! `X → X̂` happens once per inference for the first layer, and
+//! `Ŷ′ → Ŷ = X̂_{next}` per pixel as data streams out of the engine.
+//! All restructurings are O(n) with no performance overhead (§IV).
+
+use crate::layers::{same_padding, KrakenLayerParams, Layer};
+use crate::tensor::Tensor4;
+
+/// `X̂ : [N, L, W, C_i, S_H][R + F]` — the interleaved input stream.
+///
+/// Serial order is row-major over `(n, l, w, ci, s)`; each beat carries
+/// `R + F` parallel words: register `j` receives block row `j·S_H + s`
+/// (Table II's interleaving), with rows outside the (vertically padded)
+/// block materialized as zeros.
+#[derive(Debug, Clone)]
+pub struct TiledInput {
+    pub n: usize,
+    pub l: usize,
+    pub w: usize,
+    pub ci: usize,
+    pub sh: usize,
+    /// Parallel width `R + F`.
+    pub rf: usize,
+    /// Flat beats, `[n][l][w][ci][s][rf]`.
+    pub data: Vec<i8>,
+}
+
+impl TiledInput {
+    /// Total serial data beats (`N·L·W·C_i·S_H`).
+    pub fn num_beats(&self) -> usize {
+        self.n * self.l * self.w * self.ci * self.sh
+    }
+
+    /// DRAM words moved for this stream (beats × parallel width) —
+    /// the quantity `M_X̂` of eq. (20) counts.
+    pub fn num_words(&self) -> u64 {
+        (self.num_beats() * self.rf) as u64
+    }
+
+    /// One beat's parallel word.
+    pub fn beat(&self, n: usize, l: usize, w: usize, ci: usize, s: usize) -> &[i8] {
+        let i = ((((n * self.l + l) * self.w + w) * self.ci + ci) * self.sh + s) * self.rf;
+        &self.data[i..i + self.rf]
+    }
+}
+
+/// `X → X̂` (split → pad → interleave → transpose, §IV-A).
+///
+/// Block `l` covers absolute input rows
+/// `[l·R·S_H − pad_top, l·R·S_H − pad_top + (R+F)·S_H)`: the `(K_H−1)/2`
+/// bottom rows of block `l−1` and the top rows of block `l+1` are
+/// replicated into the block (zero rows outside the image), exactly the
+/// padding of `X_2` in Algorithm 1.
+pub fn tile_input(x: &Tensor4<i8>, layer: &Layer, p: &KrakenLayerParams) -> TiledInput {
+    let [n, h, w, ci] = x.shape;
+    assert_eq!(n, layer.n);
+    assert_eq!(h, layer.h);
+    assert_eq!(w, layer.w);
+    let (pad_top, _) = same_padding(layer.h, layer.kh, layer.sh);
+    let rf = p.r + p.f;
+    let mut data = vec![0i8; n * p.l * w * ci * layer.sh * rf];
+    let mut i = 0;
+    for bn in 0..n {
+        for l in 0..p.l {
+            let block_base = (l * p.r * layer.sh) as isize - pad_top as isize;
+            for iw in 0..w {
+                for c in 0..ci {
+                    for s in 0..layer.sh {
+                        for j in 0..rf {
+                            let row = block_base + (j * layer.sh + s) as isize;
+                            data[i] = if row >= 0 && (row as usize) < h {
+                                x.get(bn, row as usize, iw, c)
+                            } else {
+                                0
+                            };
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    TiledInput { n, l: p.l, w, ci, sh: layer.sh, rf, data }
+}
+
+/// `K̂ : [T, C_i, K_H, S_W][C]` — the weights-rotator image.
+///
+/// Core `e·G + g` of subrow `s_w` holds
+/// `K[k_h, g − s_w, c_i, t·E·S_W + e·S_W + s_w]` (zero when `g − s_w`
+/// is outside `[0, K_W)` or the channel index beyond `C_o` — the
+/// rounding slack of eq. (9)).
+#[derive(Debug, Clone)]
+pub struct TiledWeights {
+    pub t: usize,
+    pub ci: usize,
+    pub kh: usize,
+    pub sw: usize,
+    /// Parallel width `C`.
+    pub c: usize,
+    /// Flat rows, `[t][ci][kh][sw][c]`.
+    pub data: Vec<i8>,
+}
+
+impl TiledWeights {
+    /// SRAM rows per iteration: `C_i·K_H·S_W` (§III-D sizing).
+    pub fn rows_per_iteration(&self) -> usize {
+        self.ci * self.kh * self.sw
+    }
+
+    /// DRAM words to fill one iteration's SRAM (`C_i·K_H·S_W·C`).
+    pub fn words_per_iteration(&self) -> u64 {
+        (self.rows_per_iteration() * self.c) as u64
+    }
+
+    /// One C-wide SRAM row.
+    pub fn row(&self, t: usize, ci: usize, kh: usize, sw: usize) -> &[i8] {
+        let i = (((t * self.ci + ci) * self.kh + kh) * self.sw + sw) * self.c;
+        &self.data[i..i + self.c]
+    }
+}
+
+/// `K → K̂` (split → transpose → interleave, §IV-C). `k` is the
+/// `[K_H, K_W, C_i, C_o]` kernel of one group (`C_o` = per-group output
+/// channels when the layer is grouped).
+pub fn tile_weights(k: &Tensor4<i8>, layer: &Layer, p: &KrakenLayerParams) -> TiledWeights {
+    let [kh, kw, ci, co] = k.shape;
+    assert_eq!(kh, layer.kh);
+    assert_eq!(kw, layer.kw);
+    assert_eq!(ci, layer.ci);
+    assert_eq!(co, layer.co_per_group());
+    let mut data = vec![0i8; p.t * ci * kh * layer.sw * p.c];
+    let mut i = 0;
+    for t in 0..p.t {
+        for c_i in 0..ci {
+            for k_h in 0..kh {
+                for sw in 0..layer.sw {
+                    for core in 0..p.c {
+                        let (e, g) = (core / p.g, core % p.g);
+                        // idle cores (C % G) carry zeros
+                        let valid_group = core < p.e * p.g;
+                        let co_idx = (t * p.e + e) * layer.sw + sw;
+                        let tap = g as isize - sw as isize;
+                        data[i] = if valid_group
+                            && co_idx < co
+                            && tap >= 0
+                            && (tap as usize) < kw
+                        {
+                            k.get(k_h, tap as usize, c_i, co_idx)
+                        } else {
+                            0
+                        };
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+    TiledWeights { t: p.t, ci, kh, sw: layer.sw, c: p.c, data }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+
+    #[test]
+    fn input_words_match_m_x_hat_formula() {
+        // Loopnest ↔ eq. (20): beats × (R+F) = N·L·W·C_i·S_H·(R+F) per T.
+        let cfg = KrakenConfig::new(4, 12);
+        let layer = Layer::conv("c", 1, 16, 16, 3, 3, 1, 1, 5, 8);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let x = Tensor4::random([1, 16, 16, 5], 1);
+        let tiled = tile_input(&x, &layer, &p);
+        let expect = (layer.n * p.l * layer.w * layer.ci * layer.sh * (p.r + p.f)) as u64;
+        assert_eq!(tiled.num_words(), expect);
+    }
+
+    #[test]
+    fn table2_interleaving_pattern() {
+        // Table II: R, K_H, S_H = 4, 7, 2 → F = 3, R+F = 7 registers.
+        // Load s=0 of block 0 must contain rows (0,2,4,…,12) − pad_top.
+        let cfg = KrakenConfig::new(4, 24);
+        let layer = Layer::conv("c", 1, 32, 4, 7, 7, 2, 2, 1, 2);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!(p.f, 3);
+        // Encode row index as pixel value for readability.
+        let mut x = Tensor4::<i8>::zeros([1, 32, 4, 1]);
+        for r in 0..32 {
+            for w in 0..4 {
+                x.set(0, r, w, 0, r as i8);
+            }
+        }
+        let tiled = tile_input(&x, &layer, &p);
+        let (pad_top, _) = same_padding(32, 7, 2);
+        // beat (l=0, w=0, ci=0, s=0): register j ← row j·2 − pad_top.
+        let beat = tiled.beat(0, 0, 0, 0, 0);
+        for (j, &v) in beat.iter().enumerate() {
+            let row = (j * 2) as isize - pad_top as isize;
+            let expect = if row >= 0 { row as i8 } else { 0 };
+            assert_eq!(v, expect, "register {j}");
+        }
+        // beat s=1: odd rows.
+        let beat = tiled.beat(0, 0, 0, 0, 1);
+        for (j, &v) in beat.iter().enumerate() {
+            let row = (j * 2 + 1) as isize - pad_top as isize;
+            let expect = if row >= 0 && row < 32 { row as i8 } else { 0 };
+            assert_eq!(v, expect, "register {j}");
+        }
+    }
+
+    #[test]
+    fn weights_unstrided_core_g_holds_tap_g() {
+        // S_W = 1: within an EG, core g carries kernel tap k_w = g
+        // (Table III's σ_{w,g} pattern).
+        let cfg = KrakenConfig::new(2, 10);
+        let layer = Layer::conv("c", 1, 8, 8, 5, 5, 1, 1, 2, 4);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!((p.g, p.e, p.t), (5, 2, 2));
+        let k = Tensor4::random([5, 5, 2, 4], 9);
+        let kt = tile_weights(&k, &layer, &p);
+        for t in 0..p.t {
+            for ci in 0..2 {
+                for kh in 0..5 {
+                    let row = kt.row(t, ci, kh, 0);
+                    for e in 0..p.e {
+                        let co = t * p.e + e;
+                        for g in 0..p.g {
+                            let expect =
+                                if co < 4 { k.get(kh, g, ci, co) } else { 0 };
+                            assert_eq!(row[e * p.g + g], expect);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn weights_strided_interleave_table4() {
+        // S_W = 2, K_W = 5 → G = 6: subrow s_w, core g holds tap g − s_w.
+        let cfg = KrakenConfig::new(2, 6);
+        let layer = Layer::conv("c", 1, 8, 8, 5, 5, 2, 2, 2, 2);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!((p.g, p.e, p.t), (6, 1, 1));
+        let k = Tensor4::random([5, 5, 2, 2], 11);
+        let kt = tile_weights(&k, &layer, &p);
+        for sw in 0..2 {
+            let row = kt.row(0, 0, 0, sw);
+            for g in 0..6 {
+                let tap = g as isize - sw as isize;
+                let expect = if (0..5).contains(&tap) {
+                    k.get(0, tap as usize, 0, sw)
+                } else {
+                    0
+                };
+                assert_eq!(row[g], expect, "sw={sw} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn idle_cores_hold_zeros() {
+        // C = 16, G = 5 → E = 3, one idle core at the right edge.
+        let cfg = KrakenConfig::new(2, 16);
+        let layer = Layer::conv("c", 1, 8, 8, 5, 5, 1, 1, 2, 4);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!(p.idle_cores, 1);
+        let k = Tensor4::random([5, 5, 2, 4], 13);
+        let kt = tile_weights(&k, &layer, &p);
+        for t in 0..p.t {
+            for ci in 0..2 {
+                for kh in 0..5 {
+                    assert_eq!(kt.row(t, ci, kh, 0)[15], 0);
+                }
+            }
+        }
+    }
+}

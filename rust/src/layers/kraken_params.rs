@@ -1,0 +1,192 @@
+//! Per-layer Kraken dataflow parameters (§III-B, §IV, §V-A).
+//!
+//! Given a static configuration `(R, C)` and a [`Layer`], computes the
+//! paper's derived quantities:
+//!
+//! * `G = K_W + S_W − 1` — cores per elastic group, eq. (5)
+//! * `E = ⌊C / G⌋` — number of elastic groups, eq. (6)
+//! * `F = ⌈K_H / S_H⌉ − 1` — pixel-shifter shift factor, eq. (7)
+//! * `L = ⌈H / (R·S_H)⌉` — output-height blocks, eq. (8)
+//! * `T = ⌈C_o / (E·S_W)⌉` — channel iterations, eq. (9)
+//! * `q_kc = 1 + K_H·C_i` — clocks per output column per EG, eq. (10)
+//! * `F′` — per-load shift count, eq. (11)
+//! * `q_s, q_c` — shift/configuration stall clocks, eqs. (15)–(16)
+//! * `Q_j` — exact clock-cycle count, eq. (17)
+
+
+use super::shape::{div_ceil, Layer};
+use crate::arch::KrakenConfig;
+
+/// All dataflow parameters of one layer mapped onto one Kraken
+/// configuration. For grouped convolutions these are *per-group*
+/// parameters; [`KrakenLayerParams::clocks`] accounts for all groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KrakenLayerParams {
+    /// Rows of the PE array.
+    pub r: usize,
+    /// Cores (columns) of the PE array.
+    pub c: usize,
+    /// Cores per elastic group, eq. (5).
+    pub g: usize,
+    /// Elastic groups, eq. (6).
+    pub e: usize,
+    /// Idle cores: `C % G` (§III-B).
+    pub idle_cores: usize,
+    /// Pixel-shifter shift factor, eq. (7).
+    pub f: usize,
+    /// Output-height blocks, eq. (8).
+    pub l: usize,
+    /// Channel iterations (per group), eq. (9).
+    pub t: usize,
+    /// Clocks per output column per EG, eq. (10).
+    pub q_kc: usize,
+    /// Shift-stall clocks per column, eq. (15).
+    pub q_s: usize,
+    /// Configuration clocks per iteration, eq. (16).
+    pub q_c: usize,
+    /// Convolution groups (multiplies the clock count).
+    pub groups: usize,
+    /// `N·L·W` — data beats per iteration body.
+    pub nlw: u64,
+    /// Exact clock count for the whole layer, eq. (17) (× groups).
+    pub q: u64,
+}
+
+impl KrakenLayerParams {
+    /// Compute the dataflow parameters of `layer` on configuration `cfg`.
+    pub fn derive(cfg: &KrakenConfig, layer: &Layer) -> Self {
+        let (r, c) = (cfg.r, cfg.c);
+        let g = layer.kw + layer.sw - 1;
+        let e = c / g;
+        assert!(e >= 1, "elastic group wider than the PE array: G={g} > C={c}");
+        let idle_cores = c % g;
+        let f = div_ceil(layer.kh, layer.sh) - 1;
+        let l = div_ceil(layer.h, r * layer.sh);
+        let t = div_ceil(layer.co_per_group(), e * layer.sw);
+        let q_kc = 1 + layer.kh * layer.ci;
+        // Eqs. (15)–(16): conv layers with K_W ≠ 1 pause one clock per
+        // column for shift-accumulation but hide the configuration clock;
+        // K_W = 1 convs, FC layers and matrix products have no shift pause
+        // but stall one clock for configuration.
+        let is_shifting_conv = !layer.is_dense() && layer.kw != 1;
+        let (q_s, q_c) = if is_shifting_conv { (1, 0) } else { (0, 1) };
+        let nlw = layer.n as u64 * l as u64 * layer.w as u64;
+        let q_group =
+            t as u64 * (q_c as u64 + nlw * (q_s as u64 + (layer.ci * layer.kh) as u64));
+        Self {
+            r,
+            c,
+            g,
+            e,
+            idle_cores,
+            f,
+            l,
+            t,
+            q_kc,
+            q_s,
+            q_c,
+            groups: layer.groups,
+            nlw,
+            q: layer.groups as u64 * q_group,
+        }
+    }
+
+    /// Per-load shift count of the pixel shifter, eq. (11): `⌊K_H/S_H⌋`
+    /// on the last (`S_H`-th) load of a column, `F` otherwise.
+    pub fn f_prime(&self, layer: &Layer, load_idx: usize) -> usize {
+        if load_idx == layer.sh - 1 {
+            layer.kh / layer.sh
+        } else {
+            self.f
+        }
+    }
+
+    /// Output pixels released together every `q_kc` clocks: `E·S_W·R`.
+    pub fn outputs_per_release(&self, layer: &Layer) -> usize {
+        self.e * layer.sw * self.r
+    }
+
+    /// PEs active in the elastic groups (`E·G·R` of `R·C`).
+    pub fn active_pes(&self) -> usize {
+        self.e * self.g * self.r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> KrakenConfig {
+        KrakenConfig::paper() // 7 × 96
+    }
+
+    #[test]
+    fn elastic_grouping_examples() {
+        // §III-B: (K_W, S_W) = (3, 1) → G = 3; 7×96 → E = 32, no idle.
+        let l = Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 512, 512);
+        let p = KrakenLayerParams::derive(&cfg(), &l);
+        assert_eq!((p.g, p.e, p.idle_cores), (3, 32, 0));
+
+        // AlexNet conv1: (K_W, S_W) = (11, 4) → G = 14, E = 6, 12 idle.
+        let l = Layer::conv("c1", 1, 227, 227, 11, 11, 4, 4, 3, 96);
+        let p = KrakenLayerParams::derive(&cfg(), &l);
+        assert_eq!((p.g, p.e, p.idle_cores), (14, 6, 12));
+        assert_eq!(p.f, 2); // ceil(11/4) − 1
+        assert_eq!(p.l, 9); // ceil(227 / 28)
+        assert_eq!(p.t, 4); // ceil(96 / 24)
+    }
+
+    #[test]
+    fn fig2_example_4x6() {
+        // Fig. 2: R×C = 4×6, (K_W, S_W) = (3, 1) → E = 2 groups of G = 3.
+        let cfg = KrakenConfig::new(4, 6);
+        let l = Layer::conv("c", 1, 8, 8, 3, 3, 1, 1, 4, 4);
+        let p = KrakenLayerParams::derive(&cfg, &l);
+        assert_eq!((p.g, p.e), (3, 2));
+    }
+
+    #[test]
+    fn dense_layers_degenerate() {
+        // §IV-D: FC / matmul → G = 1, E = C, submatrix [R, C] per C_i clocks.
+        let l = Layer::fully_connected("fc", 7, 4096, 4096);
+        let p = KrakenLayerParams::derive(&cfg(), &l);
+        assert_eq!((p.g, p.e, p.f), (1, 96, 0));
+        assert_eq!(p.l, 1);
+        assert_eq!(p.t, 43); // ceil(4096 / 96)
+        assert_eq!((p.q_s, p.q_c), (0, 1));
+        // Q = T(1 + L·C_i)
+        assert_eq!(p.q, 43 * (1 + 4096));
+    }
+
+    #[test]
+    fn kw1_conv_stalls_for_config() {
+        let l = Layer::conv("p", 1, 56, 56, 1, 1, 1, 1, 64, 256);
+        let p = KrakenLayerParams::derive(&cfg(), &l);
+        assert_eq!((p.q_s, p.q_c), (0, 1));
+    }
+
+    #[test]
+    fn f_prime_table2_case() {
+        // Table II: R, K_H, S_H = 4, 7, 2 → F = 3; loads shift F=3, F=3
+        // except the last (2nd) load which shifts ⌊7/2⌋ = 3 … and for
+        // K_H=7, S_H=2: F′ on last load = 3, F = ceil(7/2)−1 = 3.
+        let cfg = KrakenConfig::new(4, 24);
+        let l = Layer::conv("c", 1, 16, 16, 7, 7, 2, 2, 4, 4);
+        let p = KrakenLayerParams::derive(&cfg, &l);
+        assert_eq!(p.f, 3);
+        assert_eq!(p.f_prime(&l, 0), 3);
+        assert_eq!(p.f_prime(&l, 1), 3); // ⌊7/2⌋
+    }
+
+    #[test]
+    fn vgg_total_clocks_match_paper_throughput() {
+        // Hand-checked: VGG-16 conv layers on 7×96 take 22,897,728 clocks
+        // → 17.47 fps at 400 MHz (paper: 17.5 fps).
+        let net = crate::networks::vgg16();
+        let total: u64 = net
+            .conv_layers()
+            .map(|l| KrakenLayerParams::derive(&cfg(), l).q)
+            .sum();
+        assert_eq!(total, 22_897_728);
+    }
+}

@@ -1,0 +1,20 @@
+//! Layer shape algebra.
+//!
+//! A [`Layer`] captures the shape parameters of a convolutional layer,
+//! fully-connected layer, or matrix product exactly as defined in §II of
+//! the paper, and provides the derived quantities used throughout:
+//! MAC counts with and without zero-padding (eqs. (3)–(4)), the exact
+//! off-chip access counts `M_X, M_K, M_Y`, and — given a static Kraken
+//! configuration — the dataflow parameters `G, E, L, T, F, F′, q_kc, q_s,
+//! q_c` and the exact clock-cycle count `Q_j` (eqs. (5)–(17)).
+
+mod shape;
+mod padding;
+mod kraken_params;
+
+pub use kraken_params::KrakenLayerParams;
+pub use padding::{same_padding, valid_tap_count, zero_pad_taps};
+pub use shape::{Layer, LayerKind};
+
+#[cfg(test)]
+mod tests;

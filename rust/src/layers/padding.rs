@@ -1,0 +1,91 @@
+//! `same` zero-padding accounting.
+//!
+//! The paper zero-pads inputs so the output has spatial size
+//! `(H/S_H, W/S_W)` (§II-A) and *excludes* the padded taps from the valid
+//! MAC count (eq. (4)), following CARLA's convention. This module counts
+//! those padded taps exactly, per dimension.
+
+/// `same` padding for one spatial dimension: returns `(pad_begin,
+/// pad_end)` such that `out = ceil(in / stride)`.
+///
+/// The paper's convention (§IV-A: blocks are "padded with (K_H−1)/2
+/// bottom rows of the previous block"; Table IV: `y_0 = σ_{0,2} + σ_{1,3}
+/// + σ_{2,4}`, i.e. pad_left = 2 for K_W = 5) fixes the *leading* pad at
+/// `(K−1)/2` and derives the trailing pad from the output size. This
+/// coincides with TensorFlow `SAME` for stride 1 but differs for strided
+/// layers (TF would split 1/2 for Table IV's case).
+pub fn same_padding(input: usize, kernel: usize, stride: usize) -> (usize, usize) {
+    let out = input.div_ceil(stride);
+    let begin = (kernel - 1) / 2;
+    let total = ((out - 1) * stride + kernel).saturating_sub(input);
+    (begin, total.saturating_sub(begin))
+}
+
+/// Number of *in-bounds* kernel taps for output index `o` in one
+/// dimension (0-based), under `same` padding.
+pub fn valid_tap_count(input: usize, kernel: usize, stride: usize, o: usize) -> usize {
+    let (pad_begin, _) = same_padding(input, kernel, stride);
+    // Input coordinate of tap k is  o*stride + k − pad_begin.
+    let start = o * stride;
+    (0..kernel)
+        .filter(|k| {
+            let x = start + k;
+            x >= pad_begin && x - pad_begin < input
+        })
+        .count()
+}
+
+/// Total number of kernel taps landing on zero padding, summed over all
+/// output positions of one dimension.
+pub fn zero_pad_taps(input: usize, kernel: usize, stride: usize) -> u64 {
+    let out = input.div_ceil(stride);
+    (0..out)
+        .map(|o| (kernel - valid_tap_count(input, kernel, stride, o)) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_3x3_s1() {
+        assert_eq!(same_padding(224, 3, 1), (1, 1));
+        assert_eq!(same_padding(13, 3, 1), (1, 1));
+    }
+
+    #[test]
+    fn leading_pad_is_half_kernel() {
+        // AlexNet conv1: 224 input, K=11, S=4 → out 56, total pad 7,
+        // leading pad (11−1)/2 = 5.
+        assert_eq!(same_padding(224, 11, 4), (5, 2));
+        // ResNet conv1: 224 input, K=7, S=2 → out 112, total pad 5.
+        assert_eq!(same_padding(224, 7, 2), (3, 2));
+        // Table IV: W=8, K_W=5, S_W=2 → pad_left = 2.
+        assert_eq!(same_padding(8, 5, 2), (2, 1));
+    }
+
+    #[test]
+    fn pad_taps_3x3_s1() {
+        // K=3 s1: first and last output positions each lose one tap.
+        assert_eq!(zero_pad_taps(224, 3, 1), 2);
+        assert_eq!(zero_pad_taps(14, 3, 1), 2);
+    }
+
+    #[test]
+    fn pad_taps_1x1_is_zero() {
+        assert_eq!(zero_pad_taps(56, 1, 1), 0);
+        assert_eq!(zero_pad_taps(56, 1, 2), 0);
+    }
+
+    #[test]
+    fn valid_taps_sum_matches() {
+        for (input, k, s) in [(224usize, 11usize, 4usize), (27, 5, 1), (13, 3, 1), (224, 7, 2)] {
+            let out = input.div_ceil(s);
+            let valid: u64 = (0..out)
+                .map(|o| valid_tap_count(input, k, s, o) as u64)
+                .sum();
+            assert_eq!(valid + zero_pad_taps(input, k, s), (out * k) as u64);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! The [`Layer`] type: shape parameters of conv / FC / matmul layers
+//! (§II-A, §II-B) and the exact MAC / memory-access accounting of §II-C.
+
+
+use super::padding::zero_pad_taps;
+
+/// Which of the three operation classes a layer belongs to.
+///
+/// The paper's central claim is that all three are processed through a
+/// *single* uniform dataflow: FC layers and matrix products are the
+/// degenerate `N, W, K_H, K_W, S_H, S_W = 1` case of convolution (§IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// High-dimensional convolution (§II-A, eq. (1)).
+    Conv,
+    /// Fully-connected layer (§II-B, eq. (2)); batch mapped onto `H`.
+    FullyConnected,
+    /// General matrix product `M1[H,Ci] · M2[Ci,Co]` (eq. (14)).
+    MatMul,
+}
+
+/// Shape parameters of one layer, in the paper's notation.
+///
+/// For convolution: input `X[N, H, W, Ci]`, kernel `K[Kh, Kw, Ci, Co]`,
+/// output `Y[N, H/Sh, W/Sw, Co]` under `same` zero-padding.
+///
+/// For FC / matmul the degenerate mapping of §IV-D applies:
+/// `H = N^f` (the FC batch), `Ci = Ci^f`, `Co = Co^f`, and
+/// `N = W = Kh = Kw = Sh = Sw = 1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    /// Human-readable layer name, e.g. `"conv2_1"`.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Batch size `N`.
+    pub n: usize,
+    /// Input height `H` (FC/matmul: the row-count / FC batch `N^f`).
+    pub h: usize,
+    /// Input width `W`.
+    pub w: usize,
+    /// Kernel height `K_H`.
+    pub kh: usize,
+    /// Kernel width `K_W`.
+    pub kw: usize,
+    /// Vertical stride `S_H`.
+    pub sh: usize,
+    /// Horizontal stride `S_W`.
+    pub sw: usize,
+    /// Input channels `C_i` (per group, when the layer is grouped).
+    pub ci: usize,
+    /// Output channels `C_o`.
+    pub co: usize,
+    /// Convolution groups (AlexNet conv2/4/5 use 2); the engine processes
+    /// each group as an independent convolution with `ci` input channels
+    /// and `co / groups` output channels.
+    pub groups: usize,
+}
+
+impl Layer {
+    /// A convolutional layer with `same` zero-padding.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: impl Into<String>,
+        n: usize,
+        h: usize,
+        w: usize,
+        kh: usize,
+        kw: usize,
+        sh: usize,
+        sw: usize,
+        ci: usize,
+        co: usize,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::Conv,
+            n,
+            h,
+            w,
+            kh,
+            kw,
+            sh,
+            sw,
+            ci,
+            co,
+            groups: 1,
+        }
+    }
+
+    /// A grouped convolutional layer. `ci` is the *per-group* input channel
+    /// count and `co` the *total* output channel count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv_grouped(
+        name: impl Into<String>,
+        n: usize,
+        h: usize,
+        w: usize,
+        kh: usize,
+        kw: usize,
+        sh: usize,
+        sw: usize,
+        ci: usize,
+        co: usize,
+        groups: usize,
+    ) -> Self {
+        let mut l = Self::conv(name, n, h, w, kh, kw, sh, sw, ci, co);
+        l.groups = groups;
+        l
+    }
+
+    /// A fully-connected layer: batch `nf`, input features `ci`, output
+    /// features `co` (§IV-D: `H, C_i, C_o = N^f, C_i^f, C_o^f`).
+    pub fn fully_connected(name: impl Into<String>, nf: usize, ci: usize, co: usize) -> Self {
+        Self {
+            name: name.into(),
+            kind: LayerKind::FullyConnected,
+            n: 1,
+            h: nf,
+            w: 1,
+            kh: 1,
+            kw: 1,
+            sh: 1,
+            sw: 1,
+            ci,
+            co,
+            groups: 1,
+        }
+    }
+
+    /// A matrix product `M1[h, ci] · M2[ci, co]` (eq. (14)).
+    pub fn matmul(name: impl Into<String>, h: usize, ci: usize, co: usize) -> Self {
+        let mut l = Self::fully_connected(name, h, ci, co);
+        l.kind = LayerKind::MatMul;
+        l
+    }
+
+    /// `true` for the degenerate FC/matmul mapping.
+    pub fn is_dense(&self) -> bool {
+        self.kind != LayerKind::Conv
+    }
+
+    /// Output height `H / S_H` (paper's `same`-padding convention:
+    /// `ceil(H / S_H)`).
+    pub fn out_h(&self) -> usize {
+        div_ceil(self.h, self.sh)
+    }
+
+    /// Output width `W / S_W`.
+    pub fn out_w(&self) -> usize {
+        div_ceil(self.w, self.sw)
+    }
+
+    /// Output channels per group.
+    pub fn co_per_group(&self) -> usize {
+        self.co / self.groups
+    }
+
+    /// Number of MAC operations including those on zero-padding,
+    /// eq. (3): `N (H/S_H)(W/S_W) K_H K_W C_o C_i`.
+    pub fn macs_with_zpad(&self) -> u64 {
+        self.n as u64
+            * self.out_h() as u64
+            * self.out_w() as u64
+            * self.kh as u64
+            * self.kw as u64
+            * self.co as u64
+            * self.ci as u64
+    }
+
+    /// Number of kernel taps falling on zero padding, summed over all
+    /// output pixels of one channel pair — the `Z` of eq. (4).
+    pub fn zero_pad_taps(&self) -> u64 {
+        if self.is_dense() {
+            return 0;
+        }
+        let zh = zero_pad_taps(self.h, self.kh, self.sh);
+        let zw = zero_pad_taps(self.w, self.kw, self.sw);
+        let vh = self.out_h() as u64 * self.kh as u64 - zh;
+        let vw = self.out_w() as u64 * self.kw as u64 - zw;
+        // Z = Kh·Kw·OH·OW − (valid_h · valid_w)
+        self.out_h() as u64 * self.out_w() as u64 * (self.kh * self.kw) as u64 - vh * vw
+    }
+
+    /// Valid MACs, eq. (4): zero-padding taps excluded. "While this
+    /// results in a lower estimate for actual performance, it better
+    /// reflects the engine's capability."
+    pub fn macs_valid(&self) -> u64 {
+        let per_pair = self.n as u64
+            * (self.out_h() as u64 * self.out_w() as u64 * (self.kh * self.kw) as u64
+                - self.zero_pad_taps());
+        per_pair * self.co as u64 * self.ci as u64
+    }
+
+    /// Off-chip accesses to fetch the raw input, `M_X = N·H·W·C_i`
+    /// (per group; the engine re-streams X once per group).
+    pub fn m_x(&self) -> u64 {
+        self.groups as u64 * self.n as u64 * self.h as u64 * self.w as u64 * self.ci as u64
+    }
+
+    /// Off-chip accesses to fetch the kernel, `M_K = K_H·K_W·C_i·C_o`.
+    pub fn m_k(&self) -> u64 {
+        self.kh as u64 * self.kw as u64 * self.ci as u64 * self.co as u64
+    }
+
+    /// Off-chip accesses to store the output,
+    /// `M_Y = N (H/S_H)(W/S_W) C_o`.
+    pub fn m_y(&self) -> u64 {
+        self.n as u64 * self.out_h() as u64 * self.out_w() as u64 * self.co as u64
+    }
+
+    /// Total raw (dataflow-independent) off-chip accesses.
+    pub fn m_total(&self) -> u64 {
+        self.m_x() + self.m_k() + self.m_y()
+    }
+}
+
+/// `ceil(a / b)` for shape math.
+pub(crate) fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}

@@ -1,0 +1,55 @@
+//! Cross-cutting layer-math tests against Table I and §V hand-checks.
+
+use super::*;
+use crate::arch::KrakenConfig;
+
+#[test]
+fn eq3_matches_manual_product() {
+    let l = Layer::conv("c", 2, 56, 56, 3, 3, 1, 1, 64, 128);
+    assert_eq!(l.macs_with_zpad(), 2 * 56 * 56 * 9 * 64 * 128);
+}
+
+#[test]
+fn valid_leq_with_zpad() {
+    for l in [
+        Layer::conv("a", 1, 227, 227, 11, 11, 4, 4, 3, 96),
+        Layer::conv("b", 1, 14, 14, 3, 3, 1, 1, 512, 512),
+        Layer::conv("c", 1, 224, 224, 7, 7, 2, 2, 3, 64),
+        Layer::fully_connected("d", 7, 4096, 4096),
+    ] {
+        assert!(l.macs_valid() <= l.macs_with_zpad());
+    }
+}
+
+#[test]
+fn dense_layers_have_no_padding() {
+    let l = Layer::fully_connected("fc", 7, 100, 10);
+    assert_eq!(l.macs_valid(), l.macs_with_zpad());
+    assert_eq!(l.macs_valid(), 7 * 100 * 10);
+}
+
+#[test]
+fn unpadded_1x1_has_no_invalid_macs() {
+    let l = Layer::conv("p", 1, 28, 28, 1, 1, 1, 1, 64, 64);
+    assert_eq!(l.macs_valid(), l.macs_with_zpad());
+}
+
+#[test]
+fn alexnet_conv1_efficiency_matches_fig3_hand_calc() {
+    // Hand-check of eq. (19) for AlexNet conv1 on 7×96:
+    // Q = T(q_c + N·L·W(q_s + Ci·Kh)) = 4·(9·227·34) = 277,848.
+    let cfg = KrakenConfig::paper();
+    let l = Layer::conv("conv1", 1, 227, 227, 11, 11, 4, 4, 3, 96);
+    let p = KrakenLayerParams::derive(&cfg, &l);
+    assert_eq!(p.q, 277_848);
+}
+
+#[test]
+fn grouped_layer_doubles_clocks() {
+    let cfg = KrakenConfig::paper();
+    let ungrouped = Layer::conv("u", 1, 13, 13, 3, 3, 1, 1, 192, 192);
+    let grouped = Layer::conv_grouped("g", 1, 13, 13, 3, 3, 1, 1, 192, 384, 2);
+    let pu = KrakenLayerParams::derive(&cfg, &ungrouped);
+    let pg = KrakenLayerParams::derive(&cfg, &grouped);
+    assert_eq!(pg.q, 2 * pu.q);
+}

@@ -1,0 +1,61 @@
+//! # Kraken — An Efficient Engine with a Uniform Dataflow for DNNs
+//!
+//! Full-system reproduction of *Kraken: An Efficient Engine with a Uniform
+//! Dataflow for Deep Neural Networks* (Abarajithan & Edussooriya, 2021).
+//!
+//! Kraken is a spatial DNN accelerator: a 2-D array of bare-bones PEs
+//! (`R` rows × `C` cores), elastically grouped into `E` groups of
+//! `G = K_W + S_W − 1` cores, processing convolutional layers,
+//! fully-connected layers, and matrix products through a single *uniform
+//! dataflow* — output-stationary inside the accumulators, weight-stationary
+//! with respect to a double-buffered global weights rotator, with vertical
+//! convolution performed through interleaved pixel shifting.
+//!
+//! This crate contains every system the paper describes or depends on:
+//!
+//! * [`layers`] — shape algebra for conv / FC / matmul layers and all the
+//!   paper's derived quantities (`G, E, L, T, F, F′, q_kc, Q`, zero-pad
+//!   MAC accounting — eqs. (3)–(17)).
+//! * [`arch`] — the static configuration (`R × C`, word widths) and the
+//!   64-bit dynamic-reconfiguration header (§III-G).
+//! * [`networks`] — AlexNet, VGG-16, ResNet-50 (every layer), plus tiny
+//!   test networks and a generic graph builder (Table I).
+//! * [`tensor`] / [`quant`] — NHWC int8 tensors, reference convolution and
+//!   matmul oracles, and integer requantization.
+//! * [`dataflow`] — the data restructurings `X → X̂`, `K → K̂`, `Ŷ′ → Ŷ`
+//!   and the loop-nest reference executor of Algorithm 1.
+//! * [`sim`] — the clock-accurate microarchitecture simulator: PE array,
+//!   elastic groups, pixel shifter (Table II), weights rotator, output
+//!   pipe, AXI-stream beats and DRAM access counters.
+//! * [`perf`] — the analytical performance model: clock cycles (17),
+//!   performance efficiency (18)–(19), memory accesses (20), arithmetic
+//!   intensity (22), bandwidth (23)–(25), and the (R, C) design-space
+//!   sweep of §VI-A.
+//! * [`baselines`] — analytical models of Eyeriss, MMIE/ZASCAD and CARLA
+//!   used for the paper's comparisons (Table V/VI, Figs. 3–4).
+//! * [`runtime`] — the PJRT runtime that loads the AOT-lowered JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; the
+//!   golden model for functional verification.
+//! * [`coordinator`] — the L3 serving layer: layer scheduler with
+//!   back-to-back configuration streaming and weight-prefetch overlap,
+//!   plus a tokio-based inference server.
+//! * [`report`] — regenerates every table and figure of the paper's
+//!   evaluation section, with the paper's reported values alongside.
+
+pub mod arch;
+pub mod baselines;
+pub mod coordinator;
+pub mod dataflow;
+pub mod layers;
+pub mod metrics;
+pub mod networks;
+pub mod perf;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+
+pub use arch::KrakenConfig;
+pub use layers::{Layer, LayerKind};
+pub use networks::Network;

@@ -1,0 +1,228 @@
+//! The `kraken` CLI: regenerate every table and figure of the paper,
+//! run the clock-accurate simulator, verify against the AOT artifacts,
+//! and serve inference requests.
+//!
+//! (Hand-rolled argument parsing: the offline build environment vendors
+//! only the PJRT bridge's dependencies, so no clap.)
+
+use std::path::Path;
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
+use kraken::networks::paper_networks;
+use kraken::perf::PerfModel;
+use kraken::report;
+use kraken::runtime::GoldenRunner;
+use kraken::sim::Engine;
+use kraken::tensor::Tensor4;
+
+const USAGE: &str = "kraken — Kraken engine reproduction
+
+USAGE: kraken <command> [args]
+
+paper artifacts:
+  table1          network statistics (Table I)
+  table2          pixel-shifter schedule (Table II)
+  table3          elastic-group schedule, unstrided (Table III)
+  table4          elastic-group schedule, strided (Table IV)
+  table5          conv-layer comparison (Table V)
+  table6          FC-layer comparison (Table VI)
+  fig3            per-layer performance efficiency (Fig. 3)
+  fig4            memory accesses (Fig. 4)
+  sweep           (R, C) design-space exploration (§VI-A)
+  bandwidth       bandwidth requirements (§V-E)
+  headline        §VI headline numbers
+  all             everything above
+
+system:
+  verify          run every AOT golden through PJRT vs the simulator
+  simulate        run TinyCNN through the clock-accurate simulator
+  serve N         serve N TinyCNN requests through the coordinator
+  report R C      per-network §V metrics for configuration R×C
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table1" => print!("{}", report::table1()),
+        "table2" => print!("{}", report::table2()),
+        "table3" => print!("{}", report::table3()),
+        "table4" => print!("{}", report::table4()),
+        "table5" => print!("{}", report::table5()),
+        "table6" => print!("{}", report::table6()),
+        "fig3" => print!("{}", report::fig3()),
+        "fig4" => print!("{}", report::fig4()),
+        "sweep" => print!("{}", report::sweep_report()),
+        "bandwidth" => print!("{}", report::bandwidth_report()),
+        "headline" => print!("{}", report::headline()),
+        "all" => {
+            for s in [
+                report::table1(),
+                report::table2(),
+                report::table3(),
+                report::table4(),
+                report::table5(),
+                report::table6(),
+                report::fig3(),
+                report::fig4(),
+                report::sweep_report(),
+                report::bandwidth_report(),
+                report::headline(),
+            ] {
+                println!("{s}");
+            }
+        }
+        "verify" => verify(),
+        "simulate" => simulate(),
+        "serve" => {
+            let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+            serve(n);
+        }
+        "report" => {
+            let r: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
+            let c: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(96);
+            let model = PerfModel::scaled(r, c);
+            for net in paper_networks() {
+                let m = model.conv_metrics(&net);
+                println!(
+                    "{} conv @{r}x{c}: ℰ={:.1}% fps={:.1} Gops={:.1} MA={:.1}M AI={:.1}",
+                    m.network,
+                    m.efficiency * 100.0,
+                    m.fps,
+                    m.gops,
+                    m.ma_per_frame / 1e6,
+                    m.ai
+                );
+            }
+        }
+        _ => print!("{USAGE}"),
+    }
+}
+
+/// Golden verification: every artifact through PJRT vs the simulator.
+fn verify() {
+    use kraken::layers::Layer;
+    use kraken::quant::QParams;
+    use kraken::runtime::ArtifactKind;
+    use kraken::sim::LayerData;
+
+    let runner = GoldenRunner::new(Path::new("artifacts"))
+        .expect("artifacts/ missing — run `make artifacts`");
+    println!("platform: {}", runner.runtime.platform());
+    let (r, c) = (runner.runtime.manifest.r, runner.runtime.manifest.c);
+    let mut ok = 0;
+    for spec in runner.runtime.manifest.artifacts.clone() {
+        match spec.kind {
+            ArtifactKind::Conv => {
+                let case = runner.run(&spec.name).unwrap();
+                let layer = Layer::conv_grouped(
+                    spec.name.clone(),
+                    spec.x_shape[0],
+                    spec.x_shape[1],
+                    spec.x_shape[2],
+                    spec.k_shape[0],
+                    spec.k_shape[1],
+                    spec.sh,
+                    spec.sw,
+                    spec.k_shape[2],
+                    spec.k_shape[3],
+                    spec.groups,
+                );
+                let mut engine = Engine::new(KrakenConfig::new(r, c), 8);
+                let out = engine.run_layer(&LayerData {
+                    layer: &layer,
+                    x: &case.x,
+                    k: &case.k,
+                    qparams: QParams::identity(),
+                });
+                assert_eq!(out.y_acc.data, case.y, "{} mismatch", spec.name);
+                println!("  {:<10} OK ({} outputs bit-exact)", spec.name, case.y.len());
+                ok += 1;
+            }
+            ArtifactKind::MatMul => {
+                let case = runner.run(&spec.name).unwrap();
+                let layer =
+                    Layer::matmul("mm", spec.x_shape[0], spec.x_shape[1], spec.k_shape[1]);
+                let mut engine = Engine::new(KrakenConfig::new(r, c), 8);
+                let out =
+                    engine.run_dense(&layer, &case.x.data, &case.k.data, QParams::identity());
+                assert_eq!(out.y_acc.data, case.y, "matmul mismatch");
+                println!("  {:<10} OK ({} outputs bit-exact)", spec.name, case.y.len());
+                ok += 1;
+            }
+            ArtifactKind::TinyCnn => {
+                let (x, _w, logits) = runner.run_tiny_cnn().unwrap();
+                let engine = Engine::new(KrakenConfig::new(7, 96), 8);
+                let mut pipeline = tiny_cnn_pipeline(engine);
+                let rep = pipeline.run(&x);
+                assert_eq!(rep.logits, logits, "tiny_cnn logits mismatch");
+                println!("  {:<10} OK (8-layer logits bit-exact)", spec.name);
+                ok += 1;
+            }
+        }
+    }
+    println!("verified {ok} artifacts: JAX/Pallas ≡ clock-accurate simulator");
+}
+
+/// Simulate TinyCNN and report the engine counters.
+fn simulate() {
+    let engine = Engine::new(KrakenConfig::paper(), 8);
+    let mut pipeline = tiny_cnn_pipeline(engine);
+    let x = Tensor4::random([1, 28, 28, 3], kraken::coordinator::scheduler::X_SEED);
+    let rep = pipeline.run(&x);
+    println!("TinyCNN through Kraken 7×96 (clock-accurate):");
+    for (stage, clocks) in pipeline.stages.iter().zip(&rep.stage_clocks) {
+        println!("  {:<8} {:>9} clocks", stage.layer.name, clocks);
+    }
+    println!(
+        "  total   {:>9} clocks  ({:.3} ms modeled @400/200 MHz)",
+        rep.total_clocks, rep.modeled_ms
+    );
+    let c = &rep.counters;
+    println!(
+        "  DRAM: X̂ {} + K̂ {} + Ŷ {} = {} words; SRAM reads {}; reconfigs {}",
+        c.dram_x_reads,
+        c.dram_k_reads,
+        c.dram_y_writes,
+        c.dram_total(),
+        c.sram_reads,
+        c.reconfigs
+    );
+    println!("  logits: {:?}", rep.logits);
+}
+
+/// Serve N requests through the threaded coordinator.
+fn serve(n: usize) {
+    let engine = Engine::new(KrakenConfig::paper(), 8);
+    let server = InferenceServer::spawn(tiny_cnn_pipeline(engine));
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| server.submit(Tensor4::random([1, 28, 28, 3], 7 + i as u64)))
+        .collect();
+    let mut device_ms = 0.0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().expect("response");
+        device_ms += resp.device_ms;
+        println!(
+            "req {i}: argmax={} device={:.3} ms queue={:.0} µs clocks={}",
+            resp.logits
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, v)| **v)
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            resp.device_ms,
+            resp.queue_us,
+            resp.clocks
+        );
+    }
+    let stats = server.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} requests: modeled device throughput {:.0} fps, sim wall {:.2} s",
+        stats.completed,
+        stats.completed as f64 / (device_ms / 1e3),
+        wall
+    );
+}

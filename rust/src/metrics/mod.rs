@@ -1,0 +1,60 @@
+//! Runtime counters shared by the simulator and the coordinator.
+
+
+/// Event counters accumulated during a simulation or serving run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct Counters {
+    /// Clock cycles elapsed.
+    pub clocks: u64,
+    /// MAC operations issued (including zero-padding taps).
+    pub macs: u64,
+    /// PE-clock slots where a PE had valid work (for utilization).
+    pub active_pe_clocks: u64,
+    /// DRAM words read for input pixels (X̂ stream).
+    pub dram_x_reads: u64,
+    /// DRAM words read for weights (K̂ stream).
+    pub dram_k_reads: u64,
+    /// DRAM words written for outputs (Ŷ stream).
+    pub dram_y_writes: u64,
+    /// Weights-rotator SRAM word reads.
+    pub sram_reads: u64,
+    /// Weights-rotator SRAM word writes.
+    pub sram_writes: u64,
+    /// Dynamic reconfigurations performed.
+    pub reconfigs: u64,
+}
+
+impl Counters {
+    /// Total DRAM accesses (the `M̂` the analytical model predicts).
+    pub fn dram_total(&self) -> u64 {
+        self.dram_x_reads + self.dram_k_reads + self.dram_y_writes
+    }
+
+    /// Per-field difference `self − earlier` (for per-layer deltas).
+    pub fn diff(&self, earlier: &Counters) -> Counters {
+        Counters {
+            clocks: self.clocks - earlier.clocks,
+            macs: self.macs - earlier.macs,
+            active_pe_clocks: self.active_pe_clocks - earlier.active_pe_clocks,
+            dram_x_reads: self.dram_x_reads - earlier.dram_x_reads,
+            dram_k_reads: self.dram_k_reads - earlier.dram_k_reads,
+            dram_y_writes: self.dram_y_writes - earlier.dram_y_writes,
+            sram_reads: self.sram_reads - earlier.sram_reads,
+            sram_writes: self.sram_writes - earlier.sram_writes,
+            reconfigs: self.reconfigs - earlier.reconfigs,
+        }
+    }
+
+    /// Merge counters from another run segment.
+    pub fn merge(&mut self, other: &Counters) {
+        self.clocks += other.clocks;
+        self.macs += other.macs;
+        self.active_pe_clocks += other.active_pe_clocks;
+        self.dram_x_reads += other.dram_x_reads;
+        self.dram_k_reads += other.dram_k_reads;
+        self.dram_y_writes += other.dram_y_writes;
+        self.sram_reads += other.sram_reads;
+        self.sram_writes += other.sram_writes;
+        self.reconfigs += other.reconfigs;
+    }
+}

@@ -1,0 +1,21 @@
+//! The benchmark network zoo (Table I): AlexNet, VGG-16, ResNet-50 —
+//! every convolutional and fully-connected layer — plus tiny synthetic
+//! networks for functional tests and the end-to-end example, and a
+//! generic builder for arbitrary DNN graphs.
+
+mod alexnet;
+mod network;
+mod resnet50;
+mod tiny;
+mod vgg16;
+
+pub use alexnet::alexnet;
+pub use network::{Network, NetworkStats};
+pub use resnet50::resnet50;
+pub use tiny::{tiny_cnn, tiny_mlp, transformer_attention_products};
+pub use vgg16::vgg16;
+
+/// The three CNNs the paper benchmarks (Table I, §II-C).
+pub fn paper_networks() -> Vec<Network> {
+    vec![alexnet(), vgg16(), resnet50()]
+}

@@ -1,0 +1,90 @@
+//! A DNN as Kraken sees it: an ordered list of conv / FC / matmul layers
+//! (the accelerator is agnostic to the surrounding graph structure —
+//! element-wise ops, pooling and residual adds run on the host or in
+//! requantization, §II-C).
+
+
+use crate::layers::{Layer, LayerKind};
+
+/// An ordered set of accelerated layers plus metadata.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+/// Aggregate statistics of a network, as reported in Table I.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkStats {
+    pub num_layers: usize,
+    pub macs_with_zpad: u64,
+    pub macs_valid: u64,
+    pub m_k: u64,
+    pub m_x: u64,
+    pub m_y: u64,
+}
+
+impl Network {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), layers: Vec::new() }
+    }
+
+    pub fn push(&mut self, layer: Layer) -> &mut Self {
+        self.layers.push(layer);
+        self
+    }
+
+    /// Only the convolutional layers (Table V benchmarks these).
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Conv)
+    }
+
+    /// Only the fully-connected layers (Table VI).
+    pub fn fc_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::FullyConnected)
+    }
+
+    /// Table I row for an arbitrary subset of layers.
+    pub fn stats_for<'a>(layers: impl Iterator<Item = &'a Layer>) -> NetworkStats {
+        let mut s = NetworkStats {
+            num_layers: 0,
+            macs_with_zpad: 0,
+            macs_valid: 0,
+            m_k: 0,
+            m_x: 0,
+            m_y: 0,
+        };
+        for l in layers {
+            s.num_layers += 1;
+            s.macs_with_zpad += l.macs_with_zpad();
+            s.macs_valid += l.macs_valid();
+            s.m_k += l.m_k();
+            s.m_x += l.m_x();
+            s.m_y += l.m_y();
+        }
+        s
+    }
+
+    /// Table I statistics over the convolutional layers.
+    pub fn conv_stats(&self) -> NetworkStats {
+        Self::stats_for(self.conv_layers())
+    }
+
+    /// Table I statistics over the fully-connected layers.
+    pub fn fc_stats(&self) -> NetworkStats {
+        Self::stats_for(self.fc_layers())
+    }
+
+    /// Re-batch every FC layer to `nf` (§IV-D: FC batch is chosen as `R`
+    /// to fully utilize the PE rows and reuse weights).
+    pub fn with_fc_batch(mut self, nf: usize) -> Self {
+        for l in &mut self.layers {
+            if l.kind == LayerKind::FullyConnected {
+                l.h = nf;
+            }
+        }
+        self
+    }
+}

@@ -1,0 +1,125 @@
+//! ResNet-50 (He et al., 2016) — the original (Caffe-style) variant with
+//! downsampling strides on the *first 1×1* convolution of each stage, as
+//! implied by Table I's layer census: (7,2)×1, (3,1)×16, (1,1)×36 where
+//! "(K,S) = (1,2) layers can be processed as (1,1)".
+//!
+//! Stride-2 1×1 convolutions read only every other input pixel, so the
+//! engine processes them as (1,1) layers over the pre-subsampled input —
+//! we model them directly that way (input at output resolution, S = 1),
+//! which leaves MAC/memory counts unchanged and matches the footnote.
+
+use super::network::Network;
+use crate::layers::Layer;
+
+struct Stage {
+    /// Input spatial size to the first block of the stage (kept for
+    /// readability of the stage table).
+    #[allow(dead_code)]
+    hw_in: usize,
+    /// Output spatial size of the stage (downsample on first block).
+    hw_out: usize,
+    /// Bottleneck width.
+    mid: usize,
+    /// Stage output channels (4 × mid).
+    out: usize,
+    /// Number of bottleneck blocks.
+    blocks: usize,
+}
+
+/// Build ResNet-50 at 224×224: conv1 + 16 bottleneck blocks (53 conv
+/// layers including 4 projection shortcuts) + 1 FC layer.
+pub fn resnet50() -> Network {
+    let mut net = Network::new("ResNet-50");
+    net.push(Layer::conv("conv1", 1, 224, 224, 7, 7, 2, 2, 3, 64));
+
+    let stages = [
+        Stage { hw_in: 56, hw_out: 56, mid: 64, out: 256, blocks: 3 },
+        Stage { hw_in: 56, hw_out: 28, mid: 128, out: 512, blocks: 4 },
+        Stage { hw_in: 28, hw_out: 14, mid: 256, out: 1024, blocks: 6 },
+        Stage { hw_in: 14, hw_out: 7, mid: 512, out: 2048, blocks: 3 },
+    ];
+    let mut in_ch = 64;
+    for (si, st) in stages.iter().enumerate() {
+        let sidx = si + 2; // conv2_x .. conv5_x
+        for b in 0..st.blocks {
+            let first = b == 0;
+            // Stride-2 first-1×1 / projection of stages 3–5: processed as
+            // (1,1) over the subsampled input (hw_out), per the footnote.
+            let hw1 = if first { st.hw_out } else { st.hw_out };
+            let ci1 = if first { in_ch } else { st.out };
+            net.push(Layer::conv(
+                format!("conv{sidx}_{}a", b + 1),
+                1, hw1, hw1, 1, 1, 1, 1, ci1, st.mid,
+            ));
+            net.push(Layer::conv(
+                format!("conv{sidx}_{}b", b + 1),
+                1, st.hw_out, st.hw_out, 3, 3, 1, 1, st.mid, st.mid,
+            ));
+            net.push(Layer::conv(
+                format!("conv{sidx}_{}c", b + 1),
+                1, st.hw_out, st.hw_out, 1, 1, 1, 1, st.mid, st.out,
+            ));
+            if first {
+                // Projection shortcut (1×1, stride 2 for stages 3–5 →
+                // processed as (1,1) on the subsampled input).
+                net.push(Layer::conv(
+                    format!("conv{sidx}_{}p", b + 1),
+                    1, st.hw_out, st.hw_out, 1, 1, 1, 1, in_ch, st.out,
+                ));
+            }
+        }
+        in_ch = st.out;
+    }
+    net.push(Layer::fully_connected("fc", 1, 2048, 1000));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_census_matches_table1() {
+        let net = resnet50();
+        let convs: Vec<_> = net.conv_layers().collect();
+        assert_eq!(convs.len(), 53);
+        let k7 = convs.iter().filter(|l| l.kh == 7).count();
+        let k3 = convs.iter().filter(|l| l.kh == 3).count();
+        let k1 = convs.iter().filter(|l| l.kh == 1).count();
+        assert_eq!((k7, k3, k1), (1, 16, 36));
+        assert_eq!(net.fc_layers().count(), 1);
+    }
+
+    #[test]
+    fn table1_conv_macs() {
+        let s = resnet50().conv_stats();
+        // Paper: 3.9 G w/zpad, 3.7 G valid.
+        assert!(
+            (s.macs_with_zpad as f64 - 3.9e9).abs() / 3.9e9 < 0.02,
+            "w/zpad {}",
+            s.macs_with_zpad
+        );
+        assert!(
+            (s.macs_valid as f64 - 3.7e9).abs() / 3.7e9 < 0.02,
+            "valid {}",
+            s.macs_valid
+        );
+    }
+
+    #[test]
+    fn table1_conv_memory() {
+        let s = resnet50().conv_stats();
+        // Paper: M_K = 23.5 M, M_X = 8.0 M, M_Y = 10.6 M.
+        assert!((s.m_k as f64 - 23.5e6).abs() / 23.5e6 < 0.02, "m_k={}", s.m_k);
+        assert!((s.m_x as f64 - 8.0e6).abs() / 8.0e6 < 0.06, "m_x={}", s.m_x);
+        assert!((s.m_y as f64 - 10.6e6).abs() / 10.6e6 < 0.06, "m_y={}", s.m_y);
+    }
+
+    #[test]
+    fn table1_fc() {
+        let s = resnet50().fc_stats();
+        assert_eq!(s.macs_valid, 2048 * 1000);
+        assert_eq!(s.m_x, 2048);
+        assert_eq!(s.m_y, 1000);
+    }
+}

@@ -1,0 +1,72 @@
+//! Tiny synthetic networks for functional verification and the
+//! end-to-end example: small enough for the clock-accurate simulator and
+//! the PJRT golden model to run in milliseconds, while exercising every
+//! shape class the paper's benchmarks contain (large filters + stride,
+//! 5×5, 3×3, 1×1, grouped, FC, matmul).
+
+use super::network::Network;
+use crate::layers::Layer;
+
+/// An 8-layer CNN covering AlexNet/VGG/ResNet shape classes at toy scale.
+pub fn tiny_cnn() -> Network {
+    let mut net = Network::new("TinyCNN");
+    net.push(Layer::conv("conv1", 1, 28, 28, 7, 7, 2, 2, 3, 16)); // ResNet-style stem
+    net.push(Layer::conv("conv2", 1, 14, 14, 5, 5, 1, 1, 16, 24)); // AlexNet-style 5×5
+    net.push(Layer::conv("conv3", 1, 14, 14, 3, 3, 1, 1, 24, 32)); // VGG-style 3×3
+    net.push(Layer::conv_grouped("conv4", 1, 14, 14, 3, 3, 1, 1, 16, 32, 2));
+    net.push(Layer::conv("conv5", 1, 7, 7, 1, 1, 1, 1, 32, 48)); // bottleneck 1×1
+    net.push(Layer::conv("conv6", 1, 7, 7, 3, 3, 1, 1, 48, 48));
+    net.push(Layer::fully_connected("fc7", 1, 7 * 7 * 48, 64));
+    net.push(Layer::fully_connected("fc8", 1, 64, 10));
+    net
+}
+
+/// A two-layer MLP (pure FC path).
+pub fn tiny_mlp() -> Network {
+    let mut net = Network::new("TinyMLP");
+    net.push(Layer::fully_connected("fc1", 1, 256, 128));
+    net.push(Layer::fully_connected("fc2", 1, 128, 10));
+    net
+}
+
+/// The matrix products of one transformer attention head
+/// (§I: "matrix products required for other DNN types such as the
+/// attention-based transformers"): Q·Kᵀ and A·V for sequence length
+/// `seq` and head dimension `dk`, plus the four projections.
+pub fn transformer_attention_products(seq: usize, dmodel: usize, dk: usize) -> Network {
+    let mut net = Network::new(format!("Attention(seq={seq}, d={dmodel}, dk={dk})"));
+    net.push(Layer::matmul("proj_q", seq, dmodel, dk));
+    net.push(Layer::matmul("proj_k", seq, dmodel, dk));
+    net.push(Layer::matmul("proj_v", seq, dmodel, dk));
+    net.push(Layer::matmul("qkT", seq, dk, seq));
+    net.push(Layer::matmul("av", seq, seq, dk));
+    net.push(Layer::matmul("proj_o", seq, dk, dmodel));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::layers::KrakenLayerParams;
+
+    #[test]
+    fn tiny_cnn_covers_shape_classes() {
+        let net = tiny_cnn();
+        let ks: Vec<usize> = net.conv_layers().map(|l| l.kh).collect();
+        assert!(ks.contains(&7) && ks.contains(&5) && ks.contains(&3) && ks.contains(&1));
+        assert!(net.conv_layers().any(|l| l.groups == 2));
+        assert_eq!(net.fc_layers().count(), 2);
+    }
+
+    #[test]
+    fn all_tiny_layers_map_onto_paper_config() {
+        let cfg = KrakenConfig::paper();
+        for net in [tiny_cnn(), tiny_mlp(), transformer_attention_products(64, 128, 32)] {
+            for l in &net.layers {
+                let p = KrakenLayerParams::derive(&cfg, l);
+                assert!(p.q > 0, "{} has zero clocks", l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! VGG-16 (Simonyan & Zisserman, 2015): 13 convolutional layers, all
+//! (K, S) = (3, 1), + 3 FC layers. Table I: 15.3 G MACs w/zpad,
+//! 14.8 G valid, M_K = 14.7 M.
+
+use super::network::Network;
+use crate::layers::Layer;
+
+/// Build VGG-16 at 224×224.
+pub fn vgg16() -> Network {
+    let mut net = Network::new("VGG-16");
+    let blocks: &[(usize, usize, usize, usize)] = &[
+        // (spatial, in_ch, out_ch, convs-in-block)
+        (224, 3, 64, 1),
+        (224, 64, 64, 1),
+        (112, 64, 128, 1),
+        (112, 128, 128, 1),
+        (56, 128, 256, 1),
+        (56, 256, 256, 2),
+        (28, 256, 512, 1),
+        (28, 512, 512, 2),
+        (14, 512, 512, 3),
+    ];
+    let mut idx = 1;
+    for &(hw, ci, co, reps) in blocks {
+        for _ in 0..reps {
+            net.push(Layer::conv(format!("conv{idx}"), 1, hw, hw, 3, 3, 1, 1, ci, co));
+            idx += 1;
+        }
+    }
+    net.push(Layer::fully_connected("fc14", 1, 7 * 7 * 512, 4096));
+    net.push(Layer::fully_connected("fc15", 1, 4096, 4096));
+    net.push(Layer::fully_connected("fc16", 1, 4096, 1000));
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_conv_three_fc() {
+        let net = vgg16();
+        assert_eq!(net.conv_layers().count(), 13);
+        assert_eq!(net.fc_layers().count(), 3);
+    }
+
+    #[test]
+    fn table1_conv_macs() {
+        let s = vgg16().conv_stats();
+        // Paper: 15.3 G w/zpad, 14.8 G valid.
+        assert!((s.macs_with_zpad as f64 - 15.3e9).abs() / 15.3e9 < 0.01);
+        assert!((s.macs_valid as f64 - 14.8e9).abs() / 14.8e9 < 0.01);
+    }
+
+    #[test]
+    fn table1_conv_memory() {
+        let s = vgg16().conv_stats();
+        // Paper: M_K = 14.7 M, M_X = 9.1 M, M_Y = 13.5 M.
+        assert_eq!(s.m_k, 14_710_464);
+        assert!((s.m_x as f64 - 9.1e6).abs() / 9.1e6 < 0.01, "m_x={}", s.m_x);
+        assert!((s.m_y as f64 - 13.5e6).abs() / 13.5e6 < 0.01, "m_y={}", s.m_y);
+    }
+
+    #[test]
+    fn table1_fc_macs_exact() {
+        // Paper: 123.6 M = 25088·4096 + 4096·4096 + 4096·1000.
+        let s = vgg16().fc_stats();
+        assert_eq!(s.macs_valid, 123_633_664);
+        // M_X = 33.3 K, M_Y = 9.2 K.
+        assert_eq!(s.m_x, 25088 + 4096 + 4096);
+        assert_eq!(s.m_y, 4096 + 4096 + 1000);
+    }
+}

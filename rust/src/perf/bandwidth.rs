@@ -1,0 +1,122 @@
+//! Memory-bandwidth requirement, §V-E (eqs. (23)–(25)).
+//!
+//! The paper sizes its operating frequencies against LPDDR4 (25.6 GB/s):
+//! peak 26 bytes/clock for convolutional layers (VGG-16 layer 1) and
+//! 104 bytes/clock for FC layers, hence 400 MHz conv / 200 MHz FC.
+
+
+use crate::arch::KrakenConfig;
+use crate::layers::{KrakenLayerParams, Layer};
+
+/// Peak words/clock on each stream for one layer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BandwidthReq {
+    /// Input-pixel stream X̂, eq. (23): `(R + F) / F′` words/clock.
+    pub x_words_per_clock: f64,
+    /// Weight prefetch stream K̂, eq. (24): next iteration's
+    /// `C_i·K_H·S_W·C` words spread over the current iteration body.
+    pub k_words_per_clock: f64,
+    /// Output stream Ŷ, eq. (25): `E·S_W·R` words within
+    /// `C_i·K_H + q_s` clocks.
+    pub y_words_per_clock: f64,
+}
+
+impl BandwidthReq {
+    /// Total words (= bytes at 8-bit precision) per clock.
+    pub fn total(&self) -> f64 {
+        self.x_words_per_clock + self.k_words_per_clock + self.y_words_per_clock
+    }
+
+    /// Bytes/s at frequency `f_hz` (8-bit words).
+    pub fn bytes_per_sec(&self, f_hz: f64) -> f64 {
+        self.total() * f_hz
+    }
+}
+
+/// Eqs. (23)–(25) for one layer.
+pub fn layer_bandwidth(cfg: &KrakenConfig, layer: &Layer) -> BandwidthReq {
+    let p = KrakenLayerParams::derive(cfg, layer);
+    if layer.is_dense() {
+        return fc_substitution_bandwidth(cfg, layer);
+    }
+    // Eq. (23): the shifter must refill R+F words within the F′ clocks it
+    // spends shifting after a load. The steady-state (non-final) load
+    // shifts F times; when F = 0 (1×1 kernels) the refill window is the
+    // ⌊K_H/S_H⌋ shifts of the final load.
+    let f_prime = if p.f >= 1 { p.f } else { (layer.kh / layer.sh).max(1) };
+    let x = (p.r + p.f) as f64 / f_prime as f64;
+    // Eq. (24): next iteration's weights over this iteration's clocks.
+    let iter_clocks = p.q_c as u64 + p.nlw * (p.q_s as u64 + (layer.ci * layer.kh) as u64);
+    let k_words = (layer.ci * layer.kh * layer.sw * cfg.c) as f64;
+    let k = k_words / iter_clocks as f64;
+    // Eq. (25): E·S_W·R outputs streamed before the next column's release.
+    let y = (p.e * layer.sw * p.r) as f64 / (layer.ci * layer.kh + p.q_s) as f64;
+    BandwidthReq { x_words_per_clock: x, k_words_per_clock: k, y_words_per_clock: y }
+}
+
+/// §V-E's FC/matmul substitution: `F, F′, q_s = 0` and
+/// `q_c, K_H, S_W, N, L, W, E = 1`. The PE array consumes `R` input
+/// words and `C` weight words per clock; outputs release once per `C_i`
+/// clocks.
+pub fn fc_substitution_bandwidth(cfg: &KrakenConfig, layer: &Layer) -> BandwidthReq {
+    BandwidthReq {
+        x_words_per_clock: cfg.r as f64,
+        k_words_per_clock: (layer.ci * cfg.c) as f64 / (1 + layer.ci) as f64,
+        y_words_per_clock: (cfg.r * cfg.c) as f64 / layer.ci as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::{vgg16, paper_networks};
+
+    #[test]
+    fn vgg_layer1_is_the_conv_peak_26_bytes() {
+        // §VI-A: "the peak bandwidth required for Kraken 7×96 is 26
+        // bytes/clock for the convolutional layers (layer 1 of VGG-16)".
+        let cfg = KrakenConfig::paper();
+        let net = vgg16();
+        let bw = layer_bandwidth(&cfg, &net.layers[0]);
+        // X̂: (7+2)/2 = 4.5; Ŷ: 32·7/10 = 22.4; K̂ ≈ 0.
+        assert!((bw.x_words_per_clock - 4.5).abs() < 1e-9);
+        assert!((bw.y_words_per_clock - 22.4).abs() < 1e-9);
+        assert!(bw.total() > 25.0 && bw.total() < 28.0, "total={}", bw.total());
+        // And it is the max over all conv layers of the three CNNs.
+        for net in paper_networks() {
+            for l in net.conv_layers() {
+                assert!(
+                    layer_bandwidth(&cfg, l).total() <= bw.total() + 1e-9,
+                    "{} exceeds VGG L1 peak",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_peak_is_104_bytes() {
+        // §VI-A: "104 bytes/clock for the fully-connected layers".
+        let cfg = KrakenConfig::paper();
+        let mut peak: f64 = 0.0;
+        for net in paper_networks() {
+            for l in net.fc_layers() {
+                peak = peak.max(layer_bandwidth(&cfg, l).total());
+            }
+        }
+        assert!(peak > 102.0 && peak < 105.0, "peak={peak}");
+    }
+
+    #[test]
+    fn operating_points_fit_lpddr4() {
+        // 26 B/clk · 400 MHz = 10.4 GB/s and 104 B/clk · 200 MHz =
+        // 20.8 GB/s, both within LPDDR4's 25.6 GB/s.
+        let cfg = KrakenConfig::paper();
+        let net = vgg16();
+        let conv = layer_bandwidth(&cfg, &net.layers[0]).bytes_per_sec(cfg.freq_conv_hz);
+        assert!(conv < 25.6e9);
+        let fc = layer_bandwidth(&cfg, net.fc_layers().next().unwrap())
+            .bytes_per_sec(cfg.freq_fc_hz);
+        assert!(fc < 25.6e9);
+    }
+}

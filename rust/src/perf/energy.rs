@@ -1,0 +1,104 @@
+//! Normalized energy model.
+//!
+//! The paper motivates its dataflow with the energy hierarchy of [3]
+//! (Han et al., EIE): a 32-bit DRAM access costs ~200× a MAC operation
+//! in 45-nm. We carry the same *relative* costs (normalized to one 8-bit
+//! MAC = 1.0) so that dataflow ablations (scratchpad-free reuse vs
+//! per-PE SRAM designs) can be compared in energy terms without claiming
+//! absolute joules for silicon we did not fabricate.
+
+
+use super::model::LayerMetrics;
+
+/// Relative energy costs (1.0 = one 8-bit MAC).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// One MAC in a PE.
+    pub mac: f64,
+    /// One word read/written at the global SRAM (weights rotator).
+    pub sram_word: f64,
+    /// One word to/from off-chip DRAM (the paper's cited 200×).
+    pub dram_word: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // MAC = 1, global SRAM ≈ 6× (Eyeriss' buffer-vs-ALU ratio),
+        // DRAM = 200× per [3].
+        Self { mac: 1.0, sram_word: 6.0, dram_word: 200.0 }
+    }
+}
+
+/// Energy totals in normalized MAC-units.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct EnergyBreakdown {
+    pub mac: f64,
+    pub sram: f64,
+    pub dram: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.mac + self.sram + self.dram
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one layer under Kraken's dataflow. The weights rotator
+    /// reads one SRAM word per core per clock and each prefetched word is
+    /// written once; rotation means each weight word is *read* `N·L·W`
+    /// times but *fetched from DRAM* once per iteration.
+    pub fn layer(&self, m: &LayerMetrics, sram_reads: u64) -> EnergyBreakdown {
+        EnergyBreakdown {
+            mac: self.mac * m.macs_with_zpad as f64,
+            sram: self.sram_word * sram_reads as f64,
+            dram: self.dram_word * m.m_hat() as f64,
+        }
+    }
+
+    /// Energy of a hypothetical *no-rotation* design that refetches
+    /// weights from DRAM for every reuse (the ablation of §IV-E's
+    /// weight-stationarity claim).
+    pub fn layer_without_rotation(
+        &self,
+        m: &LayerMetrics,
+        rotation_factor: u64,
+    ) -> EnergyBreakdown {
+        EnergyBreakdown {
+            mac: self.mac * m.macs_with_zpad as f64,
+            sram: 0.0,
+            dram: self.dram_word
+                * ((m.m_x_hat + m.m_y_hat) + m.m_k_hat * rotation_factor) as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::networks::vgg16;
+    use crate::perf::PerfModel;
+
+    #[test]
+    fn rotation_saves_energy() {
+        let model = PerfModel::paper();
+        let em = EnergyModel::default();
+        let net = vgg16();
+        let m = model.layer(&net.layers[5]);
+        let p = crate::layers::KrakenLayerParams::derive(&model.cfg, &net.layers[5]);
+        let with = em.layer(&m, m.m_k_hat * p.nlw);
+        let without = em.layer_without_rotation(&m, p.nlw);
+        assert!(
+            with.total() < without.total(),
+            "rotating weights in SRAM must beat DRAM refetch: {} vs {}",
+            with.total(),
+            without.total()
+        );
+    }
+
+    #[test]
+    fn dram_dominates_unrotated_designs() {
+        let em = EnergyModel::default();
+        assert!(em.dram_word / em.mac >= 100.0);
+    }
+}

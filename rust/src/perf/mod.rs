@@ -1,0 +1,18 @@
+//! The analytical performance model of §V: clock cycles (17),
+//! performance efficiency (18)–(19), memory accesses (20), arithmetic
+//! intensity (21)–(22), bandwidth requirements (23)–(25), plus the
+//! normalized energy model and the (R, C) design-space sweep of §VI-A.
+
+mod area;
+mod bandwidth;
+mod energy;
+mod model;
+mod sweep;
+mod tech;
+
+pub use area::PeInventory;
+pub use bandwidth::{BandwidthReq, fc_substitution_bandwidth, layer_bandwidth};
+pub use energy::{EnergyModel, EnergyBreakdown};
+pub use model::{FcMemConvention, LayerMetrics, NetworkMetrics, PerfModel};
+pub use sweep::{sweep_design_space, DesignPoint, SweepResult};
+pub use tech::Tech;

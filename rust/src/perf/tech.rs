@@ -1,0 +1,71 @@
+//! Technology constants of the implemented Kraken instance (§VI-A:
+//! TSMC 65-nm GP CMOS, Cadence Genus synthesis, Arm Artisan memory
+//! compiler SRAMs). Since we have no silicon, these are carried as model
+//! constants taken from the paper's Table V; every derived metric
+//! (fps, Gops, Gops/mm², Gops/W) is recomputed from cycle counts through
+//! them — the same arithmetic the paper performs.
+
+
+/// Implementation-technology constants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tech {
+    /// Core area in mm² (Kraken 7×96: 7.3 mm²).
+    pub core_area_mm2: f64,
+    /// Power in mW while processing convolutional layers (1050 mW).
+    pub power_conv_mw: f64,
+    /// Power in mW while processing FC layers at 200 MHz (Table VI: 613 mW).
+    pub power_fc_mw: f64,
+    /// On-chip SRAM in KB (384.0).
+    pub sram_kb: f64,
+}
+
+impl Tech {
+    /// The paper's synthesized 7×96 instance.
+    pub fn paper_7x96() -> Self {
+        Self {
+            core_area_mm2: 7.3,
+            power_conv_mw: 1050.0,
+            power_fc_mw: 613.0,
+            sram_kb: 384.0,
+        }
+    }
+
+    /// First-order scaling of the technology constants to a different
+    /// static configuration, for the design-space sweep. Area and power
+    /// are decomposed into a PE part (∝ R·C), an SRAM part (∝ C·depth)
+    /// and a fixed overhead (pixel shifter + output pipe + AXI, ∝ R + C).
+    ///
+    /// Calibration: §VI-B-1 reports 87.12% of Kraken's per-PE area is the
+    /// multiplier+accumulator; the two SRAM banks are the only on-chip
+    /// memories. We apportion the 7.3 mm² as 55% PE array, 35% SRAM,
+    /// 10% periphery (consistent with the paper's "memory compilers
+    /// optimize large, global SRAMs" discussion and 672-PE packing).
+    pub fn scaled(r: usize, c: usize, wsram_depth: usize) -> Self {
+        let base = Self::paper_7x96();
+        let pe_ratio = (r * c) as f64 / 672.0;
+        let sram_ratio = (c * wsram_depth) as f64 / (96.0 * 2048.0);
+        let peri_ratio = (r + c) as f64 / 103.0;
+        let area = base.core_area_mm2 * (0.55 * pe_ratio + 0.35 * sram_ratio + 0.10 * peri_ratio);
+        let p_conv = base.power_conv_mw * (0.60 * pe_ratio + 0.30 * sram_ratio + 0.10 * peri_ratio);
+        let p_fc = base.power_fc_mw * (0.60 * pe_ratio + 0.30 * sram_ratio + 0.10 * peri_ratio);
+        Self {
+            core_area_mm2: area,
+            power_conv_mw: p_conv,
+            power_fc_mw: p_fc,
+            sram_kb: 2.0 * (c * wsram_depth) as f64 / 1024.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_reproduces_paper_instance() {
+        let t = Tech::scaled(7, 96, 2048);
+        assert!((t.core_area_mm2 - 7.3).abs() < 1e-9);
+        assert!((t.power_conv_mw - 1050.0).abs() < 1e-9);
+        assert!((t.sram_kb - 384.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,115 @@
+//! Integer quantization (§II-D).
+//!
+//! "Integer quantization with 8-bits has become the industry standard
+//! for inference … Bias terms ignored in equations (1) and (2) can be
+//! folded into the requantization parameters." This module implements
+//! the standard per-tensor affine scheme (Jacob et al. [44]): int8
+//! storage, int32 accumulation, and requantization by a fixed-point
+//! multiplier + right shift — the arithmetic the engine's output pipe
+//! feeds into between layers.
+
+
+/// Per-tensor requantization parameters: `y8 = clamp(round(acc · m / 2^s)
+/// + zero_point)`, with the layer bias folded into `bias`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QParams {
+    /// Fixed-point multiplier (`0 < m < 2^31`).
+    pub multiplier: i32,
+    /// Right shift (`0..=31`).
+    pub shift: u32,
+    /// Folded bias added to the accumulator before scaling.
+    pub bias: i32,
+    /// Output zero point.
+    pub zero_point: i32,
+    /// Apply ReLU before the clamp (fused activation).
+    pub relu: bool,
+}
+
+impl QParams {
+    /// Identity-ish parameters for tests: unit scale, no bias.
+    pub fn identity() -> Self {
+        Self { multiplier: 1 << 30, shift: 30, bias: 0, zero_point: 0, relu: false }
+    }
+
+    /// Derive from a real-valued scale `s ≈ m / 2^shift` (the standard
+    /// quantized-inference normalization, [44] §2.2).
+    pub fn from_scale(scale: f64, bias: i32, relu: bool) -> Self {
+        assert!(scale > 0.0 && scale < 1.0, "requant scale must be in (0,1)");
+        let mut shift = 0u32;
+        let mut s = scale;
+        while s < 0.5 && shift < 31 {
+            s *= 2.0;
+            shift += 1;
+        }
+        let multiplier = (s * (1i64 << 31) as f64).round() as i32;
+        Self { multiplier, shift: shift + 31, bias, zero_point: 0, relu }
+    }
+
+    /// Requantize one int32 accumulator to int8 (round-half-away,
+    /// saturating) — the per-pixel op between Kraken layers
+    /// (`Ŷ′_j → Ŷ_j = X̂_{j+1}`, performed as data streams out, §IV).
+    #[inline]
+    pub fn requantize(&self, acc: i32) -> i8 {
+        let mut v = acc.saturating_add(self.bias);
+        if self.relu {
+            v = v.max(0);
+        }
+        let prod = v as i64 * self.multiplier as i64;
+        let half = 1i64 << (self.shift.saturating_sub(1).min(62));
+        let rounded = if self.shift == 0 {
+            prod
+        } else if prod >= 0 {
+            (prod + half) >> self.shift
+        } else {
+            -((-prod + half) >> self.shift)
+        };
+        let v = rounded + self.zero_point as i64;
+        v.clamp(i8::MIN as i64, i8::MAX as i64) as i8
+    }
+
+    /// Requantize a whole accumulator buffer.
+    pub fn requantize_slice(&self, acc: &[i32]) -> Vec<i8> {
+        acc.iter().map(|&a| self.requantize(a)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_clamps_to_i8() {
+        let q = QParams::identity();
+        assert_eq!(q.requantize(5), 5);
+        assert_eq!(q.requantize(-3), -3);
+        assert_eq!(q.requantize(1000), 127);
+        assert_eq!(q.requantize(-1000), -128);
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let q = QParams { relu: true, ..QParams::identity() };
+        assert_eq!(q.requantize(-42), 0);
+        assert_eq!(q.requantize(42), 42);
+    }
+
+    #[test]
+    fn bias_folding() {
+        let q = QParams { bias: 10, ..QParams::identity() };
+        assert_eq!(q.requantize(5), 15);
+    }
+
+    #[test]
+    fn scale_halves() {
+        let q = QParams::from_scale(0.5, 0, false);
+        assert_eq!(q.requantize(100), 50);
+        assert_eq!(q.requantize(101), 51); // round half away
+        assert_eq!(q.requantize(-100), -50);
+    }
+
+    #[test]
+    fn scale_reduces_dynamic_range_into_i8() {
+        let q = QParams::from_scale(1.0 / 1024.0, 0, false);
+        assert_eq!(q.requantize(102_400), 100);
+    }
+}

@@ -1,0 +1,13 @@
+//! Regeneration of every table and figure in the paper's evaluation.
+//!
+//! Each function returns a formatted string (printed by the `kraken`
+//! CLI and by the `paper_tables` bench) containing our reproduced values
+//! side by side with the paper's reported ones.
+
+pub mod figures;
+pub mod table;
+pub mod tables;
+
+pub use figures::{fig3, fig4};
+pub use table::AsciiTable;
+pub use tables::{table1, table2, table3, table4, table5, table6, headline, bandwidth_report, sweep_report};

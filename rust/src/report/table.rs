@@ -1,0 +1,87 @@
+//! Tiny fixed-width ASCII table formatter.
+
+/// Column-aligned ASCII table builder.
+#[derive(Debug, Default, Clone)]
+pub struct AsciiTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl AsciiTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("-{:-<w$}-", "", w = w))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncols)
+                .map(|i| format!(" {:<w$} ", cells[i], w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// `1234567` → `"1.2 M"`-style compact magnitude.
+pub fn compact(v: f64) -> String {
+    let a = v.abs();
+    if a >= 1e9 {
+        format!("{:.1} G", v / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.1} M", v / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.1} K", v / 1e3)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = AsciiTable::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("longer"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn compact_magnitudes() {
+        assert_eq!(compact(669.7e6), "669.7 M");
+        assert_eq!(compact(15.3e9), "15.3 G");
+        assert_eq!(compact(14.3e3), "14.3 K");
+    }
+}

@@ -1,0 +1,131 @@
+//! The artifact manifest (`artifacts/manifest.json`), produced by
+//! `python/compile/aot.py` at build time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+
+/// What kind of computation an artifact contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One conv layer: `(x, k) → y_i32`.
+    Conv,
+    /// One matrix product: `(m1, m2) → y_i32`.
+    MatMul,
+    /// The full TinyCNN forward: `(x, k1..k6, w7, w8) → logits_i32`.
+    TinyCnn,
+}
+
+/// One lowered executable and how to feed it.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// Conv: `[N,H,W,Ci·groups]`; matmul: `[H,Ci]`; tiny_cnn: input.
+    pub x_shape: Vec<usize>,
+    /// Conv: `[Kh,Kw,Ci,Co]`; matmul: `[Ci,Co]`.
+    pub k_shape: Vec<usize>,
+    /// TinyCNN: all weight shapes in layer order.
+    pub w_shapes: Vec<Vec<usize>>,
+    pub sh: usize,
+    pub sw: usize,
+    pub groups: usize,
+    pub x_seed: u64,
+    pub k_seed: u64,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Kernel grid (R, C) the goldens were lowered with.
+    pub r: usize,
+    pub c: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let r = j.get("r").and_then(Json::as_usize).context("manifest: r")?;
+        let c = j.get("c").and_then(Json::as_usize).context("manifest: c")?;
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact: name")?
+                .to_string();
+            let file = a.get("file").and_then(Json::as_str).context("artifact: file")?;
+            let kind = match a.get("kind").and_then(Json::as_str) {
+                Some("conv") => ArtifactKind::Conv,
+                Some("matmul") => ArtifactKind::MatMul,
+                Some("tiny_cnn") => ArtifactKind::TinyCnn,
+                other => return Err(anyhow!("unknown artifact kind {other:?}")),
+            };
+            let usizes = |key: &str| -> Vec<usize> {
+                a.get(key).and_then(Json::as_usize_vec).unwrap_or_default()
+            };
+            let scalar = |key: &str, default: usize| -> usize {
+                a.get(key).and_then(Json::as_usize).unwrap_or(default)
+            };
+            let w_shapes = a
+                .get("w_shapes")
+                .and_then(Json::as_arr)
+                .map(|arr| arr.iter().filter_map(Json::as_usize_vec).collect())
+                .unwrap_or_default();
+            artifacts.push(ArtifactSpec {
+                name,
+                path: dir.join(file),
+                kind,
+                x_shape: if kind == ArtifactKind::MatMul {
+                    usizes("m1_shape")
+                } else {
+                    usizes("x_shape")
+                },
+                k_shape: if kind == ArtifactKind::MatMul {
+                    usizes("m2_shape")
+                } else {
+                    usizes("k_shape")
+                },
+                w_shapes,
+                sh: scalar("sh", 1),
+                sw: scalar("sw", 1),
+                groups: scalar("groups", 1),
+                x_seed: scalar("x_seed", 0) as u64,
+                k_seed: scalar(
+                    if kind == ArtifactKind::TinyCnn { "w_seed_base" } else { "k_seed" },
+                    0,
+                ) as u64,
+            });
+        }
+        Ok(Self { r, c, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_generated_manifest_if_present() {
+        // Exercised fully by rust/tests/e2e_runtime.rs; here we only
+        // check graceful failure on a missing directory.
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+}

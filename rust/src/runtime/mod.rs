@@ -1,0 +1,18 @@
+//! The PJRT runtime: loads the AOT-lowered JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from Rust — Python is never
+//! on the request path.
+//!
+//! * [`json`] — minimal JSON parser for the manifest.
+//! * [`artifact`] — manifest schema: what was lowered, with which input
+//!   shapes and which xorshift seeds regenerate the inputs.
+//! * [`pjrt`] — the `xla` crate wrapper: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute, plus the
+//!   golden-model harness used to verify the simulator three ways
+//!   (sim ≡ loopnest ≡ rust reference ≡ JAX/Pallas artifact).
+
+pub mod artifact;
+pub mod json;
+pub mod pjrt;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Manifest};
+pub use pjrt::{GoldenRunner, Runtime};

@@ -1,0 +1,81 @@
+//! Bandwidth-constrained DRAM model (§V-E's substrate).
+//!
+//! The paper sizes Kraken's operating points against LPDDR4: "to operate
+//! well within this bandwidth, Kraken is implemented to be run at
+//! 400 MHz for convolutional layers and 200 MHz for fully-connected
+//! layers". This module makes that claim *checkable*: a shared-bus DRAM
+//! with a words-per-engine-clock budget, three streams (X̂ reads, K̂
+//! low-priority prefetch reads, Ŷ writes), and stall accounting when the
+//! demand exceeds the budget. At the paper's operating points no conv
+//! layer stalls; halve the budget and the fps cliff appears — the
+//! ablation `cargo bench --bench ablations` prints.
+
+/// A DRAM channel shared by the three streams.
+#[derive(Debug, Clone, Copy)]
+pub struct DramModel {
+    /// Sustained budget in words (bytes at 8-bit) per engine clock.
+    /// LPDDR4 at 25.6 GB/s over a 400 MHz engine clock = 64 B/clk;
+    /// over 200 MHz = 128 B/clk.
+    pub words_per_clock: f64,
+}
+
+impl DramModel {
+    /// LPDDR4-3200 ×64 (25.6 GB/s) against an engine frequency.
+    pub fn lpddr4(engine_hz: f64) -> Self {
+        Self { words_per_clock: 25.6e9 / engine_hz }
+    }
+
+    /// Engine clocks needed to move `words` given the leftover budget
+    /// after higher-priority traffic (`used` words/clock already
+    /// committed): `ceil(words / (budget − used))`, infinite demand →
+    /// stall forever is reported as f64::INFINITY.
+    pub fn clocks_for(&self, words: f64, used: f64) -> f64 {
+        let avail = self.words_per_clock - used;
+        if avail <= 0.0 {
+            return f64::INFINITY;
+        }
+        words / avail
+    }
+}
+
+/// Stall accounting for one layer interval.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StallReport {
+    /// Clocks the engine computes (eq. (17) body).
+    pub compute_clocks: f64,
+    /// Extra clocks waiting on the X̂ or Ŷ streams.
+    pub stream_stall_clocks: f64,
+    /// Extra clocks because K̂ prefetch did not finish within the
+    /// iteration (double buffering violated).
+    pub prefetch_stall_clocks: f64,
+}
+
+impl StallReport {
+    pub fn total(&self) -> f64 {
+        self.compute_clocks + self.stream_stall_clocks + self.prefetch_stall_clocks
+    }
+
+    /// Effective slowdown vs the unconstrained engine.
+    pub fn slowdown(&self) -> f64 {
+        self.total() / self.compute_clocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpddr4_budgets() {
+        assert!((DramModel::lpddr4(400e6).words_per_clock - 64.0).abs() < 1e-9);
+        assert!((DramModel::lpddr4(200e6).words_per_clock - 128.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clocks_scale_with_leftover_budget() {
+        let d = DramModel { words_per_clock: 10.0 };
+        assert_eq!(d.clocks_for(100.0, 0.0), 10.0);
+        assert_eq!(d.clocks_for(100.0, 5.0), 20.0);
+        assert!(d.clocks_for(1.0, 10.0).is_infinite());
+    }
+}

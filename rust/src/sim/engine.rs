@@ -1,0 +1,429 @@
+//! The composed Kraken engine (§III, Fig. 2): pixel shifter → PE array ←
+//! weights rotator, with the output pipe tapping the accumulators.
+//!
+//! One uniform code path processes convolutional layers, FC layers and
+//! matrix products — dense layers are literally the
+//! `N, W, K_H, K_W, S_H, S_W = 1` special case (§IV-D), not a separate
+//! mode. Layers run back-to-back: reconfiguration is the `q_c` clock of
+//! eq. (16) (zero for shifting convolutions, where the header rides the
+//! stream for free), and weight prefetch for iteration `t+1` overlaps
+//! iteration `t` entirely (§III-D).
+
+use crate::arch::{ConfigHeader, KrakenConfig};
+use crate::dataflow::{tile_input, tile_weights};
+use crate::layers::{same_padding, KrakenLayerParams, Layer};
+use crate::metrics::Counters;
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+use super::output_pipe::OutputPipe;
+use super::pe_array::PeArray;
+use super::pixel_shifter::PixelShifter;
+use super::weights_rotator::WeightsRotator;
+
+/// Input bundle for one layer.
+pub struct LayerData<'a> {
+    pub layer: &'a Layer,
+    /// `[N, H, W, groups·C_i]` activations (dense: `[1, H, 1, C_i]`).
+    pub x: &'a Tensor4<i8>,
+    /// `[K_H, K_W, C_i, C_o]` weights (dense: `[1, 1, C_i, C_o]`).
+    pub k: &'a Tensor4<i8>,
+    /// Requantization applied by the output pipe.
+    pub qparams: QParams,
+}
+
+/// Result of one layer pass.
+#[derive(Debug, Clone)]
+pub struct LayerOutput {
+    /// Raw int32 accumulator outputs `[N, OH, OW, C_o]`.
+    pub y_acc: Tensor4<i32>,
+    /// Requantized int8 outputs (the next layer's `X`).
+    pub y_q: Tensor4<i8>,
+    /// Clock cycles this layer took (must equal eq. (17)).
+    pub clocks: u64,
+    /// This layer's event deltas.
+    pub counters: Counters,
+}
+
+/// Per-core schedule slot for the current (t, w) column.
+#[derive(Debug, Clone, Copy, Default)]
+struct Slot {
+    releasing: bool,
+    /// Release is rounding slack (`co ≥ C_o`): streamed, dropped.
+    slack: bool,
+    o_col: u32,
+    co: u32,
+}
+
+/// The engine: components + cumulative counters.
+pub struct Engine {
+    pub cfg: KrakenConfig,
+    array: PeArray,
+    shifter: PixelShifter,
+    rotator: WeightsRotator,
+    /// Cumulative counters across all layers run on this engine.
+    pub counters: Counters,
+    slots: Vec<Slot>,
+    active: Vec<bool>,
+}
+
+impl Engine {
+    /// `f_max` bounds the synthesized pixel-shifter adapters (§III-F).
+    pub fn new(cfg: KrakenConfig, f_max: usize) -> Self {
+        let array = PeArray::new(cfg.r, cfg.c);
+        let shifter = PixelShifter::new(cfg.r, f_max);
+        let rotator = WeightsRotator::new(cfg.c, cfg.wsram_depth);
+        Self {
+            array,
+            shifter,
+            rotator,
+            counters: Counters::default(),
+            slots: vec![Slot::default(); cfg.c],
+            active: vec![false; cfg.c],
+            cfg,
+        }
+    }
+
+    /// Engine with the paper's synthesized adapter set (AlexNet + VGG +
+    /// ResNet: `8 → R, R+2, R+3, R+4` per §III-C).
+    pub fn paper() -> Self {
+        Self::new(KrakenConfig::paper(), 4)
+    }
+
+    /// Run one layer (conv, FC or matmul — one uniform path).
+    pub fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        let layer = data.layer;
+        let p = KrakenLayerParams::derive(&self.cfg, layer);
+        let before = self.counters;
+        let clocks_before = self.counters.clocks;
+
+        // In-stream dynamic reconfiguration (§III-G): one header word,
+        // decoded by each module as it reaches it.
+        let header = ConfigHeader::for_layer(layer, &p)
+            .expect("layer does not fit the 64-bit header");
+        let decoded = ConfigHeader::decode(header.encode()).expect("header roundtrip");
+        self.array.configure(decoded.g(), p.e);
+        self.shifter.configure(decoded.f as usize);
+        self.rotator
+            .configure(decoded.ci as usize, decoded.kh as usize, decoded.sw as usize, decoded.g());
+        assert!(
+            !self.rotator.is_streaming() || p.nlw == 1,
+            "{}: C_i·K_H·S_W = {} exceeds the weights SRAM depth with N·L·W > 1 — \
+             batch the layer to N^f = R (§IV-D) or synthesize a deeper SRAM",
+            layer.name,
+            layer.ci * layer.kh * layer.sw,
+        );
+        self.counters.reconfigs += 1;
+
+        let (oh, ow) = (layer.out_h(), layer.out_w());
+        let mut pipe = OutputPipe::new([layer.n, oh, ow, layer.co], data.qparams);
+        let co_g = layer.co_per_group();
+
+        for grp in 0..layer.groups {
+            let (xg, kg) = slice_group(data.x, data.k, layer, grp);
+            self.run_group(layer, &p, &xg, &kg, grp * co_g, &mut pipe);
+        }
+
+        LayerOutput {
+            y_acc: pipe.y_acc,
+            y_q: pipe.y_q,
+            clocks: self.counters.clocks - clocks_before,
+            counters: self.counters.diff(&before),
+        }
+    }
+
+    /// Convenience wrapper for the dense path (§IV-D): `m1: [H, C_i]`,
+    /// `m2: [C_i, C_o]`, returning `[H, C_o]` through the same engine.
+    pub fn run_dense(
+        &mut self,
+        layer: &Layer,
+        m1: &[i8],
+        m2: &[i8],
+        qparams: QParams,
+    ) -> LayerOutput {
+        assert!(layer.is_dense());
+        let x = Tensor4::from_vec([1, layer.h, 1, layer.ci], m1.to_vec());
+        let k = Tensor4::from_vec([1, 1, layer.ci, layer.co], m2.to_vec());
+        self.run_layer(&LayerData { layer, x: &x, k: &k, qparams })
+    }
+
+    fn run_group(
+        &mut self,
+        layer: &Layer,
+        p: &KrakenLayerParams,
+        x: &Tensor4<i8>,
+        k: &Tensor4<i8>,
+        co_base: usize,
+        pipe: &mut OutputPipe,
+    ) {
+        let x_hat = tile_input(x, layer, p);
+        let k_hat = tile_weights(k, layer, p);
+        let (pad_left, _) = same_padding(layer.w, layer.kw, layer.sw);
+        let ow = layer.out_w();
+        let co_g = layer.co_per_group();
+        let sched = PixelShifter::shift_schedule(layer.kh, layer.sh, p.f);
+        let sw = layer.sw;
+
+        // Initial fill of the W-SRAM happens during the *previous*
+        // layer's tail (low-priority AXI-4 prefetch): DRAM words are
+        // counted, no engine clocks.
+        self.rotator.prefetch(&k_hat, 0, &mut self.counters);
+
+        for t in 0..p.t {
+            self.rotator.swap();
+            if t + 1 < p.t {
+                // Overlapped prefetch of the next iteration's weights.
+                self.rotator.prefetch(&k_hat, t + 1, &mut self.counters);
+            }
+            self.counters.clocks += p.q_c as u64;
+            for n in 0..layer.n {
+                for l in 0..p.l {
+                    self.array.clear();
+                    for w in 0..layer.w {
+                        let phase =
+                            (-(w as isize + pad_left as isize)).rem_euclid(sw as isize) as usize;
+                        let last_col = w == layer.w - 1;
+                        self.fill_slots(p, t, w, pad_left, layer.kw, sw, ow, co_g, last_col);
+                        // C_i·K_H product clocks, taps in Table II order.
+                        for ci in 0..layer.ci {
+                            for (s, &shifts) in sched.iter().enumerate() {
+                                self.shifter
+                                    .load(x_hat.beat(n, l, w, ci, s), &mut self.counters);
+                                for m in 0..=shifts {
+                                    if m > 0 {
+                                        self.shifter.shift();
+                                    }
+                                    let tap = m * layer.sh + s;
+                                    let wt =
+                                        self.rotator.read_row(ci, tap, phase, &mut self.counters);
+                                    self.array.step_product(
+                                        self.shifter.engine_rows(),
+                                        wt,
+                                        &self.active,
+                                        &mut self.counters,
+                                    );
+                                    self.counters.clocks += 1;
+                                }
+                            }
+                        }
+                        // Releases are snapshot before the shift strobe.
+                        for core in 0..p.e * p.g {
+                            let slot = self.slots[core];
+                            if !slot.releasing {
+                                continue;
+                            }
+                            if slot.slack {
+                                pipe.capture_slack(p.r, &mut self.counters);
+                                continue;
+                            }
+                            let vals: Vec<i64> =
+                                (0..p.r).map(|r| self.array.acc(r, core)).collect();
+                            pipe.capture(
+                                n,
+                                l * p.r,
+                                slot.o_col as usize,
+                                co_base + slot.co as usize,
+                                &vals,
+                                &mut self.counters,
+                            );
+                            if p.q_s == 0 {
+                                // K_W = 1 / dense: no strobe follows; the
+                                // accumulator bypass flushes on release.
+                                self.array.flush_core(core);
+                            }
+                        }
+                        if p.q_s == 1 {
+                            self.counters.clocks += 1;
+                            self.array.shift_strobe();
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Compute the per-core schedule for input column `w` of iteration
+    /// `t` (see `dataflow` module docs for the derivation).
+    #[allow(clippy::too_many_arguments)]
+    fn fill_slots(
+        &mut self,
+        p: &KrakenLayerParams,
+        t: usize,
+        w: usize,
+        pad_left: usize,
+        kw: usize,
+        sw: usize,
+        ow: usize,
+        co_g: usize,
+        last_col: bool,
+    ) {
+        let w_phase = w as isize + pad_left as isize;
+        for core in 0..self.slots.len() {
+            self.slots[core] = Slot::default();
+            self.active[core] = false;
+        }
+        for e in 0..p.e {
+            for g in 0..p.g {
+                let core = e * p.g + g;
+                let s_ch = (g as isize - w_phase).rem_euclid(sw as isize) as usize;
+                let tap = g as isize - s_ch as isize;
+                if tap < 0 || tap as usize >= kw {
+                    continue;
+                }
+                let o_col = (w_phase - tap).div_euclid(sw as isize);
+                if o_col < 0 || o_col as usize >= ow {
+                    continue;
+                }
+                let co = ((t * p.e + e) * sw + s_ch) as u32;
+                let co_ok = (co as usize) < co_g;
+                let releasing = tap as usize == kw - 1 || last_col;
+                self.slots[core] = Slot {
+                    releasing,
+                    slack: releasing && !co_ok,
+                    o_col: o_col as u32,
+                    co,
+                };
+                self.active[core] = co_ok;
+            }
+        }
+    }
+}
+
+/// Slice one group's channels/filters out of the full tensors.
+fn slice_group(
+    x: &Tensor4<i8>,
+    k: &Tensor4<i8>,
+    layer: &Layer,
+    grp: usize,
+) -> (Tensor4<i8>, Tensor4<i8>) {
+    if layer.groups == 1 {
+        return (x.clone(), k.clone());
+    }
+    let [n, h, w, _] = x.shape;
+    let ci = layer.ci;
+    let co_g = layer.co_per_group();
+    let mut xg = Tensor4::<i8>::zeros([n, h, w, ci]);
+    for bn in 0..n {
+        for ih in 0..h {
+            for iw in 0..w {
+                for c in 0..ci {
+                    xg.set(bn, ih, iw, c, x.get(bn, ih, iw, grp * ci + c));
+                }
+            }
+        }
+    }
+    let mut kg = Tensor4::<i8>::zeros([layer.kh, layer.kw, ci, co_g]);
+    for dh in 0..layer.kh {
+        for dw in 0..layer.kw {
+            for c in 0..ci {
+                for oc in 0..co_g {
+                    kg.set(dh, dw, c, oc, k.get(dh, dw, c, grp * co_g + oc));
+                }
+            }
+        }
+    }
+    (xg, kg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d_same_i8, matmul_i8};
+
+    fn run(cfg: KrakenConfig, layer: &Layer, seed: u64) -> LayerOutput {
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], seed);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], seed + 1);
+        let mut engine = Engine::new(cfg, 8);
+        engine.run_layer(&LayerData { layer, x: &x, k: &k, qparams: QParams::identity() })
+    }
+
+    #[test]
+    fn engine_matches_reference_conv() {
+        let cfg = KrakenConfig::new(3, 12);
+        let layer = Layer::conv("c", 1, 9, 9, 3, 3, 1, 1, 4, 8);
+        let x = Tensor4::random([1, 9, 9, 4], 50);
+        let k = Tensor4::random([3, 3, 4, 8], 51);
+        let mut engine = Engine::new(cfg, 8);
+        let out = engine
+            .run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(out.y_acc, conv2d_same_i8(&x, &k, 1, 1));
+    }
+
+    #[test]
+    fn engine_clock_count_matches_eq17() {
+        for (r, c, layer) in [
+            (3usize, 12usize, Layer::conv("a", 1, 9, 9, 3, 3, 1, 1, 4, 8)),
+            (2, 6, Layer::conv("b", 1, 8, 8, 5, 5, 2, 2, 3, 2)),
+            (4, 28, Layer::conv("c", 1, 23, 23, 11, 11, 4, 4, 3, 8)),
+            (4, 12, Layer::conv("d", 1, 8, 8, 1, 1, 1, 1, 16, 24)),
+        ] {
+            let cfg = KrakenConfig::new(r, c);
+            let p = KrakenLayerParams::derive(&cfg, &layer);
+            let out = run(cfg, &layer, 60);
+            assert_eq!(out.clocks, p.q, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn engine_dense_matches_matmul() {
+        let cfg = KrakenConfig::new(4, 8);
+        let layer = Layer::matmul("mm", 10, 12, 20);
+        let m1: Vec<i8> = (0..120).map(|i| ((i * 7) % 255) as i64 as i8).collect();
+        let m2: Vec<i8> = (0..240).map(|i| ((i * 13) % 251) as i64 as i8).collect();
+        let mut engine = Engine::new(cfg, 8);
+        let out = engine.run_dense(&layer, &m1, &m2, QParams::identity());
+        let want = matmul_i8(&m1, &m2, 10, 12, 20);
+        for row in 0..10 {
+            for col in 0..20 {
+                assert_eq!(out.y_acc.get(0, row, 0, col), want[row * 20 + col]);
+            }
+        }
+        let p = KrakenLayerParams::derive(&KrakenConfig::new(4, 8), &layer);
+        assert_eq!(out.clocks, p.q);
+    }
+
+    #[test]
+    fn dram_counters_match_eq20() {
+        let cfg = KrakenConfig::new(4, 12);
+        let layer = Layer::conv("c", 1, 12, 12, 3, 3, 1, 1, 5, 9);
+        let out = run(cfg.clone(), &layer, 70);
+        let model = crate::perf::PerfModel {
+            cfg,
+            tech: crate::perf::Tech::paper_7x96(),
+            fc_mem: Default::default(),
+        };
+        let m = model.layer(&layer);
+        assert_eq!(out.counters.dram_x_reads, m.m_x_hat);
+        assert_eq!(out.counters.dram_k_reads, m.m_k_hat);
+        assert_eq!(out.counters.dram_y_writes, m.m_y_hat);
+    }
+
+    #[test]
+    fn back_to_back_layers_reconfigure_without_reset() {
+        // Two different-shape layers through the same engine instance.
+        let mut engine = Engine::new(KrakenConfig::new(3, 12), 8);
+        let l1 = Layer::conv("l1", 1, 9, 9, 3, 3, 1, 1, 4, 8);
+        let x1 = Tensor4::random([1, 9, 9, 4], 80);
+        let k1 = Tensor4::random([3, 3, 4, 8], 81);
+        let o1 = engine
+            .run_layer(&LayerData { layer: &l1, x: &x1, k: &k1, qparams: QParams::identity() });
+        assert_eq!(o1.y_acc, conv2d_same_i8(&x1, &k1, 1, 1));
+        let l2 = Layer::conv("l2", 1, 6, 6, 5, 5, 1, 1, 8, 2);
+        let x2 = Tensor4::random([1, 6, 6, 8], 82);
+        let k2 = Tensor4::random([5, 5, 8, 2], 83);
+        let o2 = engine
+            .run_layer(&LayerData { layer: &l2, x: &x2, k: &k2, qparams: QParams::identity() });
+        assert_eq!(o2.y_acc, conv2d_same_i8(&x2, &k2, 1, 1));
+        assert_eq!(engine.counters.reconfigs, 2);
+    }
+
+    #[test]
+    fn weights_rotated_nlw_times() {
+        // §III-D: "the weights are rotated NLW times throughout the
+        // iteration" — SRAM reads = Q-ish · C ≫ DRAM reads.
+        let cfg = KrakenConfig::new(3, 12);
+        let layer = Layer::conv("c", 1, 9, 9, 3, 3, 1, 1, 4, 8);
+        let out = run(cfg, &layer, 90);
+        assert!(out.counters.sram_reads > 10 * out.counters.dram_k_reads);
+    }
+}

@@ -1,0 +1,44 @@
+//! The clock-accurate microarchitecture simulator (§III).
+//!
+//! This is the repo's stand-in for the paper's SystemVerilog RTL: every
+//! component of Fig. 2 is modelled at clock granularity with explicit
+//! state — the bare-bones [`pe::ProcessingElement`], the R×C
+//! [`pe_array::PeArray`] with elastic-group shift-accumulate muxes, the
+//! [`pixel_shifter::PixelShifter`] register bank (Table II), the
+//! double-buffered [`weights_rotator::WeightsRotator`] (the only on-chip
+//! SRAMs, §III-D), and the [`output_pipe::OutputPipe`]. The
+//! [`engine::Engine`] composes them, processes layers *back-to-back*
+//! with in-stream 64-bit header reconfiguration (§III-G), and maintains
+//! the event [`crate::metrics::Counters`] that the analytical model of
+//! [`crate::perf`] predicts in closed form.
+//!
+//! Verification chain: `Engine` ≡ `dataflow::loopnest` (bit-exact
+//! outputs, identical clock counts) ≡ `tensor::conv2d_same_i8` ≡ the
+//! AOT-lowered JAX/Pallas artifacts executed through [`crate::runtime`].
+//!
+//! ### A note on weight-row phasing
+//!
+//! `K̂[T, C_i, K_H, S_W][C]` stores `S_W` phase-variants of each C-wide
+//! row. The logical view in [`crate::dataflow::tiling`] indexes them by
+//! output sub-channel `s_w`; the rotator serves, at input column `w`,
+//! the *phase* row `φ = (−w − pad_left) mod S_W` in which core `g`'s
+//! word belongs to sub-channel `(g + φ) mod S_W`. Both views contain the
+//! same `C_i·K_H·S_W·C` words; the simulator assembles phase rows when
+//! an iteration is prefetched into SRAM.
+
+pub mod dram;
+pub mod engine;
+pub mod output_pipe;
+pub mod pe;
+pub mod pe_array;
+pub mod perfsim;
+pub mod pixel_shifter;
+pub mod weights_rotator;
+
+pub use dram::{DramModel, StallReport};
+pub use engine::{Engine, LayerData, LayerOutput};
+pub use pe::ProcessingElement;
+pub use pe_array::PeArray;
+pub use perfsim::{LayerPerf, PerfSim};
+pub use pixel_shifter::PixelShifter;
+pub use weights_rotator::WeightsRotator;

@@ -1,0 +1,88 @@
+//! The output pipe (§III-E).
+//!
+//! "Without stalling the engine, a shift register bank of R·C words
+//! receives a copy of the data from the accumulators of the PE array …
+//! a bank of multiplexers filter the full output sums … The second bank
+//! shifts its [R, E·S_W] valid outputs into an R-words-wide AXI4-Stream
+//! which is then sent out to DRAM."
+//!
+//! The pipe also performs the per-pixel `Ŷ′ → Ŷ = X̂_next`
+//! restructuring: sums are requantized to int8 by the layer's
+//! [`crate::quant::QParams`] on the way out, so the next layer's input
+//! stream needs no extra pass (§IV: "no clocks are wasted between
+//! layers").
+
+use crate::metrics::Counters;
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+/// Collects released output columns into the layer's output tensor.
+#[derive(Debug, Clone)]
+pub struct OutputPipe {
+    /// Raw int32 accumulator outputs `[N, OH, OW, C_o]`.
+    pub y_acc: Tensor4<i32>,
+    /// Requantized int8 outputs (the `Ŷ` stream / next layer's `X`).
+    pub y_q: Tensor4<i8>,
+    qparams: QParams,
+}
+
+impl OutputPipe {
+    pub fn new(shape: [usize; 4], qparams: QParams) -> Self {
+        Self { y_acc: Tensor4::zeros(shape), y_q: Tensor4::zeros(shape), qparams }
+    }
+
+    /// Capture one released output column for one (e, s_w) slot:
+    /// `values[r]` are the R accumulators, `o_rows` their output rows
+    /// (rows ≥ OH are the block-rounding overhang — streamed by the
+    /// engine, dropped here). Counts the full `R`-word burst.
+    pub fn capture(
+        &mut self,
+        n: usize,
+        o_row_base: usize,
+        o_col: usize,
+        co: usize,
+        values: &[i64],
+        counters: &mut Counters,
+    ) {
+        let oh = self.y_acc.shape[1];
+        for (r, &v) in values.iter().enumerate() {
+            let row = o_row_base + r;
+            if row < oh {
+                self.y_acc.set(n, row, o_col, co, v as i32);
+                self.y_q.set(n, row, o_col, co, self.qparams.requantize(v as i32));
+            }
+        }
+        counters.dram_y_writes += values.len() as u64;
+    }
+
+    /// Account the rounding-slack channels (`co_idx ≥ C_o`) that the
+    /// engine still streams (E·S_W·R words per release regardless).
+    pub fn capture_slack(&mut self, r: usize, counters: &mut Counters) {
+        counters.dram_y_writes += r as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overhang_rows_dropped() {
+        let mut c = Counters::default();
+        let mut pipe = OutputPipe::new([1, 3, 2, 1], QParams::identity());
+        // R = 2 burst landing at rows 2,3 — row 3 is overhang.
+        pipe.capture(0, 2, 0, 0, &[7, 9], &mut c);
+        assert_eq!(pipe.y_acc.get(0, 2, 0, 0), 7);
+        assert_eq!(c.dram_y_writes, 2, "overhang still streamed to DRAM");
+    }
+
+    #[test]
+    fn requantizes_on_the_fly() {
+        let mut c = Counters::default();
+        let mut pipe =
+            OutputPipe::new([1, 1, 1, 1], QParams::from_scale(0.5, 0, false));
+        pipe.capture(0, 0, 0, 0, &[100], &mut c);
+        assert_eq!(pipe.y_acc.get(0, 0, 0, 0), 100);
+        assert_eq!(pipe.y_q.get(0, 0, 0, 0), 50);
+    }
+}

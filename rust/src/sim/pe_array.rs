@@ -1,0 +1,168 @@
+//! The R×C PE array with elastic-group shift-accumulate (§III-A/B).
+//!
+//! Cores (columns) are grouped into `E` elastic groups of `G` cores; the
+//! 2-way muxes at group edges make grouping purely a matter of which
+//! neighbour a PE listens to during the shift strobe — reconfigured
+//! within one clock by the in-stream header, with no rigid boundaries
+//! ("elastic", unlike CARLA/ZASCAD).
+//!
+//! Per product clock the array consumes `R` input words (one per row,
+//! broadcast across the cores) and `C` weight words (one per core,
+//! broadcast down the rows) — `R·C` MACs/clock. At the end of each
+//! column's `C_i·K_H` products, the shift strobe moves every partial sum
+//! one core to the right within its group (Tables III–IV).
+
+use crate::metrics::Counters;
+
+use super::pe::ProcessingElement;
+
+/// The array. Accumulators are laid out core-major `[core][r]`: one
+/// product clock touches all `R` PEs of each active core, so keeping a
+/// core's accumulators contiguous (R × 8 B = one cache line at R = 7)
+/// is the hot-path-friendly layout (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone)]
+pub struct PeArray {
+    pes: Vec<ProcessingElement>,
+    r: usize,
+    c: usize,
+    /// Current elastic group size `G = K_W + S_W − 1`.
+    g: usize,
+    /// Current number of groups `E = ⌊C/G⌋`.
+    e: usize,
+}
+
+impl PeArray {
+    pub fn new(r: usize, c: usize) -> Self {
+        Self { pes: vec![ProcessingElement::default(); r * c], r, c, g: 1, e: c }
+    }
+
+    /// Elastically regroup (one clock, header-driven; §III-B).
+    pub fn configure(&mut self, g: usize, e: usize) {
+        assert!(g * e <= self.c, "E·G exceeds the array width");
+        self.g = g;
+        self.e = e;
+        self.clear();
+    }
+
+    pub fn clear(&mut self) {
+        self.pes.iter_mut().for_each(|p| p.clear());
+    }
+
+    #[inline]
+    pub fn dims(&self) -> (usize, usize) {
+        (self.r, self.c)
+    }
+
+    /// One product clock: `rows[r] · weights[core]` into every active
+    /// PE. `active[core]` gates the discarded-diagonal slots of the
+    /// horizontal schedule (blank cells of Tables III–IV).
+    pub fn step_product(
+        &mut self,
+        rows: &[i8],
+        weights: &[i8],
+        active: &[bool],
+        counters: &mut Counters,
+    ) {
+        debug_assert_eq!(rows.len(), self.r);
+        debug_assert_eq!(weights.len(), self.c);
+        debug_assert_eq!(active.len(), self.c);
+        let mut active_cores = 0u64;
+        let r = self.r;
+        for (core, (&is_active, &w)) in active.iter().zip(weights).enumerate() {
+            if !is_active {
+                continue;
+            }
+            active_cores += 1;
+            let col = &mut self.pes[core * r..core * r + r];
+            for (pe, &x) in col.iter_mut().zip(rows) {
+                pe.mac(x, w);
+            }
+        }
+        counters.active_pe_clocks += active_cores * r as u64;
+        counters.macs += active_cores * r as u64;
+    }
+
+    /// The shift-accumulate strobe: within each elastic group the
+    /// accumulator chain shifts one core right; the first core of each
+    /// group restarts from zero (its mux feeds the bypass).
+    pub fn shift_strobe(&mut self) {
+        for e in 0..self.e {
+            let base = e * self.g * self.r;
+            // Shift the whole group's accumulator block one core right.
+            self.pes.copy_within(base..base + (self.g - 1) * self.r, base + self.r);
+            for pe in &mut self.pes[base..base + self.r] {
+                pe.clear();
+            }
+        }
+    }
+
+    /// Accumulator of PE `(r, core)` (what the output pipe snapshots).
+    #[inline]
+    pub fn acc(&self, r: usize, core: usize) -> i64 {
+        self.pes[core * self.r + r].acc()
+    }
+
+    /// Zero the accumulators of one core column (bypass-flush after a
+    /// release when no shift strobe follows, e.g. K_W = 1 / dense).
+    pub fn flush_core(&mut self, core: usize) {
+        for pe in &mut self.pes[core * self.r..(core + 1) * self.r] {
+            pe.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn product_clock_outer_product() {
+        let mut c = Counters::default();
+        let mut arr = PeArray::new(2, 3);
+        arr.configure(3, 1);
+        arr.step_product(&[2, 3], &[10, 20, 30], &[true, true, true], &mut c);
+        assert_eq!(arr.acc(0, 0), 20);
+        assert_eq!(arr.acc(0, 2), 60);
+        assert_eq!(arr.acc(1, 1), 60);
+        assert_eq!(c.macs, 6);
+    }
+
+    #[test]
+    fn gated_cores_do_not_accumulate() {
+        let mut c = Counters::default();
+        let mut arr = PeArray::new(1, 3);
+        arr.configure(3, 1);
+        arr.step_product(&[5], &[1, 1, 1], &[true, false, true], &mut c);
+        assert_eq!(arr.acc(0, 1), 0);
+        assert_eq!(c.macs, 2);
+    }
+
+    #[test]
+    fn strobe_shifts_within_groups_only() {
+        let mut c = Counters::default();
+        let mut arr = PeArray::new(1, 6);
+        arr.configure(3, 2);
+        // Put 1,2,3 | 4,5,6 into accumulators via unit products.
+        for (core, v) in [1i8, 2, 3, 4, 5, 6].iter().enumerate() {
+            let mut active = [false; 6];
+            active[core] = true;
+            let mut w = [0i8; 6];
+            w[core] = *v;
+            arr.step_product(&[1], &w, &active, &mut c);
+        }
+        arr.shift_strobe();
+        // Group 0: 0,1,2 — group 1: 0,4,5 (no leak of 3 into core 3).
+        assert_eq!(
+            (0..6).map(|i| arr.acc(0, i)).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0, 4, 5]
+        );
+    }
+
+    #[test]
+    fn reconfigure_within_one_call() {
+        let mut arr = PeArray::new(1, 6);
+        arr.configure(3, 2);
+        arr.configure(5, 1); // e.g. K_W 3 → 5 between layers
+        assert_eq!(arr.dims(), (1, 6));
+    }
+}

@@ -1,0 +1,133 @@
+//! The pixel shifter (§III-C, Table II).
+//!
+//! "A small shift register bank of depth `R + max{F}` and a bank of
+//! AXI-Stream adapters (datawidth converters) make the pixel shifter.
+//! The first `R` registers directly supply data to the engine without
+//! any multiplexers." Per input column and channel it performs `S_H`
+//! loads of `R + F` interleaved words, shifting between loads so that PE
+//! row `r` observes input rows `r·S_H + k_h` in the tap order
+//! `(0, S_H, 2·S_H, …, 1, S_H+1, …)` — strided vertical convolution with
+//! linear shifts only.
+
+use crate::metrics::Counters;
+
+/// The shift-register bank. Statically sized to `R + f_max`; a layer
+/// uses the first `R + F` entries.
+#[derive(Debug, Clone)]
+pub struct PixelShifter {
+    regs: Vec<i8>,
+    r: usize,
+    /// Active width `R + F` for the current layer.
+    active: usize,
+}
+
+impl PixelShifter {
+    /// `f_max` is the largest shift factor synthesized (§III-F: "only
+    /// the adapters needed for a given set of (K_H, S_H) combinations
+    /// can be instantiated").
+    pub fn new(r: usize, f_max: usize) -> Self {
+        Self { regs: vec![0; r + f_max], r, active: r }
+    }
+
+    /// Reconfigure for a layer (one clock, from the in-stream header).
+    pub fn configure(&mut self, f: usize) {
+        assert!(
+            self.r + f <= self.regs.len(),
+            "F={f} exceeds synthesized adapter depth"
+        );
+        self.active = self.r + f;
+        self.regs.iter_mut().for_each(|v| *v = 0);
+    }
+
+    /// Load one `R + F`-word interleaved beat from the X̂ stream
+    /// (counted as DRAM reads).
+    pub fn load(&mut self, beat: &[i8], counters: &mut Counters) {
+        assert_eq!(beat.len(), self.active);
+        self.regs[..self.active].copy_from_slice(beat);
+        counters.dram_x_reads += self.active as u64;
+    }
+
+    /// Shift the bank up by one: register `j` takes register `j+1`
+    /// ("the registers are shifted K_H times", §IV-A).
+    pub fn shift(&mut self) {
+        self.regs.copy_within(1..self.active, 0);
+        self.regs[self.active - 1] = 0;
+    }
+
+    /// The `R` engine-facing registers.
+    pub fn engine_rows(&self) -> &[i8] {
+        &self.regs[..self.r]
+    }
+
+    /// Per-load shift counts for `(K_H, S_H)`: `F` shifts after each of
+    /// the first `S_H − 1` loads, and the remainder after the last, so
+    /// that loads + shifts = `K_H` consumption clocks per (w, c_i) —
+    /// Table II's schedule. (Eq. (11) counts the last load's window as
+    /// `⌊K_H/S_H⌋` = shifts + the load clock itself.)
+    pub fn shift_schedule(kh: usize, sh: usize, f: usize) -> Vec<usize> {
+        assert!(kh >= sh, "K_H < S_H layers are processed at S_H = K_H");
+        let mut v = vec![f; sh];
+        let last = kh
+            .checked_sub(sh + (sh - 1) * f)
+            .expect("unsupported (K_H, S_H): schedule underflow");
+        v[sh - 1] = last;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_schedule_7_2() {
+        // R, K_H, S_H = 4, 7, 2 → F = 3: load, 3 shifts, load, 2 shifts
+        // = 7 consumption clocks.
+        assert_eq!(PixelShifter::shift_schedule(7, 2, 3), vec![3, 2]);
+    }
+
+    #[test]
+    fn unstrided_3x1() {
+        // K=3, S=1, F=2: one load, two shifts.
+        assert_eq!(PixelShifter::shift_schedule(3, 1, 2), vec![2]);
+    }
+
+    #[test]
+    fn alexnet_11_4() {
+        // K=11, S=4, F=2: loads at s=0..3 with shifts 2,2,2,1.
+        assert_eq!(PixelShifter::shift_schedule(11, 4, 2), vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn table2_register_contents() {
+        // Reproduce Table II: after the s=0 load, register r holds row
+        // 2r; after m shifts, row 2r + 2m; after the s=1 load, row 2r+1.
+        let mut c = Counters::default();
+        let mut ps = PixelShifter::new(4, 3);
+        ps.configure(3);
+        // Beat s=0: rows 0,2,4,…,12 encoded as values.
+        let beat0: Vec<i8> = (0..7).map(|j| (2 * j) as i8).collect();
+        ps.load(&beat0, &mut c);
+        assert_eq!(ps.engine_rows(), &[0, 2, 4, 6]);
+        ps.shift();
+        assert_eq!(ps.engine_rows(), &[2, 4, 6, 8]);
+        ps.shift();
+        ps.shift();
+        assert_eq!(ps.engine_rows(), &[6, 8, 10, 12]);
+        // Beat s=1: rows 1,3,…,13.
+        let beat1: Vec<i8> = (0..7).map(|j| (2 * j + 1) as i8).collect();
+        ps.load(&beat1, &mut c);
+        assert_eq!(ps.engine_rows(), &[1, 3, 5, 7]);
+        ps.shift();
+        ps.shift();
+        assert_eq!(ps.engine_rows(), &[5, 7, 9, 11]);
+        // DRAM accounting: two beats of R+F = 7 words.
+        assert_eq!(c.dram_x_reads, 14);
+    }
+
+    #[test]
+    #[should_panic(expected = "unsupported")]
+    fn underflow_schedule_panics() {
+        PixelShifter::shift_schedule(5, 4, 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! The weights rotator (§III-D).
+//!
+//! "Two SRAMs, each C words wide and max{S_W·C_i·K_W} rows deep … are
+//! the only on-chip memories in the system. During each iteration t, the
+//! kernel words required for the next iteration t+1 are slowly
+//! pre-fetched from the off-chip memory through a low-bandwidth,
+//! low-priority AXI-4 bus and filled into W-SRAM. At the end of an
+//! iteration, the two SRAMs switch their roles. … The weights are
+//! rotated NLW times throughout the iteration, maximizing the reuse of
+//! weights."
+
+use crate::dataflow::TiledWeights;
+use crate::metrics::Counters;
+
+/// Double-buffered global weight store with phase-row assembly.
+#[derive(Debug, Clone)]
+pub struct WeightsRotator {
+    banks: [Vec<i8>; 2],
+    /// Bank currently serving the engine (R-SRAM); `1 - active` is the
+    /// W-SRAM being prefetched.
+    active: usize,
+    /// Rows currently resident per bank.
+    rows: [usize; 2],
+    c: usize,
+    depth: usize,
+    /// (ci, kh, sw) row extent of the current layer.
+    ci: usize,
+    kh: usize,
+    sw: usize,
+    /// Elastic group size `G` (the sub-channel pattern repeats per
+    /// group, so phase assembly needs the within-group core index).
+    g: usize,
+    /// Rotations performed in the current iteration (reuse telemetry).
+    pub rotations: u64,
+}
+
+impl WeightsRotator {
+    pub fn new(c: usize, depth: usize) -> Self {
+        Self {
+            banks: [vec![0; c * depth], vec![0; c * depth]],
+            active: 0,
+            rows: [0, 0],
+            c,
+            depth,
+            ci: 0,
+            kh: 0,
+            sw: 1,
+            g: 1,
+            rotations: 0,
+        }
+    }
+
+    /// Reconfigure row geometry for a layer (one header clock).
+    ///
+    /// Layers whose `C_i·K_H·S_W` exceeds the synthesized depth put the
+    /// rotator in *streaming* mode: rows pass through without rotation
+    /// reuse. This only arises for FC layers with very wide `C_i`
+    /// (e.g. VGG-16 fc1, 25088 > 2048), where the paper's batching
+    /// choice (`N^f = R` ⟹ `L = 1`, §IV-D) makes every row single-use,
+    /// so streaming costs no extra DRAM traffic. The engine asserts
+    /// `N·L·W = 1` before running a streaming layer.
+    pub fn configure(&mut self, ci: usize, kh: usize, sw: usize, g: usize) {
+        let rows = ci * kh * sw;
+        self.g = g;
+        if rows > self.depth {
+            let size = rows * self.c;
+            for bank in &mut self.banks {
+                bank.resize(size, 0);
+            }
+        }
+        self.ci = ci;
+        self.kh = kh;
+        self.sw = sw;
+    }
+
+    /// `true` when the current layer exceeds the SRAM depth (§ above).
+    pub fn is_streaming(&self) -> bool {
+        self.ci * self.kh * self.sw > self.depth
+    }
+
+    /// Prefetch iteration `t` of `K̂` into the W-SRAM (the inactive
+    /// bank), assembling the S_W *phase rows* from the logical tiling
+    /// (see `sim` module docs). Counts one DRAM read and one SRAM write
+    /// per word.
+    pub fn prefetch(&mut self, k_hat: &TiledWeights, t: usize, counters: &mut Counters) {
+        let w_bank = 1 - self.active;
+        let rows = self.ci * self.kh * self.sw;
+        let bank = &mut self.banks[w_bank];
+        let mut row_idx = 0;
+        for ci in 0..self.ci {
+            for kh in 0..self.kh {
+                for phase in 0..self.sw {
+                    let dst = &mut bank[row_idx * self.c..(row_idx + 1) * self.c];
+                    for (core, d) in dst.iter_mut().enumerate() {
+                        // Within-group core g serves sub-channel
+                        // (g + φ) mod S_W — the pattern repeats per
+                        // elastic group.
+                        let g = core % self.g;
+                        let sw_ch = (g + phase) % self.sw;
+                        *d = k_hat.row(t, ci, kh, sw_ch)[core];
+                    }
+                    row_idx += 1;
+                }
+            }
+        }
+        self.rows[w_bank] = rows;
+        counters.dram_k_reads += (rows * self.c) as u64;
+        counters.sram_writes += (rows * self.c) as u64;
+    }
+
+    /// Swap R-SRAM and W-SRAM at an iteration boundary.
+    pub fn swap(&mut self) {
+        self.active = 1 - self.active;
+        self.rotations = 0;
+    }
+
+    /// Read the phase row `(c_i, k_h, φ)` from the R-SRAM, broadcasting
+    /// C words to the cores (each core broadcasts its word to R PEs).
+    pub fn read_row(&mut self, ci: usize, kh: usize, phase: usize, counters: &mut Counters) -> &[i8] {
+        debug_assert!(ci < self.ci && kh < self.kh && phase < self.sw);
+        let row = (ci * self.kh + kh) * self.sw + phase;
+        debug_assert!(row < self.rows[self.active]);
+        counters.sram_reads += self.c as u64;
+        if row + 1 == self.rows[self.active] {
+            self.rotations += 1;
+        }
+        &self.banks[self.active][row * self.c..(row + 1) * self.c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::dataflow::tile_weights;
+    use crate::layers::{KrakenLayerParams, Layer};
+    use crate::tensor::Tensor4;
+
+    fn setup(sw: usize) -> (WeightsRotator, TiledWeights, Layer, KrakenLayerParams) {
+        let cfg = KrakenConfig::new(2, 6);
+        let layer = Layer::conv("c", 1, 8, 8, 5, 5, sw, sw, 3, 2);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let k = Tensor4::random([5, 5, 3, 2], 3);
+        let k_hat = tile_weights(&k, &layer, &p);
+        let mut rot = WeightsRotator::new(6, 128);
+        rot.configure(3, 5, sw, 5 + sw - 1);
+        (rot, k_hat, layer, p)
+    }
+
+    #[test]
+    fn double_buffering_swaps_roles() {
+        let (mut rot, k_hat, _, _) = setup(1);
+        let mut c = Counters::default();
+        rot.prefetch(&k_hat, 0, &mut c);
+        rot.swap();
+        let row = rot.read_row(0, 0, 0, &mut c).to_vec();
+        assert_eq!(&row[..], k_hat.row(0, 0, 0, 0));
+        // Prefetch t=1 into the other bank while t=0 serves.
+        rot.prefetch(&k_hat, 1, &mut c);
+        let row_still = rot.read_row(0, 0, 0, &mut c).to_vec();
+        assert_eq!(row, row_still, "R-SRAM must be undisturbed by prefetch");
+        rot.swap();
+        let row_t1 = rot.read_row(0, 0, 0, &mut c).to_vec();
+        assert_eq!(&row_t1[..], k_hat.row(1, 0, 0, 0));
+    }
+
+    #[test]
+    fn phase_rows_regroup_subchannels() {
+        let (mut rot, k_hat, _, _) = setup(2);
+        let mut c = Counters::default();
+        rot.prefetch(&k_hat, 0, &mut c);
+        rot.swap();
+        // Phase 1 row: core g carries sub-channel (g+1) mod 2.
+        let row = rot.read_row(0, 0, 1, &mut c).to_vec();
+        for g in 0..6 {
+            assert_eq!(row[g], k_hat.row(0, 0, 0, (g + 1) % 2)[g]);
+        }
+    }
+
+    #[test]
+    fn access_counters_match_eq20_k_term() {
+        let (mut rot, k_hat, layer, p) = setup(1);
+        let mut c = Counters::default();
+        for t in 0..p.t {
+            rot.prefetch(&k_hat, t, &mut c);
+            rot.swap();
+        }
+        // M_K̂ = T·C_i·K_H·S_W·C.
+        let expect = (p.t * layer.ci * layer.kh * layer.sw * 6) as u64;
+        assert_eq!(c.dram_k_reads, expect);
+        assert_eq!(c.sram_writes, expect);
+    }
+
+    #[test]
+    fn depth_overflow_enters_streaming_mode() {
+        let mut rot = WeightsRotator::new(96, 16);
+        assert!(!rot.is_streaming());
+        rot.configure(512, 3, 1, 3);
+        assert!(rot.is_streaming());
+    }
+}

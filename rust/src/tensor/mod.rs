@@ -1,0 +1,13 @@
+//! Minimal NHWC tensor substrate and PJRT-independent golden references.
+//!
+//! The clock-accurate simulator produces int32 accumulator outputs; this
+//! module provides the *reference* convolution / matmul (direct loop-nest
+//! over eq. (1)/(2)) against which the simulator's dataflow is verified
+//! bit-exactly, and which is itself verified against the JAX/Pallas
+//! artifacts through the PJRT runtime (three-way agreement).
+
+mod nhwc;
+mod reference;
+
+pub use nhwc::Tensor4;
+pub use reference::{conv2d_same_i8, matmul_i8, conv2d_same_grouped_i8};

@@ -1,0 +1,93 @@
+//! A dense 4-D tensor in NHWC layout — the layout Kraken's DRAM tiling
+//! (§IV, Algorithm 1) starts from ("C-style array indices, also known as
+//! the row-major order").
+
+
+/// Dense NHWC tensor over any element type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor4<T> {
+    /// `[N, H, W, C]`.
+    pub shape: [usize; 4],
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor4<T> {
+    /// Zero-initialized tensor.
+    pub fn zeros(shape: [usize; 4]) -> Self {
+        Self { shape, data: vec![T::default(); shape.iter().product()] }
+    }
+
+    /// From a flat row-major buffer.
+    pub fn from_vec(shape: [usize; 4], data: Vec<T>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, h: usize, w: usize, c: usize) -> usize {
+        debug_assert!(n < self.shape[0] && h < self.shape[1] && w < self.shape[2] && c < self.shape[3]);
+        ((n * self.shape[1] + h) * self.shape[2] + w) * self.shape[3] + c
+    }
+
+    #[inline]
+    pub fn get(&self, n: usize, h: usize, w: usize, c: usize) -> T {
+        self.data[self.idx(n, h, w, c)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, h: usize, w: usize, c: usize, v: T) {
+        let i = self.idx(n, h, w, c);
+        self.data[i] = v;
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+impl Tensor4<i8> {
+    /// Deterministic pseudo-random int8 tensor (xorshift; keeps tests and
+    /// the python golden generator in sync — same algorithm is
+    /// implemented in `python/compile/testdata.py`).
+    pub fn random(shape: [usize; 4], seed: u64) -> Self {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let data = (0..shape.iter().product::<usize>())
+            .map(|_| (next() % 255) as i64 as i8)
+            .map(|v| if v == i8::MIN { 0 } else { v })
+            .collect();
+        Self { shape, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_indexing() {
+        let mut t = Tensor4::<i32>::zeros([2, 3, 4, 5]);
+        t.set(1, 2, 3, 4, 42);
+        assert_eq!(t.data[((1 * 3 + 2) * 4 + 3) * 5 + 4], 42);
+        assert_eq!(t.get(1, 2, 3, 4), 42);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor4::random([1, 4, 4, 3], 7);
+        let b = Tensor4::random([1, 4, 4, 3], 7);
+        assert_eq!(a, b);
+        let c = Tensor4::random([1, 4, 4, 3], 8);
+        assert_ne!(a, c);
+    }
+}

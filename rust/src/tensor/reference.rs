@@ -1,0 +1,177 @@
+//! Direct-form golden references for eq. (1) and eq. (2): the simplest
+//! possible loop nests, int8 inputs/weights, int32 accumulation, `same`
+//! zero padding — used to verify the simulator's dataflow bit-exactly.
+
+use super::nhwc::Tensor4;
+use crate::layers::same_padding;
+
+/// Eq. (1): `same`-padded strided convolution.
+/// `x: [N,H,W,Ci]`, `k: [Kh,Kw,Ci,Co]` → `y: [N,ceil(H/Sh),ceil(W/Sw),Co]`
+/// with int32 accumulators.
+pub fn conv2d_same_i8(x: &Tensor4<i8>, k: &Tensor4<i8>, sh: usize, sw: usize) -> Tensor4<i32> {
+    let [n, h, w, ci] = x.shape;
+    let [kh, kw, kci, co] = k.shape;
+    assert_eq!(ci, kci, "channel mismatch");
+    let oh = h.div_ceil(sh);
+    let ow = w.div_ceil(sw);
+    let (pad_top, _) = same_padding(h, kh, sh);
+    let (pad_left, _) = same_padding(w, kw, sw);
+    let mut y = Tensor4::<i32>::zeros([n, oh, ow, co]);
+    for bn in 0..n {
+        for yh in 0..oh {
+            for yw in 0..ow {
+                for oc in 0..co {
+                    let mut acc: i32 = 0;
+                    for dh in 0..kh {
+                        let ih = (yh * sh + dh) as isize - pad_top as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        for dw in 0..kw {
+                            let iw = (yw * sw + dw) as isize - pad_left as isize;
+                            if iw < 0 || iw >= w as isize {
+                                continue;
+                            }
+                            for c in 0..ci {
+                                acc += x.get(bn, ih as usize, iw as usize, c) as i32
+                                    * k.get(dh, dw, c, oc) as i32;
+                            }
+                        }
+                    }
+                    y.set(bn, yh, yw, oc, acc);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Grouped variant (AlexNet conv2/4/5): `x: [N,H,W,G·Ci]`,
+/// `k: [Kh,Kw,Ci,Co]` with the first `Co/G` filters applied to the first
+/// `Ci` input channels, etc.
+pub fn conv2d_same_grouped_i8(
+    x: &Tensor4<i8>,
+    k: &Tensor4<i8>,
+    sh: usize,
+    sw: usize,
+    groups: usize,
+) -> Tensor4<i32> {
+    let [n, h, w, ci_total] = x.shape;
+    let [kh, kw, ci, co] = k.shape;
+    assert_eq!(ci_total, ci * groups);
+    assert_eq!(co % groups, 0);
+    let co_g = co / groups;
+    let oh = h.div_ceil(sh);
+    let ow = w.div_ceil(sw);
+    let mut y = Tensor4::<i32>::zeros([n, oh, ow, co]);
+    for g in 0..groups {
+        // Slice the group's channels into contiguous tensors.
+        let mut xg = Tensor4::<i8>::zeros([n, h, w, ci]);
+        for bn in 0..n {
+            for ih in 0..h {
+                for iw in 0..w {
+                    for c in 0..ci {
+                        xg.set(bn, ih, iw, c, x.get(bn, ih, iw, g * ci + c));
+                    }
+                }
+            }
+        }
+        let mut kg = Tensor4::<i8>::zeros([kh, kw, ci, co_g]);
+        for dh in 0..kh {
+            for dw in 0..kw {
+                for c in 0..ci {
+                    for oc in 0..co_g {
+                        kg.set(dh, dw, c, oc, k.get(dh, dw, c, g * co_g + oc));
+                    }
+                }
+            }
+        }
+        let yg = conv2d_same_i8(&xg, &kg, sh, sw);
+        for bn in 0..n {
+            for yh in 0..oh {
+                for yw in 0..ow {
+                    for oc in 0..co_g {
+                        y.set(bn, yh, yw, g * co_g + oc, yg.get(bn, yh, yw, oc));
+                    }
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Eq. (2) / (14): `m1: [H, Ci] · m2: [Ci, Co]` (stored as `[1,H,1,Ci]`
+/// and `[1,Ci,1,Co]`) with int32 accumulation.
+pub fn matmul_i8(m1: &[i8], m2: &[i8], h: usize, ci: usize, co: usize) -> Vec<i32> {
+    assert_eq!(m1.len(), h * ci);
+    assert_eq!(m2.len(), ci * co);
+    let mut y = vec![0i32; h * co];
+    for i in 0..h {
+        for kk in 0..ci {
+            let a = m1[i * ci + kk] as i32;
+            if a == 0 {
+                continue;
+            }
+            for j in 0..co {
+                y[i * co + j] += a * m2[kk * co + j] as i32;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_1x1() {
+        // 1×1 conv with identity-ish kernel copies channels.
+        let x = Tensor4::random([1, 3, 3, 2], 1);
+        let mut k = Tensor4::<i8>::zeros([1, 1, 2, 2]);
+        k.set(0, 0, 0, 0, 1);
+        k.set(0, 0, 1, 1, 1);
+        let y = conv2d_same_i8(&x, &k, 1, 1);
+        for h in 0..3 {
+            for w in 0..3 {
+                for c in 0..2 {
+                    assert_eq!(y.get(0, h, w, c), x.get(0, h, w, c) as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ones_3x3_counts_neighbors() {
+        let x = Tensor4::from_vec([1, 3, 3, 1], vec![1i8; 9]);
+        let k = Tensor4::from_vec([3, 3, 1, 1], vec![1i8; 9]);
+        let y = conv2d_same_i8(&x, &k, 1, 1);
+        // same padding: corners see 4, edges 6, center 9.
+        assert_eq!(y.get(0, 0, 0, 0), 4);
+        assert_eq!(y.get(0, 0, 1, 0), 6);
+        assert_eq!(y.get(0, 1, 1, 0), 9);
+    }
+
+    #[test]
+    fn strided_output_shape() {
+        let x = Tensor4::random([1, 11, 11, 3], 2);
+        let k = Tensor4::random([7, 7, 3, 4], 3);
+        let y = conv2d_same_i8(&x, &k, 2, 2);
+        assert_eq!(y.shape, [1, 6, 6, 4]);
+    }
+
+    #[test]
+    fn grouped_matches_manual_split() {
+        let x = Tensor4::random([1, 5, 5, 4], 4);
+        let k = Tensor4::random([3, 3, 2, 6], 5); // 2 groups of ci=2, co=3
+        let y = conv2d_same_grouped_i8(&x, &k, 1, 1, 2);
+        assert_eq!(y.shape, [1, 5, 5, 6]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] · [[1,0],[0,1]] = same
+        let y = matmul_i8(&[1, 2, 3, 4], &[1, 0, 0, 1], 2, 2, 2);
+        assert_eq!(y, vec![1, 2, 3, 4]);
+    }
+}

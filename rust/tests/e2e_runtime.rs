@@ -1,0 +1,121 @@
+//! End-to-end integration over the PJRT runtime: the AOT-lowered
+//! JAX/Pallas artifacts (L1+L2) must agree **bit-exactly** with the
+//! clock-accurate simulator (L3's engine) and the direct-form Rust
+//! reference, on every (K, S) shape class of Table I and on the full
+//! TinyCNN forward.
+//!
+//! Requires `make artifacts` (the Makefile runs it before tests).
+
+use std::path::Path;
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::tiny_cnn_pipeline;
+use kraken::layers::Layer;
+use kraken::quant::QParams;
+use kraken::runtime::{ArtifactKind, GoldenRunner};
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, Tensor4};
+
+fn runner() -> GoldenRunner {
+    GoldenRunner::new(Path::new("artifacts"))
+        .expect("artifacts/ missing or stale — run `make artifacts`")
+}
+
+#[test]
+fn conv_goldens_match_simulator_bit_exactly() {
+    let runner = runner();
+    let (r, c) = (runner.runtime.manifest.r, runner.runtime.manifest.c);
+    let specs: Vec<String> = runner
+        .runtime
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == ArtifactKind::Conv)
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(specs.len() >= 6, "expected all conv shape classes");
+    for name in specs {
+        let case = runner.run(&name).expect("golden run");
+        let s = case.spec.clone();
+        let ci_per_group = s.k_shape[2];
+        let layer = Layer::conv_grouped(
+            s.name.clone(),
+            s.x_shape[0],
+            s.x_shape[1],
+            s.x_shape[2],
+            s.k_shape[0],
+            s.k_shape[1],
+            s.sh,
+            s.sw,
+            ci_per_group,
+            s.k_shape[3],
+            s.groups,
+        );
+        // Simulator.
+        let mut engine = Engine::new(KrakenConfig::new(r, c), 8);
+        let out = engine.run_layer(&LayerData {
+            layer: &layer,
+            x: &case.x,
+            k: &case.k,
+            qparams: QParams::identity(),
+        });
+        assert_eq!(
+            out.y_acc.data, case.y,
+            "{name}: simulator disagrees with JAX/Pallas artifact"
+        );
+        // Direct-form reference.
+        let reference = if s.groups == 1 {
+            conv2d_same_i8(&case.x, &case.k, s.sh, s.sw)
+        } else {
+            conv2d_same_grouped_i8(&case.x, &case.k, s.sh, s.sw, s.groups)
+        };
+        assert_eq!(reference.data, case.y, "{name}: reference disagrees with artifact");
+    }
+}
+
+#[test]
+fn matmul_golden_matches_simulator() {
+    let runner = runner();
+    let case = runner.run("matmul").expect("matmul golden");
+    let s = case.spec.clone();
+    let layer = Layer::matmul("mm", s.x_shape[0], s.x_shape[1], s.k_shape[1]);
+    let mut engine = Engine::new(
+        KrakenConfig::new(runner.runtime.manifest.r, runner.runtime.manifest.c),
+        8,
+    );
+    let out = engine.run_dense(&layer, &case.x.data, &case.k.data, QParams::identity());
+    // Engine output is [1, H, 1, Co] row-major = [H, Co].
+    assert_eq!(out.y_acc.data, case.y, "matmul: simulator vs artifact");
+}
+
+#[test]
+fn tiny_cnn_logits_match_coordinator_pipeline() {
+    let runner = runner();
+    let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
+    let engine = Engine::new(KrakenConfig::new(7, 96), 8);
+    let mut pipeline = tiny_cnn_pipeline(engine);
+    let report = pipeline.run(&x);
+    assert_eq!(
+        report.logits, golden_logits,
+        "full-network logits: coordinator+simulator vs JAX/Pallas artifact"
+    );
+}
+
+#[test]
+fn xorshift_cross_language() {
+    // Pinned against python/tests/test_model.py::test_xorshift_reference_values.
+    let t = Tensor4::random([1, 1, 1, 10], 7);
+    assert_eq!(t.data, vec![122, 2, -64, -100, -80, 40, -45, 126, 112, 70]);
+    let t = Tensor4::random([1, 1, 1, 10], 42);
+    assert_eq!(t.data, vec![-43, 106, 90, -97, 110, 39, 68, -91, 56, -109]);
+}
+
+#[test]
+fn runtime_reports_cpu_platform() {
+    let runner = runner();
+    let platform = runner.runtime.platform().to_lowercase();
+    assert!(
+        platform.contains("cpu") || platform.contains("host"),
+        "platform={platform}"
+    );
+}

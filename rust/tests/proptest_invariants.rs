@@ -1,0 +1,162 @@
+//! Randomized property tests over the dataflow and coordinator
+//! invariants (hand-rolled shrinking-free harness — the offline build
+//! vendors no proptest; the generator is seeded and prints its seed on
+//! failure, so every case is reproducible).
+
+use kraken::arch::{ConfigHeader, KrakenConfig};
+use kraken::dataflow::run_conv_loopnest;
+use kraken::layers::{KrakenLayerParams, Layer};
+use kraken::quant::QParams;
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::{conv2d_same_i8, Tensor4};
+
+/// xorshift64 generator for shape sampling.
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15).max(1))
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next() as usize) % (hi - lo + 1)
+    }
+    fn pick<T: Copy>(&mut self, xs: &[T]) -> T {
+        xs[(self.next() as usize) % xs.len()]
+    }
+}
+
+/// Sample a random layer + array config with G ≤ C.
+fn sample(rng: &mut Rng) -> (KrakenConfig, Layer) {
+    let k = rng.pick(&[1usize, 3, 5, 7]);
+    let s = if k == 1 { 1 } else { rng.pick(&[1usize, 2]) };
+    let g = k + s - 1;
+    let r = rng.range(2, 6);
+    let e = rng.range(1, 3);
+    let c = g * e + rng.range(0, g - 1).min(2); // sometimes idle cores
+    let h = rng.range(k.max(4), 14);
+    let w = rng.range(k.max(4), 14);
+    let ci = rng.range(1, 6);
+    let co = rng.range(1, 9);
+    (
+        KrakenConfig::new(r, c),
+        Layer::conv("prop", 1, h, w, k, k, s, s, ci, co),
+    )
+}
+
+const CASES: usize = 60;
+
+#[test]
+fn prop_engine_bit_exact_and_clock_exact() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed + 1);
+        let (cfg, layer) = sample(&mut rng);
+        let x = Tensor4::random([1, layer.h, layer.w, layer.ci], seed * 2 + 1);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], seed * 2 + 2);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let mut engine = Engine::new(cfg.clone(), 8);
+        let out = engine.run_layer(&LayerData {
+            layer: &layer,
+            x: &x,
+            k: &k,
+            qparams: QParams::identity(),
+        });
+        let want = conv2d_same_i8(&x, &k, layer.sh, layer.sw);
+        assert_eq!(
+            out.y_acc, want,
+            "seed {seed}: {:?} on {}×{}",
+            layer, cfg.r, cfg.c
+        );
+        assert_eq!(out.clocks, p.q, "seed {seed}: clocks");
+    }
+}
+
+#[test]
+fn prop_loopnest_conserves_macs_and_streams() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed + 1000);
+        let (cfg, layer) = sample(&mut rng);
+        let x = Tensor4::random([1, layer.h, layer.w, layer.ci], seed * 2 + 1);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], seed * 2 + 2);
+        let got = run_conv_loopnest(&cfg, &layer, &x, &k);
+        // Valid MACs are exactly eq. (4) — never more, never fewer.
+        assert_eq!(got.valid_macs, layer.macs_valid(), "seed {seed}");
+        // The engine never reads fewer X̂ words than the raw input needs
+        // and reuse means it reads X̂ at most (R+F)·S_H/‐ish × more.
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        assert_eq!(
+            got.x_words,
+            p.t as u64
+                * (layer.n * p.l * layer.w * layer.ci * layer.sh * (p.r + p.f)) as u64,
+            "seed {seed}: X̂ words"
+        );
+        // Output stream carries every output pixel at least once.
+        let out_pixels = (layer.out_h() * layer.out_w() * layer.co) as u64;
+        assert!(got.y_words >= out_pixels, "seed {seed}: Ŷ covers outputs");
+    }
+}
+
+#[test]
+fn prop_header_roundtrip_any_layer() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed + 2000);
+        let (cfg, layer) = sample(&mut rng);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let h = ConfigHeader::for_layer(&layer, &p).expect("encodable");
+        let d = ConfigHeader::decode(h.encode()).expect("decodable");
+        assert_eq!(h, d, "seed {seed}");
+        assert_eq!(d.g(), p.g, "seed {seed}: G from header");
+    }
+}
+
+#[test]
+fn prop_efficiency_bounded_and_monotone_in_rounding() {
+    // ℰ_j ∈ (0, 1]; and exact-fit shapes (H multiple of R·S_H, C_o
+    // multiple of E·S_W, C multiple of G) dominate their ragged
+    // counterparts.
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed + 3000);
+        let (cfg, layer) = sample(&mut rng);
+        let model = kraken::perf::PerfModel {
+            cfg: cfg.clone(),
+            tech: kraken::perf::Tech::paper_7x96(),
+            fc_mem: Default::default(),
+        };
+        let m = model.layer(&layer);
+        assert!(m.efficiency > 0.0 && m.efficiency <= 1.0 + 1e-9, "seed {seed}");
+        // Exact-fit variant.
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let mut exact = layer.clone();
+        exact.h = p.r * layer.sh * p.l.max(1);
+        exact.co = p.e * layer.sw * p.t.max(1);
+        let me = model.layer(&exact);
+        assert!(
+            me.efficiency >= m.efficiency - 1e-9,
+            "seed {seed}: exact-fit ℰ {} < ragged ℰ {}",
+            me.efficiency,
+            m.efficiency
+        );
+    }
+}
+
+#[test]
+fn prop_requantize_saturates_and_is_monotone() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed + 4000);
+        let shift = rng.range(1, 10) as u32;
+        let q = QParams::from_scale(1.0 / (1u64 << shift) as f64, 0, false);
+        let mut prev = i8::MIN;
+        for acc in (-200_000..200_000).step_by(1777) {
+            let v = q.requantize(acc);
+            assert!(v >= prev, "seed {seed}: monotone");
+            prev = v;
+        }
+        assert_eq!(q.requantize(i32::MAX), 127);
+        assert_eq!(q.requantize(i32::MIN + 1), -128);
+    }
+}

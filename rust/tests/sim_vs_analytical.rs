@@ -1,0 +1,127 @@
+//! The clock-accurate simulator must agree with §V's closed forms on
+//! every derived quantity — clocks (eq. 17), DRAM stream counts
+//! (eq. 20) — and with the loop-nest executor and direct-form reference
+//! on outputs, across a grid of layer shapes covering every class in
+//! Table I plus ragged/rounding corners.
+
+use kraken::arch::KrakenConfig;
+use kraken::dataflow::run_conv_loopnest;
+use kraken::layers::{KrakenLayerParams, Layer};
+use kraken::perf::{FcMemConvention, PerfModel, Tech};
+use kraken::quant::QParams;
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, Tensor4};
+
+fn model_for(cfg: &KrakenConfig) -> PerfModel {
+    PerfModel { cfg: cfg.clone(), tech: Tech::paper_7x96(), fc_mem: FcMemConvention::Paper }
+}
+
+fn cases() -> Vec<(KrakenConfig, Layer)> {
+    vec![
+        // (R, C) — layer
+        (KrakenConfig::new(3, 12), Layer::conv("vgg3x3", 1, 12, 12, 3, 3, 1, 1, 6, 10)),
+        (KrakenConfig::new(4, 10), Layer::conv("alex5x1", 1, 11, 11, 5, 5, 1, 1, 4, 6)),
+        (KrakenConfig::new(4, 28), Layer::conv("alex11x4", 1, 23, 23, 11, 11, 4, 4, 3, 8)),
+        (KrakenConfig::new(3, 16), Layer::conv("res7x2", 1, 14, 14, 7, 7, 2, 2, 3, 4)),
+        (KrakenConfig::new(4, 12), Layer::conv("pw1x1", 1, 9, 9, 1, 1, 1, 1, 12, 20)),
+        (KrakenConfig::new(2, 6), Layer::conv("tab4", 1, 8, 8, 5, 5, 2, 2, 3, 2)),
+        (KrakenConfig::new(3, 9), Layer::conv_grouped("grp", 1, 9, 9, 3, 3, 1, 1, 4, 8, 2)),
+        (KrakenConfig::new(3, 9), Layer::conv("batch", 2, 6, 6, 3, 3, 1, 1, 3, 6)),
+        (KrakenConfig::new(4, 10), Layer::conv("ragged", 1, 10, 10, 3, 3, 1, 1, 5, 7)),
+        (KrakenConfig::new(3, 11), Layer::conv("ragged2", 1, 13, 13, 5, 5, 2, 2, 3, 5)),
+        (KrakenConfig::new(5, 13), Layer::conv("odd", 1, 17, 15, 3, 3, 1, 1, 7, 11)),
+        // The paper's two implemented configurations at toy layer sizes.
+        (KrakenConfig::paper(), Layer::conv("paper7x96", 1, 14, 14, 3, 3, 1, 1, 8, 40)),
+        (KrakenConfig::tailored_7x24(), Layer::conv("paper7x24", 1, 14, 14, 3, 3, 1, 1, 8, 16)),
+        (KrakenConfig::paper(), Layer::conv("paper_stem", 1, 28, 28, 7, 7, 2, 2, 3, 24)),
+    ]
+}
+
+#[test]
+fn engine_clocks_equal_eq17_everywhere() {
+    for (cfg, layer) in cases() {
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], 11);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 12);
+        let mut engine = Engine::new(cfg, 8);
+        let out = engine.run_layer(&LayerData {
+            layer: &layer,
+            x: &x,
+            k: &k,
+            qparams: QParams::identity(),
+        });
+        assert_eq!(out.clocks, p.q, "{}", layer.name);
+    }
+}
+
+#[test]
+fn engine_streams_equal_eq20_everywhere() {
+    for (cfg, layer) in cases() {
+        let model = model_for(&cfg);
+        let m = model.layer(&layer);
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], 21);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 22);
+        let mut engine = Engine::new(cfg, 8);
+        let out = engine.run_layer(&LayerData {
+            layer: &layer,
+            x: &x,
+            k: &k,
+            qparams: QParams::identity(),
+        });
+        assert_eq!(out.counters.dram_x_reads, m.m_x_hat, "{} X̂", layer.name);
+        assert_eq!(out.counters.dram_k_reads, m.m_k_hat, "{} K̂", layer.name);
+        assert_eq!(out.counters.dram_y_writes, m.m_y_hat, "{} Ŷ", layer.name);
+    }
+}
+
+#[test]
+fn engine_equals_loopnest_equals_reference() {
+    for (cfg, layer) in cases() {
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], 31);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 32);
+        let loopnest = run_conv_loopnest(&cfg, &layer, &x, &k);
+        let mut engine = Engine::new(cfg, 8);
+        let sim = engine.run_layer(&LayerData {
+            layer: &layer,
+            x: &x,
+            k: &k,
+            qparams: QParams::identity(),
+        });
+        let reference = if layer.groups == 1 {
+            conv2d_same_i8(&x, &k, layer.sh, layer.sw)
+        } else {
+            conv2d_same_grouped_i8(&x, &k, layer.sh, layer.sw, layer.groups)
+        };
+        assert_eq!(sim.y_acc, reference, "{} sim vs ref", layer.name);
+        assert_eq!(loopnest.y, reference, "{} loopnest vs ref", layer.name);
+        assert_eq!(sim.clocks, loopnest.clocks, "{} clock agreement", layer.name);
+    }
+}
+
+#[test]
+fn loopnest_valid_macs_equal_eq4() {
+    for (cfg, layer) in cases() {
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], 41);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 42);
+        let got = run_conv_loopnest(&cfg, &layer, &x, &k);
+        assert_eq!(got.valid_macs, layer.macs_valid(), "{}", layer.name);
+    }
+}
+
+#[test]
+fn dense_path_equals_analytical() {
+    for (r, c, h, ci, co) in
+        [(4usize, 8usize, 10usize, 12usize, 20usize), (7, 96, 7, 256, 96), (3, 5, 9, 17, 11)]
+    {
+        let cfg = KrakenConfig::new(r, c);
+        let layer = Layer::matmul("mm", h, ci, co);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let m1 = Tensor4::random([1, h, 1, ci], 51);
+        let m2 = Tensor4::random([1, 1, ci, co], 52);
+        let mut engine = Engine::new(cfg, 8);
+        let out = engine.run_dense(&layer, &m1.data, &m2.data, QParams::identity());
+        assert_eq!(out.clocks, p.q);
+        let want = kraken::tensor::matmul_i8(&m1.data, &m2.data, h, ci, co);
+        assert_eq!(out.y_acc.data, want);
+    }
+}
