@@ -45,3 +45,27 @@ pub fn report_throughput(name: &str, iters: usize, units: f64, unit_name: &str, 
     );
     med
 }
+
+/// Emit one machine-readable benchmark record: written to
+/// `BENCH_<name>.json` in the working directory and echoed to stdout
+/// with a `BENCH_JSON ` prefix, so CI can scrape throughput numbers
+/// (e.g. the 1/2/4-engine pool results) without parsing the
+/// pretty-printed lines.
+#[allow(dead_code)]
+pub fn emit_json(name: &str, fields: &[(&str, f64)]) {
+    let mut body = format!("{{\"bench\":\"{name}\"");
+    for (key, value) in fields {
+        if value.is_finite() {
+            body.push_str(&format!(",\"{key}\":{value}"));
+        } else {
+            // inf/NaN are not valid JSON literals.
+            body.push_str(&format!(",\"{key}\":null"));
+        }
+    }
+    body.push('}');
+    let path = format!("BENCH_{name}.json");
+    if let Err(e) = std::fs::write(&path, format!("{body}\n")) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
+    println!("BENCH_JSON {body}");
+}

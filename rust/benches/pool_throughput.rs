@@ -1,0 +1,72 @@
+//! Sharded engine-pool serving throughput (the ROADMAP scaling axis):
+//! TinyCNN requests through pools of 1 / 2 / 4 cycle-accurate engines
+//! with work-stealing dispatch, measuring simulation-host wall-clock
+//! throughput. Each engine simulates identical work, so the pool's
+//! speedup is the sharding win; ≥2× at 4 engines is the acceptance bar.
+//!
+//! Emits `BENCH_pool_engines_<n>.json` records via the shared harness.
+//!
+//! Run: `cargo bench --bench pool_throughput`
+
+mod harness;
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
+use kraken::sim::Engine;
+use kraken::tensor::Tensor4;
+
+fn main() {
+    println!("== sharded engine pool: TinyCNN serving throughput vs pool size ==\n");
+    let requests = 24usize;
+    let mut baseline_rps = None;
+    for engines in [1usize, 2, 4] {
+        let server = InferenceServer::spawn_pool(engines, |_| {
+            let mut pipe = tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8));
+            // Warm on the worker's own thread (stealing could otherwise
+            // leave a worker cold inside the timed region).
+            let _ = pipe.run(&Tensor4::random([1, 28, 28, 3], 1));
+            pipe
+        });
+        // Settle: don't start the clock until the pool is serving.
+        for rx in server
+            .submit_batch((0..engines).map(|i| Tensor4::random([1, 28, 28, 3], 1 + i as u64)))
+        {
+            rx.recv().expect("settle response");
+        }
+
+        let t0 = std::time::Instant::now();
+        let rxs = server.submit_batch(
+            (0..requests).map(|i| Tensor4::random([1, 28, 28, 3], 100 + i as u64)),
+        );
+        for rx in rxs {
+            rx.recv().expect("response");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = server.shutdown();
+
+        let rps = requests as f64 / wall;
+        let speedup = match baseline_rps {
+            None => {
+                baseline_rps = Some(rps);
+                1.0
+            }
+            Some(base) => rps / base,
+        };
+        println!(
+            "engines {engines}: {requests} requests in {wall:.3} s → {rps:.2} req/s \
+             ({speedup:.2}× vs 1 engine, {} stolen)",
+            stats.stolen
+        );
+        harness::emit_json(
+            &format!("pool_engines_{engines}"),
+            &[
+                ("engines", engines as f64),
+                ("requests", requests as f64),
+                ("wall_s", wall),
+                ("req_per_s", rps),
+                ("speedup_vs_1", speedup),
+                ("stolen", stats.stolen as f64),
+            ],
+        );
+    }
+}

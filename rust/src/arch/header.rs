@@ -11,7 +11,7 @@
 //! stall-free reconfiguration. This module defines the exact bit packing
 //! used by the simulator and the coordinator.
 
-use thiserror::Error;
+use std::fmt;
 
 use crate::layers::{KrakenLayerParams, Layer};
 
@@ -40,20 +40,38 @@ pub struct ConfigHeader {
     pub is_dense: bool,
 }
 
-/// Errors raised when a layer does not fit the header encoding.
-#[derive(Debug, Error, PartialEq, Eq)]
+/// Errors raised when a layer does not fit the header encoding
+/// (hand-impl'd `Display`: `thiserror` is not vendored in the offline
+/// build).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HeaderError {
-    #[error("field {field} value {value} exceeds its {bits}-bit header range")]
     FieldOverflow {
         field: &'static str,
         value: usize,
         bits: u32,
     },
-    #[error("reserved header bits are non-zero: {0:#x}")]
     ReservedBits(u64),
-    #[error("zero-valued field {0} is not a legal configuration")]
     ZeroField(&'static str),
 }
+
+impl fmt::Display for HeaderError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HeaderError::FieldOverflow { field, value, bits } => write!(
+                f,
+                "field {field} value {value} exceeds its {bits}-bit header range"
+            ),
+            HeaderError::ReservedBits(v) => {
+                write!(f, "reserved header bits are non-zero: {v:#x}")
+            }
+            HeaderError::ZeroField(name) => {
+                write!(f, "zero-valued field {name} is not a legal configuration")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HeaderError {}
 
 const KH_BITS: u32 = 5;
 const KW_BITS: u32 = 5;

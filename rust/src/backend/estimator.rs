@@ -1,0 +1,124 @@
+//! Prior-work baselines behind the uniform backend seam.
+//!
+//! The paper compares Kraken against Eyeriss, MMIE/ZASCAD and CARLA
+//! analytically (§VI-B). [`crate::baselines`] carries those calibrated
+//! per-layer efficiency models; this wrapper puts them behind the same
+//! [`Accelerator`] entry point as the Kraken backends, so a pipeline or
+//! a report can swap "run this network on Kraken" for "run it on
+//! Eyeriss" with one constructor change.
+//!
+//! Outputs are computed through the shared direct-form reference (every
+//! accelerator computes the same eq. (1)/(2) math — only the schedule
+//! differs); clocks come from the baseline's analytic efficiency model;
+//! DRAM counters carry the dataflow-independent lower bound
+//! `M_X + M_K + M_Y` (we do not model the baselines' tiling).
+
+use crate::baselines::{BaselineModel, Carla, Eyeriss, Zascad};
+use crate::layers::LayerKind;
+use crate::metrics::Counters;
+
+use super::{reference_output, Accelerator, LayerData, LayerOutput};
+
+/// Any calibrated [`BaselineModel`] as an [`Accelerator`] backend.
+pub struct Estimator<M: BaselineModel> {
+    pub model: M,
+    counters: Counters,
+}
+
+impl<M: BaselineModel> Estimator<M> {
+    pub fn new(model: M) -> Self {
+        Self { model, counters: Counters::default() }
+    }
+}
+
+impl Estimator<Eyeriss> {
+    pub fn eyeriss() -> Self {
+        Self::new(Eyeriss::new())
+    }
+}
+
+impl Estimator<Zascad> {
+    pub fn zascad() -> Self {
+        Self::new(Zascad::new())
+    }
+}
+
+impl Estimator<Carla> {
+    pub fn carla() -> Self {
+        Self::new(Carla::new())
+    }
+}
+
+impl<M: BaselineModel + Send> Accelerator for Estimator<M> {
+    fn name(&self) -> String {
+        self.model.name().to_string()
+    }
+
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        let layer = data.layer;
+        let (y_acc, y_q) = reference_output(data);
+        let delta = Counters {
+            clocks: self.model.layer_cycles(layer).ceil() as u64,
+            // Same field convention as the Kraken backends: `macs`
+            // includes zero-padding taps, `active_pe_clocks` is the
+            // valid work.
+            macs: layer.macs_with_zpad(),
+            active_pe_clocks: layer.macs_valid(),
+            dram_x_reads: layer.m_x(),
+            dram_k_reads: layer.m_k(),
+            dram_y_writes: layer.m_y(),
+            reconfigs: 1,
+            ..Counters::default()
+        };
+        self.counters.merge(&delta);
+        LayerOutput { y_acc, y_q, clocks: delta.clocks, counters: delta }
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn freq_hz(&self, _kind: LayerKind) -> f64 {
+        self.model.freq_hz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Layer;
+    use crate::quant::QParams;
+    use crate::tensor::{conv2d_same_i8, Tensor4};
+
+    #[test]
+    fn estimator_outputs_are_bit_exact_and_clocks_analytic() {
+        let layer = Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 8, 16);
+        let x = Tensor4::random([1, 14, 14, 8], 1);
+        let k = Tensor4::random([3, 3, 8, 16], 2);
+        let mut e = Estimator::eyeriss();
+        let out =
+            e.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(out.y_acc, conv2d_same_i8(&x, &k, 1, 1));
+        let want = e.model.layer_cycles(&layer).ceil() as u64;
+        assert_eq!(out.clocks, want);
+        assert!(out.clocks > 0);
+    }
+
+    #[test]
+    fn slower_baseline_takes_more_clocks_than_its_peak() {
+        // ℰ ≤ 1 ⇒ cycles ≥ MACs / PEs.
+        let layer = Layer::conv("c", 1, 28, 28, 3, 3, 1, 1, 16, 32);
+        let x = Tensor4::random([1, 28, 28, 16], 3);
+        let k = Tensor4::random([3, 3, 16, 32], 4);
+        for out in [
+            Estimator::eyeriss()
+                .run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() }),
+            Estimator::zascad()
+                .run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() }),
+            Estimator::carla()
+                .run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() }),
+        ] {
+            assert!(out.clocks as f64 >= layer.macs_valid() as f64 / 1024.0);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! The fast functional backend: bit-exact outputs, analytic clocks.
+//!
+//! The clock-accurate [`crate::sim::Engine`] steps every product clock
+//! (O(Q·R·C) work per layer) — perfect for verifying the dataflow,
+//! needlessly slow for serving or sweeps. Because the engine is proven
+//! bit-exact against the direct-form reference *and* clock-exact
+//! against eq. (17) (`rust/tests/sim_vs_analytical.rs`), both halves
+//! can be replaced by their ground truths: outputs from
+//! [`crate::tensor`]'s reference loop nests, clocks from
+//! [`KrakenLayerParams::derive`], DRAM word counts from eq. (20) in
+//! [`crate::perf::PerfModel`] (physical convention, which is what the
+//! engine's counters measure). The result is a backend that returns the
+//! *same* `LayerOutput` as the engine — same tensors, same clocks, same
+//! DRAM words — at in-memory-GEMM speed.
+//!
+//! SRAM counters are the analytic reuse counts (`M_K̂` words written
+//! once, read `N·L·W` times), not the engine's per-port event counts;
+//! the equivalence suite therefore pins outputs, clocks and DRAM words
+//! but not SRAM events.
+
+use crate::arch::KrakenConfig;
+use crate::layers::{KrakenLayerParams, LayerKind};
+use crate::metrics::Counters;
+use crate::perf::{FcMemConvention, PerfModel, Tech};
+
+use super::{reference_output, Accelerator, LayerData, LayerOutput};
+
+/// Functional backend over one static configuration.
+pub struct Functional {
+    pub cfg: KrakenConfig,
+    model: PerfModel,
+    counters: Counters,
+}
+
+impl Functional {
+    pub fn new(cfg: KrakenConfig) -> Self {
+        let tech = Tech::scaled(cfg.r, cfg.c, cfg.wsram_depth);
+        let model = PerfModel {
+            cfg: cfg.clone(),
+            tech,
+            // Physical convention: count each streamed word once, like
+            // the engine's DRAM counters do.
+            fc_mem: FcMemConvention::Physical,
+        };
+        Self { cfg, model, counters: Counters::default() }
+    }
+
+    /// The paper's synthesized 7×96 instance.
+    pub fn paper() -> Self {
+        Self::new(KrakenConfig::paper())
+    }
+}
+
+impl Accelerator for Functional {
+    fn name(&self) -> String {
+        format!("functional {}x{}", self.cfg.r, self.cfg.c)
+    }
+
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        let layer = data.layer;
+        let p = KrakenLayerParams::derive(&self.cfg, layer);
+        let (y_acc, y_q) = reference_output(data);
+        let m = self.model.layer(layer);
+        let delta = Counters {
+            clocks: p.q,
+            macs: layer.macs_with_zpad(),
+            active_pe_clocks: layer.macs_valid(),
+            dram_x_reads: m.m_x_hat,
+            dram_k_reads: m.m_k_hat,
+            dram_y_writes: m.m_y_hat,
+            sram_reads: m.m_k_hat * p.nlw,
+            sram_writes: m.m_k_hat,
+            reconfigs: 1,
+        };
+        self.counters.merge(&delta);
+        LayerOutput { y_acc, y_q, clocks: p.q, counters: delta }
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn freq_hz(&self, kind: LayerKind) -> f64 {
+        super::config_freq_hz(&self.cfg, kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Layer;
+    use crate::quant::QParams;
+    use crate::tensor::{conv2d_same_i8, Tensor4};
+
+    #[test]
+    fn functional_clocks_equal_eq17() {
+        let cfg = KrakenConfig::new(3, 12);
+        let layer = Layer::conv("c", 1, 9, 9, 3, 3, 1, 1, 4, 8);
+        let p = KrakenLayerParams::derive(&cfg, &layer);
+        let x = Tensor4::random([1, 9, 9, 4], 50);
+        let k = Tensor4::random([3, 3, 4, 8], 51);
+        let mut b = Functional::new(cfg);
+        let out =
+            b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(out.clocks, p.q);
+        assert_eq!(out.y_acc, conv2d_same_i8(&x, &k, 1, 1));
+    }
+
+    #[test]
+    fn counters_accumulate_across_layers() {
+        let mut b = Functional::new(KrakenConfig::new(3, 12));
+        let layer = Layer::conv("c", 1, 6, 6, 3, 3, 1, 1, 2, 4);
+        let x = Tensor4::random([1, 6, 6, 2], 1);
+        let k = Tensor4::random([3, 3, 2, 4], 2);
+        let o1 =
+            b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        let o2 =
+            b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(b.counters().reconfigs, 2);
+        assert_eq!(b.counters().clocks, o1.clocks + o2.clocks);
+    }
+}

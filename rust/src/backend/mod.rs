@@ -1,0 +1,168 @@
+//! The crate-wide accelerator-backend seam.
+//!
+//! Kraken's pitch is *one uniform dataflow* (§IV-D): conv, FC and matmul
+//! all run through the same engine schedule. This module turns that into
+//! an explicit software contract — every way of "running" a layer
+//! implements the same [`Accelerator`] trait with the same
+//! `run_layer(&LayerData) -> LayerOutput` shape and the same
+//! [`Counters`] reporting:
+//!
+//! * [`crate::sim::Engine`] — the clock-accurate microarchitecture
+//!   simulator (bit-exact outputs, clocks counted cycle by cycle);
+//! * [`functional::Functional`] — bit-exact outputs through the
+//!   direct-form reference of [`crate::tensor`], with clocks and DRAM
+//!   counters from the closed forms of [`crate::perf`] (eqs. (17) and
+//!   (20)) — ~10³× faster to simulate, identical tensors and clocks;
+//! * [`estimator::Estimator`] — the calibrated prior-work baseline
+//!   models (Eyeriss / ZASCAD / CARLA) behind the same entry point:
+//!   same outputs (every accelerator computes the same math), analytic
+//!   clocks from each baseline's efficiency model.
+//!
+//! The serving layer ([`crate::coordinator`]) is written against this
+//! trait, so a pipeline, a batcher, or a sharded [`pool::ShardedPool`]
+//! can be backed by any implementation: swap the cycle-accurate engine
+//! for the functional backend to trade cycle fidelity for throughput,
+//! or shard N engines across cores with work-stealing dispatch.
+
+pub mod estimator;
+pub mod functional;
+pub mod pool;
+
+use crate::layers::{Layer, LayerKind};
+use crate::metrics::Counters;
+use crate::quant::QParams;
+use crate::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, matmul_i8, Tensor4};
+
+pub use estimator::Estimator;
+pub use functional::Functional;
+pub use pool::{ShardedPool, WorkerStats};
+
+/// Input bundle for one layer.
+pub struct LayerData<'a> {
+    pub layer: &'a Layer,
+    /// `[N, H, W, groups·C_i]` activations (dense: `[1, H, 1, C_i]`).
+    pub x: &'a Tensor4<i8>,
+    /// `[K_H, K_W, C_i, C_o]` weights (dense: `[1, 1, C_i, C_o]`).
+    pub k: &'a Tensor4<i8>,
+    /// Requantization applied on the way out.
+    pub qparams: QParams,
+}
+
+/// Result of one layer pass.
+#[derive(Debug, Clone)]
+pub struct LayerOutput {
+    /// Raw int32 accumulator outputs `[N, OH, OW, C_o]`.
+    pub y_acc: Tensor4<i32>,
+    /// Requantized int8 outputs (the next layer's `X`).
+    pub y_q: Tensor4<i8>,
+    /// Clock cycles this layer took on the backend's clock model.
+    pub clocks: u64,
+    /// This layer's event deltas.
+    pub counters: Counters,
+}
+
+/// One backend capable of running a layer through the uniform dataflow.
+///
+/// Contract: every implementation produces **identical `y_acc`/`y_q`
+/// tensors** for the same [`LayerData`] (the uniform dataflow computes
+/// eq. (1)/(2) exactly); implementations differ only in how `clocks`
+/// and `counters` are obtained (cycle-accurate stepping, closed forms,
+/// or a calibrated baseline model). `rust/tests/backend_equivalence.rs`
+/// enforces this.
+pub trait Accelerator: Send {
+    /// Human-readable backend name, e.g. `"cycle-accurate 7x96"`.
+    fn name(&self) -> String;
+
+    /// Run one layer (conv, FC or matmul — one uniform path).
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput;
+
+    /// Convenience wrapper for the dense path (§IV-D): `m1: [H, C_i]`,
+    /// `m2: [C_i, C_o]`, returning `[H, C_o]` through the same path.
+    fn run_dense(
+        &mut self,
+        layer: &Layer,
+        m1: &[i8],
+        m2: &[i8],
+        qparams: QParams,
+    ) -> LayerOutput {
+        assert!(layer.is_dense());
+        let x = Tensor4::from_vec([1, layer.h, 1, layer.ci], m1.to_vec());
+        let k = Tensor4::from_vec([1, 1, layer.ci, layer.co], m2.to_vec());
+        self.run_layer(&LayerData { layer, x: &x, k: &k, qparams })
+    }
+
+    /// Cumulative counters across every layer run on this backend.
+    fn counters(&self) -> Counters;
+
+    /// Operating frequency for a layer kind (the paper's 400 MHz conv /
+    /// 200 MHz FC operating points, §VI-A).
+    fn freq_hz(&self, kind: LayerKind) -> f64;
+
+    /// Modeled wall-clock seconds for `clocks` cycles of a `kind` layer.
+    fn modeled_s(&self, kind: LayerKind, clocks: u64) -> f64 {
+        clocks as f64 / self.freq_hz(kind)
+    }
+}
+
+/// The paper's per-kind operating point on a [`KrakenConfig`]
+/// (400 MHz conv / 200 MHz FC-and-matmul, §VI-A) — the one place the
+/// frequency policy lives; every config-backed backend's `freq_hz`
+/// delegates here.
+pub fn config_freq_hz(cfg: &crate::arch::KrakenConfig, kind: LayerKind) -> f64 {
+    if kind == LayerKind::Conv {
+        cfg.freq_conv_hz
+    } else {
+        cfg.freq_fc_hz
+    }
+}
+
+/// Direct-form evaluation of one [`LayerData`] (eq. (1)/(2) plus
+/// requantization) — the shared output path of every backend that does
+/// not step the microarchitecture.
+pub fn reference_output(data: &LayerData) -> (Tensor4<i32>, Tensor4<i8>) {
+    let layer = data.layer;
+    let y_acc = if layer.is_dense() {
+        let y = matmul_i8(&data.x.data, &data.k.data, layer.h, layer.ci, layer.co);
+        Tensor4::from_vec([1, layer.h, 1, layer.co], y)
+    } else if layer.groups == 1 {
+        conv2d_same_i8(data.x, data.k, layer.sh, layer.sw)
+    } else {
+        conv2d_same_grouped_i8(data.x, data.k, layer.sh, layer.sw, layer.groups)
+    };
+    let y_q = Tensor4::from_vec(y_acc.shape, data.qparams.requantize_slice(&y_acc.data));
+    (y_acc, y_q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_output_conv_and_dense_shapes() {
+        let layer = Layer::conv("c", 1, 8, 8, 3, 3, 2, 2, 4, 6);
+        let x = Tensor4::random([1, 8, 8, 4], 1);
+        let k = Tensor4::random([3, 3, 4, 6], 2);
+        let (y_acc, y_q) =
+            reference_output(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(y_acc.shape, [1, 4, 4, 6]);
+        assert_eq!(y_q.shape, [1, 4, 4, 6]);
+
+        let layer = Layer::matmul("mm", 5, 7, 9);
+        let x = Tensor4::random([1, 5, 1, 7], 3);
+        let k = Tensor4::random([1, 1, 7, 9], 4);
+        let (y_acc, _) =
+            reference_output(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        assert_eq!(y_acc.shape, [1, 5, 1, 9]);
+    }
+
+    #[test]
+    fn requantization_applied_elementwise() {
+        let layer = Layer::conv("c", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let x = Tensor4::from_vec([1, 2, 2, 1], vec![10i8, 20, 30, 40]);
+        let k = Tensor4::from_vec([1, 1, 1, 1], vec![2i8]);
+        let q = QParams::from_scale(0.5, 0, false);
+        let (y_acc, y_q) = reference_output(&LayerData { layer: &layer, x: &x, k: &k, qparams: q });
+        assert_eq!(y_acc.data, vec![20, 40, 60, 80]);
+        assert_eq!(y_q.data, vec![10, 20, 30, 40]);
+    }
+}

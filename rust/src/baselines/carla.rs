@@ -11,7 +11,7 @@
 
 use crate::layers::Layer;
 
-use super::Accelerator;
+use super::BaselineModel;
 
 pub struct Carla {
     pub eff_3x3: f64,
@@ -49,7 +49,7 @@ impl Default for Carla {
     }
 }
 
-impl Accelerator for Carla {
+impl BaselineModel for Carla {
     fn name(&self) -> &'static str {
         "CARLA (TCAS'21)"
     }

@@ -14,7 +14,7 @@
 
 use crate::layers::Layer;
 
-use super::Accelerator;
+use super::BaselineModel;
 
 /// The Eyeriss model.
 pub struct Eyeriss {
@@ -64,7 +64,7 @@ impl Default for Eyeriss {
     }
 }
 
-impl Accelerator for Eyeriss {
+impl BaselineModel for Eyeriss {
     fn name(&self) -> &'static str {
         "Eyeriss (JSSC'17)"
     }

@@ -23,7 +23,12 @@ pub mod zascad;
 use crate::layers::Layer;
 
 /// A baseline accelerator's per-layer analytical model + constants.
-pub trait Accelerator {
+///
+/// (Named `BaselineModel` since the crate-wide backend trait took the
+/// `Accelerator` name: [`crate::backend::Accelerator`]. Any
+/// `BaselineModel` becomes a full backend — bit-exact outputs, analytic
+/// clocks — through [`crate::backend::Estimator`].)
+pub trait BaselineModel {
     /// Display name with venue tag, e.g. `"Eyeriss (JSSC'17)"`.
     fn name(&self) -> &'static str;
     /// Number of PEs.

@@ -18,7 +18,7 @@
 
 use crate::layers::Layer;
 
-use super::Accelerator;
+use super::BaselineModel;
 
 pub struct Zascad {
     /// Weight-passing overhead cycles per kernel column per row.
@@ -60,7 +60,7 @@ impl Default for Zascad {
     }
 }
 
-impl Accelerator for Zascad {
+impl BaselineModel for Zascad {
     fn name(&self) -> &'static str {
         "MMIE/ZASCAD (TCOMP'20)"
     }

@@ -1,18 +1,26 @@
-//! Layer-3 coordination: the host-side system around the engine.
+//! Layer-3 coordination: the host-side system around the backends.
 //!
 //! The paper's contribution is the engine + dataflow; the coordinator is
-//! the machinery an adopter needs around it: a per-network
-//! [`scheduler::InferencePipeline`] that streams layers back-to-back
-//! (requantizing and re-tiling `Ŷ_j → X̂_{j+1}` between engine passes,
-//! running host ops like max-pool that the benchmark CNNs need), and a
-//! threaded [`server::InferenceServer`] with request queueing, FC
-//! batching (batch = `R`, §IV-D) and latency/throughput accounting at
-//! the modeled 400/200 MHz operating points.
+//! the machinery an adopter needs around it, written entirely against
+//! the [`crate::backend::Accelerator`] trait so any backend (the
+//! clock-accurate engine, the fast functional backend, a baseline
+//! estimator) can serve traffic:
+//!
+//! * a per-network [`scheduler::InferencePipeline`] that streams layers
+//!   back-to-back (requantizing and re-tiling `Ŷ_j → X̂_{j+1}` between
+//!   passes, running host ops like max-pool that the benchmark CNNs
+//!   need);
+//! * an [`batcher::FcBatcher`] collecting dense requests into `R`-row
+//!   batches (batch = `R`, §IV-D);
+//! * a threaded [`server::InferenceServer`] sharding requests across a
+//!   pool of N backend instances with work-stealing dispatch
+//!   ([`crate::backend::pool`]), with latency/throughput accounting at
+//!   the modeled 400/200 MHz operating points.
 
 pub mod batcher;
 pub mod scheduler;
 pub mod server;
 
 pub use batcher::{BatchResult, DenseOp, FcBatcher};
-pub use scheduler::{tiny_cnn_pipeline, InferencePipeline, PipelineReport, StageOp};
-pub use server::{InferenceServer, ServeStats};
+pub use scheduler::{tiny_cnn_pipeline, InferencePipeline, PipelineReport, Stage, StageOp};
+pub use server::{InferenceServer, Response, ServeStats};

@@ -1,15 +1,21 @@
 //! The per-network layer scheduler.
 //!
 //! Streams a [`crate::networks::Network`]'s layers through one
-//! [`crate::sim::Engine`] back-to-back: each layer's 64-bit header rides
-//! the data stream (§III-G), outputs are requantized on the fly by the
-//! output pipe, and host-side ops (max-pool, flatten) run between engine
-//! passes exactly where the benchmark CNNs place them.
+//! [`Accelerator`] backend back-to-back: each layer's 64-bit header
+//! rides the data stream (§III-G), outputs are requantized on the fly,
+//! and host-side ops (max-pool, flatten) run between engine passes
+//! exactly where the benchmark CNNs place them.
+//!
+//! The pipeline is generic over the backend: the clock-accurate
+//! [`Engine`] for verification, the fast
+//! [`crate::backend::Functional`] backend for high-throughput serving,
+//! or any other [`Accelerator`].
 
-use crate::layers::{Layer, LayerKind};
+use crate::backend::{Accelerator, LayerData};
+use crate::layers::Layer;
 use crate::metrics::Counters;
 use crate::quant::QParams;
-use crate::sim::{Engine, LayerData};
+use crate::sim::Engine;
 use crate::tensor::Tensor4;
 
 /// Host-side op applied to a layer's int8 output before the next layer.
@@ -31,9 +37,9 @@ pub struct Stage {
     pub post: StageOp,
 }
 
-/// A compiled inference pipeline over one engine.
-pub struct InferencePipeline {
-    pub engine: Engine,
+/// A compiled inference pipeline over one backend.
+pub struct InferencePipeline<B: Accelerator = Engine> {
+    pub backend: B,
     pub stages: Vec<Stage>,
 }
 
@@ -42,9 +48,9 @@ pub struct InferencePipeline {
 pub struct PipelineReport {
     /// Raw int32 logits of the final layer.
     pub logits: Vec<i32>,
-    /// Clock cycles per stage (engine layers only).
+    /// Clock cycles per stage (backend layers only).
     pub stage_clocks: Vec<u64>,
-    /// Total engine clocks.
+    /// Total backend clocks.
     pub total_clocks: u64,
     /// Event counters for the inference.
     pub counters: Counters,
@@ -52,31 +58,26 @@ pub struct PipelineReport {
     pub modeled_ms: f64,
 }
 
-impl InferencePipeline {
-    pub fn new(engine: Engine, stages: Vec<Stage>) -> Self {
-        Self { engine, stages }
+impl<B: Accelerator> InferencePipeline<B> {
+    pub fn new(backend: B, stages: Vec<Stage>) -> Self {
+        Self { backend, stages }
     }
 
     /// Run one input through every stage.
     pub fn run(&mut self, x: &Tensor4<i8>) -> PipelineReport {
-        let before = self.engine.counters;
+        let before = self.backend.counters();
         let mut act = x.clone();
         let mut logits: Vec<i32> = Vec::new();
         let mut stage_clocks = Vec::with_capacity(self.stages.len());
         let mut modeled_s = 0.0;
         let n_stages = self.stages.len();
         for (j, stage) in self.stages.iter().enumerate() {
-            let freq = if stage.layer.kind == LayerKind::Conv {
-                self.engine.cfg.freq_conv_hz
-            } else {
-                self.engine.cfg.freq_fc_hz
-            };
             let out = if stage.layer.is_dense() {
                 let flat = act.data.clone();
-                self.engine
+                self.backend
                     .run_dense(&stage.layer, &flat, &stage.weights.data, stage.qparams)
             } else {
-                self.engine.run_layer(&LayerData {
+                self.backend.run_layer(&LayerData {
                     layer: &stage.layer,
                     x: &act,
                     k: &stage.weights,
@@ -84,7 +85,7 @@ impl InferencePipeline {
                 })
             };
             stage_clocks.push(out.clocks);
-            modeled_s += out.clocks as f64 / freq;
+            modeled_s += self.backend.modeled_s(stage.layer.kind, out.clocks);
             if j + 1 == n_stages {
                 logits = out.y_acc.data.clone();
             }
@@ -98,7 +99,7 @@ impl InferencePipeline {
                 }
             };
         }
-        let counters = self.engine.counters.diff(&before);
+        let counters = self.backend.counters().diff(&before);
         PipelineReport {
             logits,
             total_clocks: stage_clocks.iter().sum(),
@@ -139,10 +140,10 @@ pub const TINY_SCALE: f64 = 1.0 / 64.0;
 pub const X_SEED: u64 = 42;
 pub const W_SEED_BASE: u64 = 1000;
 
-/// Build the TinyCNN pipeline with seeded weights — the exact network
-/// the `tiny_cnn` AOT artifact computes (`rust/tests/e2e_runtime.rs`
-/// asserts bit-equality of the logits).
-pub fn tiny_cnn_pipeline(engine: Engine) -> InferencePipeline {
+/// Build the TinyCNN pipeline with seeded weights over any backend —
+/// the exact network the `tiny_cnn` AOT artifact computes
+/// (`rust/tests/e2e_runtime.rs` asserts bit-equality of the logits).
+pub fn tiny_cnn_pipeline<B: Accelerator>(backend: B) -> InferencePipeline<B> {
     let net = crate::networks::tiny_cnn();
     let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
     let mut stages = Vec::new();
@@ -160,13 +161,14 @@ pub fn tiny_cnn_pipeline(engine: Engine) -> InferencePipeline {
         };
         stages.push(Stage { layer: layer.clone(), weights, qparams: q_relu, post });
     }
-    InferencePipeline::new(engine, stages)
+    InferencePipeline::new(backend, stages)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::KrakenConfig;
+    use crate::backend::Functional;
 
     #[test]
     fn maxpool_matches_python_ref() {
@@ -201,5 +203,22 @@ mod tests {
             let p = crate::layers::KrakenLayerParams::derive(&cfg, &stage.layer);
             assert_eq!(*clocks, p.q, "{}", stage.layer.name);
         }
+    }
+
+    #[test]
+    fn functional_backend_pipeline_matches_engine_bit_exactly() {
+        // The whole point of the backend seam: the same pipeline over
+        // the cycle-accurate engine and the functional backend produces
+        // identical logits, clocks and modeled latency.
+        let cfg = KrakenConfig::new(7, 96);
+        let mut sim_pipe = tiny_cnn_pipeline(Engine::new(cfg.clone(), 8));
+        let mut fun_pipe = tiny_cnn_pipeline(Functional::new(cfg));
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let a = sim_pipe.run(&x);
+        let b = fun_pipe.run(&x);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.stage_clocks, b.stage_clocks);
+        assert_eq!(a.total_clocks, b.total_clocks);
+        assert!((a.modeled_ms - b.modeled_ms).abs() < 1e-12);
     }
 }

@@ -1,40 +1,46 @@
-//! A threaded inference server over one engine.
+//! A threaded inference server over a sharded pool of backends.
 //!
-//! The engine is single-tenant (one layer in flight, as in silicon), so
-//! the server owns it on a worker thread and feeds it from an mpsc
-//! request queue — the standard leader/worker split of serving systems,
-//! with the accelerator behind a channel. Latency is reported both as
-//! host wall-clock (simulation time) and as *modeled device time* at the
-//! 400/200 MHz operating points, which is the number comparable to
-//! Table V/VI.
+//! Each backend is single-tenant (one layer in flight, as in silicon),
+//! so the server owns N backend instances — each wrapped in its own
+//! [`InferencePipeline`] on its own worker thread — and feeds them from
+//! per-worker request deques with work-stealing dispatch
+//! ([`crate::backend::pool::ShardedPool`]). Throughput scales with the
+//! pool size; the single-engine topology of the original coordinator is
+//! the `n = 1` special case ([`InferenceServer::spawn`]).
+//!
+//! Latency is reported both as host wall-clock (simulation time) and as
+//! *modeled device time* at the 400/200 MHz operating points, which is
+//! the number comparable to Table V/VI.
 
 use std::sync::mpsc;
-use std::thread::JoinHandle;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use crate::backend::pool::{ShardedPool, WorkerStats};
+use crate::backend::Accelerator;
 use crate::tensor::Tensor4;
 
 use super::scheduler::{InferencePipeline, PipelineReport};
 
-enum Msg {
-    Infer {
-        input: Tensor4<i8>,
-        enqueued: Instant,
-        resp: mpsc::Sender<Response>,
-    },
-    Shutdown,
+/// One queued request: input + response channel.
+struct Job {
+    input: Tensor4<i8>,
+    enqueued: Instant,
+    resp: mpsc::Sender<Response>,
 }
 
 /// One request's outcome.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub logits: Vec<i32>,
-    /// Time spent queued before the engine picked the request up.
+    /// Time spent queued before a worker picked the request up.
     pub queue_us: f64,
-    /// Modeled engine time (clock cycles / operating frequency).
+    /// Modeled device time (clock cycles / operating frequency).
     pub device_ms: f64,
-    /// Engine clock cycles consumed.
+    /// Backend clock cycles consumed.
     pub clocks: u64,
+    /// Worker (shard) that served the request.
+    pub worker: usize,
 }
 
 /// Aggregate serving statistics.
@@ -43,50 +49,93 @@ pub struct ServeStats {
     pub completed: u64,
     pub total_device_ms: f64,
     pub total_clocks: u64,
+    /// Workers (= backend instances) in the pool.
+    pub workers: usize,
+    /// Requests served off a stolen (non-home-shard) job.
+    pub stolen: u64,
 }
 
-/// Handle to the worker thread owning the engine.
+/// Handle to the worker pool owning the backends.
 pub struct InferenceServer {
-    tx: mpsc::Sender<Msg>,
-    handle: Option<JoinHandle<ServeStats>>,
+    pool: ShardedPool<Job>,
+    stats: Arc<Mutex<ServeStats>>,
 }
 
 impl InferenceServer {
-    /// Spawn the worker around a ready pipeline.
-    pub fn spawn(mut pipeline: InferencePipeline) -> Self {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let handle = std::thread::spawn(move || {
-            let mut stats = ServeStats::default();
-            while let Ok(msg) = rx.recv() {
-                match msg {
-                    Msg::Shutdown => break,
-                    Msg::Infer { input, enqueued, resp } => {
-                        let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
-                        let report: PipelineReport = pipeline.run(&input);
-                        stats.completed += 1;
-                        stats.total_device_ms += report.modeled_ms;
-                        stats.total_clocks += report.total_clocks;
-                        let _ = resp.send(Response {
-                            logits: report.logits,
-                            queue_us,
-                            device_ms: report.modeled_ms,
-                            clocks: report.total_clocks,
-                        });
-                    }
+    /// Single-backend server (pool of one) — the original topology.
+    pub fn spawn<B: Accelerator + 'static>(pipeline: InferencePipeline<B>) -> Self {
+        let slot = Mutex::new(Some(pipeline));
+        Self::spawn_pool(1, move |_| {
+            slot.lock().expect("pipeline slot").take().expect("pipeline taken twice")
+        })
+    }
+
+    /// Sharded pool: `n` workers, each owning the pipeline built by
+    /// `make_pipeline(worker)` **on its own thread**. Requests are
+    /// round-robin sharded across the workers' deques; idle workers
+    /// steal from busy ones, so throughput scales with `n` even under
+    /// skewed request costs.
+    pub fn spawn_pool<B, F>(n: usize, make_pipeline: F) -> Self
+    where
+        B: Accelerator + 'static,
+        F: Fn(usize) -> InferencePipeline<B> + Send + Sync + 'static,
+    {
+        let stats = Arc::new(Mutex::new(ServeStats { workers: n, ..Default::default() }));
+        let stats_in_pool = Arc::clone(&stats);
+        let pool = ShardedPool::spawn(
+            n,
+            make_pipeline,
+            move |worker, pipeline: &mut InferencePipeline<B>, job: Job| {
+                let Job { input, enqueued, resp } = job;
+                let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+                let report: PipelineReport = pipeline.run(&input);
+                {
+                    let mut s = stats_in_pool.lock().expect("serve stats");
+                    s.completed += 1;
+                    s.total_device_ms += report.modeled_ms;
+                    s.total_clocks += report.total_clocks;
                 }
-            }
-            stats
-        });
-        Self { tx, handle: Some(handle) }
+                let _ = resp.send(Response {
+                    logits: report.logits,
+                    queue_us,
+                    device_ms: report.modeled_ms,
+                    clocks: report.total_clocks,
+                    worker,
+                });
+            },
+        );
+        Self { pool, stats }
+    }
+
+    /// Workers (= backend instances) in the pool.
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
     }
 
     /// Submit a request; returns a receiver for the response.
     pub fn submit(&self, input: Tensor4<i8>) -> mpsc::Receiver<Response> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer { input, enqueued: Instant::now(), resp: resp_tx })
-            .expect("server thread alive");
+        self.pool.submit(Job { input, enqueued: Instant::now(), resp: resp_tx });
         resp_rx
+    }
+
+    /// Submit a whole batch in one queue operation, one receiver per
+    /// request (in submission order) — the batched-dispatch fast path.
+    pub fn submit_batch(
+        &self,
+        inputs: impl IntoIterator<Item = Tensor4<i8>>,
+    ) -> Vec<mpsc::Receiver<Response>> {
+        let mut rxs = Vec::new();
+        let jobs: Vec<Job> = inputs
+            .into_iter()
+            .map(|input| {
+                let (resp_tx, resp_rx) = mpsc::channel();
+                rxs.push(resp_rx);
+                Job { input, enqueued: Instant::now(), resp: resp_tx }
+            })
+            .collect();
+        self.pool.submit_batch(jobs);
+        rxs
     }
 
     /// Blocking convenience: submit and wait.
@@ -95,18 +144,11 @@ impl InferenceServer {
     }
 
     /// Drain and stop, returning aggregate stats.
-    pub fn shutdown(mut self) -> ServeStats {
-        let _ = self.tx.send(Msg::Shutdown);
-        self.handle.take().expect("not yet joined").join().expect("worker join")
-    }
-}
-
-impl Drop for InferenceServer {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+    pub fn shutdown(self) -> ServeStats {
+        let worker_stats: Vec<WorkerStats> = self.pool.shutdown();
+        let mut stats = self.stats.lock().expect("serve stats").clone();
+        stats.stolen = worker_stats.iter().map(|w| w.stolen).sum();
+        stats
     }
 }
 
@@ -114,6 +156,7 @@ impl Drop for InferenceServer {
 mod tests {
     use super::*;
     use crate::arch::KrakenConfig;
+    use crate::backend::Functional;
     use crate::coordinator::scheduler::{tiny_cnn_pipeline, X_SEED};
     use crate::sim::Engine;
 
@@ -128,6 +171,7 @@ mod tests {
         assert_eq!(a.clocks, b.clocks);
         let stats = server.shutdown();
         assert_eq!(stats.completed, 2);
+        assert_eq!(stats.workers, 1);
         assert!(stats.total_device_ms > 0.0);
     }
 
@@ -143,5 +187,51 @@ mod tests {
         // Different inputs → (almost surely) different logits.
         assert_ne!(logits[0], logits[1]);
         server.shutdown();
+    }
+
+    #[test]
+    fn sharded_pool_matches_single_engine_bit_exactly() {
+        // Every worker owns an identical pipeline (same seeded
+        // weights), so the pool must be a pure throughput transform:
+        // same logits per input, any shard.
+        let single = InferenceServer::spawn(tiny_cnn_pipeline(Engine::new(
+            KrakenConfig::new(7, 96),
+            8,
+        )));
+        let pooled = InferenceServer::spawn_pool(3, |_| {
+            tiny_cnn_pipeline(Engine::new(KrakenConfig::new(7, 96), 8))
+        });
+        let inputs: Vec<Tensor4<i8>> =
+            (0..4).map(|i| Tensor4::random([1, 28, 28, 3], 500 + i)).collect();
+        let want: Vec<Vec<i32>> =
+            inputs.iter().map(|x| single.infer(x.clone()).logits).collect();
+        let rxs = pooled.submit_batch(inputs);
+        let got: Vec<Vec<i32>> =
+            rxs.into_iter().map(|rx| rx.recv().expect("response").logits).collect();
+        assert_eq!(got, want);
+        let stats = pooled.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.workers, 3);
+        single.shutdown();
+    }
+
+    #[test]
+    fn functional_backend_pool_serves_fast_path() {
+        // The functional backend behind the same server: same logits as
+        // the cycle-accurate engine, via the backend trait seam.
+        let sim = InferenceServer::spawn(tiny_cnn_pipeline(Engine::new(
+            KrakenConfig::new(7, 96),
+            8,
+        )));
+        let fun = InferenceServer::spawn_pool(2, |_| {
+            tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)))
+        });
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let a = sim.infer(x.clone());
+        let b = fun.infer(x);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.clocks, b.clocks);
+        sim.shutdown();
+        fun.shutdown();
     }
 }

@@ -33,16 +33,23 @@
 //!   sweep of §VI-A.
 //! * [`baselines`] — analytical models of Eyeriss, MMIE/ZASCAD and CARLA
 //!   used for the paper's comparisons (Table V/VI, Figs. 3–4).
+//! * [`backend`] — the crate-wide [`Accelerator`] trait: the
+//!   clock-accurate engine, the fast functional backend (bit-exact
+//!   outputs + analytic clocks) and the baseline estimators behind one
+//!   uniform `run_layer` contract, plus the work-stealing
+//!   [`backend::pool::ShardedPool`] that scales serving across cores.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; the
 //!   golden model for functional verification.
 //! * [`coordinator`] — the L3 serving layer: layer scheduler with
 //!   back-to-back configuration streaming and weight-prefetch overlap,
-//!   plus a tokio-based inference server.
+//!   plus a threaded inference server sharded across a pool of
+//!   backends with work-stealing dispatch.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
 
 pub mod arch;
+pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod dataflow;
@@ -57,5 +64,6 @@ pub mod sim;
 pub mod tensor;
 
 pub use arch::KrakenConfig;
+pub use backend::{Accelerator, LayerData, LayerOutput};
 pub use layers::{Layer, LayerKind};
 pub use networks::Network;

@@ -1,6 +1,7 @@
 //! The `kraken` CLI: regenerate every table and figure of the paper,
 //! run the clock-accurate simulator, verify against the AOT artifacts,
-//! and serve inference requests.
+//! compare backends, and serve inference requests through the sharded
+//! engine pool.
 //!
 //! (Hand-rolled argument parsing: the offline build environment vendors
 //! only the PJRT bridge's dependencies, so no clap.)
@@ -8,6 +9,7 @@
 use std::path::Path;
 
 use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Estimator, Functional};
 use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
 use kraken::networks::paper_networks;
 use kraken::perf::PerfModel;
@@ -37,7 +39,10 @@ paper artifacts:
 system:
   verify          run every AOT golden through PJRT vs the simulator
   simulate        run TinyCNN through the clock-accurate simulator
-  serve N         serve N TinyCNN requests through the coordinator
+  backends        cross-backend equivalence: cycle-accurate vs
+                  functional vs baseline estimators on TinyCNN
+  serve N [E]     serve N TinyCNN requests through a pool of E
+                  cycle-accurate engines (default E=1)
   report R C      per-network §V metrics for configuration R×C
 ";
 
@@ -75,9 +80,11 @@ fn main() {
         }
         "verify" => verify(),
         "simulate" => simulate(),
+        "backends" => backends(),
         "serve" => {
             let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
-            serve(n);
+            let engines: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
+            serve(n, engines);
         }
         "report" => {
             let r: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
@@ -108,7 +115,7 @@ fn verify() {
     use kraken::sim::LayerData;
 
     let runner = GoldenRunner::new(Path::new("artifacts"))
-        .expect("artifacts/ missing — run `make artifacts`");
+        .expect("artifacts/ missing or PJRT stub — see rust/README.md");
     println!("platform: {}", runner.runtime.platform());
     let (r, c) = (runner.runtime.manifest.r, runner.runtime.manifest.c);
     let mut ok = 0;
@@ -192,20 +199,81 @@ fn simulate() {
     println!("  logits: {:?}", rep.logits);
 }
 
-/// Serve N requests through the threaded coordinator.
-fn serve(n: usize) {
-    let engine = Engine::new(KrakenConfig::paper(), 8);
-    let server = InferenceServer::spawn(tiny_cnn_pipeline(engine));
+/// Cross-backend equivalence on TinyCNN: every `Accelerator` must
+/// produce the same tensors; the two Kraken backends the same clocks.
+fn backends() {
+    let net = kraken::networks::tiny_cnn();
+    let cfg = KrakenConfig::paper();
+    let seed = 9000u64;
+
+    let mut cycle = Engine::new(cfg.clone(), 8);
+    let mut functional = Functional::new(cfg);
+    let mut eyeriss = Estimator::eyeriss();
+    let mut zascad = Estimator::zascad();
+    let mut carla = Estimator::carla();
+
+    println!("cross-backend equivalence on {} (seed {seed}):\n", net.name);
+    let sim_outs = net.run_layers(&mut cycle, seed);
+    let fun_outs = net.run_layers(&mut functional, seed);
+    let others = [
+        (eyeriss.name(), net.run_layers(&mut eyeriss, seed)),
+        (zascad.name(), net.run_layers(&mut zascad, seed)),
+        (carla.name(), net.run_layers(&mut carla, seed)),
+    ];
+
+    println!(
+        "  {:<8} {:>12} {:>12}   estimator clocks ({} / {} / {})",
+        "layer", "sim clocks", "fun clocks", others[0].0, others[1].0, others[2].0
+    );
+    for (j, layer) in net.layers.iter().enumerate() {
+        assert_eq!(
+            sim_outs[j].y_acc, fun_outs[j].y_acc,
+            "{}: functional output mismatch",
+            layer.name
+        );
+        assert_eq!(
+            sim_outs[j].clocks, fun_outs[j].clocks,
+            "{}: functional clock mismatch",
+            layer.name
+        );
+        for (name, outs) in &others {
+            assert_eq!(
+                sim_outs[j].y_acc, outs[j].y_acc,
+                "{}: {name} output mismatch",
+                layer.name
+            );
+        }
+        println!(
+            "  {:<8} {:>12} {:>12}   {} / {} / {}",
+            layer.name,
+            sim_outs[j].clocks,
+            fun_outs[j].clocks,
+            others[0].1[j].clocks,
+            others[1].1[j].clocks,
+            others[2].1[j].clocks,
+        );
+    }
+    println!(
+        "\nall {} layers bit-exact across {} backends; Kraken clocks identical (eq. 17)",
+        net.layers.len(),
+        2 + others.len()
+    );
+}
+
+/// Serve N requests through the sharded engine pool.
+fn serve(n: usize, engines: usize) {
+    let server = InferenceServer::spawn_pool(engines, |_| {
+        tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8))
+    });
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n)
-        .map(|i| server.submit(Tensor4::random([1, 28, 28, 3], 7 + i as u64)))
-        .collect();
+    let rxs =
+        server.submit_batch((0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
     let mut device_ms = 0.0;
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv().expect("response");
         device_ms += resp.device_ms;
         println!(
-            "req {i}: argmax={} device={:.3} ms queue={:.0} µs clocks={}",
+            "req {i}: argmax={} device={:.3} ms queue={:.0} µs clocks={} worker={}",
             resp.logits
                 .iter()
                 .enumerate()
@@ -214,15 +282,20 @@ fn serve(n: usize) {
                 .unwrap_or(0),
             resp.device_ms,
             resp.queue_us,
-            resp.clocks
+            resp.clocks,
+            resp.worker
         );
     }
     let stats = server.shutdown();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests: modeled device throughput {:.0} fps, sim wall {:.2} s",
+        "served {} requests on {} engine(s), {} stolen: modeled device throughput \
+         {:.0} fps/engine, sim wall {:.2} s ({:.1} req/s)",
         stats.completed,
+        stats.workers,
+        stats.stolen,
         stats.completed as f64 / (device_ms / 1e3),
-        wall
+        wall,
+        stats.completed as f64 / wall
     );
 }

@@ -4,7 +4,10 @@
 //! requantization, §II-C).
 
 
+use crate::backend::{Accelerator, LayerData, LayerOutput};
 use crate::layers::{Layer, LayerKind};
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
 
 /// An ordered set of accelerated layers plus metadata.
 #[derive(Debug, Clone)]
@@ -86,5 +89,45 @@ impl Network {
             }
         }
         self
+    }
+
+    /// Seeded random `(x, k)` tensors for one layer — the shape and
+    /// seed convention shared by the cross-backend equivalence suite
+    /// and the `kraken backends` CLI (`x` from `seed`, `k` from
+    /// `seed + 1`).
+    pub fn seeded_layer_tensors(layer: &Layer, seed: u64) -> (Tensor4<i8>, Tensor4<i8>) {
+        let (x_shape, k_shape) = if layer.is_dense() {
+            ([1, layer.h, 1, layer.ci], [1, 1, layer.ci, layer.co])
+        } else {
+            (
+                [layer.n, layer.h, layer.w, layer.ci * layer.groups],
+                [layer.kh, layer.kw, layer.ci, layer.co],
+            )
+        };
+        (Tensor4::random(x_shape, seed), Tensor4::random(k_shape, seed + 1))
+    }
+
+    /// Run every layer *independently* through `backend` with seeded
+    /// random inputs and weights, returning the per-layer outputs —
+    /// the uniform execution entry point every [`Accelerator`] shares.
+    /// (Layer `j` uses seeds `seed + 2j` / `seed + 2j + 1`.)
+    pub fn run_layers<B: Accelerator + ?Sized>(
+        &self,
+        backend: &mut B,
+        seed: u64,
+    ) -> Vec<LayerOutput> {
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(j, layer)| {
+                let (x, k) = Self::seeded_layer_tensors(layer, seed + 2 * j as u64);
+                backend.run_layer(&LayerData {
+                    layer,
+                    x: &x,
+                    k: &k,
+                    qparams: QParams::identity(),
+                })
+            })
+            .collect()
     }
 }

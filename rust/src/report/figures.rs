@@ -2,7 +2,7 @@
 //! comparisons, rendered as ASCII series + CSV blocks (the CSV is what a
 //! plotting script would consume).
 
-use crate::baselines::{Accelerator, Carla, Eyeriss, Zascad};
+use crate::baselines::{BaselineModel, Carla, Eyeriss, Zascad};
 use crate::networks::{paper_networks, Network};
 use crate::perf::PerfModel;
 

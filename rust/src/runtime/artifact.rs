@@ -3,9 +3,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
 use super::json::Json;
+use super::{Result, RuntimeError};
 
 /// What kind of computation an artifact contains.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,28 +49,40 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
-        let r = j.get("r").and_then(Json::as_usize).context("manifest: r")?;
-        let c = j.get("c").and_then(Json::as_usize).context("manifest: c")?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            RuntimeError::new(format!("reading {path:?} — run `make artifacts` first: {e}"))
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| RuntimeError::new(format!("manifest parse error: {e}")))?;
+        let top = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| RuntimeError::new(format!("manifest: {key}")))
+        };
+        let r = top("r")?;
+        let c = top("c")?;
         let mut artifacts = Vec::new();
         for a in j
             .get("artifacts")
             .and_then(Json::as_arr)
-            .context("manifest: artifacts")?
+            .ok_or_else(|| RuntimeError::new("manifest: artifacts"))?
         {
             let name = a
                 .get("name")
                 .and_then(Json::as_str)
-                .context("artifact: name")?
+                .ok_or_else(|| RuntimeError::new("artifact: name"))?
                 .to_string();
-            let file = a.get("file").and_then(Json::as_str).context("artifact: file")?;
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::new("artifact: file"))?;
             let kind = match a.get("kind").and_then(Json::as_str) {
                 Some("conv") => ArtifactKind::Conv,
                 Some("matmul") => ArtifactKind::MatMul,
                 Some("tiny_cnn") => ArtifactKind::TinyCnn,
-                other => return Err(anyhow!("unknown artifact kind {other:?}")),
+                other => {
+                    return Err(RuntimeError::new(format!("unknown artifact kind {other:?}")))
+                }
             };
             let usizes = |key: &str| -> Vec<usize> {
                 a.get(key).and_then(Json::as_usize_vec).unwrap_or_default()

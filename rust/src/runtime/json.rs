@@ -8,8 +8,7 @@
 //! manifest schema.
 
 use std::collections::BTreeMap;
-
-use thiserror::Error;
+use std::fmt;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,17 +21,30 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, Error, PartialEq)]
+/// Parse failure (hand-impl'd `Display`: `thiserror` is not vendored in
+/// the offline build).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("unexpected end of input at byte {0}")]
     Eof(usize),
-    #[error("unexpected character {0:?} at byte {1}")]
     Unexpected(char, usize),
-    #[error("invalid number at byte {0}")]
     BadNumber(usize),
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Eof(p) => write!(f, "unexpected end of input at byte {p}"),
+            JsonError::Unexpected(c, p) => {
+                write!(f, "unexpected character {c:?} at byte {p}")
+            }
+            JsonError::BadNumber(p) => write!(f, "invalid number at byte {p}"),
+            JsonError::Trailing(p) => write!(f, "trailing garbage at byte {p}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {

@@ -9,10 +9,40 @@
 //!   `HloModuleProto::from_text_file` → compile → execute, plus the
 //!   golden-model harness used to verify the simulator three ways
 //!   (sim ≡ loopnest ≡ rust reference ≡ JAX/Pallas artifact).
+//!
+//! The `xla` crate is not vendored in the offline build, so by default
+//! [`pjrt`] compiles a stub whose `load` explains how to enable the
+//! real bridge: vendor `xla` and build with
+//! `RUSTFLAGS="--cfg pjrt_native"`. Everything else in this module
+//! (manifest parsing, error type) is dependency-free.
 
 pub mod artifact;
 pub mod json;
 pub mod pjrt;
 
+use std::fmt;
+
+/// Error type for the artifact runtime (kept dependency-free so the
+/// offline build needs no `anyhow`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeError(pub String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime-module result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
 pub use artifact::{ArtifactKind, ArtifactSpec, Manifest};
-pub use pjrt::{GoldenRunner, Runtime};
+pub use pjrt::{GoldenCase, GoldenRunner, Runtime};

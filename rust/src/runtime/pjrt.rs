@@ -5,169 +5,282 @@
 //! `client.compile` → `execute`. HLO **text** is the interchange format
 //! (xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized
 //! protos; the text parser reassigns ids).
+//!
+//! The `xla` crate is not vendored in the offline build. The real
+//! bridge compiles only under `--cfg pjrt_native`; otherwise a stub
+//! with the same API is compiled whose `load` returns an error
+//! explaining how to opt in. Either way the rest of the crate
+//! type-checks identically against [`Runtime`] / [`GoldenRunner`].
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(pjrt_native)]
+mod native {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+    use crate::runtime::{Manifest, Result, RuntimeError};
+    use crate::tensor::Tensor4;
 
-use crate::tensor::Tensor4;
+    use super::super::artifact::{ArtifactKind, ArtifactSpec};
 
-use super::artifact::{ArtifactKind, ArtifactSpec, Manifest};
-
-/// A compiled-executable cache over the artifact set.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl Runtime {
-    /// Load the manifest and AOT-compile every artifact once (the
-    /// "compile" here is PJRT's HLO→machine-code step; the JAX lowering
-    /// already happened at `make artifacts` time).
-    pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut executables = HashMap::new();
-        for spec in &manifest.artifacts {
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.path.to_str().context("artifact path utf-8")?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", spec.path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
-            executables.insert(spec.name.clone(), exe);
-        }
-        Ok(Self { client, manifest, executables })
+    /// A compiled-executable cache over the artifact set.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Execute artifact `name` with int8 input buffers (shape-checked
-    /// against the manifest), returning the int32 output buffer.
-    pub fn execute_i8(&self, name: &str, inputs: &[(&[i8], &[usize])]) -> Result<Vec<i32>> {
-        let exe = self
-            .executables
-            .get(name)
-            .with_context(|| format!("unknown artifact {name}"))?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, shape)| {
-                // i8 has no NativeType impl in xla 0.1.6; build the S8
-                // literal from raw bytes instead.
-                let bytes: &[u8] =
-                    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
-                let lit = xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S8,
-                    shape,
-                    bytes,
-                )
-                .map_err(|e| anyhow!("S8 literal {shape:?}: {e:?}"))?;
-                Ok(lit)
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
-        // Lowered with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<i32>().map_err(|e| anyhow!("to_vec<i32>: {e:?}"))
-    }
-
-    /// PJRT platform string (telemetry).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-}
-
-/// Golden-model harness: regenerates each artifact's inputs from its
-/// manifest seeds (the same xorshift as `python/compile/testdata.py`)
-/// and returns both inputs and golden outputs for comparison against
-/// the simulator.
-pub struct GoldenRunner {
-    pub runtime: Runtime,
-}
-
-/// One golden case ready for cross-checking.
-pub struct GoldenCase {
-    pub spec: ArtifactSpec,
-    pub x: Tensor4<i8>,
-    pub k: Tensor4<i8>,
-    /// Golden output from the JAX/Pallas executable.
-    pub y: Vec<i32>,
-}
-
-impl GoldenRunner {
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        Ok(Self { runtime: Runtime::load(artifacts_dir)? })
-    }
-
-    /// Run one conv/matmul golden end to end.
-    pub fn run(&self, name: &str) -> Result<GoldenCase> {
-        let spec = self
-            .runtime
-            .manifest
-            .get(name)
-            .with_context(|| format!("no artifact {name}"))?
-            .clone();
-        match spec.kind {
-            ArtifactKind::Conv => {
-                let xs: [usize; 4] = spec.x_shape.clone().try_into().unwrap();
-                let ks: [usize; 4] = spec.k_shape.clone().try_into().unwrap();
-                // Grouped artifacts carry groups·Ci input channels.
-                let x_full = [xs[0], xs[1], xs[2], xs[3]];
-                let x = Tensor4::random(x_full, spec.x_seed);
-                let k = Tensor4::random(ks, spec.k_seed);
-                let y = self.runtime.execute_i8(
-                    name,
-                    &[(&x.data, &spec.x_shape), (&k.data, &spec.k_shape)],
-                )?;
-                Ok(GoldenCase { spec, x, k, y })
+    impl Runtime {
+        /// Load the manifest and AOT-compile every artifact once (the
+        /// "compile" here is PJRT's HLO→machine-code step; the JAX
+        /// lowering already happened at `make artifacts` time).
+        pub fn load(artifacts_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::new(format!("PJRT cpu client: {e:?}")))?;
+            let mut executables = HashMap::new();
+            for spec in &manifest.artifacts {
+                let path = spec
+                    .path
+                    .to_str()
+                    .ok_or_else(|| RuntimeError::new("artifact path utf-8"))?;
+                let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                    RuntimeError::new(format!("parsing {}: {e:?}", spec.path.display()))
+                })?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| RuntimeError::new(format!("compiling {}: {e:?}", spec.name)))?;
+                executables.insert(spec.name.clone(), exe);
             }
-            ArtifactKind::MatMul => {
-                let m1 = Tensor4::random([1, spec.x_shape[0], 1, spec.x_shape[1]], spec.x_seed);
-                let m2 = Tensor4::random([1, 1, spec.k_shape[0], spec.k_shape[1]], spec.k_seed);
-                let y = self.runtime.execute_i8(
-                    name,
-                    &[(&m1.data, &spec.x_shape), (&m2.data, &spec.k_shape)],
-                )?;
-                Ok(GoldenCase { spec, x: m1, k: m2, y })
-            }
-            ArtifactKind::TinyCnn => Err(anyhow!("use run_tiny_cnn for the e2e artifact")),
+            Ok(Self { client, manifest, executables })
+        }
+
+        /// Execute artifact `name` with int8 input buffers (shape-checked
+        /// against the manifest), returning the int32 output buffer.
+        pub fn execute_i8(&self, name: &str, inputs: &[(&[i8], &[usize])]) -> Result<Vec<i32>> {
+            let exe = self
+                .executables
+                .get(name)
+                .ok_or_else(|| RuntimeError::new(format!("unknown artifact {name}")))?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, shape)| {
+                    // i8 has no NativeType impl in xla 0.1.6; build the S8
+                    // literal from raw bytes instead.
+                    let bytes: &[u8] = unsafe {
+                        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len())
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::S8,
+                        shape,
+                        bytes,
+                    )
+                    .map_err(|e| RuntimeError::new(format!("S8 literal {shape:?}: {e:?}")))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| RuntimeError::new(format!("executing {name}: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| RuntimeError::new(format!("fetching result of {name}: {e:?}")))?;
+            // Lowered with return_tuple=True → 1-tuple.
+            let out = result
+                .to_tuple1()
+                .map_err(|e| RuntimeError::new(format!("untuple: {e:?}")))?;
+            out.to_vec::<i32>()
+                .map_err(|e| RuntimeError::new(format!("to_vec<i32>: {e:?}")))
+        }
+
+        /// PJRT platform string (telemetry).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
     }
 
-    /// Run the TinyCNN e2e artifact: returns `(x, weights, logits)`.
-    pub fn run_tiny_cnn(&self) -> Result<(Tensor4<i8>, Vec<Vec<i8>>, Vec<i32>)> {
-        let spec = self
-            .runtime
-            .manifest
-            .get("tiny_cnn")
-            .context("no tiny_cnn artifact")?
-            .clone();
-        let xs: [usize; 4] = spec.x_shape.clone().try_into().unwrap();
-        let x = Tensor4::random(xs, spec.x_seed);
-        let weights: Vec<Vec<i8>> = spec
-            .w_shapes
-            .iter()
-            .enumerate()
-            .map(|(j, s)| {
-                let len: usize = s.iter().product();
-                let mut padded = [1usize; 4];
-                padded[4 - s.len()..].copy_from_slice(s);
-                let t = Tensor4::random(padded, spec.k_seed + 10 * j as u64);
-                debug_assert_eq!(t.data.len(), len);
-                t.data
-            })
-            .collect();
-        let mut inputs: Vec<(&[i8], &[usize])> = vec![(&x.data, &spec.x_shape)];
-        for (j, w) in weights.iter().enumerate() {
-            inputs.push((w, &spec.w_shapes[j]));
+    /// Golden-model harness: regenerates each artifact's inputs from its
+    /// manifest seeds (the same xorshift as `python/compile/testdata.py`)
+    /// and returns both inputs and golden outputs for comparison against
+    /// the simulator.
+    pub struct GoldenRunner {
+        pub runtime: Runtime,
+    }
+
+    /// One golden case ready for cross-checking.
+    pub struct GoldenCase {
+        pub spec: ArtifactSpec,
+        pub x: Tensor4<i8>,
+        pub k: Tensor4<i8>,
+        /// Golden output from the JAX/Pallas executable.
+        pub y: Vec<i32>,
+    }
+
+    impl GoldenRunner {
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            Ok(Self { runtime: Runtime::load(artifacts_dir)? })
         }
-        let logits = self.runtime.execute_i8("tiny_cnn", &inputs)?;
-        Ok((x, weights, logits))
+
+        /// Run one conv/matmul golden end to end.
+        pub fn run(&self, name: &str) -> Result<GoldenCase> {
+            let spec = self
+                .runtime
+                .manifest
+                .get(name)
+                .ok_or_else(|| RuntimeError::new(format!("no artifact {name}")))?
+                .clone();
+            match spec.kind {
+                ArtifactKind::Conv => {
+                    let xs: [usize; 4] = spec
+                        .x_shape
+                        .clone()
+                        .try_into()
+                        .map_err(|_| RuntimeError::new("conv x_shape rank"))?;
+                    let ks: [usize; 4] = spec
+                        .k_shape
+                        .clone()
+                        .try_into()
+                        .map_err(|_| RuntimeError::new("conv k_shape rank"))?;
+                    // Grouped artifacts carry groups·Ci input channels.
+                    let x = Tensor4::random(xs, spec.x_seed);
+                    let k = Tensor4::random(ks, spec.k_seed);
+                    let y = self.runtime.execute_i8(
+                        name,
+                        &[(&x.data, &spec.x_shape), (&k.data, &spec.k_shape)],
+                    )?;
+                    Ok(GoldenCase { spec, x, k, y })
+                }
+                ArtifactKind::MatMul => {
+                    let m1 =
+                        Tensor4::random([1, spec.x_shape[0], 1, spec.x_shape[1]], spec.x_seed);
+                    let m2 =
+                        Tensor4::random([1, 1, spec.k_shape[0], spec.k_shape[1]], spec.k_seed);
+                    let y = self.runtime.execute_i8(
+                        name,
+                        &[(&m1.data, &spec.x_shape), (&m2.data, &spec.k_shape)],
+                    )?;
+                    Ok(GoldenCase { spec, x: m1, k: m2, y })
+                }
+                ArtifactKind::TinyCnn => {
+                    Err(RuntimeError::new("use run_tiny_cnn for the e2e artifact"))
+                }
+            }
+        }
+
+        /// Run the TinyCNN e2e artifact: returns `(x, weights, logits)`.
+        pub fn run_tiny_cnn(&self) -> Result<(Tensor4<i8>, Vec<Vec<i8>>, Vec<i32>)> {
+            let spec = self
+                .runtime
+                .manifest
+                .get("tiny_cnn")
+                .ok_or_else(|| RuntimeError::new("no tiny_cnn artifact"))?
+                .clone();
+            let xs: [usize; 4] = spec
+                .x_shape
+                .clone()
+                .try_into()
+                .map_err(|_| RuntimeError::new("tiny_cnn x_shape rank"))?;
+            let x = Tensor4::random(xs, spec.x_seed);
+            let weights: Vec<Vec<i8>> = spec
+                .w_shapes
+                .iter()
+                .enumerate()
+                .map(|(j, s)| {
+                    let len: usize = s.iter().product();
+                    let mut padded = [1usize; 4];
+                    padded[4 - s.len()..].copy_from_slice(s);
+                    let t = Tensor4::random(padded, spec.k_seed + 10 * j as u64);
+                    debug_assert_eq!(t.data.len(), len);
+                    t.data
+                })
+                .collect();
+            let mut inputs: Vec<(&[i8], &[usize])> = vec![(&x.data, &spec.x_shape)];
+            for (j, w) in weights.iter().enumerate() {
+                inputs.push((w, &spec.w_shapes[j]));
+            }
+            let logits = self.runtime.execute_i8("tiny_cnn", &inputs)?;
+            Ok((x, weights, logits))
+        }
+    }
+}
+
+#[cfg(pjrt_native)]
+pub use native::{GoldenCase, GoldenRunner, Runtime};
+
+#[cfg(not(pjrt_native))]
+mod stub {
+    use std::path::Path;
+
+    use crate::runtime::{ArtifactSpec, Manifest, Result, RuntimeError};
+    use crate::tensor::Tensor4;
+
+    const HOW_TO_ENABLE: &str = "PJRT runtime not compiled in — vendor the `xla` crate and \
+         rebuild with RUSTFLAGS=\"--cfg pjrt_native\" (see rust/README.md); \
+         the clock-accurate simulator and the functional backend verify \
+         each other without it";
+
+    /// Stub compiled when the vendored `xla` crate is absent: same API,
+    /// `load` always fails with instructions.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn load(_artifacts_dir: &Path) -> Result<Self> {
+            Err(RuntimeError::new(HOW_TO_ENABLE))
+        }
+
+        pub fn execute_i8(
+            &self,
+            _name: &str,
+            _inputs: &[(&[i8], &[usize])],
+        ) -> Result<Vec<i32>> {
+            Err(RuntimeError::new(HOW_TO_ENABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no PJRT)".to_string()
+        }
+    }
+
+    /// Stub golden-model harness (same API as the native one).
+    pub struct GoldenRunner {
+        pub runtime: Runtime,
+    }
+
+    /// One golden case ready for cross-checking.
+    pub struct GoldenCase {
+        pub spec: ArtifactSpec,
+        pub x: Tensor4<i8>,
+        pub k: Tensor4<i8>,
+        /// Golden output from the JAX/Pallas executable.
+        pub y: Vec<i32>,
+    }
+
+    impl GoldenRunner {
+        pub fn new(artifacts_dir: &Path) -> Result<Self> {
+            Ok(Self { runtime: Runtime::load(artifacts_dir)? })
+        }
+
+        pub fn run(&self, _name: &str) -> Result<GoldenCase> {
+            Err(RuntimeError::new(HOW_TO_ENABLE))
+        }
+
+        pub fn run_tiny_cnn(&self) -> Result<(Tensor4<i8>, Vec<Vec<i8>>, Vec<i32>)> {
+            Err(RuntimeError::new(HOW_TO_ENABLE))
+        }
+    }
+}
+
+#[cfg(not(pjrt_native))]
+pub use stub::{GoldenCase, GoldenRunner, Runtime};
+
+#[cfg(all(test, not(pjrt_native)))]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn stub_fails_loudly_with_instructions() {
+        let err = GoldenRunner::new(Path::new("artifacts")).err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt_native"));
     }
 }

@@ -10,8 +10,9 @@
 //! iteration `t` entirely (§III-D).
 
 use crate::arch::{ConfigHeader, KrakenConfig};
+use crate::backend::{Accelerator, LayerData, LayerOutput};
 use crate::dataflow::{tile_input, tile_weights};
-use crate::layers::{same_padding, KrakenLayerParams, Layer};
+use crate::layers::{same_padding, KrakenLayerParams, Layer, LayerKind};
 use crate::metrics::Counters;
 use crate::quant::QParams;
 use crate::tensor::Tensor4;
@@ -20,30 +21,6 @@ use super::output_pipe::OutputPipe;
 use super::pe_array::PeArray;
 use super::pixel_shifter::PixelShifter;
 use super::weights_rotator::WeightsRotator;
-
-/// Input bundle for one layer.
-pub struct LayerData<'a> {
-    pub layer: &'a Layer,
-    /// `[N, H, W, groups·C_i]` activations (dense: `[1, H, 1, C_i]`).
-    pub x: &'a Tensor4<i8>,
-    /// `[K_H, K_W, C_i, C_o]` weights (dense: `[1, 1, C_i, C_o]`).
-    pub k: &'a Tensor4<i8>,
-    /// Requantization applied by the output pipe.
-    pub qparams: QParams,
-}
-
-/// Result of one layer pass.
-#[derive(Debug, Clone)]
-pub struct LayerOutput {
-    /// Raw int32 accumulator outputs `[N, OH, OW, C_o]`.
-    pub y_acc: Tensor4<i32>,
-    /// Requantized int8 outputs (the next layer's `X`).
-    pub y_q: Tensor4<i8>,
-    /// Clock cycles this layer took (must equal eq. (17)).
-    pub clocks: u64,
-    /// This layer's event deltas.
-    pub counters: Counters,
-}
 
 /// Per-core schedule slot for the current (t, w) column.
 #[derive(Debug, Clone, Copy, Default)]
@@ -65,6 +42,10 @@ pub struct Engine {
     pub counters: Counters,
     slots: Vec<Slot>,
     active: Vec<bool>,
+    /// Reusable release buffer (one `R`-word burst), hoisted out of the
+    /// innermost loop of [`Engine::run_group`] to avoid a heap
+    /// allocation per released output column.
+    release_buf: Vec<i64>,
 }
 
 impl Engine {
@@ -80,6 +61,7 @@ impl Engine {
             counters: Counters::default(),
             slots: vec![Slot::default(); cfg.c],
             active: vec![false; cfg.c],
+            release_buf: Vec::with_capacity(cfg.r),
             cfg,
         }
     }
@@ -134,6 +116,8 @@ impl Engine {
 
     /// Convenience wrapper for the dense path (§IV-D): `m1: [H, C_i]`,
     /// `m2: [C_i, C_o]`, returning `[H, C_o]` through the same engine.
+    /// The dense-to-`LayerData` mapping lives in the trait default, so
+    /// every backend shares one copy of the convention.
     pub fn run_dense(
         &mut self,
         layer: &Layer,
@@ -141,10 +125,7 @@ impl Engine {
         m2: &[i8],
         qparams: QParams,
     ) -> LayerOutput {
-        assert!(layer.is_dense());
-        let x = Tensor4::from_vec([1, layer.h, 1, layer.ci], m1.to_vec());
-        let k = Tensor4::from_vec([1, 1, layer.ci, layer.co], m2.to_vec());
-        self.run_layer(&LayerData { layer, x: &x, k: &k, qparams })
+        Accelerator::run_dense(self, layer, m1, m2, qparams)
     }
 
     fn run_group(
@@ -163,6 +144,11 @@ impl Engine {
         let co_g = layer.co_per_group();
         let sched = PixelShifter::shift_schedule(layer.kh, layer.sh, p.f);
         let sw = layer.sw;
+
+        // Take the reusable release buffer out of `self` so filling it
+        // from the accumulators doesn't conflict with the other field
+        // borrows below.
+        let mut release_buf = std::mem::take(&mut self.release_buf);
 
         // Initial fill of the W-SRAM happens during the *previous*
         // layer's tail (low-priority AXI-4 prefetch): DRAM words are
@@ -216,14 +202,14 @@ impl Engine {
                                 pipe.capture_slack(p.r, &mut self.counters);
                                 continue;
                             }
-                            let vals: Vec<i64> =
-                                (0..p.r).map(|r| self.array.acc(r, core)).collect();
+                            release_buf.clear();
+                            release_buf.extend((0..p.r).map(|r| self.array.acc(r, core)));
                             pipe.capture(
                                 n,
                                 l * p.r,
                                 slot.o_col as usize,
                                 co_base + slot.co as usize,
-                                &vals,
+                                &release_buf,
                                 &mut self.counters,
                             );
                             if p.q_s == 0 {
@@ -240,6 +226,7 @@ impl Engine {
                 }
             }
         }
+        self.release_buf = release_buf;
     }
 
     /// Compute the per-core schedule for input column `w` of iteration
@@ -286,6 +273,26 @@ impl Engine {
                 self.active[core] = co_ok;
             }
         }
+    }
+}
+
+/// The clock-accurate engine is the reference [`Accelerator`] backend:
+/// outputs *and* clocks are produced by stepping the microarchitecture.
+impl Accelerator for Engine {
+    fn name(&self) -> String {
+        format!("cycle-accurate {}x{}", self.cfg.r, self.cfg.c)
+    }
+
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        Engine::run_layer(self, data)
+    }
+
+    fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    fn freq_hz(&self, kind: LayerKind) -> f64 {
+        crate::backend::config_freq_hz(&self.cfg, kind)
     }
 }
 

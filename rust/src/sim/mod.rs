@@ -35,8 +35,9 @@ pub mod perfsim;
 pub mod pixel_shifter;
 pub mod weights_rotator;
 
+pub use crate::backend::{LayerData, LayerOutput};
 pub use dram::{DramModel, StallReport};
-pub use engine::{Engine, LayerData, LayerOutput};
+pub use engine::Engine;
 pub use pe::ProcessingElement;
 pub use pe_array::PeArray;
 pub use perfsim::{LayerPerf, PerfSim};

@@ -1,0 +1,161 @@
+//! Cross-backend equivalence: the paper's "one uniform dataflow" as an
+//! executable contract.
+//!
+//! Every [`Accelerator`] implementation — the clock-accurate engine,
+//! the fast functional backend, and the three baseline estimators —
+//! must produce **identical `y_acc`/`y_q` tensors** on the same layer,
+//! all agreeing with the direct-form reference of eq. (1)/(2); and the
+//! two Kraken backends must agree with eq. (17) **clock-exactly** and
+//! with eq. (20) DRAM-word-exactly. Verified on every layer of
+//! `networks::tiny_cnn` (all of Table I's shape classes at toy scale)
+//! and on a full-size AlexNet layer.
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Estimator, Functional};
+use kraken::layers::{KrakenLayerParams, Layer};
+use kraken::networks::{tiny_cnn, tiny_mlp, Network};
+use kraken::quant::QParams;
+use kraken::sim::{Engine, LayerData};
+use kraken::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, matmul_i8, Tensor4};
+
+const SEED: u64 = 9000;
+
+/// Direct-form golden accumulators for one seeded layer.
+fn reference_acc(layer: &Layer, x: &Tensor4<i8>, k: &Tensor4<i8>) -> Vec<i32> {
+    if layer.is_dense() {
+        matmul_i8(&x.data, &k.data, layer.h, layer.ci, layer.co)
+    } else if layer.groups == 1 {
+        conv2d_same_i8(x, k, layer.sh, layer.sw).data
+    } else {
+        conv2d_same_grouped_i8(x, k, layer.sh, layer.sw, layer.groups).data
+    }
+}
+
+#[test]
+fn tiny_cnn_layers_agree_across_all_backends() {
+    let cfg = KrakenConfig::paper();
+    let net = tiny_cnn();
+
+    let mut cycle = Engine::new(cfg.clone(), 8);
+    let mut functional = Functional::new(cfg.clone());
+    let mut eyeriss = Estimator::eyeriss();
+    let mut zascad = Estimator::zascad();
+    let mut carla = Estimator::carla();
+
+    let sim_outs = net.run_layers(&mut cycle, SEED);
+    let fun_outs = net.run_layers(&mut functional, SEED);
+    let estimator_outs = [
+        ("eyeriss", net.run_layers(&mut eyeriss, SEED)),
+        ("zascad", net.run_layers(&mut zascad, SEED)),
+        ("carla", net.run_layers(&mut carla, SEED)),
+    ];
+
+    for (j, layer) in net.layers.iter().enumerate() {
+        let (x, k) = Network::seeded_layer_tensors(layer, SEED + 2 * j as u64);
+        let want = reference_acc(layer, &x, &k);
+
+        // Engine ≡ reference (anchor), every other backend ≡ engine.
+        assert_eq!(sim_outs[j].y_acc.data, want, "{}: engine vs reference", layer.name);
+        assert_eq!(fun_outs[j].y_acc.data, want, "{}: functional y_acc", layer.name);
+        assert_eq!(fun_outs[j].y_q, sim_outs[j].y_q, "{}: functional y_q", layer.name);
+        for (name, outs) in &estimator_outs {
+            assert_eq!(outs[j].y_acc.data, want, "{}: {name} y_acc", layer.name);
+            assert_eq!(outs[j].y_q, sim_outs[j].y_q, "{}: {name} y_q", layer.name);
+        }
+
+        // eq. (17) clock-exactness for both Kraken backends.
+        let p = KrakenLayerParams::derive(&cfg, layer);
+        assert_eq!(sim_outs[j].clocks, p.q, "{}: engine clocks vs eq. (17)", layer.name);
+        assert_eq!(fun_outs[j].clocks, p.q, "{}: functional clocks vs eq. (17)", layer.name);
+
+        // eq. (20) DRAM words: functional ≡ engine, word for word.
+        let (s, f) = (&sim_outs[j].counters, &fun_outs[j].counters);
+        assert_eq!(f.dram_x_reads, s.dram_x_reads, "{}: X̂ words", layer.name);
+        assert_eq!(f.dram_k_reads, s.dram_k_reads, "{}: K̂ words", layer.name);
+        assert_eq!(f.dram_y_writes, s.dram_y_writes, "{}: Ŷ words", layer.name);
+    }
+}
+
+#[test]
+fn tiny_mlp_dense_path_agrees() {
+    // The degenerate §IV-D mapping (pure FC) through both Kraken
+    // backends, exercising `run_dense` from the trait side.
+    let cfg = KrakenConfig::paper();
+    let net = tiny_mlp();
+    let mut cycle = Engine::new(cfg.clone(), 8);
+    let mut functional = Functional::new(cfg);
+    let sim_outs = net.run_layers(&mut cycle, SEED + 50);
+    let fun_outs = net.run_layers(&mut functional, SEED + 50);
+    for (j, layer) in net.layers.iter().enumerate() {
+        assert_eq!(sim_outs[j].y_acc, fun_outs[j].y_acc, "{}", layer.name);
+        assert_eq!(sim_outs[j].clocks, fun_outs[j].clocks, "{}", layer.name);
+        assert_eq!(
+            sim_outs[j].counters.dram_total(),
+            fun_outs[j].counters.dram_total(),
+            "{}",
+            layer.name
+        );
+    }
+}
+
+#[test]
+fn alexnet_conv1_agrees_bit_and_clock_exactly() {
+    // One full-size AlexNet layer: conv1 (11×11, stride 4 — the
+    // large-kernel strided class, G = 14 elastic grouping on 7×96).
+    let cfg = KrakenConfig::paper();
+    let layer = Layer::conv("alex_conv1", 1, 227, 227, 11, 11, 4, 4, 3, 96);
+    let x = Tensor4::random([1, 227, 227, 3], SEED + 100);
+    let k = Tensor4::random([11, 11, 3, 96], SEED + 101);
+    let p = KrakenLayerParams::derive(&cfg, &layer);
+    let data = LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() };
+
+    let mut cycle = Engine::new(cfg.clone(), 8);
+    let sim = cycle.run_layer(&data);
+    let mut functional = Functional::new(cfg);
+    let fun = functional.run_layer(&data);
+
+    let want = conv2d_same_i8(&x, &k, 4, 4);
+    assert_eq!(sim.y_acc, want, "engine vs reference");
+    assert_eq!(fun.y_acc, want, "functional vs reference");
+    assert_eq!(fun.y_q, sim.y_q, "requantized outputs");
+    assert_eq!(sim.clocks, p.q, "engine clocks vs eq. (17)");
+    assert_eq!(fun.clocks, p.q, "functional clocks vs eq. (17)");
+    assert_eq!(fun.counters.dram_x_reads, sim.counters.dram_x_reads, "X̂ words");
+    assert_eq!(fun.counters.dram_k_reads, sim.counters.dram_k_reads, "K̂ words");
+    assert_eq!(fun.counters.dram_y_writes, sim.counters.dram_y_writes, "Ŷ words");
+}
+
+#[test]
+fn trait_objects_work_uniformly() {
+    // The seam must be usable as `&mut dyn Accelerator` (the pool and
+    // future multi-chip schedulers dispatch dynamically).
+    let cfg = KrakenConfig::paper();
+    let layer = Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 8, 16);
+    let x = Tensor4::random([1, 14, 14, 8], SEED + 200);
+    let k = Tensor4::random([3, 3, 8, 16], SEED + 201);
+    let mut backends: Vec<Box<dyn Accelerator>> = vec![
+        Box::new(Engine::new(cfg.clone(), 8)),
+        Box::new(Functional::new(cfg)),
+        Box::new(Estimator::eyeriss()),
+    ];
+    let outs: Vec<_> = backends
+        .iter_mut()
+        .map(|b| {
+            b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() })
+        })
+        .collect();
+    assert_eq!(outs[0].y_acc, outs[1].y_acc);
+    assert_eq!(outs[0].y_acc, outs[2].y_acc);
+    assert_eq!(outs[0].y_acc, conv2d_same_i8(&x, &k, 1, 1));
+}
+
+#[test]
+fn xorshift_cross_language() {
+    // Pinned against python/tests/test_model.py::test_xorshift_reference_values
+    // (previously lived in e2e_runtime.rs, which is now gated on the
+    // native PJRT build).
+    let t = Tensor4::random([1, 1, 1, 10], 7);
+    assert_eq!(t.data, vec![122, 2, -64, -100, -80, 40, -45, 126, 112, 70]);
+    let t = Tensor4::random([1, 1, 1, 10], 42);
+    assert_eq!(t.data, vec![-43, 106, 90, -97, 110, 39, 68, -91, 56, -109]);
+}

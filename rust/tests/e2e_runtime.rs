@@ -4,7 +4,12 @@
 //! reference, on every (K, S) shape class of Table I and on the full
 //! TinyCNN forward.
 //!
-//! Requires `make artifacts` (the Makefile runs it before tests).
+//! Requires `make artifacts` (the Makefile runs it before tests) and a
+//! build with the native PJRT bridge (`RUSTFLAGS="--cfg pjrt_native"`
+//! with the `xla` crate vendored) — without it the whole file compiles
+//! to nothing, and `backend_equivalence.rs` carries the offline
+//! cross-backend verification instead.
+#![cfg(pjrt_native)]
 
 use std::path::Path;
 

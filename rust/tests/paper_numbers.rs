@@ -4,7 +4,7 @@
 //! documented in DESIGN.md (AlexNet ~1%, everything else ≲0.5%).
 
 use kraken::arch::KrakenConfig;
-use kraken::baselines::{table5_reported, Accelerator, Carla, Eyeriss, Zascad};
+use kraken::baselines::{table5_reported, BaselineModel, Carla, Eyeriss, Zascad};
 use kraken::networks::{alexnet, paper_networks, resnet50, vgg16};
 use kraken::perf::{layer_bandwidth, sweep_design_space, PerfModel};
 
