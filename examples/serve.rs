@@ -27,7 +27,7 @@ fn main() {
     let mut device_ms = Vec::new();
     let mut queue_us = Vec::new();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response channel").expect("request served");
         let argmax = resp
             .logits
             .iter()

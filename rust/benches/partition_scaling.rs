@@ -1,0 +1,79 @@
+//! Multi-chip partition scaling: AlexNet's conv layers through a
+//! [`PartitionedPool`] of 1 / 2 / 4 functional backends.
+//!
+//! The number that matters is the *measured makespan*: the merged
+//! per-layer clocks reported by the pool (max over shards, each shard
+//! clock-exact against eq. (17)). The acceptance bar is that at 4
+//! shards every AlexNet conv layer's measured clocks are ≤ 0.6× the
+//! 1-shard run. Host wall-clock is also reported (the functional
+//! backends really do run the shards concurrently).
+//!
+//! Emits `BENCH_partition_shards_<n>.json` records via the shared
+//! harness.
+//!
+//! Run: `cargo bench --bench partition_scaling`
+
+mod harness;
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Functional, LayerData};
+use kraken::networks::{alexnet, Network};
+use kraken::partition::{plan_layer, PartitionedPool};
+use kraken::quant::QParams;
+
+const SEED: u64 = 4242;
+
+fn main() {
+    println!("== multi-chip partitioning: AlexNet conv makespan vs shard count ==\n");
+    let cfg = KrakenConfig::paper();
+    let layers: Vec<_> = alexnet().conv_layers().cloned().collect();
+    let mut one_shard: Option<Vec<u64>> = None;
+    for shards in [1usize, 2, 4] {
+        let mut pool =
+            PartitionedPool::spawn(cfg.clone(), shards, |_| Functional::new(KrakenConfig::paper()));
+        let t0 = std::time::Instant::now();
+        let measured: Vec<u64> = layers
+            .iter()
+            .enumerate()
+            .map(|(j, layer)| {
+                let (x, k) = Network::seeded_layer_tensors(layer, SEED + 2 * j as u64);
+                pool.run_layer(&LayerData { layer, x: &x, k: &k, qparams: QParams::identity() })
+                    .clocks
+            })
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+
+        let total: u64 = measured.iter().sum();
+        let predicted: u64 =
+            layers.iter().map(|l| plan_layer(&cfg, l, shards).predicted_clocks).sum();
+        let base = one_shard.get_or_insert_with(|| measured.clone());
+        let speedup = base.iter().sum::<u64>() as f64 / total as f64;
+        // Worst per-layer ratio vs the 1-shard run — the acceptance bar
+        // (≤ 0.6 at 4 shards).
+        let max_layer_ratio = measured
+            .iter()
+            .zip(base.iter())
+            .map(|(m, b)| *m as f64 / *b as f64)
+            .fold(0.0f64, f64::max);
+
+        println!(
+            "shards {shards}: makespan {total} clocks ({speedup:.2}× vs 1 shard, worst \
+             layer ratio {max_layer_ratio:.3}), predicted {predicted}, wall {wall:.3} s"
+        );
+        for (layer, clocks) in layers.iter().zip(&measured) {
+            println!("  {:<8} {:>12} clocks", layer.name, clocks);
+        }
+        assert_eq!(total, predicted, "measured makespan must match the eq. (17) plan");
+        harness::emit_json(
+            &format!("partition_shards_{shards}"),
+            &[
+                ("shards", shards as f64),
+                ("total_clocks", total as f64),
+                ("predicted_clocks", predicted as f64),
+                ("speedup_vs_1", speedup),
+                ("max_layer_clock_ratio_vs_1", max_layer_ratio),
+                ("wall_s", wall),
+            ],
+        );
+    }
+}

@@ -31,7 +31,7 @@ fn main() {
         for rx in server
             .submit_batch((0..engines).map(|i| Tensor4::random([1, 28, 28, 3], 1 + i as u64)))
         {
-            rx.recv().expect("settle response");
+            rx.recv().expect("settle response").expect("settle request served");
         }
 
         let t0 = std::time::Instant::now();
@@ -39,7 +39,7 @@ fn main() {
             (0..requests).map(|i| Tensor4::random([1, 28, 28, 3], 100 + i as u64)),
         );
         for rx in rxs {
-            rx.recv().expect("response");
+            rx.recv().expect("response").expect("request served");
         }
         let wall = t0.elapsed().as_secs_f64();
         let stats = server.shutdown();

@@ -22,6 +22,19 @@ use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// Human-readable message out of a `catch_unwind` payload — shared by
+/// the serving layer and the partition executor, which both isolate
+/// worker panics instead of letting one job kill a worker thread.
+pub(crate) fn panic_reason(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".into()
+    }
+}
+
 /// Per-worker completion statistics, returned by [`ShardedPool::shutdown`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WorkerStats {

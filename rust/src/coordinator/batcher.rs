@@ -14,6 +14,7 @@ use crate::layers::Layer;
 use crate::quant::QParams;
 
 /// A dense (FC / matmul) workload bound to weights.
+#[derive(Clone)]
 pub struct DenseOp {
     pub name: String,
     pub ci: usize,

@@ -15,7 +15,12 @@
 //! * a threaded [`server::InferenceServer`] sharding requests across a
 //!   pool of N backend instances with work-stealing dispatch
 //!   ([`crate::backend::pool`]), with latency/throughput accounting at
-//!   the modeled 400/200 MHz operating points.
+//!   the modeled 400/200 MHz operating points. Worker panics are
+//!   isolated per request ([`server::RunError`]), and a configured
+//!   dense lane routes concurrent FC/matmul traffic through the
+//!   batcher so requests share `R`-row passes — composing with
+//!   [`crate::partition::PartitionedPool`] backends (batch first, then
+//!   split).
 
 pub mod batcher;
 pub mod scheduler;
@@ -23,4 +28,6 @@ pub mod server;
 
 pub use batcher::{BatchResult, DenseOp, FcBatcher};
 pub use scheduler::{tiny_cnn_pipeline, InferencePipeline, PipelineReport, Stage, StageOp};
-pub use server::{InferenceServer, Response, ServeStats};
+pub use server::{
+    DenseResponse, DenseResult, InferenceServer, Response, RunError, ServeResult, ServeStats,
+};

@@ -8,28 +8,77 @@
 //! pool size; the single-engine topology of the original coordinator is
 //! the `n = 1` special case ([`InferenceServer::spawn`]).
 //!
+//! Failures are isolated: a panic inside one request's pipeline run is
+//! caught on the worker, reported to that request's caller as a
+//! [`RunError`], and the worker keeps serving — one poisoned request
+//! cannot take down the server or strand its sibling requests.
+//!
+//! The server also batches dense traffic (§IV-D): configured with a
+//! [`DenseOp`], concurrent FC/matmul requests are collected into
+//! `R`-row batches and flushed through [`FcBatcher`] as **one** engine
+//! pass, sharing the weight fetch. Batching composes with multi-chip
+//! partitioning — the batch is formed first, then the (batched) layer
+//! is split by the backend when that backend is a
+//! [`crate::partition::PartitionedPool`].
+//!
 //! Latency is reported both as host wall-clock (simulation time) and as
 //! *modeled device time* at the 400/200 MHz operating points, which is
 //! the number comparable to Table V/VI.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::backend::pool::{ShardedPool, WorkerStats};
+use crate::backend::pool::{panic_reason, ShardedPool, WorkerStats};
 use crate::backend::Accelerator;
 use crate::tensor::Tensor4;
 
-use super::scheduler::{InferencePipeline, PipelineReport};
+use super::batcher::{DenseOp, FcBatcher};
+use super::scheduler::InferencePipeline;
 
-/// One queued request: input + response channel.
-struct Job {
-    input: Tensor4<i8>,
-    enqueued: Instant,
-    resp: mpsc::Sender<Response>,
+/// One queued request.
+enum Job {
+    /// Full-network inference: input + response channel.
+    Infer {
+        input: Tensor4<i8>,
+        enqueued: Instant,
+        resp: mpsc::Sender<ServeResult>,
+    },
+    /// One flushed dense batch: `N^f` feature rows sharing a single
+    /// `R`-row engine pass, one response channel per row.
+    Dense {
+        rows: Vec<Vec<i8>>,
+        enqueued: Instant,
+        resps: Vec<mpsc::Sender<DenseResult>>,
+    },
 }
 
-/// One request's outcome.
+/// A request that could not be served: the worker's pipeline panicked
+/// (or died) while processing it.
+#[derive(Debug, Clone)]
+pub struct RunError {
+    /// Worker (shard) the request failed on; `usize::MAX` when the
+    /// worker disconnected before attributing the failure.
+    pub worker: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request failed on worker {}: {}", self.worker, self.reason)
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// One inference request's outcome.
+pub type ServeResult = Result<Response, RunError>;
+
+/// One dense request's outcome.
+pub type DenseResult = Result<DenseResponse, RunError>;
+
+/// One request's result.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub logits: Vec<i32>,
@@ -43,22 +92,61 @@ pub struct Response {
     pub worker: usize,
 }
 
+/// One dense (FC/matmul) request's result.
+#[derive(Debug, Clone)]
+pub struct DenseResponse {
+    /// The request's `C_o` int32 outputs.
+    pub output: Vec<i32>,
+    /// Rows that shared this request's engine pass (`N^f ≤ R`).
+    pub rows_in_batch: usize,
+    /// Clocks of the shared pass (not per-row).
+    pub clocks: u64,
+    /// DRAM words of the shared pass (weights fetched once).
+    pub dram_words: u64,
+    /// Time spent queued before the batch was picked up.
+    pub queue_us: f64,
+    /// Worker (shard) that served the batch.
+    pub worker: usize,
+}
+
 /// Aggregate serving statistics.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
     pub completed: u64,
+    /// Requests that returned a [`RunError`].
+    pub failed: u64,
     pub total_device_ms: f64,
     pub total_clocks: u64,
     /// Workers (= backend instances) in the pool.
     pub workers: usize,
     /// Requests served off a stolen (non-home-shard) job.
     pub stolen: u64,
+    /// Dense batches flushed (each is one shared engine pass).
+    pub dense_flushes: u64,
+    /// Dense rows served across those flushes.
+    pub dense_rows: u64,
+}
+
+/// Per-worker state: the pipeline plus a lazily-built [`FcBatcher`]
+/// for the server's dense lane.
+struct Worker<B: Accelerator> {
+    pipeline: InferencePipeline<B>,
+    batcher: Option<FcBatcher>,
+}
+
+/// The server-side dense lane: pending rows accumulate here until a
+/// batch of `capacity` (= the array's `R`, §IV-D) is dispatched.
+struct DenseLane {
+    op: Arc<DenseOp>,
+    capacity: usize,
+    pending: Mutex<Vec<(Vec<i8>, mpsc::Sender<DenseResult>)>>,
 }
 
 /// Handle to the worker pool owning the backends.
 pub struct InferenceServer {
     pool: ShardedPool<Job>,
     stats: Arc<Mutex<ServeStats>>,
+    dense: Option<DenseLane>,
 }
 
 impl InferenceServer {
@@ -80,31 +168,135 @@ impl InferenceServer {
         B: Accelerator + 'static,
         F: Fn(usize) -> InferencePipeline<B> + Send + Sync + 'static,
     {
+        Self::spawn_pool_inner(n, make_pipeline, None)
+    }
+
+    /// A pool that additionally serves a dense (FC/matmul) op, batching
+    /// concurrent [`InferenceServer::submit_dense`] requests into
+    /// `capacity`-row passes through [`FcBatcher`] (§IV-D: pick
+    /// `capacity = R` to fill the PE rows and fetch weights once).
+    pub fn spawn_dense_pool<B, F>(
+        n: usize,
+        make_pipeline: F,
+        op: DenseOp,
+        capacity: usize,
+    ) -> Self
+    where
+        B: Accelerator + 'static,
+        F: Fn(usize) -> InferencePipeline<B> + Send + Sync + 'static,
+    {
+        assert!(capacity >= 1, "dense batch capacity must be at least 1");
+        Self::spawn_pool_inner(n, make_pipeline, Some((op, capacity)))
+    }
+
+    fn spawn_pool_inner<B, F>(
+        n: usize,
+        make_pipeline: F,
+        dense: Option<(DenseOp, usize)>,
+    ) -> Self
+    where
+        B: Accelerator + 'static,
+        F: Fn(usize) -> InferencePipeline<B> + Send + Sync + 'static,
+    {
         let stats = Arc::new(Mutex::new(ServeStats { workers: n, ..Default::default() }));
         let stats_in_pool = Arc::clone(&stats);
+        let dense =
+            dense.map(|(op, capacity)| DenseLane {
+                op: Arc::new(op),
+                capacity,
+                pending: Mutex::new(Vec::new()),
+            });
+        let dense_cfg = dense.as_ref().map(|lane| (Arc::clone(&lane.op), lane.capacity));
         let pool = ShardedPool::spawn(
             n,
-            make_pipeline,
-            move |worker, pipeline: &mut InferencePipeline<B>, job: Job| {
-                let Job { input, enqueued, resp } = job;
-                let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
-                let report: PipelineReport = pipeline.run(&input);
-                {
-                    let mut s = stats_in_pool.lock().expect("serve stats");
-                    s.completed += 1;
-                    s.total_device_ms += report.modeled_ms;
-                    s.total_clocks += report.total_clocks;
+            move |i| Worker { pipeline: make_pipeline(i), batcher: None },
+            move |worker_idx, worker: &mut Worker<B>, job: Job| match job {
+                Job::Infer { input, enqueued, resp } => {
+                    let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+                    // Isolate the request: a panicking pipeline reports a
+                    // RunError to this caller and the worker keeps serving.
+                    let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        worker.pipeline.run(&input)
+                    }));
+                    match run {
+                        Ok(report) => {
+                            {
+                                let mut s = stats_in_pool.lock().expect("serve stats");
+                                s.completed += 1;
+                                s.total_device_ms += report.modeled_ms;
+                                s.total_clocks += report.total_clocks;
+                            }
+                            let _ = resp.send(Ok(Response {
+                                logits: report.logits,
+                                queue_us,
+                                device_ms: report.modeled_ms,
+                                clocks: report.total_clocks,
+                                worker: worker_idx,
+                            }));
+                        }
+                        Err(payload) => {
+                            stats_in_pool.lock().expect("serve stats").failed += 1;
+                            let _ = resp.send(Err(RunError {
+                                worker: worker_idx,
+                                reason: panic_reason(payload),
+                            }));
+                        }
+                    }
                 }
-                let _ = resp.send(Response {
-                    logits: report.logits,
-                    queue_us,
-                    device_ms: report.modeled_ms,
-                    clocks: report.total_clocks,
-                    worker,
-                });
+                Job::Dense { rows, enqueued, resps } => {
+                    let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+                    let (op, capacity) = dense_cfg
+                        .as_ref()
+                        .expect("dense job on a server without a dense op");
+                    let nf = rows.len();
+                    let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        let batcher = worker.batcher.get_or_insert_with(|| {
+                            FcBatcher::new((**op).clone(), *capacity)
+                        });
+                        for row in rows {
+                            batcher.push(row);
+                        }
+                        // Batch first, then split: one [N^f, C_i]·[C_i, C_o]
+                        // pass; a PartitionedPool backend shards *that*.
+                        batcher.flush(&mut worker.pipeline.backend)
+                    }));
+                    match run {
+                        Ok(result) => {
+                            {
+                                let mut s = stats_in_pool.lock().expect("serve stats");
+                                s.dense_flushes += 1;
+                                s.dense_rows += nf as u64;
+                                s.total_clocks += result.clocks;
+                            }
+                            for (output, resp) in result.outputs.into_iter().zip(resps) {
+                                let _ = resp.send(Ok(DenseResponse {
+                                    output,
+                                    rows_in_batch: nf,
+                                    clocks: result.clocks,
+                                    dram_words: result.dram_words,
+                                    queue_us,
+                                    worker: worker_idx,
+                                }));
+                            }
+                        }
+                        Err(payload) => {
+                            // The batcher's pending state is unknown
+                            // after a panic — rebuild it next batch.
+                            worker.batcher = None;
+                            stats_in_pool.lock().expect("serve stats").failed += nf as u64;
+                            let reason = panic_reason(payload);
+                            for resp in resps {
+                                let _ = resp.send(Err(RunError {
+                                    worker: worker_idx,
+                                    reason: reason.clone(),
+                                }));
+                            }
+                        }
+                    }
+                }
             },
         );
-        Self { pool, stats }
+        Self { pool, stats, dense }
     }
 
     /// Workers (= backend instances) in the pool.
@@ -113,9 +305,9 @@ impl InferenceServer {
     }
 
     /// Submit a request; returns a receiver for the response.
-    pub fn submit(&self, input: Tensor4<i8>) -> mpsc::Receiver<Response> {
+    pub fn submit(&self, input: Tensor4<i8>) -> mpsc::Receiver<ServeResult> {
         let (resp_tx, resp_rx) = mpsc::channel();
-        self.pool.submit(Job { input, enqueued: Instant::now(), resp: resp_tx });
+        self.pool.submit(Job::Infer { input, enqueued: Instant::now(), resp: resp_tx });
         resp_rx
     }
 
@@ -124,27 +316,83 @@ impl InferenceServer {
     pub fn submit_batch(
         &self,
         inputs: impl IntoIterator<Item = Tensor4<i8>>,
-    ) -> Vec<mpsc::Receiver<Response>> {
+    ) -> Vec<mpsc::Receiver<ServeResult>> {
         let mut rxs = Vec::new();
         let jobs: Vec<Job> = inputs
             .into_iter()
             .map(|input| {
                 let (resp_tx, resp_rx) = mpsc::channel();
                 rxs.push(resp_rx);
-                Job { input, enqueued: Instant::now(), resp: resp_tx }
+                Job::Infer { input, enqueued: Instant::now(), resp: resp_tx }
             })
             .collect();
         self.pool.submit_batch(jobs);
         rxs
     }
 
-    /// Blocking convenience: submit and wait.
-    pub fn infer(&self, input: Tensor4<i8>) -> Response {
-        self.submit(input).recv().expect("response")
+    /// Queue one dense request (a `C_i`-wide feature row) on the
+    /// server's dense lane. When `capacity` rows are pending they are
+    /// dispatched as **one** shared `R`-row pass; otherwise the row
+    /// waits for siblings (or an explicit [`Self::flush_dense`]).
+    pub fn submit_dense(&self, features: Vec<i8>) -> mpsc::Receiver<DenseResult> {
+        let lane = self.dense.as_ref().expect("server has no dense op configured");
+        assert_eq!(features.len(), lane.op.ci, "feature width mismatch");
+        let (resp_tx, resp_rx) = mpsc::channel();
+        // Push and (maybe) take the full batch under ONE lock, so
+        // concurrent submitters can never assemble a batch larger than
+        // `capacity` (N^f ≤ R must hold for the shared pass).
+        let batch = {
+            let mut pending = lane.pending.lock().expect("dense lane");
+            pending.push((features, resp_tx));
+            if pending.len() >= lane.capacity {
+                Some(pending.drain(..lane.capacity).collect::<Vec<_>>())
+            } else {
+                None
+            }
+        };
+        if let Some(batch) = batch {
+            self.dispatch_dense(batch);
+        }
+        resp_rx
     }
 
-    /// Drain and stop, returning aggregate stats.
+    /// Dispatch whatever is pending on the dense lane (stragglers still
+    /// run, they just reuse weights less — §IV-D), in `capacity`-sized
+    /// batches.
+    pub fn flush_dense(&self) {
+        let Some(lane) = self.dense.as_ref() else { return };
+        loop {
+            let batch = {
+                let mut pending = lane.pending.lock().expect("dense lane");
+                if pending.is_empty() {
+                    return;
+                }
+                let take = pending.len().min(lane.capacity);
+                pending.drain(..take).collect::<Vec<_>>()
+            };
+            self.dispatch_dense(batch);
+        }
+    }
+
+    fn dispatch_dense(&self, batch: Vec<(Vec<i8>, mpsc::Sender<DenseResult>)>) {
+        let (rows, resps) = batch.into_iter().unzip();
+        self.pool.submit(Job::Dense { rows, enqueued: Instant::now(), resps });
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, input: Tensor4<i8>) -> ServeResult {
+        self.submit(input).recv().unwrap_or_else(|_| {
+            Err(RunError {
+                worker: usize::MAX,
+                reason: "worker disconnected before responding".into(),
+            })
+        })
+    }
+
+    /// Drain (including any straggling dense rows) and stop, returning
+    /// aggregate stats.
     pub fn shutdown(self) -> ServeStats {
+        self.flush_dense();
         let worker_stats: Vec<WorkerStats> = self.pool.shutdown();
         let mut stats = self.stats.lock().expect("serve stats").clone();
         stats.stolen = worker_stats.iter().map(|w| w.stolen).sum();
@@ -156,17 +404,21 @@ impl InferenceServer {
 mod tests {
     use super::*;
     use crate::arch::KrakenConfig;
-    use crate::backend::Functional;
+    use crate::backend::{Functional, LayerData, LayerOutput};
     use crate::coordinator::scheduler::{tiny_cnn_pipeline, X_SEED};
+    use crate::layers::LayerKind;
+    use crate::metrics::Counters;
+    use crate::quant::QParams;
     use crate::sim::Engine;
+    use crate::tensor::matmul_i8;
 
     #[test]
     fn serves_requests_in_order_and_deterministically() {
         let engine = Engine::new(KrakenConfig::new(7, 96), 8);
         let server = InferenceServer::spawn(tiny_cnn_pipeline(engine));
         let x = Tensor4::random([1, 28, 28, 3], X_SEED);
-        let a = server.infer(x.clone());
-        let b = server.infer(x);
+        let a = server.infer(x.clone()).expect("response");
+        let b = server.infer(x).expect("response");
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.clocks, b.clocks);
         let stats = server.shutdown();
@@ -182,7 +434,10 @@ mod tests {
         let rxs: Vec<_> = (0..4)
             .map(|i| server.submit(Tensor4::random([1, 28, 28, 3], 100 + i)))
             .collect();
-        let logits: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().logits).collect();
+        let logits: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("recv").expect("response").logits)
+            .collect();
         assert_eq!(logits.len(), 4);
         // Different inputs → (almost surely) different logits.
         assert_ne!(logits[0], logits[1]);
@@ -203,11 +458,15 @@ mod tests {
         });
         let inputs: Vec<Tensor4<i8>> =
             (0..4).map(|i| Tensor4::random([1, 28, 28, 3], 500 + i)).collect();
-        let want: Vec<Vec<i32>> =
-            inputs.iter().map(|x| single.infer(x.clone()).logits).collect();
+        let want: Vec<Vec<i32>> = inputs
+            .iter()
+            .map(|x| single.infer(x.clone()).expect("response").logits)
+            .collect();
         let rxs = pooled.submit_batch(inputs);
-        let got: Vec<Vec<i32>> =
-            rxs.into_iter().map(|rx| rx.recv().expect("response").logits).collect();
+        let got: Vec<Vec<i32>> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().expect("recv").expect("response").logits)
+            .collect();
         assert_eq!(got, want);
         let stats = pooled.shutdown();
         assert_eq!(stats.completed, 4);
@@ -227,11 +486,125 @@ mod tests {
             tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)))
         });
         let x = Tensor4::random([1, 28, 28, 3], X_SEED);
-        let a = sim.infer(x.clone());
-        let b = fun.infer(x);
+        let a = sim.infer(x.clone()).expect("response");
+        let b = fun.infer(x).expect("response");
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.clocks, b.clocks);
         sim.shutdown();
         fun.shutdown();
+    }
+
+    /// A backend that panics when the input's first byte is the
+    /// sentinel — a stand-in for a dying shard worker.
+    struct Panicky {
+        inner: Functional,
+    }
+
+    impl Accelerator for Panicky {
+        fn name(&self) -> String {
+            "panicky".into()
+        }
+        fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+            // Only the network input reaches conv1, so intermediate
+            // activations can't trip the sentinel by coincidence.
+            assert!(
+                data.layer.name != "conv1" || data.x.data[0] != 99,
+                "poisoned request"
+            );
+            self.inner.run_layer(data)
+        }
+        fn counters(&self) -> Counters {
+            self.inner.counters()
+        }
+        fn freq_hz(&self, kind: LayerKind) -> f64 {
+            self.inner.freq_hz(kind)
+        }
+    }
+
+    #[test]
+    fn worker_panic_returns_run_error_and_server_survives() {
+        // Regression: a panicking request used to kill the worker
+        // thread, so the caller's `rx.recv().unwrap()` — and with it
+        // the whole server — went down. Now the panic is caught, the
+        // caller gets a RunError, and the worker keeps serving.
+        let server = InferenceServer::spawn_pool(1, |_| {
+            tiny_cnn_pipeline(Panicky { inner: Functional::new(KrakenConfig::new(7, 96)) })
+        });
+        let good = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let mut bad = good.clone();
+        bad.data[0] = 99;
+
+        let rxs = server.submit_batch([good.clone(), bad, good.clone()]);
+        let results: Vec<ServeResult> =
+            rxs.into_iter().map(|rx| rx.recv().expect("recv")).collect();
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().expect_err("poisoned request must fail");
+        assert_eq!(err.worker, 0);
+        assert!(err.reason.contains("poisoned"), "{}", err.reason);
+        assert!(results[2].is_ok(), "worker must survive the panic");
+        assert_eq!(
+            results[0].as_ref().unwrap().logits,
+            results[2].as_ref().unwrap().logits
+        );
+
+        // And the server still serves fresh requests afterwards.
+        assert!(server.infer(good).is_ok());
+        let stats = server.shutdown();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 1);
+    }
+
+    fn dense_op(ci: usize, co: usize) -> DenseOp {
+        DenseOp {
+            name: "fc".into(),
+            ci,
+            co,
+            weights: Tensor4::random([1, 1, ci, co], 9).data,
+            qparams: QParams::identity(),
+        }
+    }
+
+    #[test]
+    fn dense_requests_share_r_row_passes() {
+        let op = dense_op(12, 10);
+        let weights = op.weights.clone();
+        let server = InferenceServer::spawn_dense_pool(
+            1,
+            |_| InferencePipeline::new(Functional::new(KrakenConfig::new(4, 8)), Vec::new()),
+            op,
+            4,
+        );
+        let reqs: Vec<Vec<i8>> =
+            (0..8).map(|i| Tensor4::random([1, 1, 1, 12], 700 + i).data).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit_dense(r.clone())).collect();
+        for (req, rx) in reqs.iter().zip(rxs) {
+            let resp = rx.recv().expect("recv").expect("dense response");
+            assert_eq!(resp.output, matmul_i8(req, &weights, 1, 12, 10));
+            assert_eq!(resp.rows_in_batch, 4, "capacity-4 lane must batch 4 rows");
+        }
+        let stats = server.shutdown();
+        // 8 rows at capacity 4 → exactly 2 shared passes, not 8.
+        assert_eq!(stats.dense_flushes, 2);
+        assert_eq!(stats.dense_rows, 8);
+    }
+
+    #[test]
+    fn dense_stragglers_flush_on_shutdown() {
+        let op = dense_op(12, 10);
+        let weights = op.weights.clone();
+        let server = InferenceServer::spawn_dense_pool(
+            1,
+            |_| InferencePipeline::new(Functional::new(KrakenConfig::new(4, 8)), Vec::new()),
+            op,
+            4,
+        );
+        let req = Tensor4::random([1, 1, 1, 12], 800).data;
+        let rx = server.submit_dense(req.clone());
+        let stats = server.shutdown(); // flushes the partial batch
+        let resp = rx.recv().expect("recv").expect("dense response");
+        assert_eq!(resp.output, matmul_i8(&req, &weights, 1, 12, 10));
+        assert_eq!(resp.rows_in_batch, 1);
+        assert_eq!(stats.dense_flushes, 1);
+        assert_eq!(stats.dense_rows, 1);
     }
 }

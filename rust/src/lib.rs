@@ -38,6 +38,11 @@
 //!   outputs + analytic clocks) and the baseline estimators behind one
 //!   uniform `run_layer` contract, plus the work-stealing
 //!   [`backend::pool::ShardedPool`] that scales serving across cores.
+//! * [`partition`] — multi-chip partitioning: a planner that splits one
+//!   layer across `P` backends (output-channel or output-row shards,
+//!   chosen by the eq. (17)/(20) cost model) and a
+//!   [`partition::PartitionedPool`] that runs the shards concurrently
+//!   behind the same [`Accelerator`] trait.
 //! * [`runtime`] — the PJRT runtime that loads the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; the
 //!   golden model for functional verification.
@@ -56,6 +61,7 @@ pub mod dataflow;
 pub mod layers;
 pub mod metrics;
 pub mod networks;
+pub mod partition;
 pub mod perf;
 pub mod quant;
 pub mod report;
@@ -67,3 +73,4 @@ pub use arch::KrakenConfig;
 pub use backend::{Accelerator, LayerData, LayerOutput};
 pub use layers::{Layer, LayerKind};
 pub use networks::Network;
+pub use partition::{PartitionPlan, PartitionedPool, SplitAxis};

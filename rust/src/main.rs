@@ -9,10 +9,12 @@
 use std::path::Path;
 
 use kraken::arch::KrakenConfig;
-use kraken::backend::{Accelerator, Estimator, Functional};
+use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
 use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
-use kraken::networks::paper_networks;
+use kraken::networks::{paper_networks, Network};
+use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::perf::PerfModel;
+use kraken::quant::QParams;
 use kraken::report;
 use kraken::runtime::GoldenRunner;
 use kraken::sim::Engine;
@@ -41,8 +43,16 @@ system:
   simulate        run TinyCNN through the clock-accurate simulator
   backends        cross-backend equivalence: cycle-accurate vs
                   functional vs baseline estimators on TinyCNN
-  serve N [E]     serve N TinyCNN requests through a pool of E
-                  cycle-accurate engines (default E=1)
+  serve N [E] [--partition P]
+                  serve N TinyCNN requests through a pool of E
+                  cycle-accurate engines (default E=1); with
+                  --partition P each request's layers are split
+                  across P chips (intra-request data parallelism)
+  partition P [net]
+                  per-layer partition plan for P shards (split axis,
+                  predicted vs measured clocks, overhead) on net ∈
+                  tiny_cnn|tiny_mlp|alexnet|vgg16|resnet50
+                  (default tiny_cnn), measured on functional backends
   report R C      per-network §V metrics for configuration R×C
 ";
 
@@ -82,9 +92,15 @@ fn main() {
         "simulate" => simulate(),
         "backends" => backends(),
         "serve" => {
-            let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
-            let engines: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(1);
-            serve(n, engines);
+            let (positional, partition) = split_partition_flag(&args[1..]);
+            let n: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+            let engines: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+            serve(n, engines, partition);
+        }
+        "partition" => {
+            let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+            let net = args.get(2).map(String::as_str).unwrap_or("tiny_cnn");
+            partition_cmd(shards, net);
         }
         "report" => {
             let r: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
@@ -260,42 +276,147 @@ fn backends() {
     );
 }
 
-/// Serve N requests through the sharded engine pool.
-fn serve(n: usize, engines: usize) {
-    let server = InferenceServer::spawn_pool(engines, |_| {
-        tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8))
-    });
+/// Pull an optional trailing `--partition P` out of an argument list.
+fn split_partition_flag(args: &[String]) -> (Vec<&String>, usize) {
+    let mut positional = Vec::new();
+    let mut partition = 1usize;
+    let mut iter = args.iter();
+    while let Some(arg) = iter.next() {
+        if arg == "--partition" {
+            partition = match iter.next().and_then(|s| s.parse().ok()) {
+                Some(p) => p,
+                None => {
+                    eprintln!("--partition needs a positive integer shard count");
+                    std::process::exit(2);
+                }
+            };
+        } else {
+            positional.push(arg);
+        }
+    }
+    (positional, partition)
+}
+
+/// Serve N requests through the sharded engine pool. With
+/// `partition > 1`, every worker's backend is a [`PartitionedPool`] of
+/// that many cycle-accurate engines, so each request's layers are split
+/// across chips — intra-request data parallelism that cuts the modeled
+/// device latency, on top of the pool's request parallelism.
+fn serve(n: usize, engines: usize, partition: usize) {
+    // Bare engines at partition ≤ 1 (the original hot path: no tensor
+    // clones, no scatter/gather round-trip); PartitionedPool otherwise.
+    let server = if partition > 1 {
+        println!(
+            "intra-request partitioning: each request's layers split across {partition} chips"
+        );
+        InferenceServer::spawn_pool(engines, move |_| {
+            tiny_cnn_pipeline(PartitionedPool::spawn(KrakenConfig::paper(), partition, |_| {
+                Engine::new(KrakenConfig::paper(), 8)
+            }))
+        })
+    } else {
+        InferenceServer::spawn_pool(engines, |_| {
+            tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8))
+        })
+    };
     let t0 = std::time::Instant::now();
     let rxs =
         server.submit_batch((0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
     let mut device_ms = 0.0;
+    let mut failed = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response");
-        device_ms += resp.device_ms;
-        println!(
-            "req {i}: argmax={} device={:.3} ms queue={:.0} µs clocks={} worker={}",
-            resp.logits
-                .iter()
-                .enumerate()
-                .max_by_key(|(_, v)| **v)
-                .map(|(i, _)| i)
-                .unwrap_or(0),
-            resp.device_ms,
-            resp.queue_us,
-            resp.clocks,
-            resp.worker
-        );
+        match rx.recv().expect("response channel") {
+            Ok(resp) => {
+                device_ms += resp.device_ms;
+                println!(
+                    "req {i}: argmax={} device={:.3} ms queue={:.0} µs clocks={} worker={}",
+                    resp.logits
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, v)| **v)
+                        .map(|(i, _)| i)
+                        .unwrap_or(0),
+                    resp.device_ms,
+                    resp.queue_us,
+                    resp.clocks,
+                    resp.worker
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("req {i}: FAILED ({e})");
+            }
+        }
     }
     let stats = server.shutdown();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests on {} engine(s), {} stolen: modeled device throughput \
-         {:.0} fps/engine, sim wall {:.2} s ({:.1} req/s)",
+        "served {} requests ({failed} failed) on {} engine(s), {} stolen: modeled device \
+         throughput {:.0} fps/engine, sim wall {:.2} s ({:.1} req/s)",
         stats.completed,
         stats.workers,
         stats.stolen,
         stats.completed as f64 / (device_ms / 1e3),
         wall,
         stats.completed as f64 / wall
+    );
+}
+
+/// Per-layer partition plan table: split axis, predicted speedup and
+/// overhead from the eq. (17)/(20) planner, and the measured makespan
+/// from actually running the shards on a pool of functional backends.
+fn partition_cmd(shards: usize, net_name: &str) {
+    let net: Network = match net_name {
+        "tiny_cnn" => kraken::networks::tiny_cnn(),
+        "tiny_mlp" => kraken::networks::tiny_mlp(),
+        "alexnet" => kraken::networks::alexnet(),
+        "vgg16" => kraken::networks::vgg16(),
+        "resnet50" => kraken::networks::resnet50(),
+        other => {
+            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|vgg16|resnet50)");
+            return;
+        }
+    };
+    let cfg = KrakenConfig::paper();
+    let mut pool =
+        PartitionedPool::spawn(cfg.clone(), shards, |_| Functional::new(KrakenConfig::paper()));
+    println!(
+        "partition plan: {} across {shards} shards ({})\n",
+        net.name,
+        pool.name()
+    );
+    println!(
+        "{:<10} {:>4} {:>6} {:>12} {:>12} {:>8} {:>12} {:>12} {:>3}",
+        "layer", "axis", "shards", "base_q", "pred_q", "speedup", "overhead_w", "measured_q", "ok"
+    );
+    let mut base_total = 0u64;
+    let mut measured_total = 0u64;
+    for (j, layer) in net.layers.iter().enumerate() {
+        let plan = plan_layer(&cfg, layer, shards);
+        let (x, k) = Network::seeded_layer_tensors(layer, 7000 + 2 * j as u64);
+        let out = pool.run_layer(&LayerData {
+            layer,
+            x: &x,
+            k: &k,
+            qparams: QParams::identity(),
+        });
+        base_total += plan.baseline_clocks;
+        measured_total += out.clocks;
+        println!(
+            "{:<10} {:>4} {:>6} {:>12} {:>12} {:>7.2}× {:>12} {:>12} {:>3}",
+            layer.name,
+            plan.axis.map_or("—", |a| a.label()),
+            plan.shards(),
+            plan.baseline_clocks,
+            plan.predicted_clocks,
+            plan.speedup(),
+            plan.replication_overhead_words(),
+            out.clocks,
+            if out.clocks == plan.predicted_clocks { "✓" } else { "✗" }
+        );
+    }
+    println!(
+        "\ntotal: {base_total} → {measured_total} clocks ({:.2}× end-to-end makespan cut)",
+        base_total as f64 / measured_total as f64
     );
 }

@@ -1,0 +1,36 @@
+//! Multi-chip partitioning: split one layer across the backend pool.
+//!
+//! Kraken's uniform dataflow (§IV-D) makes every layer — conv, FC,
+//! matmul — the same schedule, which is exactly what makes spatial
+//! partitioning tractable: any layer can be split along output channels
+//! or output rows and each shard is still a well-formed Kraken layer
+//! that any [`crate::backend::Accelerator`] can run. This subsystem has
+//! three parts:
+//!
+//! * [`plan`] — the **planner**: enumerate the legal splits of a layer
+//!   for a shard count `P` (output-channel `C_o/P` for conv/FC/matmul,
+//!   output-row `L/P` for conv) and pick the minimum-makespan plan
+//!   using the eq. (17) clock and eq. (20) DRAM-word closed forms,
+//!   reporting predicted speedup and replication overhead (input
+//!   broadcast for channel splits, halo rows for row splits).
+//! * [`exec`] — the **executor**: slice the layer's tensors per the
+//!   plan, scatter the shard layers concurrently onto
+//!   [`crate::backend::pool::ShardedPool`] workers, and gather the
+//!   shard outputs back into the full `[N, OH, OW, C_o]` tensor with
+//!   merged counters (clocks = max over shards, DRAM words = sum).
+//! * [`exec::PartitionedPool`] — `P` backends behind one
+//!   [`crate::backend::Accelerator`], so `Network::run_layers`,
+//!   `InferencePipeline` and the inference server run
+//!   data-parallel-over-one-request transparently: the pool turns from
+//!   a request-parallel device into a latency-cutting multi-chip
+//!   machine.
+//!
+//! `rust/tests/partition_equivalence.rs` pins partitioned-vs-unsplit
+//! bit-exactness; `benches/partition_scaling.rs` measures the makespan
+//! cut on AlexNet's conv layers at 1/2/4 shards.
+
+pub mod exec;
+pub mod plan;
+
+pub use exec::{merge_outputs, shard_inputs, PartitionError, PartitionedPool};
+pub use plan::{plan_layer, PartitionPlan, ShardPiece, ShardSlice, SplitAxis};

@@ -1,0 +1,398 @@
+//! The partition planner: legal splits of one layer across `P` chips.
+//!
+//! Because every layer — conv, FC, matmul — runs through the *same*
+//! uniform dataflow (§IV-D), any layer can be split into shards that are
+//! themselves well-formed Kraken layers:
+//!
+//! * **Output-channel split** (`C_o / P`): each shard owns a contiguous
+//!   block of output channels and the matching kernel slice; the input
+//!   is broadcast to every shard (for grouped convolutions the shards
+//!   own whole groups, so each shard only needs its groups' input
+//!   channels). Legal for conv, FC and matmul.
+//! * **Output-row split** (`L / P`): each shard owns a contiguous block
+//!   of output rows and reads the input rows that block depends on,
+//!   including `⌈K_H/S_H⌉`-ish halo rows shared with its neighbours.
+//!   Legal for convolutions only.
+//!
+//! The planner enumerates the legal candidates, prices each one with
+//! the closed forms the repo already trusts — eq. (17) clocks via
+//! [`KrakenLayerParams::derive`] and eq. (20) DRAM words via
+//! [`PerfModel`] (physical convention) — and picks the minimum-makespan
+//! plan (ties broken toward fewer DRAM words, then toward not
+//! splitting). This is the MPNA/Co-Design observation: the winning
+//! partition axis is workload-dependent and must come from an analytic
+//! cost model, not a fixed rule.
+
+use crate::arch::KrakenConfig;
+use crate::layers::{same_padding, KrakenLayerParams, Layer};
+use crate::perf::{FcMemConvention, PerfModel, Tech};
+
+/// The axis a layer is split along.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitAxis {
+    /// Split `C_o` into per-shard blocks; input broadcast.
+    OutputChannel,
+    /// Split output rows into per-shard blocks; halo rows replicated.
+    OutputRow,
+}
+
+impl SplitAxis {
+    /// Short label for plan tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            SplitAxis::OutputChannel => "co",
+            SplitAxis::OutputRow => "row",
+        }
+    }
+}
+
+/// How one shard's tensors are cut from the full layer's tensors.
+#[derive(Debug, Clone, Copy)]
+pub enum ShardSlice {
+    /// The whole layer, unsplit (the `P = 1` / no-win fallback).
+    Whole,
+    /// Output channels `[co_start, co_start + co_len)`; the shard reads
+    /// input channels `[ci_start, ci_start + ci_len)` (the full input
+    /// when the layer is ungrouped — the broadcast case).
+    Channel { co_start: usize, co_len: usize, ci_start: usize, ci_len: usize },
+    /// Output rows `[out_start, out_start + out_rows)` of the full
+    /// output, computed from input rows `[in_start, in_start + in_rows)`
+    /// (indices outside `[0, H)` are the full layer's zero padding).
+    /// The shard's own `same`-padded run produces `crop_top` leading
+    /// alignment rows that the gather step drops.
+    Row { out_start: usize, out_rows: usize, in_start: i64, in_rows: usize, crop_top: usize },
+}
+
+/// One shard of a partitioned layer: a well-formed Kraken [`Layer`]
+/// plus the slicing recipe for its tensors.
+#[derive(Debug, Clone)]
+pub struct ShardPiece {
+    /// Shard index `p ∈ [0, P)`.
+    pub index: usize,
+    /// The shard's own layer shape (what the backend actually runs).
+    pub layer: Layer,
+    pub slice: ShardSlice,
+}
+
+/// A costed partitioning of one layer onto `P` backends.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// The full (unsplit) layer.
+    pub layer: Layer,
+    /// Chosen axis; `None` when the planner kept the layer whole.
+    pub axis: Option<SplitAxis>,
+    pub pieces: Vec<ShardPiece>,
+    /// eq. (17) clocks of the unsplit layer.
+    pub baseline_clocks: u64,
+    /// Predicted makespan: max over shards of eq. (17).
+    pub predicted_clocks: u64,
+    /// eq. (20) DRAM words of the unsplit layer (physical convention).
+    pub baseline_dram_words: u64,
+    /// Sum over shards of eq. (20) DRAM words.
+    pub predicted_dram_words: u64,
+}
+
+impl PartitionPlan {
+    /// Number of shards the plan actually uses.
+    pub fn shards(&self) -> usize {
+        self.pieces.len()
+    }
+
+    /// Predicted speedup of the layer's makespan.
+    pub fn speedup(&self) -> f64 {
+        self.baseline_clocks as f64 / self.predicted_clocks as f64
+    }
+
+    /// Extra DRAM words the split moves versus the unsplit layer
+    /// (input broadcast for channel splits, halo rows + kernel
+    /// re-fetch for row splits). Zero when the split is traffic-neutral.
+    pub fn replication_overhead_words(&self) -> u64 {
+        self.predicted_dram_words.saturating_sub(self.baseline_dram_words)
+    }
+}
+
+/// The eq. (20) model used for pricing: physical convention, matching
+/// what the engine's DRAM counters (and the functional backend) report.
+fn physical_model(cfg: &KrakenConfig) -> PerfModel {
+    PerfModel {
+        cfg: cfg.clone(),
+        tech: Tech::scaled(cfg.r, cfg.c, cfg.wsram_depth),
+        fc_mem: FcMemConvention::Physical,
+    }
+}
+
+/// Near-equal contiguous chunk sizes: `total` split into `parts`, the
+/// first `total % parts` chunks one larger.
+fn chunk_sizes(total: usize, parts: usize) -> Vec<usize> {
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Output-channel split. Legal when every shard gets at least one
+/// channel; grouped convolutions additionally require `P | groups` so
+/// each shard owns whole groups.
+fn channel_pieces(layer: &Layer, p: usize) -> Option<Vec<ShardPiece>> {
+    if layer.groups == 1 {
+        if layer.co < p {
+            return None;
+        }
+        let mut pieces = Vec::with_capacity(p);
+        let mut co_start = 0;
+        for (index, co_len) in chunk_sizes(layer.co, p).into_iter().enumerate() {
+            let mut shard = layer.clone();
+            shard.name = format!("{}[co{index}]", layer.name);
+            shard.co = co_len;
+            pieces.push(ShardPiece {
+                index,
+                layer: shard,
+                slice: ShardSlice::Channel { co_start, co_len, ci_start: 0, ci_len: layer.ci },
+            });
+            co_start += co_len;
+        }
+        Some(pieces)
+    } else {
+        if layer.groups % p != 0 {
+            return None;
+        }
+        let groups_per = layer.groups / p;
+        let co_per = groups_per * layer.co_per_group();
+        let ci_per = groups_per * layer.ci;
+        let pieces = (0..p)
+            .map(|index| {
+                let mut shard = layer.clone();
+                shard.name = format!("{}[co{index}]", layer.name);
+                shard.co = co_per;
+                shard.groups = groups_per;
+                ShardPiece {
+                    index,
+                    layer: shard,
+                    slice: ShardSlice::Channel {
+                        co_start: index * co_per,
+                        co_len: co_per,
+                        ci_start: index * ci_per,
+                        ci_len: ci_per,
+                    },
+                }
+            })
+            .collect();
+        Some(pieces)
+    }
+}
+
+/// Output-row split (convolutions only). Each shard's input slice is
+/// extended upward by `z` rows so that its own `same`-padding top pad
+/// `(K_H−1)/2` lands on a stride boundary: the shard then computes
+/// `crop_top = (pad_top + z) / S_H` leading alignment rows followed by
+/// its block of the full output, bit-exactly.
+pub(crate) fn row_pieces(layer: &Layer, p: usize) -> Option<Vec<ShardPiece>> {
+    if layer.is_dense() {
+        return None;
+    }
+    let oh = layer.out_h();
+    if oh < p {
+        return None;
+    }
+    let (pad_top, _) = same_padding(layer.h, layer.kh, layer.sh);
+    let z = (layer.sh - pad_top % layer.sh) % layer.sh;
+    let crop_top = (pad_top + z) / layer.sh;
+    let mut pieces = Vec::with_capacity(p);
+    let mut out_start = 0usize;
+    for (index, out_rows) in chunk_sizes(oh, p).into_iter().enumerate() {
+        let in_start = (out_start * layer.sh) as i64 - (pad_top + z) as i64;
+        let in_rows = z + (out_rows - 1) * layer.sh + layer.kh;
+        let mut shard = layer.clone();
+        shard.name = format!("{}[row{index}]", layer.name);
+        shard.h = in_rows;
+        pieces.push(ShardPiece {
+            index,
+            layer: shard,
+            slice: ShardSlice::Row { out_start, out_rows, in_start, in_rows, crop_top },
+        });
+        out_start += out_rows;
+    }
+    Some(pieces)
+}
+
+/// Price a candidate: (makespan = max eq. (17) clocks, sum of eq. (20)
+/// DRAM words over the shards).
+fn price(cfg: &KrakenConfig, model: &PerfModel, pieces: &[ShardPiece]) -> (u64, u64) {
+    let makespan = pieces
+        .iter()
+        .map(|s| KrakenLayerParams::derive(cfg, &s.layer).q)
+        .max()
+        .expect("plan has at least one piece");
+    let dram = pieces.iter().map(|s| model.layer(&s.layer).m_hat()).sum();
+    (makespan, dram)
+}
+
+/// Plan the minimum-makespan split of `layer` across `shards` backends.
+///
+/// Always returns a usable plan: when no legal split beats running the
+/// layer whole (or `shards == 1`), the plan keeps the layer unsplit on
+/// one backend (`axis: None`).
+pub fn plan_layer(cfg: &KrakenConfig, layer: &Layer, shards: usize) -> PartitionPlan {
+    let model = physical_model(cfg);
+    let baseline_clocks = KrakenLayerParams::derive(cfg, layer).q;
+    let baseline_dram_words = model.layer(layer).m_hat();
+
+    let whole = vec![ShardPiece { index: 0, layer: layer.clone(), slice: ShardSlice::Whole }];
+    let mut best =
+        (None, whole, baseline_clocks, baseline_dram_words);
+    if shards > 1 {
+        let candidates = [
+            (SplitAxis::OutputChannel, channel_pieces(layer, shards)),
+            (SplitAxis::OutputRow, row_pieces(layer, shards)),
+        ];
+        for (axis, pieces) in candidates {
+            let Some(pieces) = pieces else { continue };
+            let (clocks, dram) = price(cfg, &model, &pieces);
+            if (clocks, dram) < (best.2, best.3) {
+                best = (Some(axis), pieces, clocks, dram);
+            }
+        }
+    }
+    let (axis, pieces, predicted_clocks, predicted_dram_words) = best;
+    PartitionPlan {
+        layer: layer.clone(),
+        axis,
+        pieces,
+        baseline_clocks,
+        predicted_clocks,
+        baseline_dram_words,
+        predicted_dram_words,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> KrakenConfig {
+        KrakenConfig::paper() // 7 × 96
+    }
+
+    #[test]
+    fn channel_heavy_layer_splits_on_output_channels() {
+        // 1×1 conv, C_o = 192 on 7×96: T = ⌈192/96⌉ = 2, L = 1 — only
+        // the channel axis can cut the makespan.
+        let layer = Layer::conv("wide", 1, 7, 7, 1, 1, 1, 1, 64, 192);
+        let plan = plan_layer(&cfg(), &layer, 2);
+        assert_eq!(plan.axis, Some(SplitAxis::OutputChannel));
+        assert_eq!(plan.shards(), 2);
+        assert!((plan.speedup() - 2.0).abs() < 1e-9, "speedup {}", plan.speedup());
+        // Even T division ⇒ the split is DRAM-neutral (the T input
+        // re-streams are distributed, not duplicated).
+        assert_eq!(plan.replication_overhead_words(), 0);
+    }
+
+    #[test]
+    fn row_heavy_layer_splits_on_output_rows() {
+        // 3×3 conv, C_o = 16 ≤ E·S_W = 32 (T = 1): channel splitting
+        // cannot reduce T, but H = 56 gives L = 8 to cut.
+        let layer = Layer::conv("tall", 1, 56, 56, 3, 3, 1, 1, 8, 16);
+        let plan = plan_layer(&cfg(), &layer, 4);
+        assert_eq!(plan.axis, Some(SplitAxis::OutputRow));
+        assert!(plan.speedup() > 2.0, "speedup {}", plan.speedup());
+        // Halo rows + per-shard kernel fetches cost extra DRAM words.
+        assert!(plan.replication_overhead_words() > 0);
+    }
+
+    #[test]
+    fn grouped_conv_channel_split_owns_whole_groups() {
+        let layer = Layer::conv_grouped("g", 1, 13, 13, 3, 3, 1, 1, 192, 384, 2);
+        let plan = plan_layer(&cfg(), &layer, 2);
+        assert_eq!(plan.axis, Some(SplitAxis::OutputChannel));
+        for piece in &plan.pieces {
+            assert_eq!(piece.layer.groups, 1);
+            assert_eq!(piece.layer.co, 192);
+            match piece.slice {
+                ShardSlice::Channel { ci_len, .. } => assert_eq!(ci_len, 192),
+                _ => panic!("expected channel slice"),
+            }
+        }
+        // P = 4 does not divide groups = 2 → channel split illegal; the
+        // planner must fall back to rows (legal: 13 output rows ≥ 4).
+        let plan4 = plan_layer(&cfg(), &layer, 4);
+        assert_eq!(plan4.axis, Some(SplitAxis::OutputRow));
+    }
+
+    #[test]
+    fn dense_layers_split_on_output_channels_only() {
+        let layer = Layer::fully_connected("fc", 1, 256, 128);
+        let plan = plan_layer(&cfg(), &layer, 2);
+        // T = ⌈128/96⌉ = 2 → halving C_o halves the makespan.
+        assert_eq!(plan.axis, Some(SplitAxis::OutputChannel));
+        assert!((plan.speedup() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_win_keeps_the_layer_whole() {
+        // Tiny FC (T = 1 at any legal split) — splitting only adds
+        // broadcast traffic, so the planner keeps it whole.
+        let layer = Layer::fully_connected("fc8", 1, 64, 10);
+        let plan = plan_layer(&cfg(), &layer, 4);
+        assert_eq!(plan.axis, None);
+        assert_eq!(plan.shards(), 1);
+        assert_eq!(plan.predicted_clocks, plan.baseline_clocks);
+        assert_eq!(plan.predicted_dram_words, plan.baseline_dram_words);
+    }
+
+    #[test]
+    fn one_shard_is_the_identity_plan() {
+        let layer = Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 8, 16);
+        let plan = plan_layer(&cfg(), &layer, 1);
+        assert_eq!(plan.axis, None);
+        assert_eq!(plan.shards(), 1);
+        assert!(matches!(plan.pieces[0].slice, ShardSlice::Whole));
+    }
+
+    #[test]
+    fn row_split_alignment_math_strided() {
+        // AlexNet conv1 shapes: K_H = 11, S_H = 4, pad_top = 5 → the
+        // shard slice is extended up by z = 3 rows and crops
+        // (5 + 3)/4 = 2 alignment rows.
+        let layer = Layer::conv("c1", 1, 227, 227, 11, 11, 4, 4, 3, 96);
+        let pieces = row_pieces(&layer, 4).expect("row split legal");
+        let oh = layer.out_h(); // 57
+        assert_eq!(pieces.iter().map(row_rows).sum::<usize>(), oh);
+        for piece in &pieces {
+            let ShardSlice::Row { out_start, out_rows, in_start, in_rows, crop_top } =
+                piece.slice
+            else {
+                panic!("expected row slice")
+            };
+            assert_eq!(crop_top, 2);
+            assert_eq!(in_rows, 3 + (out_rows - 1) * 4 + 11);
+            assert_eq!(in_start, (out_start * 4) as i64 - 8);
+            assert_eq!(piece.layer.h, in_rows);
+            // The shard's own run has enough output rows to cover the
+            // cropped block.
+            assert!(piece.layer.out_h() >= crop_top + out_rows);
+        }
+    }
+
+    fn row_rows(piece: &ShardPiece) -> usize {
+        match piece.slice {
+            ShardSlice::Row { out_rows, .. } => out_rows,
+            _ => 0,
+        }
+    }
+
+    #[test]
+    fn alexnet_conv_layers_all_gain_at_4_shards() {
+        // The bench acceptance bar: every AlexNet conv layer's predicted
+        // makespan at P = 4 is ≤ 0.6× the unsplit clocks.
+        let net = crate::networks::alexnet();
+        for layer in net.conv_layers() {
+            let plan = plan_layer(&cfg(), layer, 4);
+            assert!(
+                plan.predicted_clocks as f64 <= 0.6 * plan.baseline_clocks as f64,
+                "{}: {} vs {}",
+                layer.name,
+                plan.predicted_clocks,
+                plan.baseline_clocks
+            );
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Partitioned-vs-unpartitioned equivalence: splitting one layer
+//! across a pool of chips must be invisible in the math.
+//!
+//! For every layer of TinyCNN and TinyMLP and for full-size AlexNet
+//! conv1, at P ∈ {2, 4}: the [`PartitionedPool`]'s gathered outputs
+//! (`y_acc` and `y_q`) are bit-exact against a single backend, the
+//! merged makespan equals the planner's eq. (17) prediction (and never
+//! exceeds the unsplit clocks), and the summed DRAM words equal the
+//! planner's eq. (20) prediction — exactly the unsplit words plus the
+//! reported replication overhead (input broadcast / halo rows).
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
+use kraken::coordinator::{InferencePipeline, InferenceServer};
+use kraken::layers::Layer;
+use kraken::networks::{tiny_cnn, tiny_mlp, Network};
+use kraken::partition::{plan_layer, PartitionedPool};
+use kraken::quant::QParams;
+use kraken::sim::Engine;
+use kraken::tensor::{matmul_i8, Tensor4};
+
+const SEED: u64 = 31_000;
+
+/// Run every layer of `net` on one functional backend and on a
+/// P-shard partitioned pool, asserting full equivalence per layer.
+fn assert_net_equivalent(net: &Network, shards: usize) {
+    let cfg = KrakenConfig::paper();
+    let mut whole = Functional::new(cfg.clone());
+    let mut pool =
+        PartitionedPool::spawn(cfg.clone(), shards, |_| Functional::new(KrakenConfig::paper()));
+    let base_outs: Vec<LayerOutput> = net.run_layers(&mut whole, SEED);
+    let pool_outs: Vec<LayerOutput> = net.run_layers(&mut pool, SEED);
+    for (j, layer) in net.layers.iter().enumerate() {
+        let (base, split) = (&base_outs[j], &pool_outs[j]);
+        let plan = plan_layer(&cfg, layer, shards);
+        assert_eq!(split.y_acc, base.y_acc, "{} P={shards}: y_acc", layer.name);
+        assert_eq!(split.y_q, base.y_q, "{} P={shards}: y_q", layer.name);
+        assert_eq!(
+            split.clocks, plan.predicted_clocks,
+            "{} P={shards}: makespan vs plan",
+            layer.name
+        );
+        assert!(
+            split.clocks <= base.clocks,
+            "{} P={shards}: partitioning must never slow a layer down",
+            layer.name
+        );
+        assert_eq!(
+            split.counters.dram_total(),
+            plan.predicted_dram_words,
+            "{} P={shards}: summed DRAM words vs plan",
+            layer.name
+        );
+        assert_eq!(
+            split.counters.dram_total(),
+            base.counters.dram_total() + plan.replication_overhead_words(),
+            "{} P={shards}: DRAM words = unsplit + reported overhead",
+            layer.name
+        );
+    }
+}
+
+#[test]
+fn tiny_cnn_partitioned_bit_exact_p2_p4() {
+    for shards in [2, 4] {
+        assert_net_equivalent(&tiny_cnn(), shards);
+    }
+}
+
+#[test]
+fn tiny_mlp_partitioned_bit_exact_p2_p4() {
+    for shards in [2, 4] {
+        assert_net_equivalent(&tiny_mlp(), shards);
+    }
+}
+
+#[test]
+fn alexnet_conv1_partitioned_bit_exact_p2_p4() {
+    // The large-kernel strided class (11×11, S = 4): the awkward
+    // halo-alignment case for row splits and a 4-way channel split.
+    let cfg = KrakenConfig::paper();
+    let layer = Layer::conv("alex_conv1", 1, 227, 227, 11, 11, 4, 4, 3, 96);
+    let (x, k) = Network::seeded_layer_tensors(&layer, SEED + 100);
+    let data = LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() };
+    let mut whole = Functional::new(cfg.clone());
+    let base = whole.run_layer(&data);
+    for shards in [2usize, 4] {
+        let mut pool = PartitionedPool::spawn(cfg.clone(), shards, |_| {
+            Functional::new(KrakenConfig::paper())
+        });
+        let split = pool.run_layer(&data);
+        let plan = plan_layer(&cfg, &layer, shards);
+        assert_eq!(split.y_acc, base.y_acc, "P={shards}");
+        assert_eq!(split.y_q, base.y_q, "P={shards}");
+        assert_eq!(split.clocks, plan.predicted_clocks, "P={shards}");
+        assert_eq!(split.counters.dram_total(), plan.predicted_dram_words, "P={shards}");
+        // co = 96 over E·S_W = 24: T divides evenly at P ∈ {2, 4}, so
+        // the channel split is DRAM-neutral and cuts T proportionally.
+        assert_eq!(plan.replication_overhead_words(), 0, "P={shards}");
+        assert_eq!(split.clocks * shards as u64, base.clocks, "P={shards}");
+    }
+}
+
+#[test]
+fn engine_shards_match_functional_shards() {
+    // The pool is backend-agnostic: cycle-accurate engines as shards
+    // produce the same merged output and makespan as functional shards.
+    let cfg = KrakenConfig::paper();
+    let layer = Layer::conv("c", 1, 14, 14, 3, 3, 1, 1, 8, 64);
+    let (x, k) = Network::seeded_layer_tensors(&layer, SEED + 200);
+    let data = LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() };
+    let mut engines =
+        PartitionedPool::spawn(cfg.clone(), 2, |_| Engine::new(KrakenConfig::paper(), 8));
+    let mut functionals =
+        PartitionedPool::spawn(cfg, 2, |_| Functional::new(KrakenConfig::paper()));
+    let a = engines.run_layer(&data);
+    let b = functionals.run_layer(&data);
+    assert_eq!(a.y_acc, b.y_acc);
+    assert_eq!(a.y_q, b.y_q);
+    assert_eq!(a.clocks, b.clocks);
+    assert_eq!(a.counters.dram_total(), b.counters.dram_total());
+}
+
+#[test]
+fn batching_then_partitioning_compose() {
+    // The server's dense lane batches concurrent FC requests into one
+    // R-row pass; a PartitionedPool backend then splits that *batched*
+    // layer by output channels (batch first, then split). Outputs must
+    // match the per-request matmul and the pass must be shared.
+    let (ci, co, r) = (64usize, 192usize, 7usize);
+    let op = kraken::coordinator::DenseOp {
+        name: "fc".into(),
+        ci,
+        co,
+        weights: Tensor4::random([1, 1, ci, co], 5).data,
+        qparams: QParams::identity(),
+    };
+    let weights = op.weights.clone();
+    let server = InferenceServer::spawn_dense_pool(
+        1,
+        |_| {
+            InferencePipeline::new(
+                PartitionedPool::spawn(KrakenConfig::paper(), 2, |_| {
+                    Functional::new(KrakenConfig::paper())
+                }),
+                Vec::new(),
+            )
+        },
+        op,
+        r,
+    );
+    let reqs: Vec<Vec<i8>> =
+        (0..r as u64).map(|i| Tensor4::random([1, 1, 1, ci], 900 + i).data).collect();
+    let rxs: Vec<_> = reqs.iter().map(|f| server.submit_dense(f.clone())).collect();
+    for (req, rx) in reqs.iter().zip(rxs) {
+        let resp = rx.recv().expect("recv").expect("dense response");
+        assert_eq!(resp.output, matmul_i8(req, &weights, 1, ci, co));
+        assert_eq!(resp.rows_in_batch, r, "all rows share one pass");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.dense_flushes, 1, "R concurrent requests → one flush");
+    assert_eq!(stats.dense_rows, r as u64);
+
+    // And the split really split: the batched [R=7, 64]·[64, 192] layer
+    // has T = 2 on 7×96, halved by the 2-way channel split.
+    let batched = Layer::fully_connected("fc", r, ci, co);
+    let plan = plan_layer(&KrakenConfig::paper(), &batched, 2);
+    assert!(plan.speedup() > 1.9, "speedup {}", plan.speedup());
+}
