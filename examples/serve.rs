@@ -1,33 +1,59 @@
-//! Inference serving through the L3 coordinator: a sharded pool of
-//! cycle-accurate engines behind per-worker request deques with
-//! work-stealing dispatch, reporting modeled device latency/throughput
-//! at the paper's operating points.
+//! Inference serving through the L3 coordinator's `KrakenService`: one
+//! builder-configured service, a named-model registry holding a full
+//! TinyCNN pipeline AND a standalone dense op, work-stealing dispatch
+//! across a pool of cycle-accurate engines, and unified `Ticket`s for
+//! every submission. Dense rows batch to the PE-row capacity and any
+//! stragglers are flushed by the service's background deadline tick.
 //!
 //! ```bash
 //! cargo run --release --example serve
 //! ```
 
-use kraken::arch::KrakenConfig;
-use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
-use kraken::sim::Engine;
+use std::time::Duration;
+
+use kraken::coordinator::{tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
+use kraken::quant::QParams;
 use kraken::tensor::Tensor4;
 
 fn main() {
     let engines = 4;
-    let server = InferenceServer::spawn_pool(engines, |worker| {
-        println!("  worker {worker}: cycle-accurate 7×96 engine online");
-        tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8))
-    });
+    let (fc_ci, fc_co) = (64usize, 16usize);
+    let service = ServiceBuilder::new()
+        .backend(BackendKind::Engine)
+        .workers(engines)
+        .batch_capacity(7) // = R: fill the PE rows, fetch weights once (§IV-D)
+        .flush_window(Duration::from_micros(500)) // deadline tick for stragglers
+        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_dense(
+            "embed_fc",
+            DenseOp::new(
+                "embed_fc",
+                fc_ci,
+                fc_co,
+                Tensor4::random([1, 1, fc_ci, fc_co], 42).data,
+                QParams::identity(),
+            ),
+        )
+        .build();
+    println!(
+        "service online: {} engines, models {:?}",
+        service.workers(),
+        service.models()
+    );
 
     let n = 16;
-    println!("submitting {n} TinyCNN requests to the {engines}-engine pool…");
+    println!("submitting {n} TinyCNN images and {n} embed_fc rows…");
     let t0 = std::time::Instant::now();
-    let rxs = server.submit_batch((0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let cnn_tickets =
+        service.submit_batch("tiny_cnn", (0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let fc_tickets: Vec<_> = (0..n)
+        .map(|i| service.submit("embed_fc", Tensor4::random([1, 1, 1, fc_ci], 900 + i as u64).data))
+        .collect();
 
     let mut device_ms = Vec::new();
     let mut queue_us = Vec::new();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().expect("response channel").expect("request served");
+    for (i, ticket) in cnn_tickets.into_iter().enumerate() {
+        let resp = ticket.wait().expect("request served");
         let argmax = resp
             .logits
             .iter()
@@ -36,14 +62,24 @@ fn main() {
             .map(|(i, _)| i)
             .unwrap();
         println!(
-            "  req {i:>2}: class {argmax}  device {:.3} ms  queued {:>8.0} µs  ({} clocks, worker {})",
+            "  tiny_cnn {i:>2}: class {argmax}  device {:.3} ms  queued {:>8.0} µs  ({} clocks, worker {})",
             resp.device_ms, resp.queue_us, resp.clocks, resp.worker
         );
         device_ms.push(resp.device_ms);
         queue_us.push(resp.queue_us);
     }
+    for (i, ticket) in fc_tickets.into_iter().enumerate() {
+        let resp = ticket.wait().expect("dense row served");
+        println!(
+            "  embed_fc {i:>2}: {} outputs  shared a {}-row pass  ({} clocks, worker {})",
+            resp.output.len(),
+            resp.rows_in_batch,
+            resp.clocks,
+            resp.worker
+        );
+    }
     let wall = t0.elapsed().as_secs_f64();
-    let stats = server.shutdown();
+    let stats = service.shutdown();
 
     device_ms.sort_by(f64::total_cmp);
     queue_us.sort_by(f64::total_cmp);
@@ -51,6 +87,18 @@ fn main() {
     println!(
         "\nserved {} requests on {} engines ({} stolen across shards)",
         stats.completed, stats.workers, stats.stolen
+    );
+    println!(
+        "  per model     : {:?}",
+        {
+            let mut m: Vec<_> = stats.per_model.iter().collect();
+            m.sort();
+            m
+        }
+    );
+    println!(
+        "  dense batching: {} rows in {} shared passes ({} flushed by the deadline tick)",
+        stats.dense_rows, stats.dense_flushes, stats.window_flushes
     );
     println!(
         "  device latency: p50 {:.3} ms  p90 {:.3} ms  (deterministic engine → flat)",
@@ -64,10 +112,10 @@ fn main() {
     );
     println!(
         "  modeled device throughput: {:.0} inf/s per engine at 400/200 MHz",
-        stats.completed as f64 / (stats.total_device_ms / 1e3)
+        stats.pipeline_completed() as f64 / (stats.total_device_ms / 1e3)
     );
     println!(
-        "  simulation wall throughput: {:.1} inf/s across the pool",
+        "  simulation wall throughput: {:.1} req/s across the pool",
         stats.completed as f64 / wall
     );
 }

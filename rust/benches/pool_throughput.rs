@@ -11,7 +11,7 @@
 mod harness;
 
 use kraken::arch::KrakenConfig;
-use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
+use kraken::coordinator::{run_stages, tiny_cnn_stages, ServiceBuilder};
 use kraken::sim::Engine;
 use kraken::tensor::Tensor4;
 
@@ -20,29 +20,41 @@ fn main() {
     let requests = 24usize;
     let mut baseline_rps = None;
     for engines in [1usize, 2, 4] {
-        let server = InferenceServer::spawn_pool(engines, |_| {
-            let mut pipe = tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8));
-            // Warm on the worker's own thread (stealing could otherwise
-            // leave a worker cold inside the timed region).
-            let _ = pipe.run(&Tensor4::random([1, 28, 28, 3], 1));
-            pipe
-        });
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .workers(engines)
+            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .build_with(|_| {
+                let mut engine = Engine::new(KrakenConfig::paper(), 8);
+                // Warm on the worker's own thread (stealing could
+                // otherwise leave a worker cold inside the timed
+                // region: the settle batch alone can be served by an
+                // already-warm sibling).
+                let _ = run_stages(
+                    &mut engine,
+                    &tiny_cnn_stages(),
+                    &Tensor4::random([1, 28, 28, 3], 1),
+                );
+                engine
+            });
         // Settle: don't start the clock until the pool is serving.
-        for rx in server
-            .submit_batch((0..engines).map(|i| Tensor4::random([1, 28, 28, 3], 1 + i as u64)))
-        {
-            rx.recv().expect("settle response").expect("settle request served");
+        for ticket in service.submit_batch(
+            "tiny_cnn",
+            (0..engines).map(|i| Tensor4::random([1, 28, 28, 3], 1 + i as u64)),
+        ) {
+            ticket.wait().expect("settle request served");
         }
 
         let t0 = std::time::Instant::now();
-        let rxs = server.submit_batch(
+        let tickets = service.submit_batch(
+            "tiny_cnn",
             (0..requests).map(|i| Tensor4::random([1, 28, 28, 3], 100 + i as u64)),
         );
-        for rx in rxs {
-            rx.recv().expect("response").expect("request served");
+        for ticket in tickets {
+            ticket.wait().expect("request served");
         }
         let wall = t0.elapsed().as_secs_f64();
-        let stats = server.shutdown();
+        let stats = service.shutdown();
 
         let rps = requests as f64 / wall;
         let speedup = match baseline_rps {

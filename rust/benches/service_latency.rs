@@ -1,0 +1,88 @@
+//! Ticket latency vs the dense flush window.
+//!
+//! A single dense request on a low-traffic lane never fills the
+//! `R`-row batch, so its ticket latency is governed by the service's
+//! time-window flush: the background deadline tick dispatches the lane
+//! once the oldest pending row ages past the window. This bench
+//! submits lone rows (capacity deliberately larger than the traffic)
+//! and measures submit→wait latency at windows of 0, 100 and 1000 µs.
+//!
+//! Emits `BENCH_service_window_{0,100,1000}us.json` records (p50/p95
+//! ticket latency in µs) via the shared harness; CI checks that the
+//! window ordering holds (a wider window must not serve lone rows
+//! faster than an immediate one).
+//!
+//! Run: `cargo bench --bench service_latency`
+
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+use kraken::quant::QParams;
+use kraken::tensor::Tensor4;
+
+fn main() {
+    println!("== dense ticket latency vs flush window (lone rows, capacity never filled) ==\n");
+    let (ci, co) = (64usize, 32usize);
+    let requests = 64usize;
+    for window_us in [0u64, 100, 1000] {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .backend(BackendKind::Functional)
+            .batch_capacity(8) // a lone row can never fill the batch
+            .flush_window(Duration::from_micros(window_us))
+            .register_dense(
+                "fc",
+                DenseOp::new(
+                    "fc",
+                    ci,
+                    co,
+                    Tensor4::random([1, 1, ci, co], 11).data,
+                    QParams::identity(),
+                ),
+            )
+            .build();
+        // Warm the lane (thread spawn, first allocation).
+        service
+            .submit("fc", Tensor4::random([1, 1, 1, ci], 1).data)
+            .wait()
+            .expect("warmup row served");
+
+        let mut latencies_us: Vec<f64> = (0..requests)
+            .map(|i| {
+                let row = Tensor4::random([1, 1, 1, ci], 100 + i as u64).data;
+                let t0 = Instant::now();
+                let resp = service.submit("fc", row).wait().expect("row served");
+                assert_eq!(resp.rows_in_batch, 1, "lone row must ride the window");
+                t0.elapsed().as_secs_f64() * 1e6
+            })
+            .collect();
+        let stats = service.shutdown();
+        latencies_us.sort_by(f64::total_cmp);
+        let pct = |v: &[f64], p: f64| v[((v.len() as f64 - 1.0) * p) as usize];
+        let (p50, p95) = (pct(&latencies_us, 0.5), pct(&latencies_us, 0.95));
+        println!(
+            "window {window_us:>4} µs: p50 {p50:>8.1} µs  p95 {p95:>8.1} µs \
+             ({} rows, {} deadline flushes)",
+            stats.dense_rows, stats.window_flushes
+        );
+        assert_eq!(stats.dense_rows, requests as u64 + 1);
+        assert!(
+            stats.window_flushes >= requests as u64,
+            "every lone row must be flushed by the deadline tick, got {}",
+            stats.window_flushes
+        );
+        harness::emit_json(
+            &format!("service_window_{window_us}us"),
+            &[
+                ("window_us", window_us as f64),
+                ("requests", requests as f64),
+                ("p50_us", p50),
+                ("p95_us", p95),
+                ("window_flushes", stats.window_flushes as f64),
+            ],
+        );
+    }
+}

@@ -76,8 +76,28 @@ pub trait Accelerator: Send {
     /// Run one layer (conv, FC or matmul — one uniform path).
     fn run_layer(&mut self, data: &LayerData) -> LayerOutput;
 
+    /// Borrowed fast path for the dense lane (§IV-D): run a dense layer
+    /// from tensors the caller already holds — `x: [1, H, 1, C_i]`,
+    /// `k: [1, 1, C_i, C_o]` — without re-allocating either. Steady-state
+    /// batched FC serving keeps its weight tensor resident (e.g. in a
+    /// [`crate::coordinator::DenseOp`]) and pays zero copies per flush.
+    fn run_dense_tensors(
+        &mut self,
+        layer: &Layer,
+        x: &Tensor4<i8>,
+        k: &Tensor4<i8>,
+        qparams: QParams,
+    ) -> LayerOutput {
+        assert!(layer.is_dense());
+        debug_assert_eq!(x.shape, [1, layer.h, 1, layer.ci], "dense x shape");
+        debug_assert_eq!(k.shape, [1, 1, layer.ci, layer.co], "dense k shape");
+        self.run_layer(&LayerData { layer, x, k, qparams })
+    }
+
     /// Convenience wrapper for the dense path (§IV-D): `m1: [H, C_i]`,
     /// `m2: [C_i, C_o]`, returning `[H, C_o]` through the same path.
+    /// Copies both operands into fresh tensors — hot callers should use
+    /// [`Accelerator::run_dense_tensors`] instead.
     fn run_dense(
         &mut self,
         layer: &Layer,
@@ -88,7 +108,7 @@ pub trait Accelerator: Send {
         assert!(layer.is_dense());
         let x = Tensor4::from_vec([1, layer.h, 1, layer.ci], m1.to_vec());
         let k = Tensor4::from_vec([1, 1, layer.ci, layer.co], m2.to_vec());
-        self.run_layer(&LayerData { layer, x: &x, k: &k, qparams })
+        self.run_dense_tensors(layer, &x, &k, qparams)
     }
 
     /// Cumulative counters across every layer run on this backend.

@@ -15,8 +15,8 @@
 //! The pool is deliberately generic: workers own arbitrary state `S`
 //! (an [`super::Accelerator`], a whole inference pipeline, …) built on
 //! the worker's own thread, and jobs are any `Send` payload. The
-//! serving layer ([`crate::coordinator::server`]) instantiates it with
-//! pipelines and request envelopes.
+//! serving layer ([`crate::coordinator::service`]) instantiates it
+//! with backends and request envelopes.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};

@@ -8,10 +8,16 @@
 //! feature width), packs them into one `[R, C_i]` engine pass, and
 //! scatters the results — the serving-side mechanism behind Table VI's
 //! 5–10× memory-access advantage over ZASCAD's batch-1 processing.
+//!
+//! The weights live in the [`DenseOp`] as a resident `[1, 1, C_i, C_o]`
+//! tensor built once at registration, so a flush borrows them through
+//! [`Accelerator::run_dense_tensors`] — steady-state batched serving
+//! allocates only the packed activation rows, never the weights.
 
 use crate::backend::{Accelerator, LayerOutput};
 use crate::layers::Layer;
 use crate::quant::QParams;
+use crate::tensor::Tensor4;
 
 /// A dense (FC / matmul) workload bound to weights.
 #[derive(Clone)]
@@ -19,9 +25,50 @@ pub struct DenseOp {
     pub name: String,
     pub ci: usize,
     pub co: usize,
-    /// `[C_i, C_o]` row-major weights.
-    pub weights: Vec<i8>,
+    /// Resident `[1, 1, C_i, C_o]` weight tensor, built once.
+    pub weights: Tensor4<i8>,
     pub qparams: QParams,
+}
+
+impl DenseOp {
+    /// Bind `[C_i, C_o]` row-major weights to a named dense op. The
+    /// weight tensor is materialized here, once, so every subsequent
+    /// batch pass borrows it instead of re-allocating.
+    pub fn new(
+        name: impl Into<String>,
+        ci: usize,
+        co: usize,
+        weights: Vec<i8>,
+        qparams: QParams,
+    ) -> Self {
+        assert_eq!(weights.len(), ci * co, "dense weights must be [C_i, C_o]");
+        Self { name: name.into(), ci, co, weights: Tensor4::from_vec([1, 1, ci, co], weights), qparams }
+    }
+
+    /// Run `rows` (each a `C_i`-wide feature vector) as **one**
+    /// `[N^f, C_i] · [C_i, C_o]` pass on any backend, scattering the
+    /// per-row outputs back in order. The weights are borrowed from the
+    /// op's resident tensor — no per-flush weight copy.
+    pub fn run_batch<B: Accelerator + ?Sized>(
+        &self,
+        rows: &[Vec<i8>],
+        backend: &mut B,
+    ) -> BatchResult {
+        assert!(!rows.is_empty(), "flush of an empty batch");
+        let nf = rows.len();
+        let layer = Layer::fully_connected(self.name.clone(), nf, self.ci, self.co);
+        let mut m1 = Vec::with_capacity(nf * self.ci);
+        for req in rows {
+            assert_eq!(req.len(), self.ci, "feature width mismatch");
+            m1.extend_from_slice(req);
+        }
+        let x = Tensor4::from_vec([1, nf, 1, self.ci], m1);
+        let out: LayerOutput = backend.run_dense_tensors(&layer, &x, &self.weights, self.qparams);
+        let outputs = (0..nf)
+            .map(|i| out.y_acc.data[i * self.co..(i + 1) * self.co].to_vec())
+            .collect();
+        BatchResult { outputs, clocks: out.clocks, dram_words: out.counters.dram_total() }
+    }
 }
 
 /// Collects dense requests and flushes them in `R`-row batches.
@@ -64,23 +111,9 @@ impl FcBatcher {
     /// any backend. `N^f` is the actual queue depth (≤ R): stragglers
     /// still run, they just reuse weights less.
     pub fn flush<B: Accelerator + ?Sized>(&mut self, backend: &mut B) -> BatchResult {
-        assert!(!self.pending.is_empty(), "flush of an empty batch");
-        let nf = self.pending.len();
-        let layer = Layer::fully_connected(self.op.name.clone(), nf, self.op.ci, self.op.co);
-        let mut m1 = Vec::with_capacity(nf * self.op.ci);
-        for req in &self.pending {
-            m1.extend_from_slice(req);
-        }
-        let out: LayerOutput = backend.run_dense(&layer, &m1, &self.op.weights, self.op.qparams);
-        let outputs = (0..nf)
-            .map(|i| out.y_acc.data[i * self.op.co..(i + 1) * self.op.co].to_vec())
-            .collect();
+        let result = self.op.run_batch(&self.pending, backend);
         self.pending.clear();
-        BatchResult {
-            outputs,
-            clocks: out.clocks,
-            dram_words: out.counters.dram_total(),
-        }
+        result
     }
 }
 
@@ -93,13 +126,7 @@ mod tests {
     use crate::tensor::{matmul_i8, Tensor4};
 
     fn op(ci: usize, co: usize) -> DenseOp {
-        DenseOp {
-            name: "fc".into(),
-            ci,
-            co,
-            weights: Tensor4::random([1, 1, ci, co], 9).data,
-            qparams: QParams::identity(),
-        }
+        DenseOp::new("fc", ci, co, Tensor4::random([1, 1, ci, co], 9).data, QParams::identity())
     }
 
     #[test]
@@ -114,7 +141,7 @@ mod tests {
         }
         let result = b.flush(&mut engine);
         for (req, out) in reqs.iter().zip(&result.outputs) {
-            let want = matmul_i8(req, &b.op.weights, 1, 12, 10);
+            let want = matmul_i8(req, &b.op.weights.data, 1, 12, 10);
             assert_eq!(*out, want);
         }
     }
@@ -182,5 +209,22 @@ mod tests {
         assert_eq!(r1.outputs, r2.outputs);
         assert_eq!(r1.clocks, r2.clocks);
         assert_eq!(r1.dram_words, r2.dram_words);
+    }
+
+    #[test]
+    fn run_batch_borrows_resident_weights() {
+        // The perf fix: the op's weight tensor is built once at
+        // `DenseOp::new` and identical results come out of repeated
+        // passes that only borrow it.
+        let op = op(16, 8);
+        let mut backend = Functional::new(KrakenConfig::new(4, 8));
+        let rows: Vec<Vec<i8>> =
+            (0..3).map(|i| Tensor4::random([1, 1, 1, 16], 500 + i).data).collect();
+        let a = op.run_batch(&rows, &mut backend);
+        let b = op.run_batch(&rows, &mut backend);
+        assert_eq!(a.outputs, b.outputs);
+        for (row, out) in rows.iter().zip(&a.outputs) {
+            assert_eq!(*out, matmul_i8(row, &op.weights.data, 1, 16, 8));
+        }
     }
 }

@@ -9,25 +9,32 @@
 //! * a per-network [`scheduler::InferencePipeline`] that streams layers
 //!   back-to-back (requantizing and re-tiling `Ŷ_j → X̂_{j+1}` between
 //!   passes, running host ops like max-pool that the benchmark CNNs
-//!   need);
-//! * an [`batcher::FcBatcher`] collecting dense requests into `R`-row
-//!   batches (batch = `R`, §IV-D);
-//! * a threaded [`server::InferenceServer`] sharding requests across a
-//!   pool of N backend instances with work-stealing dispatch
-//!   ([`crate::backend::pool`]), with latency/throughput accounting at
-//!   the modeled 400/200 MHz operating points. Worker panics are
-//!   isolated per request ([`server::RunError`]), and a configured
-//!   dense lane routes concurrent FC/matmul traffic through the
-//!   batcher so requests share `R`-row passes — composing with
-//!   [`crate::partition::PartitionedPool`] backends (batch first, then
-//!   split).
+//!   need) — [`scheduler::run_stages`] is the same body over shared,
+//!   read-only stages;
+//! * a [`batcher::FcBatcher`] / [`batcher::DenseOp`] collecting dense
+//!   requests into `R`-row batches run as one pass (batch = `R`,
+//!   §IV-D), borrowing the op's resident weight tensor per flush;
+//! * the serving front-end ([`service`]): a [`service::ServiceBuilder`]
+//!   configures backend kind, pool width, partition factor and batching
+//!   policy (row capacity + time-window flush), registers named models
+//!   (pipelines and dense ops), and builds one [`service::KrakenService`]
+//!   with a single typed entry point — `submit(model, payload) ->
+//!   Ticket<T>` — over a work-stealing pool
+//!   ([`crate::backend::pool`]). Worker panics are isolated per request
+//!   ([`service::RunError`]); dense lanes flush on capacity, on the
+//!   background deadline tick, and at shutdown; partitioned backends
+//!   ([`crate::partition::PartitionedPool`]) compose batch-first-then-split.
 
 pub mod batcher;
 pub mod scheduler;
-pub mod server;
+pub mod service;
 
 pub use batcher::{BatchResult, DenseOp, FcBatcher};
-pub use scheduler::{tiny_cnn_pipeline, InferencePipeline, PipelineReport, Stage, StageOp};
-pub use server::{
-    DenseResponse, DenseResult, InferenceServer, Response, RunError, ServeResult, ServeStats,
+pub use scheduler::{
+    run_stages, tiny_cnn_pipeline, tiny_cnn_stages, InferencePipeline, PipelineReport, Stage,
+    StageOp,
+};
+pub use service::{
+    BackendKind, DenseResponse, KrakenService, Payload, Response, RunError, ServiceBuilder,
+    ServiceStats, Ticket,
 };

@@ -30,6 +30,7 @@ pub enum StageOp {
 }
 
 /// One layer + its weights + glue.
+#[derive(Clone)]
 pub struct Stage {
     pub layer: Layer,
     pub weights: Tensor4<i8>,
@@ -65,48 +66,63 @@ impl<B: Accelerator> InferencePipeline<B> {
 
     /// Run one input through every stage.
     pub fn run(&mut self, x: &Tensor4<i8>) -> PipelineReport {
-        let before = self.backend.counters();
-        let mut act = x.clone();
-        let mut logits: Vec<i32> = Vec::new();
-        let mut stage_clocks = Vec::with_capacity(self.stages.len());
-        let mut modeled_s = 0.0;
-        let n_stages = self.stages.len();
-        for (j, stage) in self.stages.iter().enumerate() {
-            let out = if stage.layer.is_dense() {
-                let flat = act.data.clone();
-                self.backend
-                    .run_dense(&stage.layer, &flat, &stage.weights.data, stage.qparams)
-            } else {
-                self.backend.run_layer(&LayerData {
-                    layer: &stage.layer,
-                    x: &act,
-                    k: &stage.weights,
-                    qparams: stage.qparams,
-                })
-            };
-            stage_clocks.push(out.clocks);
-            modeled_s += self.backend.modeled_s(stage.layer.kind, out.clocks);
-            if j + 1 == n_stages {
-                logits = out.y_acc.data.clone();
+        run_stages(&mut self.backend, &self.stages, x)
+    }
+}
+
+/// Run one input through `stages` on any backend — the pipeline body,
+/// factored out so callers that share read-only stages across workers
+/// (e.g. [`crate::coordinator::KrakenService`]'s named-model registry)
+/// need only a `&mut` backend, not an owning pipeline per model.
+pub fn run_stages<B: Accelerator + ?Sized>(
+    backend: &mut B,
+    stages: &[Stage],
+    x: &Tensor4<i8>,
+) -> PipelineReport {
+    let before = backend.counters();
+    let mut act = x.clone();
+    let mut logits: Vec<i32> = Vec::new();
+    let mut stage_clocks = Vec::with_capacity(stages.len());
+    let mut modeled_s = 0.0;
+    let n_stages = stages.len();
+    for (j, stage) in stages.iter().enumerate() {
+        let out = if stage.layer.is_dense() {
+            // Borrowed fast path: repack the activation without copying
+            // and borrow the stage's resident weight tensor.
+            let flat = std::mem::take(&mut act.data);
+            let x_rows =
+                Tensor4::from_vec([1, stage.layer.h, 1, stage.layer.ci], flat);
+            backend.run_dense_tensors(&stage.layer, &x_rows, &stage.weights, stage.qparams)
+        } else {
+            backend.run_layer(&LayerData {
+                layer: &stage.layer,
+                x: &act,
+                k: &stage.weights,
+                qparams: stage.qparams,
+            })
+        };
+        stage_clocks.push(out.clocks);
+        modeled_s += backend.modeled_s(stage.layer.kind, out.clocks);
+        if j + 1 == n_stages {
+            logits = out.y_acc.data.clone();
+        }
+        act = match stage.post {
+            StageOp::None => out.y_q,
+            StageOp::MaxPool2x2 => maxpool2x2(&out.y_q),
+            StageOp::Flatten => {
+                let flat = out.y_q.data.clone();
+                let len = flat.len();
+                Tensor4::from_vec([1, 1, 1, len], flat)
             }
-            act = match stage.post {
-                StageOp::None => out.y_q,
-                StageOp::MaxPool2x2 => maxpool2x2(&out.y_q),
-                StageOp::Flatten => {
-                    let flat = out.y_q.data.clone();
-                    let len = flat.len();
-                    Tensor4::from_vec([1, 1, 1, len], flat)
-                }
-            };
-        }
-        let counters = self.backend.counters().diff(&before);
-        PipelineReport {
-            logits,
-            total_clocks: stage_clocks.iter().sum(),
-            stage_clocks,
-            counters,
-            modeled_ms: modeled_s * 1e3,
-        }
+        };
+    }
+    let counters = backend.counters().diff(&before);
+    PipelineReport {
+        logits,
+        total_clocks: stage_clocks.iter().sum(),
+        stage_clocks,
+        counters,
+        modeled_ms: modeled_s * 1e3,
     }
 }
 
@@ -140,10 +156,13 @@ pub const TINY_SCALE: f64 = 1.0 / 64.0;
 pub const X_SEED: u64 = 42;
 pub const W_SEED_BASE: u64 = 1000;
 
-/// Build the TinyCNN pipeline with seeded weights over any backend —
-/// the exact network the `tiny_cnn` AOT artifact computes
-/// (`rust/tests/e2e_runtime.rs` asserts bit-equality of the logits).
-pub fn tiny_cnn_pipeline<B: Accelerator>(backend: B) -> InferencePipeline<B> {
+/// The TinyCNN stage list with seeded weights — the exact network the
+/// `tiny_cnn` AOT artifact computes (`rust/tests/e2e_runtime.rs`
+/// asserts bit-equality of the logits). Backend-free, so the same
+/// stages can be registered as a named model in a
+/// [`crate::coordinator::KrakenService`] or wrapped in an
+/// [`InferencePipeline`].
+pub fn tiny_cnn_stages() -> Vec<Stage> {
     let net = crate::networks::tiny_cnn();
     let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
     let mut stages = Vec::new();
@@ -161,7 +180,12 @@ pub fn tiny_cnn_pipeline<B: Accelerator>(backend: B) -> InferencePipeline<B> {
         };
         stages.push(Stage { layer: layer.clone(), weights, qparams: q_relu, post });
     }
-    InferencePipeline::new(backend, stages)
+    stages
+}
+
+/// Build the TinyCNN pipeline over any backend (see [`tiny_cnn_stages`]).
+pub fn tiny_cnn_pipeline<B: Accelerator>(backend: B) -> InferencePipeline<B> {
+    InferencePipeline::new(backend, tiny_cnn_stages())
 }
 
 #[cfg(test)]

@@ -1,0 +1,1170 @@
+//! The Kraken serving front-end: one builder, one registry, one queue.
+//!
+//! Kraken's pitch is *one uniform dataflow* for conv, FC and matmul
+//! (§IV-D); this module is the serving-side mirror of that claim. A
+//! [`ServiceBuilder`] declaratively configures the backend kind
+//! (cycle-accurate engine / functional / baseline estimator), the pool
+//! width, the multi-chip partition factor, and the dense batching
+//! policy (row capacity **and** a time-window flush), and registers any
+//! number of *named models* — full layer pipelines and standalone dense
+//! ops alike — into a single [`KrakenService`].
+//!
+//! Every submission goes through one typed entry point:
+//!
+//! ```text
+//! service.submit("tiny_cnn", image)   -> Ticket<Response>       (pipeline model)
+//! service.submit("ranker_fc", row)    -> Ticket<DenseResponse>  (dense model)
+//! ```
+//!
+//! A [`Ticket`] replaces the raw `mpsc::Receiver`s of the old
+//! `InferenceServer` trio: `wait()` blocks for the result, `try_wait()`
+//! polls. Worker panics are isolated per request and surface as
+//! [`RunError`]s through the ticket — one poisoned request cannot take
+//! down the service or strand sibling requests, in any model.
+//!
+//! Dense traffic batches per model: rows accumulate to the service's
+//! row capacity (`R`, §IV-D) and flush as **one** shared engine pass.
+//! With a [`ServiceBuilder::flush_window`], a background deadline tick
+//! owned by the service flushes stragglers when the oldest pending row
+//! ages past the window — low-traffic lanes get bounded latency without
+//! manual `flush` calls. Shutdown (and even a plain `drop`) performs a
+//! final deadline flush, so queued-but-unflushed rows always get
+//! responses.
+//!
+//! Batching composes with partitioning: rows batch first, then a
+//! `partition(P)` service splits the *batched* layer across `P` chips
+//! ([`crate::partition::PartitionedPool`]).
+
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::arch::KrakenConfig;
+use crate::backend::pool::{panic_reason, ShardedPool};
+use crate::backend::{Accelerator, Estimator, Functional};
+use crate::partition::PartitionedPool;
+use crate::sim::Engine;
+use crate::tensor::Tensor4;
+
+use super::batcher::DenseOp;
+use super::scheduler::{run_stages, Stage};
+
+/// A request that could not be served: the model was unknown, the
+/// payload malformed, or the worker's backend panicked (or died) while
+/// processing it.
+#[derive(Debug, Clone)]
+pub struct RunError {
+    /// Worker (shard) the request failed on; `usize::MAX` when the
+    /// failure happened before any worker touched it.
+    pub worker: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request failed on worker {}: {}", self.worker, self.reason)
+    }
+}
+
+impl std::error::Error for RunError {}
+
+/// One pipeline-model request's result.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<i32>,
+    /// Time spent queued before a worker picked the request up.
+    pub queue_us: f64,
+    /// Modeled device time (clock cycles / operating frequency).
+    pub device_ms: f64,
+    /// Backend clock cycles consumed.
+    pub clocks: u64,
+    /// Worker (shard) that served the request.
+    pub worker: usize,
+}
+
+/// One dense-model request's result.
+#[derive(Debug, Clone)]
+pub struct DenseResponse {
+    /// The request's `C_o` int32 outputs.
+    pub output: Vec<i32>,
+    /// Rows that shared this request's engine pass (`N^f ≤ R`).
+    pub rows_in_batch: usize,
+    /// Clocks of the shared pass (not per-row).
+    pub clocks: u64,
+    /// DRAM words of the shared pass (weights fetched once).
+    pub dram_words: u64,
+    /// Time this row spent queued from its submission until a worker
+    /// picked the batch up — lane wait (capacity fill or flush window)
+    /// plus pool queueing.
+    pub queue_us: f64,
+    /// Worker (shard) that served the batch.
+    pub worker: usize,
+}
+
+/// The pending result of one submission. `wait` blocks, `try_wait`
+/// polls; both yield `Err(RunError)` when the request failed or the
+/// service stopped before answering.
+#[must_use = "a Ticket holds the request's only result channel"]
+pub struct Ticket<T> {
+    rx: mpsc::Receiver<Result<T, RunError>>,
+}
+
+impl<T> Ticket<T> {
+    fn channel() -> (mpsc::Sender<Result<T, RunError>>, Self) {
+        let (tx, rx) = mpsc::channel();
+        (tx, Self { rx })
+    }
+
+    /// A ticket already resolved to an error (bad model name, payload
+    /// shape mismatch, …) — submission never panics the caller.
+    fn failed(reason: impl Into<String>) -> Self {
+        let (tx, ticket) = Self::channel();
+        let _ = tx.send(Err(RunError { worker: usize::MAX, reason: reason.into() }));
+        ticket
+    }
+
+    /// Block until the result arrives.
+    pub fn wait(self) -> Result<T, RunError> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(RunError {
+                worker: usize::MAX,
+                reason: "service stopped before responding".into(),
+            })
+        })
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<T, RunError>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(RunError {
+                worker: usize::MAX,
+                reason: "service stopped before responding".into(),
+            })),
+        }
+    }
+}
+
+/// Aggregate serving statistics, returned by [`KrakenService::shutdown`].
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Requests answered successfully (dense rows count individually).
+    pub completed: u64,
+    /// Requests that returned a [`RunError`] from a worker.
+    pub failed: u64,
+    pub total_device_ms: f64,
+    pub total_clocks: u64,
+    /// Workers (= backend instances) in the pool.
+    pub workers: usize,
+    /// Requests served off a stolen (non-home-shard) job.
+    pub stolen: u64,
+    /// Dense batches flushed (each is one shared engine pass).
+    pub dense_flushes: u64,
+    /// Dense rows served across those flushes.
+    pub dense_rows: u64,
+    /// Dense dispatches triggered by the time-window deadline tick
+    /// (rather than a full batch or shutdown). Counts dispatches, not
+    /// completed passes: a deadline-dispatched batch whose worker run
+    /// panics still counts here (and in `failed`, not `dense_flushes`).
+    pub window_flushes: u64,
+    /// Successful completions per registered model.
+    pub per_model: HashMap<String, u64>,
+}
+
+impl ServiceStats {
+    /// Pipeline-model requests completed. `completed` and
+    /// `total_clocks` include dense rows, but `total_device_ms` covers
+    /// only pipeline runs — divide it by *this* count, not `completed`,
+    /// when deriving modeled throughput.
+    pub fn pipeline_completed(&self) -> u64 {
+        self.completed - self.dense_rows
+    }
+}
+
+/// Which backend the builder constructs per worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The clock-accurate microarchitecture simulator ([`Engine`]).
+    Engine,
+    /// Bit-exact outputs + eq. (17)/(20) closed forms ([`Functional`]).
+    Functional,
+    /// Calibrated Eyeriss baseline estimator.
+    Eyeriss,
+    /// Calibrated MMIE/ZASCAD baseline estimator.
+    Zascad,
+    /// Calibrated CARLA baseline estimator.
+    Carla,
+}
+
+/// A model as registered on the builder.
+enum BuilderModel {
+    Pipeline(Vec<Stage>),
+    Dense(DenseOp),
+}
+
+/// Declarative configuration for a [`KrakenService`].
+///
+/// ```no_run
+/// use kraken::coordinator::{tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
+/// use kraken::quant::QParams;
+/// use kraken::tensor::Tensor4;
+/// use std::time::Duration;
+///
+/// let service = ServiceBuilder::new()
+///     .backend(BackendKind::Engine)
+///     .workers(4)
+///     .partition(2)
+///     .batch_capacity(7)
+///     .flush_window(Duration::from_micros(200))
+///     .register_pipeline("tiny_cnn", tiny_cnn_stages())
+///     .register_dense(
+///         "ranker_fc",
+///         DenseOp::new("fc", 64, 16, Tensor4::random([1, 1, 64, 16], 1).data, QParams::identity()),
+///     )
+///     .build();
+/// let ticket = service.submit("tiny_cnn", Tensor4::random([1, 28, 28, 3], 7));
+/// let response = ticket.wait().expect("served");
+/// ```
+pub struct ServiceBuilder {
+    cfg: KrakenConfig,
+    backend: BackendKind,
+    workers: usize,
+    partition: usize,
+    capacity: Option<usize>,
+    window: Option<Duration>,
+    models: Vec<(String, BuilderModel)>,
+}
+
+impl Default for ServiceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServiceBuilder {
+    /// Defaults: the paper's 7×96 configuration, one cycle-accurate
+    /// engine, no partitioning, dense batch capacity `R`, no window.
+    pub fn new() -> Self {
+        Self {
+            cfg: KrakenConfig::paper(),
+            backend: BackendKind::Engine,
+            workers: 1,
+            partition: 1,
+            capacity: None,
+            window: None,
+            models: Vec::new(),
+        }
+    }
+
+    /// Static array configuration for every constructed backend.
+    pub fn config(mut self, cfg: KrakenConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Backend kind constructed per worker (see [`BackendKind`]).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
+    /// Pool width: `n` workers, each owning one backend instance on its
+    /// own thread, fed by work-stealing dispatch.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Multi-chip partition factor: with `p > 1` every worker's backend
+    /// becomes a [`PartitionedPool`] of `p` chips, so each request's
+    /// layers are split across chips (intra-request data parallelism on
+    /// top of the pool's request parallelism).
+    pub fn partition(mut self, p: usize) -> Self {
+        assert!(p >= 1, "partition factor must be at least 1");
+        self.partition = p;
+        self
+    }
+
+    /// Dense batch row capacity (defaults to the configuration's `R`,
+    /// §IV-D: fill the PE rows, fetch weights once).
+    pub fn batch_capacity(mut self, rows: usize) -> Self {
+        assert!(rows >= 1, "dense batch capacity must be at least 1");
+        self.capacity = Some(rows);
+        self
+    }
+
+    /// Time-window flush: a background deadline tick flushes any dense
+    /// lane whose oldest pending row is older than `window`, so
+    /// low-traffic lanes get bounded latency without filling a batch.
+    pub fn flush_window(mut self, window: Duration) -> Self {
+        self.window = Some(window);
+        self
+    }
+
+    /// Register a named pipeline model (an ordered stage list — conv /
+    /// FC layers plus host glue). The stages are shared read-only
+    /// across all workers; weights are **not** duplicated per worker.
+    pub fn register_pipeline(mut self, name: impl Into<String>, stages: Vec<Stage>) -> Self {
+        self.push_model(name.into(), BuilderModel::Pipeline(stages));
+        self
+    }
+
+    /// Register a named dense op: concurrent rows submitted to it batch
+    /// into shared `R`-row passes.
+    pub fn register_dense(mut self, name: impl Into<String>, op: DenseOp) -> Self {
+        self.push_model(name.into(), BuilderModel::Dense(op));
+        self
+    }
+
+    fn push_model(&mut self, name: String, model: BuilderModel) {
+        assert!(
+            !self.models.iter().any(|(n, _)| *n == name),
+            "model '{name}' registered twice"
+        );
+        self.models.push((name, model));
+    }
+
+    /// Build with the configured [`BackendKind`].
+    pub fn build(self) -> KrakenService {
+        let cfg = self.cfg.clone();
+        match self.backend {
+            BackendKind::Engine => self.build_with(move |_| Engine::new(cfg.clone(), 8)),
+            BackendKind::Functional => self.build_with(move |_| Functional::new(cfg.clone())),
+            BackendKind::Eyeriss => self.build_with(|_| Estimator::eyeriss()),
+            BackendKind::Zascad => self.build_with(|_| Estimator::zascad()),
+            BackendKind::Carla => self.build_with(|_| Estimator::carla()),
+        }
+    }
+
+    /// Build over custom backends: `make_backend(i)` runs on worker
+    /// `i`'s own thread. With `partition(p)`, `make_backend` is called
+    /// once per *chip* (`workers · p` times, indexed globally) and each
+    /// worker wraps its `p` chips in a [`PartitionedPool`].
+    pub fn build_with<B, F>(self, make_backend: F) -> KrakenService
+    where
+        B: Accelerator + 'static,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        if self.partition > 1 {
+            let cfg = self.cfg.clone();
+            let p = self.partition;
+            let make = Arc::new(make_backend);
+            self.spawn(move |w| {
+                let make = Arc::clone(&make);
+                PartitionedPool::spawn(cfg.clone(), p, move |s| make(w * p + s))
+            })
+        } else {
+            self.spawn(make_backend)
+        }
+    }
+
+    fn spawn<B, F>(self, make_backend: F) -> KrakenService
+    where
+        B: Accelerator + 'static,
+        F: Fn(usize) -> B + Send + Sync + 'static,
+    {
+        assert!(self.workers >= 1, "service needs at least one worker");
+        let capacity = self.capacity.unwrap_or_else(|| self.cfg.r.max(1));
+        let mut per_model = HashMap::new();
+        let mut models = HashMap::new();
+        for (name, model) in self.models {
+            per_model.insert(name.clone(), 0u64);
+            let shared: Arc<str> = Arc::from(name.as_str());
+            let kind = match model {
+                BuilderModel::Pipeline(stages) => ModelKind::Pipeline(Arc::new(stages)),
+                BuilderModel::Dense(op) => ModelKind::Dense(DenseLane {
+                    op: Arc::new(op),
+                    pending: Mutex::new(Vec::new()),
+                }),
+            };
+            models.insert(name, ModelEntry { name: shared, kind });
+        }
+        let stats = Arc::new(Mutex::new(ServiceStats {
+            workers: self.workers,
+            per_model,
+            ..Default::default()
+        }));
+        let stats_in_pool = Arc::clone(&stats);
+        let pool = ShardedPool::spawn(
+            self.workers,
+            make_backend,
+            move |worker_idx, backend: &mut B, job: Job| {
+                handle_job(worker_idx, backend, job, &stats_in_pool)
+            },
+        );
+        let inner = Arc::new(ServiceInner {
+            pool,
+            models,
+            capacity,
+            window: self.window,
+            flush: FlushSignal::default(),
+            stats,
+        });
+        let flusher = self.window.map(|_| {
+            let inner = Arc::clone(&inner);
+            std::thread::spawn(move || flusher_loop(&inner))
+        });
+        KrakenService { inner: Some(inner), flusher }
+    }
+}
+
+/// One queued unit of work for the worker pool.
+enum Job {
+    /// Full-pipeline inference for one named model.
+    Infer {
+        model: Arc<str>,
+        stages: Arc<Vec<Stage>>,
+        input: Tensor4<i8>,
+        enqueued: Instant,
+        resp: mpsc::Sender<Result<Response, RunError>>,
+    },
+    /// One flushed dense batch: `N^f` feature rows sharing a single
+    /// `R`-row engine pass, one response channel and submit timestamp
+    /// per row (rows may have waited in the lane for a window tick).
+    Dense {
+        model: Arc<str>,
+        op: Arc<DenseOp>,
+        rows: Vec<Vec<i8>>,
+        enqueued: Vec<Instant>,
+        resps: Vec<mpsc::Sender<Result<DenseResponse, RunError>>>,
+    },
+}
+
+/// A registered model inside the running service.
+struct ModelEntry {
+    name: Arc<str>,
+    kind: ModelKind,
+}
+
+enum ModelKind {
+    Pipeline(Arc<Vec<Stage>>),
+    Dense(DenseLane),
+}
+
+/// A dense model's lane: rows accumulate here until the batch fills or
+/// the deadline tick fires.
+struct DenseLane {
+    op: Arc<DenseOp>,
+    pending: Mutex<Vec<PendingRow>>,
+}
+
+struct PendingRow {
+    features: Vec<i8>,
+    resp: mpsc::Sender<Result<DenseResponse, RunError>>,
+    /// When the row was submitted (reported as queueing time).
+    enqueued: Instant,
+    /// When the window policy must have flushed this row.
+    due: Instant,
+}
+
+/// Wakeup channel between submitters and the deadline-flush thread.
+#[derive(Default)]
+struct FlushSignal {
+    state: Mutex<FlushState>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct FlushState {
+    shutdown: bool,
+}
+
+impl FlushSignal {
+    /// Wake the flusher (new earliest deadline, or shutdown). Taking
+    /// the state lock makes the notify atomic with the flusher's lane
+    /// scan, so a row enqueued between scan and wait is never missed.
+    fn kick(&self) {
+        let _guard = self.state.lock().expect("flush state");
+        self.cv.notify_all();
+    }
+}
+
+struct ServiceInner {
+    pool: ShardedPool<Job>,
+    models: HashMap<String, ModelEntry>,
+    capacity: usize,
+    window: Option<Duration>,
+    flush: FlushSignal,
+    stats: Arc<Mutex<ServiceStats>>,
+}
+
+impl ServiceInner {
+    fn dense_lanes(&self) -> impl Iterator<Item = (&Arc<str>, &DenseLane)> + '_ {
+        self.models.values().filter_map(|entry| match &entry.kind {
+            ModelKind::Dense(lane) => Some((&entry.name, lane)),
+            ModelKind::Pipeline(_) => None,
+        })
+    }
+
+    /// Earliest deadline across every dense lane's oldest pending row.
+    fn earliest_due(&self) -> Option<Instant> {
+        self.dense_lanes()
+            .filter_map(|(_, lane)| {
+                lane.pending.lock().expect("dense lane").first().map(|row| row.due)
+            })
+            .min()
+    }
+
+    /// Drain one lane in capacity-sized batches for as long as
+    /// `should_take` holds for its oldest pending row. Each batch is
+    /// taken under one lane lock and dispatched as one shared pass;
+    /// `window_triggered` marks deadline-tick flushes in the stats.
+    fn drain_lane(
+        &self,
+        name: &Arc<str>,
+        lane: &DenseLane,
+        window_triggered: bool,
+        should_take: impl Fn(&PendingRow) -> bool,
+    ) {
+        loop {
+            let batch = {
+                let mut pending = lane.pending.lock().expect("dense lane");
+                if !pending.first().is_some_and(&should_take) {
+                    break;
+                }
+                let take = pending.len().min(self.capacity);
+                pending.drain(..take).collect::<Vec<_>>()
+            };
+            if window_triggered {
+                self.stats.lock().expect("service stats").window_flushes += 1;
+            }
+            self.dispatch_dense(name, &lane.op, batch);
+        }
+    }
+
+    /// Flush every lane whose oldest row's deadline has passed.
+    fn flush_due(&self, now: Instant) {
+        for (name, lane) in self.dense_lanes() {
+            self.drain_lane(name, lane, true, |row| row.due <= now);
+        }
+    }
+
+    /// Drain every dense lane completely (manual flush / shutdown).
+    fn flush_all(&self) {
+        for (name, lane) in self.dense_lanes() {
+            self.drain_lane(name, lane, false, |_| true);
+        }
+    }
+
+    fn dispatch_dense(&self, model: &Arc<str>, op: &Arc<DenseOp>, batch: Vec<PendingRow>) {
+        let mut rows = Vec::with_capacity(batch.len());
+        let mut enqueued = Vec::with_capacity(batch.len());
+        let mut resps = Vec::with_capacity(batch.len());
+        for row in batch {
+            rows.push(row.features);
+            enqueued.push(row.enqueued);
+            resps.push(row.resp);
+        }
+        self.pool.submit(Job::Dense {
+            model: Arc::clone(model),
+            op: Arc::clone(op),
+            rows,
+            enqueued,
+            resps,
+        });
+    }
+}
+
+/// The background deadline tick: sleeps until the earliest pending
+/// row's deadline (or a kick), then flushes every expired lane.
+fn flusher_loop(inner: &ServiceInner) {
+    let mut guard = inner.flush.state.lock().expect("flush state");
+    loop {
+        if guard.shutdown {
+            return;
+        }
+        let now = Instant::now();
+        match inner.earliest_due() {
+            None => {
+                guard = inner.flush.cv.wait(guard).expect("flush state");
+            }
+            Some(due) if due <= now => {
+                drop(guard);
+                inner.flush_due(now);
+                guard = inner.flush.state.lock().expect("flush state");
+            }
+            Some(due) => {
+                let (g, _timeout) = inner
+                    .flush
+                    .cv
+                    .wait_timeout(guard, due - now)
+                    .expect("flush state");
+                guard = g;
+            }
+        }
+    }
+}
+
+/// Process one job on a worker, isolating panics per request.
+fn handle_job<B: Accelerator>(
+    worker_idx: usize,
+    backend: &mut B,
+    job: Job,
+    stats: &Mutex<ServiceStats>,
+) {
+    match job {
+        Job::Infer { model, stages, input, enqueued, resp } => {
+            let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+            let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                run_stages(backend, &stages, &input)
+            }));
+            match run {
+                Ok(report) => {
+                    {
+                        let mut s = stats.lock().expect("service stats");
+                        s.completed += 1;
+                        s.total_device_ms += report.modeled_ms;
+                        s.total_clocks += report.total_clocks;
+                        if let Some(count) = s.per_model.get_mut(&*model) {
+                            *count += 1;
+                        }
+                    }
+                    let _ = resp.send(Ok(Response {
+                        logits: report.logits,
+                        queue_us,
+                        device_ms: report.modeled_ms,
+                        clocks: report.total_clocks,
+                        worker: worker_idx,
+                    }));
+                }
+                Err(payload) => {
+                    stats.lock().expect("service stats").failed += 1;
+                    let _ = resp.send(Err(RunError {
+                        worker: worker_idx,
+                        reason: panic_reason(payload),
+                    }));
+                }
+            }
+        }
+        Job::Dense { model, op, rows, enqueued, resps } => {
+            // Per-row queueing time: lane wait (capacity / window) plus
+            // pool queue, measured from each row's own submission.
+            let queue_us: Vec<f64> =
+                enqueued.iter().map(|t| t.elapsed().as_secs_f64() * 1e6).collect();
+            let nf = rows.len();
+            let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                // Batch first, then split: one [N^f, C_i]·[C_i, C_o]
+                // pass; a PartitionedPool backend shards *that*.
+                op.run_batch(&rows, backend)
+            }));
+            match run {
+                Ok(result) => {
+                    {
+                        let mut s = stats.lock().expect("service stats");
+                        s.completed += nf as u64;
+                        s.dense_flushes += 1;
+                        s.dense_rows += nf as u64;
+                        s.total_clocks += result.clocks;
+                        if let Some(count) = s.per_model.get_mut(&*model) {
+                            *count += nf as u64;
+                        }
+                    }
+                    for ((output, resp), queue_us) in
+                        result.outputs.into_iter().zip(resps).zip(queue_us)
+                    {
+                        let _ = resp.send(Ok(DenseResponse {
+                            output,
+                            rows_in_batch: nf,
+                            clocks: result.clocks,
+                            dram_words: result.dram_words,
+                            queue_us,
+                            worker: worker_idx,
+                        }));
+                    }
+                }
+                Err(payload) => {
+                    stats.lock().expect("service stats").failed += nf as u64;
+                    let reason = panic_reason(payload);
+                    for resp in resps {
+                        let _ = resp.send(Err(RunError {
+                            worker: worker_idx,
+                            reason: reason.clone(),
+                        }));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A payload accepted by [`KrakenService::submit`]. Implemented for
+/// [`Tensor4<i8>`] (pipeline models → [`Response`]) and `Vec<i8>`
+/// (dense-model feature rows → [`DenseResponse`]).
+pub trait Payload: Sized {
+    type Reply;
+    #[doc(hidden)]
+    fn dispatch(self, service: &KrakenService, model: &str) -> Ticket<Self::Reply>;
+}
+
+impl Payload for Tensor4<i8> {
+    type Reply = Response;
+    fn dispatch(self, service: &KrakenService, model: &str) -> Ticket<Response> {
+        service.submit_infer(model, self)
+    }
+}
+
+impl Payload for Vec<i8> {
+    type Reply = DenseResponse;
+    fn dispatch(self, service: &KrakenService, model: &str) -> Ticket<DenseResponse> {
+        service.submit_row(model, self)
+    }
+}
+
+/// Handle to the running service: the worker pool, the model registry,
+/// the dense lanes and (if configured) the deadline-flush thread.
+pub struct KrakenService {
+    /// `Some` until `shutdown` consumes it; `Drop` still drains.
+    inner: Option<Arc<ServiceInner>>,
+    flusher: Option<JoinHandle<()>>,
+}
+
+impl KrakenService {
+    /// Start configuring a service (alias for [`ServiceBuilder::new`]).
+    pub fn builder() -> ServiceBuilder {
+        ServiceBuilder::new()
+    }
+
+    fn inner(&self) -> &Arc<ServiceInner> {
+        self.inner.as_ref().expect("service inner present until shutdown")
+    }
+
+    /// Workers (= backend instances) in the pool.
+    pub fn workers(&self) -> usize {
+        self.inner().pool.workers()
+    }
+
+    /// Registered model names (sorted).
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.inner().models.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Submit one payload to a named model. Pipeline models take a
+    /// [`Tensor4<i8>`] image; dense models take a `Vec<i8>` feature
+    /// row. Unknown names or mismatched payloads resolve the ticket to
+    /// an error instead of panicking.
+    pub fn submit<P: Payload>(&self, model: &str, payload: P) -> Ticket<P::Reply> {
+        payload.dispatch(self, model)
+    }
+
+    /// Submit a whole batch of pipeline inputs in one queue operation,
+    /// one ticket per input (in submission order) — the batched-dispatch
+    /// fast path.
+    pub fn submit_batch(
+        &self,
+        model: &str,
+        inputs: impl IntoIterator<Item = Tensor4<i8>>,
+    ) -> Vec<Ticket<Response>> {
+        let inner = self.inner();
+        let Some(entry) = inner.models.get(model) else {
+            return inputs
+                .into_iter()
+                .map(|_| Ticket::failed(unknown_model(model, inner)))
+                .collect();
+        };
+        let ModelKind::Pipeline(stages) = &entry.kind else {
+            return inputs
+                .into_iter()
+                .map(|_| {
+                    Ticket::failed(format!(
+                        "model '{model}' is a dense op; submit Vec<i8> feature rows"
+                    ))
+                })
+                .collect();
+        };
+        let mut tickets = Vec::new();
+        let jobs: Vec<Job> = inputs
+            .into_iter()
+            .map(|input| {
+                let (tx, ticket) = Ticket::channel();
+                tickets.push(ticket);
+                Job::Infer {
+                    model: Arc::clone(&entry.name),
+                    stages: Arc::clone(stages),
+                    input,
+                    enqueued: Instant::now(),
+                    resp: tx,
+                }
+            })
+            .collect();
+        inner.pool.submit_batch(jobs);
+        tickets
+    }
+
+    /// Blocking convenience: submit to a pipeline model and wait.
+    pub fn infer(&self, model: &str, input: Tensor4<i8>) -> Result<Response, RunError> {
+        self.submit(model, input).wait()
+    }
+
+    /// Manually flush every dense lane now (the deadline tick and
+    /// shutdown do this automatically).
+    pub fn flush(&self) {
+        self.inner().flush_all();
+    }
+
+    fn submit_infer(&self, model: &str, input: Tensor4<i8>) -> Ticket<Response> {
+        // One lookup/validation/dispatch path for single and batched
+        // pipeline submissions.
+        let mut tickets = self.submit_batch(model, std::iter::once(input));
+        tickets.pop().expect("one ticket per submitted input")
+    }
+
+    fn submit_row(&self, model: &str, features: Vec<i8>) -> Ticket<DenseResponse> {
+        let inner = self.inner();
+        let Some(entry) = inner.models.get(model) else {
+            return Ticket::failed(unknown_model(model, inner));
+        };
+        let ModelKind::Dense(lane) = &entry.kind else {
+            return Ticket::failed(format!(
+                "model '{model}' is a pipeline; submit a Tensor4<i8> input"
+            ));
+        };
+        if features.len() != lane.op.ci {
+            return Ticket::failed(format!(
+                "feature width mismatch: model '{model}' wants C_i = {}, got {}",
+                lane.op.ci,
+                features.len()
+            ));
+        }
+        let (tx, ticket) = Ticket::channel();
+        let now = Instant::now();
+        let due = now + inner.window.unwrap_or_default();
+        // Push and (maybe) take the full batch under ONE lock, so
+        // concurrent submitters can never assemble a batch larger than
+        // `capacity` (N^f ≤ R must hold for the shared pass).
+        let (batch, newly_armed) = {
+            let mut pending = lane.pending.lock().expect("dense lane");
+            pending.push(PendingRow { features, resp: tx, enqueued: now, due });
+            if pending.len() >= inner.capacity {
+                (Some(pending.drain(..inner.capacity).collect::<Vec<_>>()), false)
+            } else {
+                (None, pending.len() == 1)
+            }
+        };
+        match batch {
+            Some(batch) => inner.dispatch_dense(&entry.name, &lane.op, batch),
+            // Only a lane's first row changes the earliest deadline —
+            // later rows are strictly newer, so no re-arm is needed.
+            None if newly_armed && inner.window.is_some() => inner.flush.kick(),
+            None => {}
+        }
+        ticket
+    }
+
+    /// Stop the deadline tick and drain every dense lane (the final
+    /// deadline flush): queued-but-unflushed rows are dispatched so
+    /// their tickets resolve instead of hanging.
+    fn finish(&mut self) {
+        if let Some(inner) = self.inner.as_ref() {
+            {
+                let mut state = inner.flush.state.lock().expect("flush state");
+                state.shutdown = true;
+            }
+            inner.flush.cv.notify_all();
+        }
+        if let Some(handle) = self.flusher.take() {
+            let _ = handle.join();
+        }
+        if let Some(inner) = self.inner.as_ref() {
+            inner.flush_all();
+        }
+    }
+
+    /// Drain (including any straggling dense rows) and stop, returning
+    /// aggregate stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.finish();
+        let inner = self.inner.take().expect("service inner present until shutdown");
+        let inner = match Arc::try_unwrap(inner) {
+            Ok(inner) => inner,
+            Err(_) => unreachable!("service inner uniquely owned once the flusher joined"),
+        };
+        let worker_stats = inner.pool.shutdown();
+        let mut stats = inner.stats.lock().expect("service stats").clone();
+        stats.stolen = worker_stats.iter().map(|w| w.stolen).sum();
+        stats
+    }
+}
+
+impl Drop for KrakenService {
+    /// A dropped service still answers: the final deadline flush runs
+    /// and the pool drains before the workers join.
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+fn unknown_model(model: &str, inner: &ServiceInner) -> String {
+    let mut names: Vec<&str> = inner.models.keys().map(String::as_str).collect();
+    names.sort_unstable();
+    format!("unknown model '{model}' (registered: {names:?})")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{LayerData, LayerOutput};
+    use crate::coordinator::scheduler::{tiny_cnn_pipeline, tiny_cnn_stages, X_SEED};
+    use crate::layers::LayerKind;
+    use crate::metrics::Counters;
+    use crate::quant::QParams;
+    use crate::tensor::matmul_i8;
+
+    fn tiny_service(workers: usize, kind: BackendKind) -> KrakenService {
+        ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .backend(kind)
+            .workers(workers)
+            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .build()
+    }
+
+    #[test]
+    fn serves_requests_in_order_and_deterministically() {
+        let service = tiny_service(1, BackendKind::Engine);
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let a = service.infer("tiny_cnn", x.clone()).expect("response");
+        let b = service.infer("tiny_cnn", x).expect("response");
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.clocks, b.clocks);
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.workers, 1);
+        assert_eq!(stats.per_model["tiny_cnn"], 2);
+        assert!(stats.total_device_ms > 0.0);
+    }
+
+    #[test]
+    fn pipelined_submissions_all_complete() {
+        let service = tiny_service(1, BackendKind::Engine);
+        let tickets: Vec<_> = (0..4)
+            .map(|i| service.submit("tiny_cnn", Tensor4::random([1, 28, 28, 3], 100 + i)))
+            .collect();
+        let logits: Vec<_> = tickets
+            .into_iter()
+            .map(|t| t.wait().expect("response").logits)
+            .collect();
+        assert_eq!(logits.len(), 4);
+        // Different inputs → (almost surely) different logits.
+        assert_ne!(logits[0], logits[1]);
+        service.shutdown();
+    }
+
+    #[test]
+    fn sharded_pool_matches_single_engine_bit_exactly() {
+        // Every worker runs the same shared stages, so the pool must be
+        // a pure throughput transform: same logits per input, any shard.
+        let single = tiny_service(1, BackendKind::Engine);
+        let pooled = tiny_service(3, BackendKind::Engine);
+        let inputs: Vec<Tensor4<i8>> =
+            (0..4).map(|i| Tensor4::random([1, 28, 28, 3], 500 + i)).collect();
+        let want: Vec<Vec<i32>> = inputs
+            .iter()
+            .map(|x| single.infer("tiny_cnn", x.clone()).expect("response").logits)
+            .collect();
+        let got: Vec<Vec<i32>> = pooled
+            .submit_batch("tiny_cnn", inputs)
+            .into_iter()
+            .map(|t| t.wait().expect("response").logits)
+            .collect();
+        assert_eq!(got, want);
+        let stats = pooled.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.workers, 3);
+        single.shutdown();
+    }
+
+    #[test]
+    fn functional_backend_serves_fast_path() {
+        // The functional backend behind the same service: same logits
+        // as the cycle-accurate engine, via the backend trait seam.
+        let sim = tiny_service(1, BackendKind::Engine);
+        let fun = tiny_service(2, BackendKind::Functional);
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let a = sim.infer("tiny_cnn", x.clone()).expect("response");
+        let b = fun.infer("tiny_cnn", x).expect("response");
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.clocks, b.clocks);
+        sim.shutdown();
+        fun.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_and_wrong_payload_fail_fast() {
+        let service = ServiceBuilder::new()
+            .backend(BackendKind::Functional)
+            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_dense("fc", dense_op(12, 10))
+            .build();
+        let err = service
+            .submit("nope", Tensor4::random([1, 28, 28, 3], 1))
+            .wait()
+            .expect_err("unknown model must fail");
+        assert!(err.reason.contains("unknown model 'nope'"), "{}", err.reason);
+        let err = service
+            .submit("fc", Tensor4::random([1, 28, 28, 3], 1))
+            .wait()
+            .expect_err("image to a dense op must fail");
+        assert!(err.reason.contains("dense op"), "{}", err.reason);
+        let err = service
+            .submit("tiny_cnn", vec![0i8; 12])
+            .wait()
+            .expect_err("row to a pipeline must fail");
+        assert!(err.reason.contains("pipeline"), "{}", err.reason);
+        let err = service
+            .submit("fc", vec![0i8; 13])
+            .wait()
+            .expect_err("wrong width must fail");
+        assert!(err.reason.contains("width mismatch"), "{}", err.reason);
+        service.shutdown();
+    }
+
+    /// A backend that panics when the input's first byte is the
+    /// sentinel — a stand-in for a dying shard worker.
+    struct Panicky {
+        inner: Functional,
+    }
+
+    impl Accelerator for Panicky {
+        fn name(&self) -> String {
+            "panicky".into()
+        }
+        fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+            // Only the network input reaches conv1, so intermediate
+            // activations can't trip the sentinel by coincidence.
+            assert!(
+                data.layer.name != "conv1" || data.x.data[0] != 99,
+                "poisoned request"
+            );
+            self.inner.run_layer(data)
+        }
+        fn counters(&self) -> Counters {
+            self.inner.counters()
+        }
+        fn freq_hz(&self, kind: LayerKind) -> f64 {
+            self.inner.freq_hz(kind)
+        }
+    }
+
+    #[test]
+    fn worker_panic_returns_run_error_and_service_survives() {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .workers(1)
+            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .build_with(|_| Panicky { inner: Functional::new(KrakenConfig::new(7, 96)) });
+        let good = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let mut bad = good.clone();
+        bad.data[0] = 99;
+
+        let tickets = service.submit_batch("tiny_cnn", [good.clone(), bad, good.clone()]);
+        let results: Vec<Result<Response, RunError>> =
+            tickets.into_iter().map(|t| t.wait()).collect();
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().expect_err("poisoned request must fail");
+        assert_eq!(err.worker, 0);
+        assert!(err.reason.contains("poisoned"), "{}", err.reason);
+        assert!(results[2].is_ok(), "worker must survive the panic");
+        assert_eq!(
+            results[0].as_ref().unwrap().logits,
+            results[2].as_ref().unwrap().logits
+        );
+
+        // And the service still serves fresh requests afterwards.
+        assert!(service.infer("tiny_cnn", good).is_ok());
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 1);
+    }
+
+    fn dense_op(ci: usize, co: usize) -> DenseOp {
+        DenseOp::new("fc", ci, co, Tensor4::random([1, 1, ci, co], 9).data, QParams::identity())
+    }
+
+    #[test]
+    fn dense_requests_share_r_row_passes() {
+        let op = dense_op(12, 10);
+        let weights = op.weights.data.clone();
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(4, 8))
+            .backend(BackendKind::Functional)
+            .batch_capacity(4)
+            .register_dense("fc", op)
+            .build();
+        let reqs: Vec<Vec<i8>> =
+            (0..8).map(|i| Tensor4::random([1, 1, 1, 12], 700 + i).data).collect();
+        let tickets: Vec<_> = reqs.iter().map(|r| service.submit("fc", r.clone())).collect();
+        for (req, ticket) in reqs.iter().zip(tickets) {
+            let resp = ticket.wait().expect("dense response");
+            assert_eq!(resp.output, matmul_i8(req, &weights, 1, 12, 10));
+            assert_eq!(resp.rows_in_batch, 4, "capacity-4 lane must batch 4 rows");
+        }
+        let stats = service.shutdown();
+        // 8 rows at capacity 4 → exactly 2 shared passes, not 8.
+        assert_eq!(stats.dense_flushes, 2);
+        assert_eq!(stats.dense_rows, 8);
+        assert_eq!(stats.window_flushes, 0, "no window configured");
+        assert_eq!(stats.per_model["fc"], 8);
+    }
+
+    #[test]
+    fn dense_stragglers_flush_on_shutdown() {
+        let op = dense_op(12, 10);
+        let weights = op.weights.data.clone();
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(4, 8))
+            .backend(BackendKind::Functional)
+            .batch_capacity(4)
+            .register_dense("fc", op)
+            .build();
+        let req = Tensor4::random([1, 1, 1, 12], 800).data;
+        let ticket = service.submit("fc", req.clone());
+        let stats = service.shutdown(); // final deadline flush
+        let resp = ticket.wait().expect("dense response");
+        assert_eq!(resp.output, matmul_i8(&req, &weights, 1, 12, 10));
+        assert_eq!(resp.rows_in_batch, 1);
+        assert_eq!(stats.dense_flushes, 1);
+        assert_eq!(stats.dense_rows, 1);
+    }
+
+    #[test]
+    fn dropped_service_still_answers_pending_dense_rows() {
+        // Regression (shutdown-drain satellite): a service dropped
+        // without an explicit shutdown must still dispatch queued dense
+        // rows, not strand their tickets.
+        let op = dense_op(12, 10);
+        let weights = op.weights.data.clone();
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(4, 8))
+            .backend(BackendKind::Functional)
+            .batch_capacity(4)
+            .register_dense("fc", op)
+            .build();
+        let req = Tensor4::random([1, 1, 1, 12], 801).data;
+        let ticket = service.submit("fc", req.clone());
+        assert!(ticket.try_wait().is_none(), "row must wait for a flush");
+        drop(service);
+        let resp = ticket.wait().expect("dense response after drop");
+        assert_eq!(resp.output, matmul_i8(&req, &weights, 1, 12, 10));
+    }
+
+    #[test]
+    fn pipeline_results_match_owned_pipeline() {
+        // The registry's shared-stage path computes exactly what an
+        // owning InferencePipeline computes.
+        let service = tiny_service(2, BackendKind::Functional);
+        let mut pipe = tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)));
+        for seed in [X_SEED, 7, 8] {
+            let x = Tensor4::random([1, 28, 28, 3], seed);
+            let served = service.infer("tiny_cnn", x.clone()).expect("served");
+            let direct = pipe.run(&x);
+            assert_eq!(served.logits, direct.logits);
+            assert_eq!(served.clocks, direct.total_clocks);
+        }
+        service.shutdown();
+    }
+}

@@ -48,8 +48,10 @@
 //!   golden model for functional verification.
 //! * [`coordinator`] — the L3 serving layer: layer scheduler with
 //!   back-to-back configuration streaming and weight-prefetch overlap,
-//!   plus a threaded inference server sharded across a pool of
-//!   backends with work-stealing dispatch.
+//!   plus the [`coordinator::KrakenService`] front-end — a builder-
+//!   configured, named-model registry over a work-stealing backend
+//!   pool, with unified `submit(model, payload) -> Ticket<T>` job
+//!   tickets and capacity- or deadline-triggered dense batching.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
 
@@ -71,6 +73,7 @@ pub mod tensor;
 
 pub use arch::KrakenConfig;
 pub use backend::{Accelerator, LayerData, LayerOutput};
+pub use coordinator::{BackendKind, KrakenService, ServiceBuilder, Ticket};
 pub use layers::{Layer, LayerKind};
 pub use networks::Network;
 pub use partition::{PartitionPlan, PartitionedPool, SplitAxis};

@@ -10,7 +10,7 @@ use std::path::Path;
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
-use kraken::coordinator::{tiny_cnn_pipeline, InferenceServer};
+use kraken::coordinator::{tiny_cnn_pipeline, tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
 use kraken::networks::{paper_networks, Network};
 use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::perf::PerfModel;
@@ -43,11 +43,14 @@ system:
   simulate        run TinyCNN through the clock-accurate simulator
   backends        cross-backend equivalence: cycle-accurate vs
                   functional vs baseline estimators on TinyCNN
-  serve N [E] [--partition P]
-                  serve N TinyCNN requests through a pool of E
-                  cycle-accurate engines (default E=1); with
-                  --partition P each request's layers are split
-                  across P chips (intra-request data parallelism)
+  serve N [E] [--partition P] [--window-us U]
+                  serve N TinyCNN requests AND N dense rows through
+                  one KrakenService over a pool of E cycle-accurate
+                  engines (default E=1), two named models registered;
+                  with --partition P each request's layers are split
+                  across P chips (intra-request data parallelism);
+                  with --window-us U straggling dense rows flush on a
+                  U-microsecond deadline tick instead of at shutdown
   partition P [net]
                   per-layer partition plan for P shards (split axis,
                   predicted vs measured clocks, overhead) on net ∈
@@ -92,10 +95,10 @@ fn main() {
         "simulate" => simulate(),
         "backends" => backends(),
         "serve" => {
-            let (positional, partition) = split_partition_flag(&args[1..]);
+            let (positional, partition, window_us) = parse_serve_flags(&args[1..]);
             let n: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8);
             let engines: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
-            serve(n, engines, partition);
+            serve(n, engines, partition, window_us);
         }
         "partition" => {
             let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -276,17 +279,27 @@ fn backends() {
     );
 }
 
-/// Pull an optional trailing `--partition P` out of an argument list.
-fn split_partition_flag(args: &[String]) -> (Vec<&String>, usize) {
+/// Pull optional `--partition P` / `--window-us U` flags out of an
+/// argument list, returning the remaining positionals.
+fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>) {
     let mut positional = Vec::new();
     let mut partition = 1usize;
+    let mut window_us = None;
     let mut iter = args.iter();
     while let Some(arg) = iter.next() {
         if arg == "--partition" {
             partition = match iter.next().and_then(|s| s.parse().ok()) {
-                Some(p) => p,
-                None => {
+                Some(p) if p >= 1 => p,
+                _ => {
                     eprintln!("--partition needs a positive integer shard count");
+                    std::process::exit(2);
+                }
+            };
+        } else if arg == "--window-us" {
+            window_us = match iter.next().and_then(|s| s.parse().ok()) {
+                Some(u) => Some(u),
+                None => {
+                    eprintln!("--window-us needs a microsecond count");
                     std::process::exit(2);
                 }
             };
@@ -294,38 +307,56 @@ fn split_partition_flag(args: &[String]) -> (Vec<&String>, usize) {
             positional.push(arg);
         }
     }
-    (positional, partition)
+    (positional, partition, window_us)
 }
 
-/// Serve N requests through the sharded engine pool. With
+/// Serve N TinyCNN requests and N dense rows through one
+/// [`kraken::KrakenService`] with two registered models. With
 /// `partition > 1`, every worker's backend is a [`PartitionedPool`] of
 /// that many cycle-accurate engines, so each request's layers are split
 /// across chips — intra-request data parallelism that cuts the modeled
-/// device latency, on top of the pool's request parallelism.
-fn serve(n: usize, engines: usize, partition: usize) {
-    // Bare engines at partition ≤ 1 (the original hot path: no tensor
-    // clones, no scatter/gather round-trip); PartitionedPool otherwise.
-    let server = if partition > 1 {
+/// device latency, on top of the pool's request parallelism. With a
+/// flush window, straggling dense rows are dispatched by the service's
+/// deadline tick instead of waiting for shutdown.
+fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
+    let (fc_ci, fc_co) = (64usize, 16usize);
+    let mut builder = ServiceBuilder::new()
+        .backend(BackendKind::Engine)
+        .workers(engines)
+        .partition(partition)
+        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_dense(
+            "ranker_fc",
+            DenseOp::new(
+                "ranker_fc",
+                fc_ci,
+                fc_co,
+                Tensor4::random([1, 1, fc_ci, fc_co], 77).data,
+                QParams::identity(),
+            ),
+        );
+    if partition > 1 {
         println!(
             "intra-request partitioning: each request's layers split across {partition} chips"
         );
-        InferenceServer::spawn_pool(engines, move |_| {
-            tiny_cnn_pipeline(PartitionedPool::spawn(KrakenConfig::paper(), partition, |_| {
-                Engine::new(KrakenConfig::paper(), 8)
-            }))
-        })
-    } else {
-        InferenceServer::spawn_pool(engines, |_| {
-            tiny_cnn_pipeline(Engine::new(KrakenConfig::paper(), 8))
-        })
-    };
+    }
+    if let Some(us) = window_us {
+        println!("dense flush window: {us} µs deadline tick");
+        builder = builder.flush_window(std::time::Duration::from_micros(us));
+    }
+    let service = builder.build();
+    println!("models registered: {:?}", service.models());
+
     let t0 = std::time::Instant::now();
-    let rxs =
-        server.submit_batch((0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let tickets =
+        service.submit_batch("tiny_cnn", (0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let dense_tickets: Vec<_> = (0..n)
+        .map(|i| service.submit("ranker_fc", Tensor4::random([1, 1, 1, fc_ci], 300 + i as u64).data))
+        .collect();
     let mut device_ms = 0.0;
     let mut failed = 0usize;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        match rx.recv().expect("response channel") {
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        match ticket.wait() {
             Ok(resp) => {
                 device_ms += resp.device_ms;
                 println!(
@@ -348,15 +379,41 @@ fn serve(n: usize, engines: usize, partition: usize) {
             }
         }
     }
-    let stats = server.shutdown();
+    // Without a window the stragglers flush at shutdown; with one, the
+    // deadline tick dispatches them while we drain the pipeline lane —
+    // so only wait on the dense tickets *before* shutdown when a window
+    // guarantees they resolve.
+    if window_us.is_none() {
+        service.flush();
+    }
+    for (i, ticket) in dense_tickets.into_iter().enumerate() {
+        match ticket.wait() {
+            Ok(resp) => println!(
+                "dense {i}: {} outputs, {} rows/pass, {} clocks, worker={}",
+                resp.output.len(),
+                resp.rows_in_batch,
+                resp.clocks,
+                resp.worker
+            ),
+            Err(e) => {
+                failed += 1;
+                println!("dense {i}: FAILED ({e})");
+            }
+        }
+    }
+    let stats = service.shutdown();
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "served {} requests ({failed} failed) on {} engine(s), {} stolen: modeled device \
-         throughput {:.0} fps/engine, sim wall {:.2} s ({:.1} req/s)",
+        "served {} requests ({failed} failed) on {} engine(s), {} stolen, {} dense rows in {} \
+         flushes ({} by deadline): modeled device throughput {:.0} fps/engine, sim wall {:.2} s \
+         ({:.1} req/s)",
         stats.completed,
         stats.workers,
         stats.stolen,
-        stats.completed as f64 / (device_ms / 1e3),
+        stats.dense_rows,
+        stats.dense_flushes,
+        stats.window_flushes,
+        stats.pipeline_completed() as f64 / (device_ms / 1e3),
         wall,
         stats.completed as f64 / wall
     );

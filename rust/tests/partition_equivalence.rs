@@ -11,13 +11,13 @@
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
-use kraken::coordinator::{InferencePipeline, InferenceServer};
+use kraken::coordinator::{tiny_cnn_stages, BackendKind, ServiceBuilder};
 use kraken::layers::Layer;
 use kraken::networks::{tiny_cnn, tiny_mlp, Network};
 use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::quant::QParams;
 use kraken::sim::Engine;
-use kraken::tensor::{matmul_i8, Tensor4};
+use kraken::tensor::Tensor4;
 
 const SEED: u64 = 31_000;
 
@@ -122,48 +122,40 @@ fn engine_shards_match_functional_shards() {
 }
 
 #[test]
-fn batching_then_partitioning_compose() {
-    // The server's dense lane batches concurrent FC requests into one
-    // R-row pass; a PartitionedPool backend then splits that *batched*
-    // layer by output channels (batch first, then split). Outputs must
-    // match the per-request matmul and the pass must be shared.
-    let (ci, co, r) = (64usize, 192usize, 7usize);
-    let op = kraken::coordinator::DenseOp {
-        name: "fc".into(),
-        ci,
-        co,
-        weights: Tensor4::random([1, 1, ci, co], 5).data,
-        qparams: QParams::identity(),
+fn partitioned_service_serves_bit_identical_outputs() {
+    // The acceptance bar for the serving front-end: a KrakenService
+    // configured with partition(P) must serve exactly what an
+    // unpartitioned one serves — the scatter/gather is invisible
+    // through the whole builder → registry → ticket path.
+    // (The batching+partitioning composition test lives in
+    // tests/service_api.rs::batching_then_partitioning_compose.)
+    let build = |partition: usize| {
+        ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .backend(BackendKind::Functional)
+            .workers(1)
+            .partition(partition)
+            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .build()
     };
-    let weights = op.weights.clone();
-    let server = InferenceServer::spawn_dense_pool(
-        1,
-        |_| {
-            InferencePipeline::new(
-                PartitionedPool::spawn(KrakenConfig::paper(), 2, |_| {
-                    Functional::new(KrakenConfig::paper())
-                }),
-                Vec::new(),
-            )
-        },
-        op,
-        r,
-    );
-    let reqs: Vec<Vec<i8>> =
-        (0..r as u64).map(|i| Tensor4::random([1, 1, 1, ci], 900 + i).data).collect();
-    let rxs: Vec<_> = reqs.iter().map(|f| server.submit_dense(f.clone())).collect();
-    for (req, rx) in reqs.iter().zip(rxs) {
-        let resp = rx.recv().expect("recv").expect("dense response");
-        assert_eq!(resp.output, matmul_i8(req, &weights, 1, ci, co));
-        assert_eq!(resp.rows_in_batch, r, "all rows share one pass");
+    let whole = build(1);
+    let inputs: Vec<Tensor4<i8>> =
+        (0..3).map(|i| Tensor4::random([1, 28, 28, 3], SEED + 300 + i)).collect();
+    let want: Vec<Vec<i32>> = whole
+        .submit_batch("tiny_cnn", inputs.clone())
+        .into_iter()
+        .map(|t| t.wait().expect("unpartitioned response").logits)
+        .collect();
+    whole.shutdown();
+    for partition in [2usize, 4] {
+        let split = build(partition);
+        let got: Vec<Vec<i32>> = split
+            .submit_batch("tiny_cnn", inputs.clone())
+            .into_iter()
+            .map(|t| t.wait().expect("partitioned response").logits)
+            .collect();
+        assert_eq!(got, want, "partition({partition}) must be bit-identical");
+        let stats = split.shutdown();
+        assert_eq!(stats.completed, 3);
     }
-    let stats = server.shutdown();
-    assert_eq!(stats.dense_flushes, 1, "R concurrent requests → one flush");
-    assert_eq!(stats.dense_rows, r as u64);
-
-    // And the split really split: the batched [R=7, 64]·[64, 192] layer
-    // has T = 2 on 7×96, halved by the 2-way channel split.
-    let batched = Layer::fully_connected("fc", r, ci, co);
-    let plan = plan_layer(&KrakenConfig::paper(), &batched, 2);
-    assert!(plan.speedup() > 1.9, "speedup {}", plan.speedup());
 }

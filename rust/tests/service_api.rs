@@ -1,0 +1,255 @@
+//! The `ServiceBuilder`/`KrakenService` serving API, end to end:
+//! multi-model registry routing, ticket bit-exactness against the
+//! direct execution paths, the time-window flush, batching composed
+//! with partitioning, and per-model failure isolation.
+
+use std::time::Duration;
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
+use kraken::coordinator::{
+    tiny_cnn_pipeline, tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder,
+};
+use kraken::layers::LayerKind;
+use kraken::metrics::Counters;
+use kraken::partition::plan_layer;
+use kraken::quant::QParams;
+use kraken::sim::Engine;
+use kraken::tensor::{matmul_i8, Tensor4};
+
+fn dense_op(name: &str, ci: usize, co: usize, seed: u64) -> DenseOp {
+    DenseOp::new(name, ci, co, Tensor4::random([1, 1, ci, co], seed).data, QParams::identity())
+}
+
+#[test]
+fn multi_model_registry_routes_by_name() {
+    // Two dense ops with different weights AND a full pipeline behind
+    // one service: every submission must land on the model it names.
+    let fc_a = dense_op("fc_a", 12, 10, 21);
+    let fc_b = dense_op("fc_b", 12, 6, 22);
+    let (w_a, w_b) = (fc_a.weights.data.clone(), fc_b.weights.data.clone());
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .backend(BackendKind::Functional)
+        .workers(2)
+        .batch_capacity(2)
+        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_dense("fc_a", fc_a)
+        .register_dense("fc_b", fc_b)
+        .build();
+    assert_eq!(service.models(), vec!["fc_a", "fc_b", "tiny_cnn"]);
+
+    let rows: Vec<Vec<i8>> =
+        (0..4).map(|i| Tensor4::random([1, 1, 1, 12], 600 + i).data).collect();
+    let a_tickets: Vec<_> = rows.iter().map(|r| service.submit("fc_a", r.clone())).collect();
+    let b_tickets: Vec<_> = rows.iter().map(|r| service.submit("fc_b", r.clone())).collect();
+    let image = Tensor4::random([1, 28, 28, 3], 42);
+    let cnn = service.submit("tiny_cnn", image.clone());
+
+    for (row, ticket) in rows.iter().zip(a_tickets) {
+        let resp = ticket.wait().expect("fc_a served");
+        assert_eq!(resp.output, matmul_i8(row, &w_a, 1, 12, 10), "fc_a weights");
+    }
+    for (row, ticket) in rows.iter().zip(b_tickets) {
+        let resp = ticket.wait().expect("fc_b served");
+        assert_eq!(resp.output, matmul_i8(row, &w_b, 1, 12, 6), "fc_b weights");
+    }
+    let mut pipe = tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)));
+    assert_eq!(cnn.wait().expect("tiny_cnn served").logits, pipe.run(&image).logits);
+
+    let stats = service.shutdown();
+    assert_eq!(stats.per_model["fc_a"], 4);
+    assert_eq!(stats.per_model["fc_b"], 4);
+    assert_eq!(stats.per_model["tiny_cnn"], 1);
+}
+
+#[test]
+fn tickets_bit_exact_vs_direct_pipeline_run() {
+    // The served result is the pipeline result: same logits, same
+    // clocks, through the cycle-accurate engine on both sides.
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .backend(BackendKind::Engine)
+        .workers(2)
+        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .build();
+    let mut pipe = tiny_cnn_pipeline(Engine::new(KrakenConfig::new(7, 96), 8));
+    let inputs: Vec<Tensor4<i8>> =
+        (0..3).map(|i| Tensor4::random([1, 28, 28, 3], 4000 + i)).collect();
+    let tickets = service.submit_batch("tiny_cnn", inputs.clone());
+    for (x, ticket) in inputs.iter().zip(tickets) {
+        let served = ticket.wait().expect("served");
+        let direct = pipe.run(x);
+        assert_eq!(served.logits, direct.logits);
+        assert_eq!(served.clocks, direct.total_clocks);
+    }
+    service.shutdown();
+}
+
+#[test]
+fn window_flush_completes_a_lone_row_without_capacity() {
+    // Regression for the time-window policy: one row on a capacity-8
+    // lane must be answered by the background deadline tick — no
+    // manual flush, no second request, no shutdown.
+    let op = dense_op("fc", 12, 10, 23);
+    let weights = op.weights.data.clone();
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(4, 8))
+        .backend(BackendKind::Functional)
+        .batch_capacity(8)
+        .flush_window(Duration::from_millis(5))
+        .register_dense("fc", op)
+        .build();
+    let row = Tensor4::random([1, 1, 1, 12], 810).data;
+    let resp = service
+        .submit("fc", row.clone())
+        .wait() // resolves only if the deadline tick fires
+        .expect("window flush served the row");
+    assert_eq!(resp.output, matmul_i8(&row, &weights, 1, 12, 10));
+    assert_eq!(resp.rows_in_batch, 1, "flushed below capacity");
+    let stats = service.shutdown();
+    assert_eq!(stats.dense_flushes, 1);
+    assert_eq!(stats.window_flushes, 1, "the deadline tick did the flush");
+}
+
+#[test]
+fn window_flush_batches_concurrent_rows_in_one_pass() {
+    // Rows arriving inside one window share the deadline flush: fewer
+    // passes than rows, all results exact.
+    let op = dense_op("fc", 12, 10, 24);
+    let weights = op.weights.data.clone();
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(4, 8))
+        .backend(BackendKind::Functional)
+        .batch_capacity(8)
+        // Wide enough that a preempted test thread on a loaded CI
+        // runner still lands all three submits inside one window.
+        .flush_window(Duration::from_secs(1))
+        .register_dense("fc", op)
+        .build();
+    let rows: Vec<Vec<i8>> =
+        (0..3).map(|i| Tensor4::random([1, 1, 1, 12], 820 + i).data).collect();
+    let tickets: Vec<_> = rows.iter().map(|r| service.submit("fc", r.clone())).collect();
+    for (row, ticket) in rows.iter().zip(tickets) {
+        let resp = ticket.wait().expect("served");
+        assert_eq!(resp.output, matmul_i8(row, &weights, 1, 12, 10));
+        assert_eq!(resp.rows_in_batch, 3, "the three rows share one pass");
+    }
+    let stats = service.shutdown();
+    assert_eq!(stats.dense_flushes, 1, "one shared deadline flush");
+    assert_eq!(stats.dense_rows, 3);
+}
+
+#[test]
+fn batching_then_partitioning_compose() {
+    // The dense lane batches concurrent FC requests into one R-row
+    // pass; a partition(2) service then splits that *batched* layer by
+    // output channels (batch first, then split). Outputs must match
+    // the per-request matmul and the pass must be shared.
+    let (ci, co, r) = (64usize, 192usize, 7usize);
+    let op = dense_op("fc", ci, co, 5);
+    let weights = op.weights.data.clone();
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::paper())
+        .backend(BackendKind::Functional)
+        .workers(1)
+        .partition(2)
+        .batch_capacity(r)
+        .register_dense("fc", op)
+        .build();
+    let reqs: Vec<Vec<i8>> =
+        (0..r as u64).map(|i| Tensor4::random([1, 1, 1, ci], 900 + i).data).collect();
+    let tickets: Vec<_> = reqs.iter().map(|f| service.submit("fc", f.clone())).collect();
+    for (req, ticket) in reqs.iter().zip(tickets) {
+        let resp = ticket.wait().expect("dense response");
+        assert_eq!(resp.output, matmul_i8(req, &weights, 1, ci, co));
+        assert_eq!(resp.rows_in_batch, r, "all rows share one pass");
+    }
+    let stats = service.shutdown();
+    assert_eq!(stats.dense_flushes, 1, "R concurrent requests → one flush");
+    assert_eq!(stats.dense_rows, r as u64);
+
+    // And the split really split: the batched [R=7, 64]·[64, 192] layer
+    // has T = 2 on 7×96, halved by the 2-way channel split.
+    let batched = kraken::layers::Layer::fully_connected("fc", r, ci, co);
+    let plan = plan_layer(&KrakenConfig::paper(), &batched, 2);
+    assert!(plan.speedup() > 1.9, "speedup {}", plan.speedup());
+}
+
+/// A backend that panics whenever it runs a layer whose name carries
+/// the poison marker — panics follow the *model*, not the worker.
+struct NamePoisoned {
+    inner: Functional,
+}
+
+impl Accelerator for NamePoisoned {
+    fn name(&self) -> String {
+        "name-poisoned".into()
+    }
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        assert!(!data.layer.name.contains("poison"), "poisoned model");
+        self.inner.run_layer(data)
+    }
+    fn counters(&self) -> Counters {
+        self.inner.counters()
+    }
+    fn freq_hz(&self, kind: LayerKind) -> f64 {
+        self.inner.freq_hz(kind)
+    }
+}
+
+#[test]
+fn panic_in_one_model_does_not_poison_the_others() {
+    // Register a healthy dense model and a model whose every run
+    // panics: the poisoned model's tickets carry RunErrors, the healthy
+    // model keeps serving on the same worker, and the service shuts
+    // down cleanly.
+    let good = dense_op("good_fc", 12, 10, 31);
+    let weights = good.weights.data.clone();
+    let bad = dense_op("poison_fc", 12, 10, 32);
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .workers(1)
+        .batch_capacity(1)
+        .register_dense("good_fc", good)
+        .register_dense("poison_fc", bad)
+        .build_with(|_| NamePoisoned { inner: Functional::new(KrakenConfig::new(7, 96)) });
+
+    let row = Tensor4::random([1, 1, 1, 12], 830).data;
+    let err = service
+        .submit("poison_fc", row.clone())
+        .wait()
+        .expect_err("poisoned model must fail");
+    assert!(err.reason.contains("poisoned model"), "{}", err.reason);
+
+    // The sibling model still serves, on the same (surviving) worker.
+    let resp = service.submit("good_fc", row.clone()).wait().expect("healthy model serves");
+    assert_eq!(resp.output, matmul_i8(&row, &weights, 1, 12, 10));
+
+    // And the poisoned model keeps failing gracefully rather than
+    // wedging the queue.
+    assert!(service.submit("poison_fc", row).wait().is_err());
+
+    let stats = service.shutdown();
+    assert_eq!(stats.failed, 2);
+    assert_eq!(stats.per_model["good_fc"], 1);
+    assert_eq!(stats.per_model["poison_fc"], 0);
+}
+
+#[test]
+fn estimator_backends_serve_the_same_outputs() {
+    // The builder's estimator kinds serve bit-identical tensors (the
+    // uniform-dataflow contract), differing only in modeled clocks.
+    let row = Tensor4::random([1, 1, 1, 24], 840).data;
+    let mut outputs = Vec::new();
+    for kind in [BackendKind::Functional, BackendKind::Eyeriss, BackendKind::Zascad, BackendKind::Carla] {
+        let service = ServiceBuilder::new()
+            .backend(kind)
+            .batch_capacity(1)
+            .register_dense("fc", dense_op("fc", 24, 12, 33))
+            .build();
+        outputs.push(service.submit("fc", row.clone()).wait().expect("served").output);
+        service.shutdown();
+    }
+    assert!(outputs.windows(2).all(|w| w[0] == w[1]), "estimators must agree on outputs");
+}
