@@ -18,8 +18,8 @@
 use std::path::Path;
 
 use kraken::arch::KrakenConfig;
-use kraken::coordinator::tiny_cnn_pipeline;
-use kraken::networks::paper_networks;
+use kraken::model::run_graph;
+use kraken::networks::{paper_networks, tiny_cnn_graph};
 use kraken::perf::PerfModel;
 use kraken::runtime::GoldenRunner;
 use kraken::sim::Engine;
@@ -31,9 +31,8 @@ fn main() {
         .expect("artifacts/ missing — run `make artifacts`");
     let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
 
-    let engine = Engine::new(KrakenConfig::paper(), 8);
-    let mut pipeline = tiny_cnn_pipeline(engine);
-    let report = pipeline.run(&x);
+    let mut engine = Engine::new(KrakenConfig::paper(), 8);
+    let report = run_graph(&mut engine, &tiny_cnn_graph(), &x);
 
     println!("  JAX/Pallas logits : {golden_logits:?}");
     println!("  simulator logits  : {:?}", report.logits);

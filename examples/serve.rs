@@ -1,9 +1,10 @@
 //! Inference serving through the L3 coordinator's `KrakenService`: one
 //! builder-configured service, a named-model registry holding a full
-//! TinyCNN pipeline AND a standalone dense op, work-stealing dispatch
-//! across a pool of cycle-accurate engines, and unified `Ticket`s for
-//! every submission. Dense rows batch to the PE-row capacity and any
-//! stragglers are flushed by the service's background deadline tick.
+//! TinyCNN model graph AND a standalone dense op, work-stealing
+//! dispatch across a pool of cycle-accurate engines, and unified
+//! `Ticket`s for every submission. Dense rows batch to the PE-row
+//! capacity and any stragglers are flushed by the service's background
+//! deadline tick.
 //!
 //! ```bash
 //! cargo run --release --example serve
@@ -11,7 +12,8 @@
 
 use std::time::Duration;
 
-use kraken::coordinator::{tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
+use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+use kraken::networks::tiny_cnn_graph;
 use kraken::quant::QParams;
 use kraken::tensor::Tensor4;
 
@@ -23,7 +25,7 @@ fn main() {
         .workers(engines)
         .batch_capacity(7) // = R: fill the PE rows, fetch weights once (§IV-D)
         .flush_window(Duration::from_micros(500)) // deadline tick for stragglers
-        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_graph("tiny_cnn", tiny_cnn_graph())
         .register_dense(
             "embed_fc",
             DenseOp::new(
@@ -112,7 +114,7 @@ fn main() {
     );
     println!(
         "  modeled device throughput: {:.0} inf/s per engine at 400/200 MHz",
-        stats.pipeline_completed() as f64 / (stats.total_device_ms / 1e3)
+        stats.graph_completed() as f64 / (stats.total_device_ms / 1e3)
     );
     println!(
         "  simulation wall throughput: {:.1} req/s across the pool",

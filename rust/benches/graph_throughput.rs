@@ -1,0 +1,67 @@
+//! Graph-executor serving throughput: ResNet-50 with its real residual
+//! topology through the fast functional backend, frames per second of
+//! simulation wall clock.
+//!
+//! Runs the full 53-conv + 16-skip topology at a 112×112 input (¼ of
+//! the 224 benchmark's MACs — the direct-form reference conv dominates
+//! the wall time; the topology, channel widths and every residual edge
+//! are identical). TinyCNN rides along as the small-graph datapoint.
+//!
+//! Emits `BENCH_graph_resnet50.json` (res, fps, accel node count,
+//! residual adds, modeled device clocks) via the shared harness; CI
+//! checks the record exists and the graph actually ran (fps > 0).
+//!
+//! Run: `cargo bench --bench graph_throughput`
+
+mod harness;
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::Functional;
+use kraken::model::{run_graph, NodeOp};
+use kraken::networks::{resnet50_graph_at, tiny_cnn_graph};
+use kraken::tensor::Tensor4;
+
+fn main() {
+    println!("== graph executor: branchy-model throughput on the functional backend ==\n");
+
+    // Small-graph datapoint: TinyCNN (linear, 8 accelerated nodes).
+    {
+        let graph = tiny_cnn_graph();
+        let x = Tensor4::random([1, 28, 28, 3], 42);
+        let mut backend = Functional::new(KrakenConfig::paper());
+        let med = harness::report("graph_tiny_cnn_functional", 10, || {
+            std::hint::black_box(run_graph(&mut backend, &graph, &x).total_clocks);
+        });
+        println!("  tiny_cnn: {:.1} frames/s\n", 1.0 / med);
+    }
+
+    // The headline: ResNet-50's real skip-connection topology.
+    let res = 112usize;
+    let graph = resnet50_graph_at(res);
+    let accel_nodes = graph.accel_stages().count();
+    let residual_adds =
+        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd)).count();
+    let x = Tensor4::random([1, res, res, 3], 7);
+    let mut backend = Functional::new(KrakenConfig::paper());
+    let mut total_clocks = 0u64;
+    let med = harness::report("graph_resnet50_functional", 3, || {
+        total_clocks = run_graph(&mut backend, &graph, &x).total_clocks;
+        std::hint::black_box(total_clocks);
+    });
+    let fps = 1.0 / med;
+    println!(
+        "  resnet50@{res}: {fps:.3} frames/s simulation wall \
+         ({accel_nodes} accelerated nodes, {residual_adds} residual adds, \
+         {total_clocks} modeled clocks/frame)"
+    );
+    harness::emit_json(
+        "graph_resnet50",
+        &[
+            ("res", res as f64),
+            ("fps", fps),
+            ("accel_nodes", accel_nodes as f64),
+            ("residual_adds", residual_adds as f64),
+            ("modeled_clocks_per_frame", total_clocks as f64),
+        ],
+    );
+}

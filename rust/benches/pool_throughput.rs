@@ -11,7 +11,9 @@
 mod harness;
 
 use kraken::arch::KrakenConfig;
-use kraken::coordinator::{run_stages, tiny_cnn_stages, ServiceBuilder};
+use kraken::coordinator::ServiceBuilder;
+use kraken::model::run_graph;
+use kraken::networks::tiny_cnn_graph;
 use kraken::sim::Engine;
 use kraken::tensor::Tensor4;
 
@@ -23,16 +25,16 @@ fn main() {
         let service = ServiceBuilder::new()
             .config(KrakenConfig::paper())
             .workers(engines)
-            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_graph("tiny_cnn", tiny_cnn_graph())
             .build_with(|_| {
                 let mut engine = Engine::new(KrakenConfig::paper(), 8);
                 // Warm on the worker's own thread (stealing could
                 // otherwise leave a worker cold inside the timed
                 // region: the settle batch alone can be served by an
                 // already-warm sibling).
-                let _ = run_stages(
+                let _ = run_graph(
                     &mut engine,
-                    &tiny_cnn_stages(),
+                    &tiny_cnn_graph(),
                     &Tensor4::random([1, 28, 28, 3], 1),
                 );
                 engine

@@ -8,9 +8,9 @@
 mod harness;
 
 use kraken::arch::KrakenConfig;
-use kraken::coordinator::tiny_cnn_pipeline;
 use kraken::layers::Layer;
-use kraken::networks::{paper_networks, resnet50};
+use kraken::model::run_graph;
+use kraken::networks::{paper_networks, resnet50, tiny_cnn_graph};
 use kraken::perf::{sweep_design_space, PerfModel};
 use kraken::quant::QParams;
 use kraken::sim::{Engine, LayerData};
@@ -48,14 +48,15 @@ fn main() {
         );
     }
 
-    // Full TinyCNN through the coordinator.
+    // Full TinyCNN through the graph executor.
     {
         let x = Tensor4::random([1, 28, 28, 3], 42);
-        let engine = Engine::new(KrakenConfig::paper(), 8);
-        let mut pipe = tiny_cnn_pipeline(engine);
-        let macs: f64 = pipe.stages.iter().map(|s| s.layer.macs_with_zpad() as f64).sum();
-        harness::report_throughput("coordinator_tiny_cnn_e2e", 5, macs / 1e6, "M MAC/s", || {
-            std::hint::black_box(pipe.run(&x).total_clocks);
+        let mut engine = Engine::new(KrakenConfig::paper(), 8);
+        let graph = tiny_cnn_graph();
+        let macs: f64 =
+            graph.accel_stages().map(|s| s.layer.macs_with_zpad() as f64).sum();
+        harness::report_throughput("graph_tiny_cnn_e2e", 5, macs / 1e6, "M MAC/s", || {
+            std::hint::black_box(run_graph(&mut engine, &graph, &x).total_clocks);
         });
     }
 

@@ -4,36 +4,32 @@
 //! the machinery an adopter needs around it, written entirely against
 //! the [`crate::backend::Accelerator`] trait so any backend (the
 //! clock-accurate engine, the fast functional backend, a baseline
-//! estimator) can serve traffic:
+//! estimator, a multi-chip [`crate::partition::PartitionedPool`]) can
+//! serve traffic:
 //!
-//! * a per-network [`scheduler::InferencePipeline`] that streams layers
-//!   back-to-back (requantizing and re-tiling `Ŷ_j → X̂_{j+1}` between
-//!   passes, running host ops like max-pool that the benchmark CNNs
-//!   need) — [`scheduler::run_stages`] is the same body over shared,
-//!   read-only stages;
+//! * model execution is the graph executor
+//!   ([`crate::model::run_graph`]): a validated
+//!   [`crate::model::ModelGraph`] streams its accelerated nodes
+//!   back-to-back through one backend (requantizing and re-tiling
+//!   `Ŷ_j → X̂_{j+1}` between passes) and runs the §II-C host ops —
+//!   pooling, residual adds, concat, requant — in between;
 //! * a [`batcher::FcBatcher`] / [`batcher::DenseOp`] collecting dense
 //!   requests into `R`-row batches run as one pass (batch = `R`,
 //!   §IV-D), borrowing the op's resident weight tensor per flush;
 //! * the serving front-end ([`service`]): a [`service::ServiceBuilder`]
 //!   configures backend kind, pool width, partition factor and batching
 //!   policy (row capacity + time-window flush), registers named models
-//!   (pipelines and dense ops), and builds one [`service::KrakenService`]
-//!   with a single typed entry point — `submit(model, payload) ->
-//!   Ticket<T>` — over a work-stealing pool
+//!   (**graphs** and dense ops), and builds one
+//!   [`service::KrakenService`] with a single typed entry point —
+//!   `submit(model, payload) -> Ticket<T>` — over a work-stealing pool
 //!   ([`crate::backend::pool`]). Worker panics are isolated per request
 //!   ([`service::RunError`]); dense lanes flush on capacity, on the
-//!   background deadline tick, and at shutdown; partitioned backends
-//!   ([`crate::partition::PartitionedPool`]) compose batch-first-then-split.
+//!   background deadline tick, and at shutdown.
 
 pub mod batcher;
-pub mod scheduler;
 pub mod service;
 
 pub use batcher::{BatchResult, DenseOp, FcBatcher};
-pub use scheduler::{
-    run_stages, tiny_cnn_pipeline, tiny_cnn_stages, InferencePipeline, PipelineReport, Stage,
-    StageOp,
-};
 pub use service::{
     BackendKind, DenseResponse, KrakenService, Payload, Response, RunError, ServiceBuilder,
     ServiceStats, Ticket,

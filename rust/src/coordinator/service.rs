@@ -6,13 +6,15 @@
 //! (cycle-accurate engine / functional / baseline estimator), the pool
 //! width, the multi-chip partition factor, and the dense batching
 //! policy (row capacity **and** a time-window flush), and registers any
-//! number of *named models* — full layer pipelines and standalone dense
-//! ops alike — into a single [`KrakenService`].
+//! number of *named models* — [`crate::model::ModelGraph`]s (linear
+//! chains and branchy topologies like ResNet-50's residual blocks
+//! alike, validated and shape-checked at build time) and standalone
+//! dense ops — into a single [`KrakenService`].
 //!
 //! Every submission goes through one typed entry point:
 //!
 //! ```text
-//! service.submit("tiny_cnn", image)   -> Ticket<Response>       (pipeline model)
+//! service.submit("resnet50", image)   -> Ticket<Response>       (graph model)
 //! service.submit("ranker_fc", row)    -> Ticket<DenseResponse>  (dense model)
 //! ```
 //!
@@ -44,12 +46,12 @@ use std::time::{Duration, Instant};
 use crate::arch::KrakenConfig;
 use crate::backend::pool::{panic_reason, ShardedPool};
 use crate::backend::{Accelerator, Estimator, Functional};
+use crate::model::{run_graph, ModelGraph};
 use crate::partition::PartitionedPool;
 use crate::sim::Engine;
 use crate::tensor::Tensor4;
 
 use super::batcher::DenseOp;
-use super::scheduler::{run_stages, Stage};
 
 /// A request that could not be served: the model was unknown, the
 /// payload malformed, or the worker's backend panicked (or died) while
@@ -70,9 +72,11 @@ impl std::fmt::Display for RunError {
 
 impl std::error::Error for RunError {}
 
-/// One pipeline-model request's result.
+/// One graph-model request's result.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// Raw int32 accumulators of the graph's last accelerated node
+    /// (the classifier layer in every benchmark CNN).
     pub logits: Vec<i32>,
     /// Time spent queued before a worker picked the request up.
     pub queue_us: f64,
@@ -175,11 +179,11 @@ pub struct ServiceStats {
 }
 
 impl ServiceStats {
-    /// Pipeline-model requests completed. `completed` and
+    /// Graph-model requests completed. `completed` and
     /// `total_clocks` include dense rows, but `total_device_ms` covers
-    /// only pipeline runs — divide it by *this* count, not `completed`,
+    /// only graph runs — divide it by *this* count, not `completed`,
     /// when deriving modeled throughput.
-    pub fn pipeline_completed(&self) -> u64 {
+    pub fn graph_completed(&self) -> u64 {
         self.completed - self.dense_rows
     }
 }
@@ -201,14 +205,15 @@ pub enum BackendKind {
 
 /// A model as registered on the builder.
 enum BuilderModel {
-    Pipeline(Vec<Stage>),
+    Graph(ModelGraph),
     Dense(DenseOp),
 }
 
 /// Declarative configuration for a [`KrakenService`].
 ///
 /// ```no_run
-/// use kraken::coordinator::{tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
+/// use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+/// use kraken::networks::{resnet50_graph, tiny_cnn_graph};
 /// use kraken::quant::QParams;
 /// use kraken::tensor::Tensor4;
 /// use std::time::Duration;
@@ -219,7 +224,8 @@ enum BuilderModel {
 ///     .partition(2)
 ///     .batch_capacity(7)
 ///     .flush_window(Duration::from_micros(200))
-///     .register_pipeline("tiny_cnn", tiny_cnn_stages())
+///     .register_graph("tiny_cnn", tiny_cnn_graph())
+///     .register_graph("resnet50", resnet50_graph())
 ///     .register_dense(
 ///         "ranker_fc",
 ///         DenseOp::new("fc", 64, 16, Tensor4::random([1, 1, 64, 16], 1).data, QParams::identity()),
@@ -304,11 +310,12 @@ impl ServiceBuilder {
         self
     }
 
-    /// Register a named pipeline model (an ordered stage list — conv /
-    /// FC layers plus host glue). The stages are shared read-only
-    /// across all workers; weights are **not** duplicated per worker.
-    pub fn register_pipeline(mut self, name: impl Into<String>, stages: Vec<Stage>) -> Self {
-        self.push_model(name.into(), BuilderModel::Pipeline(stages));
+    /// Register a named graph model (a validated
+    /// [`ModelGraph`] — linear chains and branchy topologies alike).
+    /// The graph (weights included) is shared read-only across all
+    /// workers; nothing is duplicated per worker.
+    pub fn register_graph(mut self, name: impl Into<String>, graph: ModelGraph) -> Self {
+        self.push_model(name.into(), BuilderModel::Graph(graph));
         self
     }
 
@@ -374,7 +381,7 @@ impl ServiceBuilder {
             per_model.insert(name.clone(), 0u64);
             let shared: Arc<str> = Arc::from(name.as_str());
             let kind = match model {
-                BuilderModel::Pipeline(stages) => ModelKind::Pipeline(Arc::new(stages)),
+                BuilderModel::Graph(graph) => ModelKind::Graph(Arc::new(graph)),
                 BuilderModel::Dense(op) => ModelKind::Dense(DenseLane {
                     op: Arc::new(op),
                     pending: Mutex::new(Vec::new()),
@@ -413,10 +420,10 @@ impl ServiceBuilder {
 
 /// One queued unit of work for the worker pool.
 enum Job {
-    /// Full-pipeline inference for one named model.
+    /// Full-graph inference for one named model.
     Infer {
         model: Arc<str>,
-        stages: Arc<Vec<Stage>>,
+        graph: Arc<ModelGraph>,
         input: Tensor4<i8>,
         enqueued: Instant,
         resp: mpsc::Sender<Result<Response, RunError>>,
@@ -440,7 +447,7 @@ struct ModelEntry {
 }
 
 enum ModelKind {
-    Pipeline(Arc<Vec<Stage>>),
+    Graph(Arc<ModelGraph>),
     Dense(DenseLane),
 }
 
@@ -495,7 +502,7 @@ impl ServiceInner {
     fn dense_lanes(&self) -> impl Iterator<Item = (&Arc<str>, &DenseLane)> + '_ {
         self.models.values().filter_map(|entry| match &entry.kind {
             ModelKind::Dense(lane) => Some((&entry.name, lane)),
-            ModelKind::Pipeline(_) => None,
+            ModelKind::Graph(_) => None,
         })
     }
 
@@ -606,10 +613,10 @@ fn handle_job<B: Accelerator>(
     stats: &Mutex<ServiceStats>,
 ) {
     match job {
-        Job::Infer { model, stages, input, enqueued, resp } => {
+        Job::Infer { model, graph, input, enqueued, resp } => {
             let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
             let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                run_stages(backend, &stages, &input)
+                run_graph(backend, &graph, &input)
             }));
             match run {
                 Ok(report) => {
@@ -691,7 +698,7 @@ fn handle_job<B: Accelerator>(
 }
 
 /// A payload accepted by [`KrakenService::submit`]. Implemented for
-/// [`Tensor4<i8>`] (pipeline models → [`Response`]) and `Vec<i8>`
+/// [`Tensor4<i8>`] (graph models → [`Response`]) and `Vec<i8>`
 /// (dense-model feature rows → [`DenseResponse`]).
 pub trait Payload: Sized {
     type Reply;
@@ -743,17 +750,20 @@ impl KrakenService {
         names
     }
 
-    /// Submit one payload to a named model. Pipeline models take a
+    /// Submit one payload to a named model. Graph models take a
     /// [`Tensor4<i8>`] image; dense models take a `Vec<i8>` feature
-    /// row. Unknown names or mismatched payloads resolve the ticket to
-    /// an error instead of panicking.
+    /// row. Unknown names, mismatched payloads and wrong input shapes
+    /// resolve the ticket to an error instead of panicking.
     pub fn submit<P: Payload>(&self, model: &str, payload: P) -> Ticket<P::Reply> {
         payload.dispatch(self, model)
     }
 
-    /// Submit a whole batch of pipeline inputs in one queue operation,
+    /// Submit a whole batch of graph inputs in one queue operation,
     /// one ticket per input (in submission order) — the batched-dispatch
-    /// fast path.
+    /// fast path. Inputs whose shape does not match the graph's
+    /// declared input resolve their ticket to an error (the shape
+    /// contract was fixed at `GraphBuilder::build` time, so this is the
+    /// only runtime check left).
     pub fn submit_batch(
         &self,
         model: &str,
@@ -766,7 +776,7 @@ impl KrakenService {
                 .map(|_| Ticket::failed(unknown_model(model, inner)))
                 .collect();
         };
-        let ModelKind::Pipeline(stages) = &entry.kind else {
+        let ModelKind::Graph(graph) = &entry.kind else {
             return inputs
                 .into_iter()
                 .map(|_| {
@@ -779,23 +789,31 @@ impl KrakenService {
         let mut tickets = Vec::new();
         let jobs: Vec<Job> = inputs
             .into_iter()
-            .map(|input| {
+            .filter_map(|input| {
+                if input.shape != graph.input_shape() {
+                    tickets.push(Ticket::failed(format!(
+                        "input shape {:?} does not match model '{model}' input {:?}",
+                        input.shape,
+                        graph.input_shape()
+                    )));
+                    return None;
+                }
                 let (tx, ticket) = Ticket::channel();
                 tickets.push(ticket);
-                Job::Infer {
+                Some(Job::Infer {
                     model: Arc::clone(&entry.name),
-                    stages: Arc::clone(stages),
+                    graph: Arc::clone(graph),
                     input,
                     enqueued: Instant::now(),
                     resp: tx,
-                }
+                })
             })
             .collect();
         inner.pool.submit_batch(jobs);
         tickets
     }
 
-    /// Blocking convenience: submit to a pipeline model and wait.
+    /// Blocking convenience: submit to a graph model and wait.
     pub fn infer(&self, model: &str, input: Tensor4<i8>) -> Result<Response, RunError> {
         self.submit(model, input).wait()
     }
@@ -808,7 +826,7 @@ impl KrakenService {
 
     fn submit_infer(&self, model: &str, input: Tensor4<i8>) -> Ticket<Response> {
         // One lookup/validation/dispatch path for single and batched
-        // pipeline submissions.
+        // graph submissions.
         let mut tickets = self.submit_batch(model, std::iter::once(input));
         tickets.pop().expect("one ticket per submitted input")
     }
@@ -820,7 +838,7 @@ impl KrakenService {
         };
         let ModelKind::Dense(lane) = &entry.kind else {
             return Ticket::failed(format!(
-                "model '{model}' is a pipeline; submit a Tensor4<i8> input"
+                "model '{model}' is a graph model; submit a Tensor4<i8> input"
             ));
         };
         if features.len() != lane.op.ci {
@@ -908,9 +926,9 @@ fn unknown_model(model: &str, inner: &ServiceInner) -> String {
 mod tests {
     use super::*;
     use crate::backend::{LayerData, LayerOutput};
-    use crate::coordinator::scheduler::{tiny_cnn_pipeline, tiny_cnn_stages, X_SEED};
     use crate::layers::LayerKind;
     use crate::metrics::Counters;
+    use crate::networks::{tiny_cnn_graph, X_SEED};
     use crate::quant::QParams;
     use crate::tensor::matmul_i8;
 
@@ -919,7 +937,7 @@ mod tests {
             .config(KrakenConfig::new(7, 96))
             .backend(kind)
             .workers(workers)
-            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_graph("tiny_cnn", tiny_cnn_graph())
             .build()
     }
 
@@ -997,7 +1015,7 @@ mod tests {
     fn unknown_model_and_wrong_payload_fail_fast() {
         let service = ServiceBuilder::new()
             .backend(BackendKind::Functional)
-            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_graph("tiny_cnn", tiny_cnn_graph())
             .register_dense("fc", dense_op(12, 10))
             .build();
         let err = service
@@ -1013,8 +1031,13 @@ mod tests {
         let err = service
             .submit("tiny_cnn", vec![0i8; 12])
             .wait()
-            .expect_err("row to a pipeline must fail");
-        assert!(err.reason.contains("pipeline"), "{}", err.reason);
+            .expect_err("row to a graph model must fail");
+        assert!(err.reason.contains("graph model"), "{}", err.reason);
+        let err = service
+            .submit("tiny_cnn", Tensor4::random([1, 14, 14, 3], 1))
+            .wait()
+            .expect_err("wrong image shape must fail");
+        assert!(err.reason.contains("does not match"), "{}", err.reason);
         let err = service
             .submit("fc", vec![0i8; 13])
             .wait()
@@ -1055,7 +1078,7 @@ mod tests {
         let service = ServiceBuilder::new()
             .config(KrakenConfig::new(7, 96))
             .workers(1)
-            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_graph("tiny_cnn", tiny_cnn_graph())
             .build_with(|_| Panicky { inner: Functional::new(KrakenConfig::new(7, 96)) });
         let good = Tensor4::random([1, 28, 28, 3], X_SEED);
         let mut bad = good.clone();
@@ -1153,15 +1176,16 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_results_match_owned_pipeline() {
-        // The registry's shared-stage path computes exactly what an
-        // owning InferencePipeline computes.
+    fn served_graph_matches_direct_run_graph() {
+        // The registry's shared-graph path computes exactly what a
+        // direct run_graph over an owned backend computes.
         let service = tiny_service(2, BackendKind::Functional);
-        let mut pipe = tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)));
+        let graph = tiny_cnn_graph();
+        let mut backend = Functional::new(KrakenConfig::new(7, 96));
         for seed in [X_SEED, 7, 8] {
             let x = Tensor4::random([1, 28, 28, 3], seed);
             let served = service.infer("tiny_cnn", x.clone()).expect("served");
-            let direct = pipe.run(&x);
+            let direct = run_graph(&mut backend, &graph, &x);
             assert_eq!(served.logits, direct.logits);
             assert_eq!(served.clocks, direct.total_clocks);
         }

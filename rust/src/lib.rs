@@ -19,7 +19,17 @@
 //! * [`arch`] — the static configuration (`R × C`, word widths) and the
 //!   64-bit dynamic-reconfiguration header (§III-G).
 //! * [`networks`] — AlexNet, VGG-16, ResNet-50 (every layer), plus tiny
-//!   test networks and a generic graph builder (Table I).
+//!   test networks (Table I) and the executable graph zoo
+//!   ([`networks::graphs`]): the same networks lowered to runnable
+//!   [`model::ModelGraph`]s — including ResNet-50 with its real
+//!   skip-connection topology.
+//! * [`model`] — the graph-IR model API: a [`model::ModelGraph`] DAG of
+//!   accelerated layers and §II-C host ops (max-pool, global average
+//!   pool, residual add, concat, requant, flatten), a fluent
+//!   [`model::GraphBuilder`] with build-time topological validation and
+//!   shape checking (typed [`model::GraphError`]s), and the generic
+//!   executor [`model::run_graph`] over the [`Accelerator`] seam with
+//!   `Arc`-shared activations across fan-out edges.
 //! * [`tensor`] / [`quant`] — NHWC int8 tensors, reference convolution and
 //!   matmul oracles, and integer requantization.
 //! * [`dataflow`] — the data restructurings `X → X̂`, `K → K̂`, `Ŷ′ → Ŷ`
@@ -46,12 +56,12 @@
 //! * [`runtime`] — the PJRT runtime that loads the AOT-lowered JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them from Rust; the
 //!   golden model for functional verification.
-//! * [`coordinator`] — the L3 serving layer: layer scheduler with
-//!   back-to-back configuration streaming and weight-prefetch overlap,
-//!   plus the [`coordinator::KrakenService`] front-end — a builder-
-//!   configured, named-model registry over a work-stealing backend
-//!   pool, with unified `submit(model, payload) -> Ticket<T>` job
-//!   tickets and capacity- or deadline-triggered dense batching.
+//! * [`coordinator`] — the L3 serving layer: the
+//!   [`coordinator::KrakenService`] front-end — a builder-configured,
+//!   named-model registry (graph models + dense ops) over a
+//!   work-stealing backend pool, with unified
+//!   `submit(model, payload) -> Ticket<T>` job tickets and capacity- or
+//!   deadline-triggered dense batching.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
 
@@ -62,6 +72,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod layers;
 pub mod metrics;
+pub mod model;
 pub mod networks;
 pub mod partition;
 pub mod perf;
@@ -75,5 +86,6 @@ pub use arch::KrakenConfig;
 pub use backend::{Accelerator, LayerData, LayerOutput};
 pub use coordinator::{BackendKind, KrakenService, ServiceBuilder, Ticket};
 pub use layers::{Layer, LayerKind};
+pub use model::{run_graph, GraphBuilder, GraphError, GraphReport, ModelGraph, NodeId, NodeOp};
 pub use networks::Network;
 pub use partition::{PartitionPlan, PartitionedPool, SplitAxis};

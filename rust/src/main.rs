@@ -10,8 +10,12 @@ use std::path::Path;
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
-use kraken::coordinator::{tiny_cnn_pipeline, tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder};
-use kraken::networks::{paper_networks, Network};
+use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+use kraken::model::{run_graph, ModelGraph};
+use kraken::networks::{
+    alexnet_graph, paper_networks, resnet50_graph_at, tiny_cnn_graph, tiny_mlp_graph, Network,
+    X_SEED,
+};
 use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::perf::PerfModel;
 use kraken::quant::QParams;
@@ -56,6 +60,11 @@ system:
                   predicted vs measured clocks, overhead) on net ∈
                   tiny_cnn|tiny_mlp|alexnet|vgg16|resnet50
                   (default tiny_cnn), measured on functional backends
+  graph <net> [res]
+                  topology table of the executable model graph (nodes,
+                  edges, shapes; accelerated vs host ops) for net ∈
+                  tiny_cnn|tiny_mlp|alexnet|resnet50; res scales
+                  ResNet-50's input (default 224, multiples of 16)
   report R C      per-network §V metrics for configuration R×C
 ";
 
@@ -104,6 +113,11 @@ fn main() {
             let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
             let net = args.get(2).map(String::as_str).unwrap_or("tiny_cnn");
             partition_cmd(shards, net);
+        }
+        "graph" => {
+            let net = args.get(1).map(String::as_str).unwrap_or("tiny_cnn");
+            let res: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(224);
+            graph_cmd(net, res);
         }
         "report" => {
             let r: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(7);
@@ -179,9 +193,8 @@ fn verify() {
             }
             ArtifactKind::TinyCnn => {
                 let (x, _w, logits) = runner.run_tiny_cnn().unwrap();
-                let engine = Engine::new(KrakenConfig::new(7, 96), 8);
-                let mut pipeline = tiny_cnn_pipeline(engine);
-                let rep = pipeline.run(&x);
+                let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
+                let rep = run_graph(&mut engine, &tiny_cnn_graph(), &x);
                 assert_eq!(rep.logits, logits, "tiny_cnn logits mismatch");
                 println!("  {:<10} OK (8-layer logits bit-exact)", spec.name);
                 ok += 1;
@@ -193,13 +206,13 @@ fn verify() {
 
 /// Simulate TinyCNN and report the engine counters.
 fn simulate() {
-    let engine = Engine::new(KrakenConfig::paper(), 8);
-    let mut pipeline = tiny_cnn_pipeline(engine);
-    let x = Tensor4::random([1, 28, 28, 3], kraken::coordinator::scheduler::X_SEED);
-    let rep = pipeline.run(&x);
+    let mut engine = Engine::new(KrakenConfig::paper(), 8);
+    let graph = tiny_cnn_graph();
+    let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+    let rep = run_graph(&mut engine, &graph, &x);
     println!("TinyCNN through Kraken 7×96 (clock-accurate):");
-    for (stage, clocks) in pipeline.stages.iter().zip(&rep.stage_clocks) {
-        println!("  {:<8} {:>9} clocks", stage.layer.name, clocks);
+    for (name, clocks) in &rep.node_clocks {
+        println!("  {:<8} {:>9} clocks", name, clocks);
     }
     println!(
         "  total   {:>9} clocks  ({:.3} ms modeled @400/200 MHz)",
@@ -324,7 +337,7 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
         .backend(BackendKind::Engine)
         .workers(engines)
         .partition(partition)
-        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_graph("tiny_cnn", tiny_cnn_graph())
         .register_dense(
             "ranker_fc",
             DenseOp::new(
@@ -413,9 +426,38 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
         stats.dense_rows,
         stats.dense_flushes,
         stats.window_flushes,
-        stats.pipeline_completed() as f64 / (device_ms / 1e3),
+        stats.graph_completed() as f64 / (device_ms / 1e3),
         wall,
         stats.completed as f64 / wall
+    );
+}
+
+/// Topology table of one executable model graph: every node in
+/// execution order with its op (accelerated layer vs §II-C host op),
+/// input edges and output tensor shape — the `Network`-can't-express
+/// structure (pools, flattens, residual skips) made visible.
+fn graph_cmd(net: &str, res: usize) {
+    let graph: ModelGraph = match net {
+        "tiny_cnn" => tiny_cnn_graph(),
+        "tiny_mlp" => tiny_mlp_graph(),
+        "alexnet" => alexnet_graph(3000),
+        "resnet50" => {
+            if res < 32 || res % 16 != 0 {
+                eprintln!("resnet50 input resolution must be a multiple of 16, ≥ 32 (got {res})");
+                return;
+            }
+            resnet50_graph_at(res)
+        }
+        other => {
+            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|resnet50)");
+            return;
+        }
+    };
+    print!("{}", graph.describe());
+    println!(
+        "\ninput {:?} → output {:?}; host ops run between accelerated passes (§II-C)",
+        graph.input_shape(),
+        graph.output_shape()
     );
 }
 

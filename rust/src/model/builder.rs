@@ -1,0 +1,266 @@
+//! The fluent [`GraphBuilder`]: accumulate nodes, connect them by the
+//! [`NodeId`]s earlier calls returned, and validate everything at
+//! [`GraphBuilder::build`] — cycles, dangling edges, arities and shapes
+//! all surface as typed [`GraphError`]s before any inference runs.
+//!
+//! ```no_run
+//! use kraken::model::GraphBuilder;
+//! use kraken::layers::Layer;
+//! use kraken::quant::QParams;
+//! use kraken::tensor::Tensor4;
+//!
+//! let mut b = GraphBuilder::new("residual_demo");
+//! let x = b.input([1, 8, 8, 16]);
+//! let conv = Layer::conv("conv", 1, 8, 8, 3, 3, 1, 1, 16, 16);
+//! let w = Tensor4::random([3, 3, 16, 16], 1);
+//! let y = b.accel(x, conv, w, QParams::from_scale(1.0 / 64.0, 0, true));
+//! let sum = b.residual_add(y, x);                 // skip connection
+//! let act = b.requant(sum, QParams { relu: true, ..QParams::identity() });
+//! b.output(act);
+//! let graph = b.build().expect("well-formed");
+//! ```
+
+use crate::layers::Layer;
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+use super::graph::{AccelStage, GraphError, ModelGraph, Node, NodeId, NodeOp};
+
+/// Accumulates nodes for a [`ModelGraph`]; validation happens in
+/// [`GraphBuilder::build`].
+pub struct GraphBuilder {
+    name: String,
+    nodes: Vec<Node>,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), nodes: Vec::new() }
+    }
+
+    /// Append a raw node. No validation happens here — `inputs` may
+    /// reference any id, including invalid ones; `build()` diagnoses.
+    pub fn add_op(&mut self, op: NodeOp, inputs: &[NodeId]) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node { op, inputs: inputs.to_vec(), shape: [0; 4] });
+        id
+    }
+
+    /// The graph's single input tensor.
+    pub fn input(&mut self, shape: [usize; 4]) -> NodeId {
+        self.add_op(NodeOp::Input { shape }, &[])
+    }
+
+    /// An accelerated conv / FC / matmul layer bound to `weights` and
+    /// `qparams`.
+    pub fn accel(
+        &mut self,
+        from: NodeId,
+        layer: Layer,
+        weights: Tensor4<i8>,
+        qparams: QParams,
+    ) -> NodeId {
+        self.add_op(NodeOp::Accel(AccelStage { layer, weights, qparams }), &[from])
+    }
+
+    /// Host `k`×`k` max pooling with stride `s` and `pad` rows/columns
+    /// of −∞ padding per side (`pad = 0` ⇒ valid pooling).
+    pub fn maxpool(&mut self, from: NodeId, k: usize, s: usize, pad: usize) -> NodeId {
+        self.add_op(NodeOp::MaxPool { k, s, pad }, &[from])
+    }
+
+    /// Host global average pooling `[N,H,W,C] → [N,1,1,C]`.
+    pub fn global_avg_pool(&mut self, from: NodeId) -> NodeId {
+        self.add_op(NodeOp::GlobalAvgPool, &[from])
+    }
+
+    /// Host element-wise saturating add (the residual skip connection).
+    pub fn residual_add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.add_op(NodeOp::ResidualAdd, &[a, b])
+    }
+
+    /// Host channel concatenation of same-spatial-shape branches.
+    pub fn concat(&mut self, parts: &[NodeId]) -> NodeId {
+        self.add_op(NodeOp::Concat, parts)
+    }
+
+    /// Host requantization (e.g. fused ReLU after a residual add).
+    pub fn requant(&mut self, from: NodeId, q: QParams) -> NodeId {
+        self.add_op(NodeOp::Requant(q), &[from])
+    }
+
+    /// Host reshape to `[1, 1, 1, ·]` for the conv → FC transition.
+    pub fn flatten(&mut self, from: NodeId) -> NodeId {
+        self.add_op(NodeOp::Flatten, &[from])
+    }
+
+    /// The graph's single output.
+    pub fn output(&mut self, from: NodeId) -> NodeId {
+        self.add_op(NodeOp::Output, &[from])
+    }
+
+    /// Validate and shape-check into a runnable [`ModelGraph`].
+    pub fn build(self) -> Result<ModelGraph, GraphError> {
+        ModelGraph::compile(self.name, self.nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv_16(name: &str) -> (Layer, Tensor4<i8>) {
+        (Layer::conv(name, 1, 8, 8, 3, 3, 1, 1, 16, 16), Tensor4::random([3, 3, 16, 16], 5))
+    }
+
+    #[test]
+    fn residual_graph_builds_and_shapes() {
+        let mut b = GraphBuilder::new("res");
+        let x = b.input([1, 8, 8, 16]);
+        let (layer, w) = conv_16("conv");
+        let y = b.accel(x, layer, w, QParams::identity());
+        let sum = b.residual_add(y, x);
+        let act = b.requant(sum, QParams { relu: true, ..QParams::identity() });
+        b.output(act);
+        let g = b.build().expect("well-formed graph");
+        assert_eq!(g.input_shape(), [1, 8, 8, 16]);
+        assert_eq!(g.output_shape(), [1, 8, 8, 16]);
+        assert_eq!(g.accel_stages().count(), 1);
+        assert_eq!(g.host_nodes(), 2);
+        // The input fans out to the conv AND the skip: 2 consumers.
+        assert!(g.describe().contains("residual_add"));
+    }
+
+    #[test]
+    fn dangling_edge_is_a_typed_build_error() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 4, 4, 1]);
+        // NodeId(7) does not exist.
+        b.add_op(NodeOp::ResidualAdd, &[x, NodeId(7)]);
+        let err = b.build().expect_err("dangling edge must fail the build");
+        assert_eq!(err, GraphError::DanglingEdge { node: NodeId(1), input: NodeId(7) });
+    }
+
+    #[test]
+    fn cycle_is_a_typed_build_error() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 4, 4, 2]);
+        // n1 and n2 feed each other: a 2-cycle hanging off the input.
+        let n1 = b.add_op(NodeOp::ResidualAdd, &[x, NodeId(2)]);
+        let n2 = b.add_op(NodeOp::Requant(QParams::identity()), &[n1]);
+        let o = b.add_op(NodeOp::Output, &[n2]);
+        assert_eq!((n1, n2, o), (NodeId(1), NodeId(2), NodeId(3)));
+        match b.build().expect_err("cycle must fail the build") {
+            GraphError::Cycle { nodes } => {
+                assert!(nodes.contains(&NodeId(1)) && nodes.contains(&NodeId(2)));
+            }
+            other => panic!("expected Cycle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_typed_build_error() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 9, 9, 3]); // conv wants 8×8×16
+        let (layer, w) = conv_16("conv");
+        let y = b.accel(x, layer, w, QParams::identity());
+        b.output(y);
+        match b.build().expect_err("shape mismatch must fail the build") {
+            GraphError::ShapeMismatch { node, detail, .. } => {
+                assert_eq!(node, NodeId(1));
+                assert!(detail.contains("[1, 9, 9, 3]"), "{detail}");
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn residual_branch_shape_mismatch_is_diagnosed() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 8, 8, 16]);
+        let pooled = b.maxpool(x, 2, 2, 0); // [1,4,4,16]
+        let sum = b.residual_add(pooled, x); // 4×4 vs 8×8
+        b.output(sum);
+        match b.build().expect_err("branch mismatch must fail") {
+            GraphError::ShapeMismatch { node, .. } => assert_eq!(node, NodeId(2)),
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn arity_and_io_count_errors() {
+        // ResidualAdd with one input.
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 4, 4, 1]);
+        let bad = b.add_op(NodeOp::ResidualAdd, &[x]);
+        b.output(bad);
+        assert!(matches!(b.build(), Err(GraphError::Arity { got: 1, .. })));
+
+        // No output.
+        let mut b = GraphBuilder::new("bad");
+        b.input([1, 4, 4, 1]);
+        assert_eq!(b.build().unwrap_err(), GraphError::OutputCount(0));
+
+        // Two inputs.
+        let mut b = GraphBuilder::new("bad");
+        let a = b.input([1, 4, 4, 1]);
+        let _ = b.input([1, 4, 4, 1]);
+        b.output(a);
+        assert_eq!(b.build().unwrap_err(), GraphError::InputCount(2));
+    }
+
+    #[test]
+    fn zero_dimension_input_is_a_typed_build_error() {
+        // A zero-sized tensor would reach host ops (e.g. the global
+        // average pool's H·W divisor) as a runtime panic — reject it
+        // where every other malformed shape is rejected: at build.
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 0, 0, 3]);
+        let p = b.global_avg_pool(x);
+        b.output(p);
+        match b.build().expect_err("zero-dim input must fail the build") {
+            GraphError::ShapeMismatch { node, detail, .. } => {
+                assert_eq!(node, NodeId(0));
+                assert!(detail.contains("zero dimension"), "{detail}");
+            }
+            other => panic!("expected ShapeMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn weights_shape_is_checked_against_the_layer() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input([1, 8, 8, 16]);
+        let layer = Layer::conv("conv", 1, 8, 8, 3, 3, 1, 1, 16, 16);
+        let wrong_w = Tensor4::random([3, 3, 16, 8], 5); // co = 8, layer says 16
+        let y = b.accel(x, layer, wrong_w, QParams::identity());
+        b.output(y);
+        assert!(matches!(b.build(), Err(GraphError::ShapeMismatch { .. })));
+    }
+
+    #[test]
+    fn maxpool_and_flatten_shapes() {
+        let mut b = GraphBuilder::new("shapes");
+        let x = b.input([1, 57, 57, 4]);
+        let p = b.maxpool(x, 3, 2, 0); // (57−3)/2+1 = 28
+        let f = b.flatten(p);
+        b.output(f);
+        let g = b.build().expect("well-formed");
+        assert_eq!(g.output_shape(), [1, 1, 1, 28 * 28 * 4]);
+
+        // pad = 1 (ResNet stem): (112+2−3)/2+1 = 56.
+        let mut b = GraphBuilder::new("shapes");
+        let x = b.input([1, 112, 112, 4]);
+        let p = b.maxpool(x, 3, 2, 1);
+        b.output(p);
+        assert_eq!(b.build().expect("well-formed").output_shape(), [1, 56, 56, 4]);
+
+        // pad ≥ k would pool pure padding — a build error, not −128
+        // sentinels at run time.
+        let mut b = GraphBuilder::new("shapes");
+        let x = b.input([1, 8, 8, 1]);
+        let p = b.maxpool(x, 2, 1, 3);
+        b.output(p);
+        assert!(matches!(b.build(), Err(GraphError::ShapeMismatch { .. })));
+    }
+}

@@ -1,0 +1,502 @@
+//! The graph IR: nodes, edges, topological validation and shape
+//! inference.
+//!
+//! A [`ModelGraph`] is a DAG whose nodes are either *accelerated*
+//! ([`NodeOp::Accel`]: conv / FC / matmul layers run through any
+//! [`crate::backend::Accelerator`]) or *host ops* (§II-C: "max-pooling,
+//! zero-padding and the element-wise additions of ResNet [are] performed
+//! on the host or folded into requantization"): max-pooling, global
+//! average pooling, residual addition, channel concatenation,
+//! requantization and flattening. Edges carry NHWC int8 activation
+//! tensors.
+//!
+//! Validation is a *build-time* contract: [`ModelGraph::compile`] (via
+//! [`crate::model::GraphBuilder::build`]) rejects cycles, dangling
+//! edges, arity violations and shape mismatches with a typed
+//! [`GraphError`] — a malformed model can never reach a service worker
+//! and panic mid-inference.
+
+use crate::layers::Layer;
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+/// Raw handle to a node inside one graph. Only meaningful for the
+/// builder/graph that issued it; the field is public so tests can
+/// fabricate invalid edges and assert the build-time diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// An accelerated layer bound to its weights and requantization — the
+/// unit of work handed to an [`crate::backend::Accelerator`].
+#[derive(Debug, Clone)]
+pub struct AccelStage {
+    pub layer: Layer,
+    /// `[K_H, K_W, C_i, C_o]` weights (dense: `[1, 1, C_i, C_o]`).
+    pub weights: Tensor4<i8>,
+    /// Requantization applied on the way out (`Ŷ′ → Ŷ`, §IV).
+    pub qparams: QParams,
+}
+
+/// One graph node's operation.
+#[derive(Debug, Clone)]
+pub enum NodeOp {
+    /// The graph's single entry: declares the input tensor shape.
+    Input {
+        shape: [usize; 4],
+    },
+    /// The graph's single exit: passes its input through as the result.
+    Output,
+    /// Accelerated conv / FC / matmul layer (the uniform dataflow).
+    Accel(AccelStage),
+    /// Host max pooling: `k`×`k` window, stride `s`, `pad` rows/columns
+    /// of −∞ padding on every side (`pad = 0` ⇒ valid pooling).
+    MaxPool {
+        k: usize,
+        s: usize,
+        pad: usize,
+    },
+    /// Host global average pooling: `[N, H, W, C] → [N, 1, 1, C]`
+    /// (round-half-away-from-zero), the ResNet-50 classifier head.
+    GlobalAvgPool,
+    /// Host element-wise saturating int8 add of two same-shape inputs
+    /// (the ResNet skip connection).
+    ResidualAdd,
+    /// Host channel concatenation of ≥ 2 same-spatial-shape inputs.
+    Concat,
+    /// Host requantization of an int8 tensor (e.g. the fused
+    /// ReLU/rescale after a residual add, §II-C).
+    Requant(QParams),
+    /// Host reshape `[N, H, W, C] → [1, 1, 1, N·H·W·C]` for the
+    /// conv → FC transition.
+    Flatten,
+}
+
+impl NodeOp {
+    /// Short human-readable label for topology tables and errors.
+    pub fn label(&self) -> String {
+        match self {
+            NodeOp::Input { shape } => format!("input {shape:?}"),
+            NodeOp::Output => "output".into(),
+            NodeOp::Accel(stage) => {
+                let l = &stage.layer;
+                if l.is_dense() {
+                    format!("accel {} [{}×{}]", l.name, l.ci, l.co)
+                } else {
+                    format!(
+                        "accel {} [{}×{}/{}·{}→{}{}]",
+                        l.name,
+                        l.kh,
+                        l.kw,
+                        l.sh,
+                        l.ci * l.groups,
+                        l.co,
+                        if l.groups > 1 { format!(" g{}", l.groups) } else { String::new() }
+                    )
+                }
+            }
+            NodeOp::MaxPool { k, s, pad } => format!("maxpool {k}×{k}/{s} p{pad}"),
+            NodeOp::GlobalAvgPool => "global_avg_pool".into(),
+            NodeOp::ResidualAdd => "residual_add".into(),
+            NodeOp::Concat => "concat".into(),
+            NodeOp::Requant(q) => {
+                format!("requant{}", if q.relu { "+relu" } else { "" })
+            }
+            NodeOp::Flatten => "flatten".into(),
+        }
+    }
+
+    /// `(min, max)` input count; `max = usize::MAX` means unbounded.
+    fn arity(&self) -> (usize, usize) {
+        match self {
+            NodeOp::Input { .. } => (0, 0),
+            NodeOp::Output
+            | NodeOp::Accel(_)
+            | NodeOp::MaxPool { .. }
+            | NodeOp::GlobalAvgPool
+            | NodeOp::Requant(_)
+            | NodeOp::Flatten => (1, 1),
+            NodeOp::ResidualAdd => (2, 2),
+            NodeOp::Concat => (2, usize::MAX),
+        }
+    }
+}
+
+/// One node: its op, its input edges, and (after compilation) the NHWC
+/// shape of the tensor it produces.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: NodeOp,
+    pub inputs: Vec<NodeId>,
+    /// Output shape, inferred at build time.
+    pub shape: [usize; 4],
+}
+
+/// A malformed graph, diagnosed at [`ModelGraph::compile`] time — never
+/// inside a running inference.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    /// These nodes form, or are blocked behind, at least one cycle.
+    Cycle { nodes: Vec<NodeId> },
+    /// `node` references an `input` id that does not exist.
+    DanglingEdge { node: NodeId, input: NodeId },
+    /// Wrong number of inputs for the op.
+    Arity { node: NodeId, op: String, expected: String, got: usize },
+    /// An edge's tensor shape is incompatible with the consuming op.
+    ShapeMismatch { node: NodeId, op: String, detail: String },
+    /// The graph must have exactly one `Input` node.
+    InputCount(usize),
+    /// The graph must have exactly one `Output` node.
+    OutputCount(usize),
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::Cycle { nodes } => {
+                write!(f, "graph contains a cycle through nodes {nodes:?}")
+            }
+            GraphError::DanglingEdge { node, input } => {
+                write!(f, "node {node} references nonexistent input {input}")
+            }
+            GraphError::Arity { node, op, expected, got } => {
+                write!(f, "node {node} ({op}) expects {expected} input(s), got {got}")
+            }
+            GraphError::ShapeMismatch { node, op, detail } => {
+                write!(f, "node {node} ({op}): {detail}")
+            }
+            GraphError::InputCount(n) => {
+                write!(f, "graph must have exactly one Input node, found {n}")
+            }
+            GraphError::OutputCount(n) => {
+                write!(f, "graph must have exactly one Output node, found {n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// A validated, shape-checked DAG of accelerated layers and host ops —
+/// the one model description every execution path (direct
+/// [`crate::model::run_graph`], [`crate::coordinator::KrakenService`]
+/// serving, partitioned pools) shares.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    nodes: Vec<Node>,
+    /// Node indices in a deterministic topological order.
+    topo: Vec<usize>,
+    input: usize,
+    output: usize,
+    /// Fan-out (consumer edge count) per node — the executor drops an
+    /// activation after its last consumer has read it.
+    consumers: Vec<usize>,
+}
+
+impl ModelGraph {
+    /// Validate and shape-check `nodes` into a runnable graph.
+    /// Diagnoses dangling edges, input/output counts, cycles, arity and
+    /// shape mismatches — in that order — as typed [`GraphError`]s.
+    pub fn compile(name: impl Into<String>, mut nodes: Vec<Node>) -> Result<Self, GraphError> {
+        let n = nodes.len();
+        for (i, node) in nodes.iter().enumerate() {
+            for &input in &node.inputs {
+                if input.0 >= n {
+                    return Err(GraphError::DanglingEdge { node: NodeId(i), input });
+                }
+            }
+        }
+        let inputs: Vec<usize> = (0..n)
+            .filter(|&i| matches!(nodes[i].op, NodeOp::Input { .. }))
+            .collect();
+        if inputs.len() != 1 {
+            return Err(GraphError::InputCount(inputs.len()));
+        }
+        let outputs: Vec<usize> =
+            (0..n).filter(|&i| matches!(nodes[i].op, NodeOp::Output)).collect();
+        if outputs.len() != 1 {
+            return Err(GraphError::OutputCount(outputs.len()));
+        }
+
+        // Kahn's algorithm with an index-ordered frontier: deterministic
+        // topological order (stable per-node clock reports), cycle
+        // detection for free.
+        let mut consumers = vec![0usize; n];
+        let mut indegree: Vec<usize> = nodes.iter().map(|node| node.inputs.len()).collect();
+        let mut out_edges: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in nodes.iter().enumerate() {
+            for &NodeId(j) in &node.inputs {
+                out_edges[j].push(i);
+                consumers[j] += 1;
+            }
+        }
+        let mut frontier = std::collections::BinaryHeap::new();
+        for (i, &d) in indegree.iter().enumerate() {
+            if d == 0 {
+                frontier.push(std::cmp::Reverse(i));
+            }
+        }
+        let mut topo = Vec::with_capacity(n);
+        while let Some(std::cmp::Reverse(i)) = frontier.pop() {
+            topo.push(i);
+            for &j in &out_edges[i] {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    frontier.push(std::cmp::Reverse(j));
+                }
+            }
+        }
+        if topo.len() != n {
+            let stuck: Vec<NodeId> =
+                (0..n).filter(|&i| indegree[i] > 0).map(NodeId).collect();
+            return Err(GraphError::Cycle { nodes: stuck });
+        }
+
+        // Arity, then shape inference in topological order.
+        for &i in &topo {
+            let (min, max) = nodes[i].op.arity();
+            let got = nodes[i].inputs.len();
+            if got < min || got > max {
+                return Err(GraphError::Arity {
+                    node: NodeId(i),
+                    op: nodes[i].op.label(),
+                    expected: if min == max {
+                        format!("{min}")
+                    } else if max == usize::MAX {
+                        format!("≥ {min}")
+                    } else {
+                        format!("{min}..={max}")
+                    },
+                    got,
+                });
+            }
+            let shape = {
+                let in_shapes: Vec<[usize; 4]> =
+                    nodes[i].inputs.iter().map(|id| nodes[id.0].shape).collect();
+                infer_shape(NodeId(i), &nodes[i].op, &in_shapes)?
+            };
+            nodes[i].shape = shape;
+        }
+
+        Ok(Self { name: name.into(), nodes, topo, input: inputs[0], output: outputs[0], consumers })
+    }
+
+    /// Build a linear chain `input → ops[0] → … → ops[last] → output` —
+    /// the degenerate graph every old `Vec<Stage>` pipeline maps onto.
+    /// `Input`/`Output` nodes are added automatically.
+    pub fn linear(
+        name: impl Into<String>,
+        input_shape: [usize; 4],
+        ops: impl IntoIterator<Item = NodeOp>,
+    ) -> Result<Self, GraphError> {
+        let mut nodes = vec![Node {
+            op: NodeOp::Input { shape: input_shape },
+            inputs: Vec::new(),
+            shape: [0; 4],
+        }];
+        for op in ops {
+            let prev = NodeId(nodes.len() - 1);
+            nodes.push(Node { op, inputs: vec![prev], shape: [0; 4] });
+        }
+        let prev = NodeId(nodes.len() - 1);
+        nodes.push(Node { op: NodeOp::Output, inputs: vec![prev], shape: [0; 4] });
+        Self::compile(name, nodes)
+    }
+
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Node indices in execution (topological) order.
+    pub fn topo_order(&self) -> &[usize] {
+        &self.topo
+    }
+
+    pub(crate) fn consumers(&self) -> &[usize] {
+        &self.consumers
+    }
+
+    pub(crate) fn output_index(&self) -> usize {
+        self.output
+    }
+
+    /// Declared shape of the single input tensor.
+    pub fn input_shape(&self) -> [usize; 4] {
+        self.nodes[self.input].shape
+    }
+
+    /// Shape of the tensor the `Output` node yields.
+    pub fn output_shape(&self) -> [usize; 4] {
+        self.nodes[self.output].shape
+    }
+
+    /// Accelerated stages in execution order (the layers a backend will
+    /// actually run).
+    pub fn accel_stages(&self) -> impl Iterator<Item = &AccelStage> + '_ {
+        self.topo.iter().filter_map(|&i| match &self.nodes[i].op {
+            NodeOp::Accel(stage) => Some(stage),
+            _ => None,
+        })
+    }
+
+    /// Total weight words resident in the graph.
+    pub fn weight_words(&self) -> u64 {
+        self.accel_stages().map(|s| s.weights.data.len() as u64).sum()
+    }
+
+    /// Host-op node count (everything that is not Input/Output/Accel).
+    pub fn host_nodes(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|node| {
+                !matches!(node.op, NodeOp::Input { .. } | NodeOp::Output | NodeOp::Accel(_))
+            })
+            .count()
+    }
+
+    /// Human-readable topology table (the `kraken graph <net>` CLI):
+    /// one row per node in execution order — id, op, input edges,
+    /// output shape.
+    pub fn describe(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "{}: {} nodes ({} accelerated, {} host), {} weight words",
+            self.name,
+            self.nodes.len(),
+            self.accel_stages().count(),
+            self.host_nodes(),
+            self.weight_words(),
+        );
+        let _ = writeln!(s, "{:<6} {:<38} {:<16} {}", "node", "op", "inputs", "shape");
+        for &i in &self.topo {
+            let node = &self.nodes[i];
+            let inputs = if node.inputs.is_empty() {
+                "—".to_string()
+            } else {
+                node.inputs.iter().map(|id| id.to_string()).collect::<Vec<_>>().join(",")
+            };
+            let _ = writeln!(
+                s,
+                "{:<6} {:<38} {:<16} {:?}",
+                NodeId(i).to_string(),
+                node.op.label(),
+                inputs,
+                node.shape
+            );
+        }
+        s
+    }
+}
+
+/// Infer one node's output shape from its input shapes, checking the
+/// op's shape contract.
+fn infer_shape(
+    id: NodeId,
+    op: &NodeOp,
+    ins: &[[usize; 4]],
+) -> Result<[usize; 4], GraphError> {
+    let mismatch = |detail: String| GraphError::ShapeMismatch {
+        node: id,
+        op: op.label(),
+        detail,
+    };
+    match op {
+        NodeOp::Input { shape } => {
+            if shape.iter().any(|&d| d == 0) {
+                return Err(mismatch(format!("input shape {shape:?} has a zero dimension")));
+            }
+            Ok(*shape)
+        }
+        NodeOp::Output | NodeOp::Requant(_) => Ok(ins[0]),
+        NodeOp::Accel(stage) => {
+            let l = &stage.layer;
+            if l.is_dense() {
+                let want_k = [1, 1, l.ci, l.co];
+                if stage.weights.shape != want_k {
+                    return Err(mismatch(format!(
+                        "dense weights {:?}, layer wants {want_k:?}",
+                        stage.weights.shape
+                    )));
+                }
+                let elems: usize = ins[0].iter().product();
+                if ins[0][0] != 1 || elems != l.h * l.ci {
+                    return Err(mismatch(format!(
+                        "dense input {:?} ({elems} elements), layer wants {} rows × C_i = {}",
+                        ins[0], l.h, l.ci
+                    )));
+                }
+                Ok([1, l.h, 1, l.co])
+            } else {
+                let want_x = [l.n, l.h, l.w, l.ci * l.groups];
+                if ins[0] != want_x {
+                    return Err(mismatch(format!(
+                        "conv input {:?}, layer '{}' wants {want_x:?}",
+                        ins[0], l.name
+                    )));
+                }
+                let want_k = [l.kh, l.kw, l.ci, l.co];
+                if stage.weights.shape != want_k {
+                    return Err(mismatch(format!(
+                        "conv weights {:?}, layer '{}' wants {want_k:?}",
+                        stage.weights.shape, l.name
+                    )));
+                }
+                Ok([l.n, l.out_h(), l.out_w(), l.co])
+            }
+        }
+        NodeOp::MaxPool { k, s, pad } => {
+            let [n, h, w, c] = ins[0];
+            if *k == 0 || *s == 0 {
+                return Err(mismatch(format!("degenerate window k={k} s={s}")));
+            }
+            // pad < k guarantees every pooling window contains at least
+            // one in-bounds tap — no output pixel is fabricated purely
+            // from −∞ padding.
+            if pad >= k {
+                return Err(mismatch(format!(
+                    "padding {pad} ≥ window {k} would pool pure padding"
+                )));
+            }
+            if h + 2 * pad < *k || w + 2 * pad < *k {
+                return Err(mismatch(format!(
+                    "window {k}×{k} (pad {pad}) larger than input {h}×{w}"
+                )));
+            }
+            Ok([n, (h + 2 * pad - k) / s + 1, (w + 2 * pad - k) / s + 1, c])
+        }
+        NodeOp::GlobalAvgPool => {
+            let [n, _, _, c] = ins[0];
+            Ok([n, 1, 1, c])
+        }
+        NodeOp::ResidualAdd => {
+            if ins[0] != ins[1] {
+                return Err(mismatch(format!(
+                    "branch shapes differ: {:?} vs {:?}",
+                    ins[0], ins[1]
+                )));
+            }
+            Ok(ins[0])
+        }
+        NodeOp::Concat => {
+            let [n, h, w, _] = ins[0];
+            for (j, shape) in ins.iter().enumerate().skip(1) {
+                if shape[0] != n || shape[1] != h || shape[2] != w {
+                    return Err(mismatch(format!(
+                        "input {j} spatial shape {:?} differs from {:?}",
+                        shape, ins[0]
+                    )));
+                }
+            }
+            Ok([n, h, w, ins.iter().map(|shape| shape[3]).sum()])
+        }
+        NodeOp::Flatten => Ok([1, 1, 1, ins[0].iter().product()]),
+    }
+}

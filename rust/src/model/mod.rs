@@ -1,0 +1,37 @@
+//! The graph-IR model API: one description for *any* DNN topology.
+//!
+//! The paper's engine processes conv, FC and matmul layers of any DNN
+//! through one uniform dataflow (§II); everything else — max-pooling,
+//! residual additions, concatenation, requantization — runs on the host
+//! (§II-C). This module makes that split explicit:
+//!
+//! * [`ModelGraph`] — a validated DAG whose nodes are accelerated
+//!   layers ([`NodeOp::Accel`]) or host ops ([`NodeOp::MaxPool`],
+//!   [`NodeOp::GlobalAvgPool`], [`NodeOp::ResidualAdd`],
+//!   [`NodeOp::Concat`], [`NodeOp::Requant`], [`NodeOp::Flatten`]),
+//!   with edges carrying NHWC int8 tensors. Branchy topologies —
+//!   ResNet-50's skip connections included — are first-class.
+//! * [`GraphBuilder`] — the fluent construction API. Topological
+//!   validation and shape checking happen at [`GraphBuilder::build`]:
+//!   cycles, dangling edges and shape mismatches are typed
+//!   [`GraphError`]s at *build* time, never panics inside a serving
+//!   worker.
+//! * [`run_graph`] — the generic executor over the
+//!   [`crate::backend::Accelerator`] seam: the same graph runs on the
+//!   cycle-accurate engine, the fast functional backend, a baseline
+//!   estimator, or a multi-chip [`crate::partition::PartitionedPool`].
+//!   Fan-out edges share activations via `Arc` instead of cloning.
+//!
+//! Linear pipelines are the degenerate case ([`ModelGraph::linear`]);
+//! the executable network zoo ([`crate::networks::tiny_cnn_graph`],
+//! [`crate::networks::alexnet_graph`],
+//! [`crate::networks::resnet50_graph`]) builds on these primitives.
+
+mod builder;
+mod exec;
+mod graph;
+pub mod ops;
+
+pub use builder::GraphBuilder;
+pub use exec::{run_graph, GraphReport};
+pub use graph::{AccelStage, GraphError, ModelGraph, Node, NodeId, NodeOp};

@@ -1,0 +1,174 @@
+//! Host-side op kernels (§II-C): the glue a graph carries between
+//! accelerated layers — "max-pooling … and the element-wise additions
+//! of ResNet [are] performed on the host or folded into
+//! requantization". All kernels operate on int8 NHWC tensors and are
+//! deterministic, so graph execution stays bit-exact across backends.
+
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+/// Output size of one pooled dimension: `(d + 2·pad − k) / s + 1`.
+pub fn pool_out_dim(d: usize, k: usize, s: usize, pad: usize) -> usize {
+    (d + 2 * pad - k) / s + 1
+}
+
+/// `k`×`k` max pooling with stride `s` and `pad` implicit −∞ rows and
+/// columns on every side (out-of-bounds taps never win the max, the
+/// PyTorch/Caffe convention). `pad = 0` is valid pooling:
+/// `maxpool(x, 2, 2, 0)` reproduces the old hardcoded 2×2 op
+/// bit-exactly, `maxpool(x, 3, 2, 0)` is AlexNet's overlapped pool and
+/// `maxpool(x, 3, 2, 1)` the ResNet-50 stem pool.
+pub fn maxpool(x: &Tensor4<i8>, k: usize, s: usize, pad: usize) -> Tensor4<i8> {
+    let [n, h, w, c] = x.shape;
+    assert!(k >= 1 && s >= 1 && h + 2 * pad >= k && w + 2 * pad >= k, "degenerate pool window");
+    let (oh, ow) = (pool_out_dim(h, k, s, pad), pool_out_dim(w, k, s, pad));
+    let mut y = Tensor4::<i8>::zeros([n, oh, ow, c]);
+    for bn in 0..n {
+        for yh in 0..oh {
+            for yw in 0..ow {
+                for ch in 0..c {
+                    let mut m = i8::MIN;
+                    for dh in 0..k {
+                        let ih = (yh * s + dh) as isize - pad as isize;
+                        if ih < 0 || ih >= h as isize {
+                            continue;
+                        }
+                        for dw in 0..k {
+                            let iw = (yw * s + dw) as isize - pad as isize;
+                            if iw < 0 || iw >= w as isize {
+                                continue;
+                            }
+                            m = m.max(x.get(bn, ih as usize, iw as usize, ch));
+                        }
+                    }
+                    y.set(bn, yh, yw, ch, m);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Global average pooling `[N, H, W, C] → [N, 1, 1, C]` with
+/// round-half-away-from-zero (the ResNet-50 classifier head).
+pub fn global_avg_pool(x: &Tensor4<i8>) -> Tensor4<i8> {
+    let [n, h, w, c] = x.shape;
+    let cnt = (h * w) as i64;
+    let mut y = Tensor4::<i8>::zeros([n, 1, 1, c]);
+    for bn in 0..n {
+        for ch in 0..c {
+            let mut sum: i64 = 0;
+            for ih in 0..h {
+                for iw in 0..w {
+                    sum += x.get(bn, ih, iw, ch) as i64;
+                }
+            }
+            let avg = if sum >= 0 { (2 * sum + cnt) / (2 * cnt) } else { (2 * sum - cnt) / (2 * cnt) };
+            y.set(bn, 0, 0, ch, avg as i8);
+        }
+    }
+    y
+}
+
+/// Element-wise saturating int8 add — the ResNet skip connection.
+pub fn residual_add(a: &Tensor4<i8>, b: &Tensor4<i8>) -> Tensor4<i8> {
+    assert_eq!(a.shape, b.shape, "residual branches must agree in shape");
+    let data = a.data.iter().zip(&b.data).map(|(&p, &q)| p.saturating_add(q)).collect();
+    Tensor4::from_vec(a.shape, data)
+}
+
+/// Channel concatenation of same-spatial-shape branches.
+pub fn concat_channels(parts: &[&Tensor4<i8>]) -> Tensor4<i8> {
+    assert!(parts.len() >= 2, "concat needs at least two branches");
+    let [n, h, w, _] = parts[0].shape;
+    for p in parts {
+        assert_eq!([p.shape[0], p.shape[1], p.shape[2]], [n, h, w], "concat spatial shape");
+    }
+    let c_total: usize = parts.iter().map(|p| p.shape[3]).sum();
+    let mut y = Tensor4::<i8>::zeros([n, h, w, c_total]);
+    for bn in 0..n {
+        for ih in 0..h {
+            for iw in 0..w {
+                let mut at = 0;
+                for p in parts {
+                    for ch in 0..p.shape[3] {
+                        y.set(bn, ih, iw, at + ch, p.get(bn, ih, iw, ch));
+                    }
+                    at += p.shape[3];
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Requantize an int8 tensor in place of the accelerator's output pipe
+/// (used after host ops like the residual add: widen to i32, apply the
+/// fused bias/ReLU/rescale, narrow back).
+pub fn requant(x: &Tensor4<i8>, q: &QParams) -> Tensor4<i8> {
+    let data = x.data.iter().map(|&v| q.requantize(v as i32)).collect();
+    Tensor4::from_vec(x.shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_2x2_matches_python_ref() {
+        // The exact case the old hardcoded maxpool2x2 unit test used.
+        let x = Tensor4::from_vec([1, 4, 4, 1], (0..16).map(|v| v as i8).collect());
+        let y = maxpool(&x, 2, 2, 0);
+        assert_eq!(y.data, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn maxpool_3x2_valid_overlaps() {
+        // 5×5 ramp, 3×3/s2 valid → 2×2; windows overlap at the center.
+        let x = Tensor4::from_vec([1, 5, 5, 1], (0..25).map(|v| v as i8).collect());
+        let y = maxpool(&x, 3, 2, 0);
+        assert_eq!(y.shape, [1, 2, 2, 1]);
+        assert_eq!(y.data, vec![12, 14, 22, 24]);
+    }
+
+    #[test]
+    fn maxpool_pad_never_wins() {
+        // All-negative input with pad=1: padding must not contribute 0s.
+        let x = Tensor4::from_vec([1, 2, 2, 1], vec![-5i8, -6, -7, -8]);
+        let y = maxpool(&x, 3, 2, 1);
+        assert_eq!(y.shape, [1, 1, 1, 1]);
+        assert_eq!(y.data, vec![-5]);
+    }
+
+    #[test]
+    fn global_avg_pool_rounds_half_away() {
+        let x = Tensor4::from_vec([1, 2, 2, 2], vec![1i8, -1, 2, -2, 3, -3, 4, -4]);
+        let y = global_avg_pool(&x);
+        // channel 0: (1+2+3+4)/4 = 2.5 → 3; channel 1: −2.5 → −3.
+        assert_eq!(y.shape, [1, 1, 1, 2]);
+        assert_eq!(y.data, vec![3, -3]);
+    }
+
+    #[test]
+    fn residual_add_saturates() {
+        let a = Tensor4::from_vec([1, 1, 1, 3], vec![100i8, -100, 7]);
+        let b = Tensor4::from_vec([1, 1, 1, 3], vec![100i8, -100, -9]);
+        assert_eq!(residual_add(&a, &b).data, vec![127, -128, -2]);
+    }
+
+    #[test]
+    fn concat_stacks_channels_in_order() {
+        let a = Tensor4::from_vec([1, 1, 2, 2], vec![1i8, 2, 3, 4]);
+        let b = Tensor4::from_vec([1, 1, 2, 1], vec![9i8, 8]);
+        let y = concat_channels(&[&a, &b]);
+        assert_eq!(y.shape, [1, 1, 2, 3]);
+        assert_eq!(y.data, vec![1, 2, 9, 3, 4, 8]);
+    }
+
+    #[test]
+    fn requant_applies_relu() {
+        let x = Tensor4::from_vec([1, 1, 1, 4], vec![-3i8, 0, 5, -128]);
+        let q = QParams { relu: true, ..QParams::identity() };
+        assert_eq!(requant(&x, &q).data, vec![0, 0, 5, 0]);
+    }
+}

@@ -11,6 +11,10 @@
 //! * FC batch defaults to 1; Table VI re-batches to `R = 7` via
 //!   [`crate::networks::Network::with_fc_batch`].
 
+use super::graphs::seeded_accel;
+use crate::model::{ModelGraph, NodeOp};
+use crate::quant::QParams;
+
 use super::network::Network;
 use crate::layers::Layer;
 
@@ -33,9 +37,56 @@ pub fn alexnet() -> Network {
     net
 }
 
+/// AlexNet as an *executable* linear graph: the real overlapped 3×3/s2
+/// max pools between the conv stages (valid pooling — exactly the
+/// parameterized `maxpool(k, s)` the 2×2 special case could not
+/// express) and a flatten into the FC head. Spatial sizes follow the
+/// repo's `same`-padding convention (conv1 at ⌈227/4⌉ = 57, pooled
+/// 57→28→13→6, fc6 over 6·6·256 = 9216), so consecutive layers chain
+/// shape-exactly. Weights are seeded `seed + 10·j` per layer.
+pub fn alexnet_graph(seed: u64) -> ModelGraph {
+    let q_relu = QParams::from_scale(1.0 / 64.0, 0, true);
+    let q_last = QParams::from_scale(1.0 / 64.0, 0, false);
+    let layers = [
+        Layer::conv("conv1", 1, 227, 227, 11, 11, 4, 4, 3, 96),
+        Layer::conv_grouped("conv2", 1, 28, 28, 5, 5, 1, 1, 48, 256, 2),
+        Layer::conv("conv3", 1, 13, 13, 3, 3, 1, 1, 256, 384),
+        Layer::conv_grouped("conv4", 1, 13, 13, 3, 3, 1, 1, 192, 384, 2),
+        Layer::conv_grouped("conv5", 1, 13, 13, 3, 3, 1, 1, 192, 256, 2),
+        Layer::fully_connected("fc6", 1, 9216, 4096),
+        Layer::fully_connected("fc7", 1, 4096, 4096),
+        Layer::fully_connected("fc8", 1, 4096, 1000),
+    ];
+    let mut ops = Vec::new();
+    for (j, layer) in layers.into_iter().enumerate() {
+        let name = layer.name.clone();
+        let q = if name == "fc8" { q_last } else { q_relu };
+        ops.push(seeded_accel(layer, seed + 10 * j as u64, q));
+        match name.as_str() {
+            "conv1" => ops.push(NodeOp::MaxPool { k: 3, s: 2, pad: 0 }), // 57 → 28
+            "conv2" => ops.push(NodeOp::MaxPool { k: 3, s: 2, pad: 0 }), // 28 → 13
+            "conv5" => {
+                ops.push(NodeOp::MaxPool { k: 3, s: 2, pad: 0 }); // 13 → 6
+                ops.push(NodeOp::Flatten); // [1,6,6,256] → [1,1,1,9216]
+            }
+            _ => {}
+        }
+    }
+    ModelGraph::linear("alexnet", [1, 227, 227, 3], ops).expect("AlexNet graph is well-formed")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn alexnet_graph_chains_shape_exactly() {
+        let g = alexnet_graph(3000);
+        assert_eq!(g.accel_stages().count(), 8);
+        assert_eq!(g.host_nodes(), 4); // 3 pools + flatten
+        assert_eq!(g.input_shape(), [1, 227, 227, 3]);
+        assert_eq!(g.output_shape(), [1, 1, 1, 1000]);
+    }
 
     #[test]
     fn conv1_output_at_floor_56() {

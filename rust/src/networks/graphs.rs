@@ -1,0 +1,180 @@
+//! The executable graph zoo: benchmark and test networks lowered to
+//! [`ModelGraph`]s with deterministic seeded weights, ready to run
+//! through [`crate::model::run_graph`] or to register on a
+//! [`crate::coordinator::KrakenService`].
+//!
+//! The tiny graphs keep the exact weight-seed and requantization
+//! conventions of the deleted `Vec<Stage>` pipeline (and of
+//! `python/compile/model.py` / `testdata.py`), so the `tiny_cnn` AOT
+//! artifact still verifies bit-exactly against the graph path.
+
+use crate::layers::Layer;
+use crate::model::{AccelStage, GraphError, ModelGraph, NodeOp};
+use crate::quant::QParams;
+use crate::tensor::Tensor4;
+
+/// Requantization scale shared by the tiny graphs — keep in sync with
+/// `python/compile/model.py::TINY_SCALE`.
+pub const TINY_SCALE: f64 = 1.0 / 64.0;
+
+/// Input-seed convention shared with `python/compile/testdata.py`.
+pub const X_SEED: u64 = 42;
+/// Weight-seed convention shared with `python/compile/testdata.py`:
+/// layer `j` of a tiny graph uses seed `W_SEED_BASE + 10·j`.
+pub const W_SEED_BASE: u64 = 1000;
+
+/// Deterministic weights for one layer, in the tensor shape the
+/// backend seam expects (`[K_H, K_W, C_i, C_o]`, dense
+/// `[1, 1, C_i, C_o]`).
+pub fn seeded_weights(layer: &Layer, seed: u64) -> Tensor4<i8> {
+    let shape = if layer.is_dense() {
+        [1, 1, layer.ci, layer.co]
+    } else {
+        [layer.kh, layer.kw, layer.ci, layer.co]
+    };
+    Tensor4::random(shape, seed)
+}
+
+/// An accelerated node with seeded weights — the one-liner every graph
+/// builder here uses.
+pub fn seeded_accel(layer: Layer, seed: u64, qparams: QParams) -> NodeOp {
+    let weights = seeded_weights(&layer, seed);
+    NodeOp::Accel(AccelStage { layer, weights, qparams })
+}
+
+/// The TinyCNN as a linear graph with seeded weights — the exact
+/// network the `tiny_cnn` AOT artifact computes
+/// (`rust/tests/e2e_runtime.rs` asserts bit-equality of the logits):
+/// 6 conv layers, a 2×2 max pool after conv4, a flatten after conv6,
+/// 2 FC layers.
+pub fn tiny_cnn_graph() -> ModelGraph {
+    let net = super::tiny_cnn();
+    let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
+    let mut ops = Vec::new();
+    for (j, layer) in net.layers.iter().enumerate() {
+        ops.push(seeded_accel(layer.clone(), W_SEED_BASE + 10 * j as u64, q_relu));
+        match layer.name.as_str() {
+            "conv4" => ops.push(NodeOp::MaxPool { k: 2, s: 2, pad: 0 }), // 14×14 → 7×7
+            "conv6" => ops.push(NodeOp::Flatten), // NHWC → [1, 2352] for fc7
+            _ => {}
+        }
+    }
+    ModelGraph::linear("tiny_cnn", [1, 28, 28, 3], ops).expect("TinyCNN graph is well-formed")
+}
+
+/// The TinyMLP (pure FC path) as a linear graph with seeded weights.
+pub fn tiny_mlp_graph() -> ModelGraph {
+    let net = super::tiny_mlp();
+    let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
+    let ops: Vec<NodeOp> = net
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(j, layer)| seeded_accel(layer.clone(), W_SEED_BASE + 10 * j as u64, q_relu))
+        .collect();
+    ModelGraph::linear("tiny_mlp", [1, 1, 1, 256], ops).expect("TinyMLP graph is well-formed")
+}
+
+/// Lower a plain [`super::Network`] to a linear graph with seeded
+/// weights (layer `j` seeded `seed + 10·j`), inserting a `Flatten`
+/// at the first spatial→dense transition. Networks whose consecutive
+/// layer shapes don't chain (e.g. ones that assume pooling the
+/// `Network` type cannot express) surface the usual typed
+/// [`GraphError::ShapeMismatch`] — the gap the hand-built graphs in
+/// this module close.
+pub fn network_to_linear_graph(
+    net: &super::Network,
+    input_shape: [usize; 4],
+    seed: u64,
+    qparams: QParams,
+) -> Result<ModelGraph, GraphError> {
+    let mut ops = Vec::new();
+    let mut was_spatial = true;
+    for (j, layer) in net.layers.iter().enumerate() {
+        if layer.is_dense() && was_spatial && j > 0 {
+            ops.push(NodeOp::Flatten);
+        }
+        was_spatial = !layer.is_dense();
+        ops.push(seeded_accel(layer.clone(), seed + 10 * j as u64, qparams));
+    }
+    ModelGraph::linear(net.name.clone(), input_shape, ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::backend::Functional;
+    use crate::layers::KrakenLayerParams;
+    use crate::model::run_graph;
+    use crate::sim::Engine;
+
+    #[test]
+    fn tiny_cnn_graph_runs_end_to_end() {
+        let graph = tiny_cnn_graph();
+        assert_eq!(graph.accel_stages().count(), 8);
+        assert_eq!(graph.host_nodes(), 2); // maxpool + flatten
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
+        let report = run_graph(&mut engine, &graph, &x);
+        assert_eq!(report.logits.len(), 10);
+        assert_eq!(report.node_clocks.len(), 8);
+        assert!(report.total_clocks > 0);
+        assert!(report.modeled_ms > 0.0);
+        // Deterministic.
+        let report2 = run_graph(&mut engine, &graph, &x);
+        assert_eq!(report.logits, report2.logits);
+    }
+
+    #[test]
+    fn tiny_cnn_graph_clocks_match_eq17() {
+        let cfg = KrakenConfig::new(7, 96);
+        let graph = tiny_cnn_graph();
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let report = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
+        for (stage, (name, clocks)) in graph.accel_stages().zip(&report.node_clocks) {
+            let p = KrakenLayerParams::derive(&cfg, &stage.layer);
+            assert_eq!(*clocks, p.q, "{name}");
+        }
+    }
+
+    #[test]
+    fn functional_backend_graph_matches_engine_bit_exactly() {
+        // The backend seam under the graph executor: identical logits,
+        // clocks and modeled latency across backends.
+        let cfg = KrakenConfig::new(7, 96);
+        let graph = tiny_cnn_graph();
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+        let a = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
+        let b = run_graph(&mut Functional::new(cfg), &graph, &x);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.node_clocks, b.node_clocks);
+        assert_eq!(a.total_clocks, b.total_clocks);
+        assert!((a.modeled_ms - b.modeled_ms).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_mlp_graph_runs() {
+        let graph = tiny_mlp_graph();
+        assert_eq!(graph.accel_stages().count(), 2);
+        let x = Tensor4::random([1, 1, 1, 256], X_SEED);
+        let report = run_graph(&mut Functional::new(KrakenConfig::new(7, 96)), &graph, &x);
+        assert_eq!(report.logits.len(), 10);
+    }
+
+    #[test]
+    fn network_lowering_inserts_flatten_and_diagnoses_gaps() {
+        // TinyMLP lowers cleanly (pure dense chain)…
+        let mlp = crate::networks::tiny_mlp();
+        let g = network_to_linear_graph(&mlp, [1, 1, 1, 256], 500, QParams::identity())
+            .expect("dense chain lowers");
+        assert_eq!(g.accel_stages().count(), 2);
+        // …but TinyCNN cannot: conv4 (14×14) → conv5 (7×7) needs the
+        // pool the flat Network cannot express — a typed build error,
+        // not a mid-inference panic.
+        let cnn = crate::networks::tiny_cnn();
+        let err = network_to_linear_graph(&cnn, [1, 28, 28, 3], 500, QParams::identity())
+            .expect_err("shape gap must be diagnosed");
+        assert!(matches!(err, GraphError::ShapeMismatch { .. }));
+    }
+}

@@ -1,17 +1,26 @@
 //! The benchmark network zoo (Table I): AlexNet, VGG-16, ResNet-50 —
 //! every convolutional and fully-connected layer — plus tiny synthetic
-//! networks for functional tests and the end-to-end example, and a
-//! generic builder for arbitrary DNN graphs.
+//! networks for functional tests, and the *executable* graph zoo
+//! ([`graphs`]): the same networks lowered to
+//! [`crate::model::ModelGraph`]s with seeded weights and the host glue
+//! (pools, flattens, residual adds) the flat [`Network`] list cannot
+//! express. [`Network`] remains the thin linear-chain/statistics view;
+//! anything that actually *runs* end-to-end is a graph.
 
 mod alexnet;
+pub mod graphs;
 mod network;
 mod resnet50;
 mod tiny;
 mod vgg16;
 
-pub use alexnet::alexnet;
+pub use alexnet::{alexnet, alexnet_graph};
+pub use graphs::{
+    network_to_linear_graph, seeded_accel, seeded_weights, tiny_cnn_graph, tiny_mlp_graph,
+    TINY_SCALE, W_SEED_BASE, X_SEED,
+};
 pub use network::{Network, NetworkStats};
-pub use resnet50::resnet50;
+pub use resnet50::{resnet50, resnet50_graph, resnet50_graph_at};
 pub use tiny::{tiny_cnn, tiny_mlp, transformer_attention_products};
 pub use vgg16::vgg16;
 

@@ -8,8 +8,11 @@
 //! we model them directly that way (input at output resolution, S = 1),
 //! which leaves MAC/memory counts unchanged and matches the footnote.
 
+use super::graphs::seeded_weights;
 use super::network::Network;
 use crate::layers::Layer;
+use crate::model::{GraphBuilder, ModelGraph, NodeId};
+use crate::quant::QParams;
 
 struct Stage {
     /// Input spatial size to the first block of the stage (kept for
@@ -74,9 +77,166 @@ pub fn resnet50() -> Network {
     net
 }
 
+/// Weight-seed base for the executable ResNet-50 graph; accelerated
+/// node `j` uses `RESNET_W_SEED + 10·j`.
+pub const RESNET_W_SEED: u64 = 20_000;
+
+/// ResNet-50 as an *executable* graph with the real skip-connection
+/// topology, at the canonical 224×224 input. See
+/// [`resnet50_graph_at`] for reduced resolutions.
+pub fn resnet50_graph() -> ModelGraph {
+    resnet50_graph_at(224)
+}
+
+/// ResNet-50 with the full residual topology — conv1 + 3×3/s2 stem
+/// pool (pad 1) + 16 bottleneck blocks (identity and projection
+/// shortcuts joined by host `ResidualAdd` + fused-ReLU `Requant`
+/// nodes, §II-C) + global average pool + the 1000-way FC — at an input
+/// resolution of `res`×`res` (`res` a multiple of 16, ≥ 32: 224 is the
+/// benchmark; 112, 64 or 32 keep functional-backend runs fast while
+/// preserving every layer, channel width and skip edge).
+///
+/// Unlike the flat [`resnet50`] census (which models stride-2 1×1
+/// convs as (1,1) over pre-subsampled inputs, per the Table I
+/// footnote), the executable graph keeps the true strides so the
+/// tensors actually chain: the first 1×1 conv and the projection of
+/// stages 3–5 run at stride 2 on the full-resolution input.
+pub fn resnet50_graph_at(res: usize) -> ModelGraph {
+    assert!(res >= 32 && res % 16 == 0, "input resolution must be a multiple of 16, ≥ 32");
+    let q_mid = QParams::from_scale(1.0 / 64.0, 0, true); // conv + ReLU
+    let q_pre = QParams::from_scale(1.0 / 64.0, 0, false); // last conv before the add
+    let q_post = QParams { relu: true, ..QParams::identity() }; // ReLU after the add
+
+    let mut b = GraphBuilder::new(if res == 224 {
+        "resnet50".to_string()
+    } else {
+        format!("resnet50@{res}")
+    });
+    let mut seed = RESNET_W_SEED;
+    let mut accel = |b: &mut GraphBuilder, from: NodeId, layer: Layer, q: QParams| {
+        let w = seeded_weights(&layer, seed);
+        seed += 10;
+        b.accel(from, layer, w, q)
+    };
+
+    let x = b.input([1, res, res, 3]);
+    let c1 = accel(&mut b, x, Layer::conv("conv1", 1, res, res, 7, 7, 2, 2, 3, 64), q_mid);
+    let stem = b.maxpool(c1, 3, 2, 1); // ⌈res/2⌉ → (⌈res/2⌉−1)/2+1
+    let mut hw = (res.div_ceil(2) + 2 - 3) / 2 + 1;
+
+    struct StageSpec {
+        mid: usize,
+        out: usize,
+        blocks: usize,
+        /// Downsampling stride of the first block.
+        stride: usize,
+    }
+    let stages = [
+        StageSpec { mid: 64, out: 256, blocks: 3, stride: 1 },
+        StageSpec { mid: 128, out: 512, blocks: 4, stride: 2 },
+        StageSpec { mid: 256, out: 1024, blocks: 6, stride: 2 },
+        StageSpec { mid: 512, out: 2048, blocks: 3, stride: 2 },
+    ];
+    let mut prev = stem;
+    let mut in_ch = 64;
+    for (si, st) in stages.iter().enumerate() {
+        let sidx = si + 2; // conv2_x .. conv5_x
+        for blk in 0..st.blocks {
+            let first = blk == 0;
+            let (s, ci_a) = if first { (st.stride, in_ch) } else { (1, st.out) };
+            let hw_out = hw.div_ceil(s);
+            let name = |tag: &str| format!("conv{sidx}_{}{tag}", blk + 1);
+            let a = accel(
+                &mut b,
+                prev,
+                Layer::conv(name("a"), 1, hw, hw, 1, 1, s, s, ci_a, st.mid),
+                q_mid,
+            );
+            let bb = accel(
+                &mut b,
+                a,
+                Layer::conv(name("b"), 1, hw_out, hw_out, 3, 3, 1, 1, st.mid, st.mid),
+                q_mid,
+            );
+            let c = accel(
+                &mut b,
+                bb,
+                Layer::conv(name("c"), 1, hw_out, hw_out, 1, 1, 1, 1, st.mid, st.out),
+                q_pre,
+            );
+            // First block: 1×1 projection shortcut (strided in stages
+            // 3–5); later blocks: identity skip straight off the block
+            // input — the fan-out edge the Vec<Stage> world could not
+            // express.
+            let skip = if first {
+                accel(
+                    &mut b,
+                    prev,
+                    Layer::conv(name("p"), 1, hw, hw, 1, 1, s, s, in_ch, st.out),
+                    q_pre,
+                )
+            } else {
+                prev
+            };
+            let sum = b.residual_add(c, skip);
+            prev = b.requant(sum, q_post);
+            hw = hw_out;
+        }
+        in_ch = st.out;
+    }
+
+    let pooled = b.global_avg_pool(prev); // [1,1,1,2048]
+    let fc = accel(&mut b, pooled, Layer::fully_connected("fc", 1, 2048, 1000), q_pre);
+    b.output(fc);
+    b.build().expect("ResNet-50 graph is well-formed")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::NodeOp;
+
+    #[test]
+    fn graph_census_matches_table1_topology() {
+        // The executable graph carries the same layer census as the
+        // flat Table I description: 53 convs (1 7×7, 16 3×3, 36 1×1,
+        // of which 4 are projection shortcuts) + 1 FC + 16 residual
+        // adds.
+        let g = resnet50_graph();
+        let convs: Vec<_> =
+            g.accel_stages().filter(|st| !st.layer.is_dense()).map(|st| &st.layer).collect();
+        assert_eq!(convs.len(), 53);
+        let k7 = convs.iter().filter(|l| l.kh == 7).count();
+        let k3 = convs.iter().filter(|l| l.kh == 3).count();
+        let k1 = convs.iter().filter(|l| l.kh == 1).count();
+        assert_eq!((k7, k3, k1), (1, 16, 36));
+        let projections = convs.iter().filter(|l| l.name.ends_with('p')).count();
+        assert_eq!(projections, 4);
+        assert_eq!(g.accel_stages().filter(|st| st.layer.is_dense()).count(), 1);
+        let adds = g
+            .nodes()
+            .iter()
+            .filter(|node| matches!(node.op, NodeOp::ResidualAdd))
+            .count();
+        assert_eq!(adds, 16);
+        assert_eq!(g.input_shape(), [1, 224, 224, 3]);
+        assert_eq!(g.output_shape(), [1, 1, 1, 1000]);
+    }
+
+    #[test]
+    fn reduced_resolution_graph_keeps_the_topology()  {
+        // Same node structure at 32×32 — only spatial sizes shrink.
+        let full = resnet50_graph();
+        let small = resnet50_graph_at(32);
+        assert_eq!(full.nodes().len(), small.nodes().len());
+        assert_eq!(full.accel_stages().count(), small.accel_stages().count());
+        assert_eq!(small.input_shape(), [1, 32, 32, 3]);
+        assert_eq!(small.output_shape(), [1, 1, 1, 1000]);
+        // Final stage runs at 1×1 before the (now-trivial) global pool.
+        assert!(small
+            .accel_stages()
+            .any(|st| st.layer.name == "conv5_3c" && st.layer.h == 1));
+    }
 
     #[test]
     fn layer_census_matches_table1() {

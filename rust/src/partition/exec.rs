@@ -9,10 +9,10 @@
 //! outputs concatenated back to the full `[N, OH, OW, C_o]` tensor,
 //! clocks = max over shards (the makespan of the parallel machine),
 //! DRAM words = sum over shards. Because it *is* an `Accelerator`,
-//! `Network::run_layers`, `InferencePipeline` and the inference server
-//! run data-parallel-over-one-request without changes — the pool turns
-//! from a request-parallel device into a latency-cutting multi-chip
-//! machine.
+//! `Network::run_layers`, [`crate::model::run_graph`] and the serving
+//! front-end run data-parallel-over-one-request without changes — the
+//! pool turns from a request-parallel device into a latency-cutting
+//! multi-chip machine.
 
 use std::sync::mpsc;
 

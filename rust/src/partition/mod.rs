@@ -20,7 +20,7 @@
 //!   merged counters (clocks = max over shards, DRAM words = sum).
 //! * [`exec::PartitionedPool`] — `P` backends behind one
 //!   [`crate::backend::Accelerator`], so `Network::run_layers`,
-//!   `InferencePipeline` and the inference server run
+//!   [`crate::model::run_graph`] and the serving front-end run
 //!   data-parallel-over-one-request transparently: the pool turns from
 //!   a request-parallel device into a latency-cutting multi-chip
 //!   machine.

@@ -14,8 +14,9 @@
 use std::path::Path;
 
 use kraken::arch::KrakenConfig;
-use kraken::coordinator::tiny_cnn_pipeline;
 use kraken::layers::Layer;
+use kraken::model::run_graph;
+use kraken::networks::tiny_cnn_graph;
 use kraken::quant::QParams;
 use kraken::runtime::{ArtifactKind, GoldenRunner};
 use kraken::sim::{Engine, LayerData};
@@ -94,15 +95,14 @@ fn matmul_golden_matches_simulator() {
 }
 
 #[test]
-fn tiny_cnn_logits_match_coordinator_pipeline() {
+fn tiny_cnn_logits_match_graph_executor() {
     let runner = runner();
     let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
-    let engine = Engine::new(KrakenConfig::new(7, 96), 8);
-    let mut pipeline = tiny_cnn_pipeline(engine);
-    let report = pipeline.run(&x);
+    let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
+    let report = run_graph(&mut engine, &tiny_cnn_graph(), &x);
     assert_eq!(
         report.logits, golden_logits,
-        "full-network logits: coordinator+simulator vs JAX/Pallas artifact"
+        "full-network logits: graph executor+simulator vs JAX/Pallas artifact"
     );
 }
 

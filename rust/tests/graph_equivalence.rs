@@ -1,0 +1,304 @@
+//! Graph-IR equivalence suite:
+//!
+//! 1. Linear graphs are **bit-identical** to the deleted `Vec<Stage>`
+//!    pipeline path (replicated here verbatim as `run_legacy_stages`)
+//!    on TinyCNN and TinyMLP, over the cycle-accurate engine AND the
+//!    functional backend — the graph executor is a pure generalization.
+//! 2. A synthetic residual-block graph matches a hand-computed golden.
+//! 3. A graph model served through `KrakenService` at partition
+//!    P ∈ {1, 2} is bit-identical to direct `run_graph` execution.
+//! 4. ResNet-50 with its real skip-connection topology runs end to end
+//!    through the service (reduced 32×32 input; full layer/channel/
+//!    skip structure).
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Functional, LayerData};
+use kraken::coordinator::{BackendKind, ServiceBuilder};
+use kraken::layers::Layer;
+use kraken::model::{run_graph, GraphBuilder, NodeOp};
+use kraken::networks::{
+    resnet50_graph_at, tiny_cnn, tiny_cnn_graph, tiny_mlp, tiny_mlp_graph, TINY_SCALE,
+    W_SEED_BASE, X_SEED,
+};
+use kraken::quant::QParams;
+use kraken::sim::Engine;
+use kraken::tensor::Tensor4;
+
+// ---- the old Vec<Stage> path, replicated verbatim ---------------------
+
+/// Host-side op of the deleted `StageOp` enum.
+#[derive(Clone, Copy)]
+enum LegacyPost {
+    None,
+    MaxPool2x2,
+    Flatten,
+}
+
+struct LegacyStage {
+    layer: Layer,
+    weights: Tensor4<i8>,
+    qparams: QParams,
+    post: LegacyPost,
+}
+
+/// The old hardcoded 2×2/s2 host max pool, byte for byte.
+fn legacy_maxpool2x2(x: &Tensor4<i8>) -> Tensor4<i8> {
+    let [n, h, w, c] = x.shape;
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = Tensor4::<i8>::zeros([n, oh, ow, c]);
+    for bn in 0..n {
+        for yh in 0..oh {
+            for yw in 0..ow {
+                for ch in 0..c {
+                    let m = x
+                        .get(bn, 2 * yh, 2 * yw, ch)
+                        .max(x.get(bn, 2 * yh, 2 * yw + 1, ch))
+                        .max(x.get(bn, 2 * yh + 1, 2 * yw, ch))
+                        .max(x.get(bn, 2 * yh + 1, 2 * yw + 1, ch));
+                    y.set(bn, yh, yw, ch, m);
+                }
+            }
+        }
+    }
+    y
+}
+
+/// The old `run_stages` body: layers back-to-back, host ops between,
+/// logits = last stage's raw accumulators.
+fn run_legacy_stages<B: Accelerator>(
+    backend: &mut B,
+    stages: &[LegacyStage],
+    x: &Tensor4<i8>,
+) -> (Vec<i32>, Vec<u64>, f64) {
+    let mut act = x.clone();
+    let mut logits: Vec<i32> = Vec::new();
+    let mut stage_clocks = Vec::with_capacity(stages.len());
+    let mut modeled_s = 0.0;
+    let n_stages = stages.len();
+    for (j, stage) in stages.iter().enumerate() {
+        let out = if stage.layer.is_dense() {
+            let flat = std::mem::take(&mut act.data);
+            let x_rows = Tensor4::from_vec([1, stage.layer.h, 1, stage.layer.ci], flat);
+            backend.run_dense_tensors(&stage.layer, &x_rows, &stage.weights, stage.qparams)
+        } else {
+            backend.run_layer(&LayerData {
+                layer: &stage.layer,
+                x: &act,
+                k: &stage.weights,
+                qparams: stage.qparams,
+            })
+        };
+        stage_clocks.push(out.clocks);
+        modeled_s += backend.modeled_s(stage.layer.kind, out.clocks);
+        if j + 1 == n_stages {
+            logits = out.y_acc.data.clone();
+        }
+        act = match stage.post {
+            LegacyPost::None => out.y_q,
+            LegacyPost::MaxPool2x2 => legacy_maxpool2x2(&out.y_q),
+            LegacyPost::Flatten => {
+                let flat = out.y_q.data.clone();
+                let len = flat.len();
+                Tensor4::from_vec([1, 1, 1, len], flat)
+            }
+        };
+    }
+    (logits, stage_clocks, modeled_s * 1e3)
+}
+
+/// The old `tiny_cnn_stages()` list, same seeds and requantization.
+fn legacy_tiny_cnn_stages() -> Vec<LegacyStage> {
+    let net = tiny_cnn();
+    let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
+    let mut stages = Vec::new();
+    for (j, layer) in net.layers.iter().enumerate() {
+        let shape = if layer.is_dense() {
+            [1, 1, layer.ci, layer.co]
+        } else {
+            [layer.kh, layer.kw, layer.ci, layer.co]
+        };
+        let weights = Tensor4::random(shape, W_SEED_BASE + 10 * j as u64);
+        let post = match layer.name.as_str() {
+            "conv4" => LegacyPost::MaxPool2x2,
+            "conv6" => LegacyPost::Flatten,
+            _ => LegacyPost::None,
+        };
+        stages.push(LegacyStage { layer: layer.clone(), weights, qparams: q_relu, post });
+    }
+    stages
+}
+
+/// TinyMLP as the old stage list (pure dense chain, same seeds as
+/// `tiny_mlp_graph`).
+fn legacy_tiny_mlp_stages() -> Vec<LegacyStage> {
+    let net = tiny_mlp();
+    let q_relu = QParams::from_scale(TINY_SCALE, 0, true);
+    net.layers
+        .iter()
+        .enumerate()
+        .map(|(j, layer)| LegacyStage {
+            layer: layer.clone(),
+            weights: Tensor4::random([1, 1, layer.ci, layer.co], W_SEED_BASE + 10 * j as u64),
+            qparams: q_relu,
+            post: LegacyPost::None,
+        })
+        .collect()
+}
+
+// ---- 1. linear graphs ≡ the old stage path ----------------------------
+
+#[test]
+fn tiny_cnn_graph_bit_identical_to_stage_path_on_engine() {
+    let graph = tiny_cnn_graph();
+    let stages = legacy_tiny_cnn_stages();
+    let cfg = KrakenConfig::new(7, 96);
+    for seed in [X_SEED, 7] {
+        let x = Tensor4::random([1, 28, 28, 3], seed);
+        let (logits, clocks, modeled_ms) =
+            run_legacy_stages(&mut Engine::new(cfg.clone(), 8), &stages, &x);
+        let report = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
+        assert_eq!(report.logits, logits, "seed {seed}");
+        let graph_clocks: Vec<u64> = report.node_clocks.iter().map(|(_, c)| *c).collect();
+        assert_eq!(graph_clocks, clocks, "seed {seed}");
+        assert!((report.modeled_ms - modeled_ms).abs() < 1e-12, "seed {seed}");
+    }
+}
+
+#[test]
+fn tiny_cnn_graph_bit_identical_to_stage_path_on_functional() {
+    let graph = tiny_cnn_graph();
+    let stages = legacy_tiny_cnn_stages();
+    let cfg = KrakenConfig::new(7, 96);
+    let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+    let (logits, clocks, _) =
+        run_legacy_stages(&mut Functional::new(cfg.clone()), &stages, &x);
+    let report = run_graph(&mut Functional::new(cfg), &graph, &x);
+    assert_eq!(report.logits, logits);
+    assert_eq!(report.node_clocks.iter().map(|(_, c)| *c).collect::<Vec<_>>(), clocks);
+}
+
+#[test]
+fn tiny_mlp_graph_bit_identical_to_stage_path() {
+    let graph = tiny_mlp_graph();
+    let stages = legacy_tiny_mlp_stages();
+    let cfg = KrakenConfig::new(7, 96);
+    let x = Tensor4::random([1, 1, 1, 256], X_SEED);
+    for (name, (logits, clocks, _), report) in [
+        (
+            "engine",
+            run_legacy_stages(&mut Engine::new(cfg.clone(), 8), &stages, &x),
+            run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x),
+        ),
+        (
+            "functional",
+            run_legacy_stages(&mut Functional::new(cfg.clone()), &stages, &x),
+            run_graph(&mut Functional::new(cfg.clone()), &graph, &x),
+        ),
+    ] {
+        assert_eq!(report.logits, logits, "{name}");
+        assert_eq!(
+            report.node_clocks.iter().map(|(_, c)| *c).collect::<Vec<_>>(),
+            clocks,
+            "{name}"
+        );
+    }
+}
+
+// ---- 2. residual block vs hand-computed golden ------------------------
+
+#[test]
+fn residual_block_matches_hand_computed_golden() {
+    // input [1,2,2,2] → conv 1×1 (identity-permuted weights: channel 0
+    // ← 2·ch1, channel 1 ← 3·ch0) → add skip → ReLU requant.
+    let mut b = GraphBuilder::new("golden_residual");
+    let x = b.input([1, 2, 2, 2]);
+    let layer = Layer::conv("mix", 1, 2, 2, 1, 1, 1, 1, 2, 2);
+    // k[0,0,ci,co]: co0 = 2·ci1, co1 = 3·ci0.
+    let k = Tensor4::from_vec([1, 1, 2, 2], vec![0i8, 3, 2, 0]);
+    let y = b.accel(x, layer, k, QParams::identity());
+    let sum = b.residual_add(y, x);
+    let act = b.requant(sum, QParams { relu: true, ..QParams::identity() });
+    b.output(act);
+    let graph = b.build().expect("well-formed");
+
+    // x pixels (ch0, ch1): (1, 2), (−3, 4), (5, −6), (40, 50).
+    let x = Tensor4::from_vec([1, 2, 2, 2], vec![1i8, 2, -3, 4, 5, -6, 40, 50]);
+    // conv: (2·ch1, 3·ch0) = (4, 3), (8, −9), (−12, 15), (100, 120).
+    // + x  = (5, 5), (5, −5), (−7, 9), (140, 170) → int8-saturated to
+    //        (127, 127) on the last pixel.
+    // ReLU = (5, 5), (5, 0), (0, 9), (127, 127).
+    for backend in [true, false] {
+        let report = if backend {
+            run_graph(&mut Engine::new(KrakenConfig::new(2, 8), 8), &graph, &x)
+        } else {
+            run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x)
+        };
+        assert_eq!(report.logits, vec![4, 3, 8, -9, -12, 15, 100, 120]);
+        assert_eq!(report.output.data, vec![5, 5, 5, 0, 0, 9, 127, 127]);
+        assert_eq!(report.output.shape, [1, 2, 2, 2]);
+    }
+}
+
+// ---- 3. served graphs ≡ direct execution at P ∈ {1, 2} ----------------
+
+#[test]
+fn graph_served_through_service_matches_direct_execution() {
+    let graph = tiny_cnn_graph();
+    let inputs: Vec<Tensor4<i8>> =
+        (0..3).map(|i| Tensor4::random([1, 28, 28, 3], 6000 + i)).collect();
+    let mut direct = Functional::new(KrakenConfig::paper());
+    let want: Vec<Vec<i32>> =
+        inputs.iter().map(|x| run_graph(&mut direct, &graph, x).logits).collect();
+
+    for partition in [1usize, 2] {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .backend(BackendKind::Functional)
+            .workers(1)
+            .partition(partition)
+            .register_graph("tiny_cnn", tiny_cnn_graph())
+            .build();
+        let got: Vec<Vec<i32>> = service
+            .submit_batch("tiny_cnn", inputs.clone())
+            .into_iter()
+            .map(|t| t.wait().expect("served").logits)
+            .collect();
+        assert_eq!(got, want, "partition {partition} must be bit-identical");
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, inputs.len() as u64);
+    }
+}
+
+// ---- 4. ResNet-50's real residual topology, end to end ----------------
+
+#[test]
+fn resnet50_residual_topology_serves_end_to_end() {
+    // Reduced 32×32 input: every layer, channel width, projection and
+    // identity skip of the 224 graph is preserved; only spatial sizes
+    // shrink (the functional backend's direct-form reference then
+    // finishes in seconds).
+    let graph = resnet50_graph_at(32);
+    assert_eq!(graph.accel_stages().count(), 54); // 53 convs + fc
+    assert_eq!(
+        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd)).count(),
+        16
+    );
+
+    let x = Tensor4::random([1, 32, 32, 3], 77);
+    let direct = run_graph(&mut Functional::new(KrakenConfig::paper()), &graph, &x);
+    assert_eq!(direct.logits.len(), 1000);
+    assert_eq!(direct.node_clocks.len(), 54);
+    assert!(direct.total_clocks > 0);
+
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::paper())
+        .backend(BackendKind::Functional)
+        .workers(1)
+        .register_graph("resnet50", resnet50_graph_at(32))
+        .build();
+    let served = service.infer("resnet50", x).expect("resnet50 frame served");
+    assert_eq!(served.logits, direct.logits, "service ≡ direct execution");
+    assert_eq!(served.clocks, direct.total_clocks);
+    let stats = service.shutdown();
+    assert_eq!(stats.per_model["resnet50"], 1);
+}

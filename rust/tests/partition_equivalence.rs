@@ -11,9 +11,9 @@
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
-use kraken::coordinator::{tiny_cnn_stages, BackendKind, ServiceBuilder};
+use kraken::coordinator::{BackendKind, ServiceBuilder};
 use kraken::layers::Layer;
-use kraken::networks::{tiny_cnn, tiny_mlp, Network};
+use kraken::networks::{tiny_cnn, tiny_cnn_graph, tiny_mlp, Network};
 use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::quant::QParams;
 use kraken::sim::Engine;
@@ -135,7 +135,7 @@ fn partitioned_service_serves_bit_identical_outputs() {
             .backend(BackendKind::Functional)
             .workers(1)
             .partition(partition)
-            .register_pipeline("tiny_cnn", tiny_cnn_stages())
+            .register_graph("tiny_cnn", tiny_cnn_graph())
             .build()
     };
     let whole = build(1);

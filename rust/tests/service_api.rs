@@ -7,11 +7,11 @@ use std::time::Duration;
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
-use kraken::coordinator::{
-    tiny_cnn_pipeline, tiny_cnn_stages, BackendKind, DenseOp, ServiceBuilder,
-};
+use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
 use kraken::layers::LayerKind;
 use kraken::metrics::Counters;
+use kraken::model::run_graph;
+use kraken::networks::tiny_cnn_graph;
 use kraken::partition::plan_layer;
 use kraken::quant::QParams;
 use kraken::sim::Engine;
@@ -23,8 +23,9 @@ fn dense_op(name: &str, ci: usize, co: usize, seed: u64) -> DenseOp {
 
 #[test]
 fn multi_model_registry_routes_by_name() {
-    // Two dense ops with different weights AND a full pipeline behind
-    // one service: every submission must land on the model it names.
+    // Two dense ops with different weights AND a full model graph
+    // behind one service: every submission must land on the model it
+    // names.
     let fc_a = dense_op("fc_a", 12, 10, 21);
     let fc_b = dense_op("fc_b", 12, 6, 22);
     let (w_a, w_b) = (fc_a.weights.data.clone(), fc_b.weights.data.clone());
@@ -33,7 +34,7 @@ fn multi_model_registry_routes_by_name() {
         .backend(BackendKind::Functional)
         .workers(2)
         .batch_capacity(2)
-        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_graph("tiny_cnn", tiny_cnn_graph())
         .register_dense("fc_a", fc_a)
         .register_dense("fc_b", fc_b)
         .build();
@@ -54,8 +55,11 @@ fn multi_model_registry_routes_by_name() {
         let resp = ticket.wait().expect("fc_b served");
         assert_eq!(resp.output, matmul_i8(row, &w_b, 1, 12, 6), "fc_b weights");
     }
-    let mut pipe = tiny_cnn_pipeline(Functional::new(KrakenConfig::new(7, 96)));
-    assert_eq!(cnn.wait().expect("tiny_cnn served").logits, pipe.run(&image).logits);
+    let mut backend = Functional::new(KrakenConfig::new(7, 96));
+    assert_eq!(
+        cnn.wait().expect("tiny_cnn served").logits,
+        run_graph(&mut backend, &tiny_cnn_graph(), &image).logits
+    );
 
     let stats = service.shutdown();
     assert_eq!(stats.per_model["fc_a"], 4);
@@ -64,22 +68,23 @@ fn multi_model_registry_routes_by_name() {
 }
 
 #[test]
-fn tickets_bit_exact_vs_direct_pipeline_run() {
-    // The served result is the pipeline result: same logits, same
-    // clocks, through the cycle-accurate engine on both sides.
+fn tickets_bit_exact_vs_direct_graph_run() {
+    // The served result is the graph result: same logits, same clocks,
+    // through the cycle-accurate engine on both sides.
     let service = ServiceBuilder::new()
         .config(KrakenConfig::new(7, 96))
         .backend(BackendKind::Engine)
         .workers(2)
-        .register_pipeline("tiny_cnn", tiny_cnn_stages())
+        .register_graph("tiny_cnn", tiny_cnn_graph())
         .build();
-    let mut pipe = tiny_cnn_pipeline(Engine::new(KrakenConfig::new(7, 96), 8));
+    let graph = tiny_cnn_graph();
+    let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
     let inputs: Vec<Tensor4<i8>> =
         (0..3).map(|i| Tensor4::random([1, 28, 28, 3], 4000 + i)).collect();
     let tickets = service.submit_batch("tiny_cnn", inputs.clone());
     for (x, ticket) in inputs.iter().zip(tickets) {
         let served = ticket.wait().expect("served");
-        let direct = pipe.run(x);
+        let direct = run_graph(&mut engine, &graph, x);
         assert_eq!(served.logits, direct.logits);
         assert_eq!(served.clocks, direct.total_clocks);
     }
