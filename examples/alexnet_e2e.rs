@@ -32,7 +32,8 @@ fn main() {
     let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
 
     let mut engine = Engine::new(KrakenConfig::paper(), 8);
-    let report = run_graph(&mut engine, &tiny_cnn_graph(), &x);
+    let report =
+        run_graph(&mut engine, &tiny_cnn_graph(), &x).expect("artifact input shape matches");
 
     println!("  JAX/Pallas logits : {golden_logits:?}");
     println!("  simulator logits  : {:?}", report.logits);

@@ -1,0 +1,102 @@
+//! Graph-level branch scheduling: wall-clock speedup from fanning one
+//! request's independent branches across pool siblings.
+//!
+//! Two branchy graphs through `model::run_graph_on_pool` at pool widths
+//! 1 / 2 / 4 over functional backends:
+//!
+//! * the inception/attention block (`networks::inception_block_graph`,
+//!   4 heads × 3 chained matmuls + one serial output projection) — wide
+//!   levels, the scheduler's best case;
+//! * ResNet-50 at a 64×64 input — only the 4 projection blocks have a
+//!   second branch, so the win is the modest real-network datapoint.
+//!
+//! Emits `BENCH_graph_sched_workers_{1,2,4}.json` with per-graph wall
+//! times and ratios vs 1 worker. CI gates the branchy (inception) graph
+//! at ≤ 0.8× the 1-worker wall time with 4 workers; bit-equality with
+//! the serial executor is asserted inline before timing.
+//!
+//! Run: `cargo bench --bench graph_sched`
+
+mod harness;
+
+use std::sync::Arc;
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::Functional;
+use kraken::model::{run_graph, run_graph_on_pool, spawn_node_pool};
+use kraken::networks::{inception_block_graph, resnet50_graph_at};
+use kraken::tensor::Tensor4;
+
+fn main() {
+    println!("== graph-level branch scheduling: wall clock vs pool width ==\n");
+
+    // Sized so each head chain is real work (≈2.6 M MACs) and the
+    // serial output projection stays a minor tail.
+    let inception = Arc::new(inception_block_graph(128, 64, 64, 4));
+    let xi = Tensor4::random([1, 128, 1, 64], 7);
+    let resnet = Arc::new(resnet50_graph_at(64));
+    let xr = Tensor4::random([1, 64, 64, 3], 7);
+
+    let mut backend = Functional::new(KrakenConfig::paper());
+    let serial_inception = run_graph(&mut backend, &inception, &xi).expect("serial inception");
+    let serial_resnet = run_graph(&mut backend, &resnet, &xr).expect("serial resnet50");
+    println!(
+        "  inception: {} accel nodes, critical path {:.1}% of serial clocks",
+        serial_inception.node_clocks.len(),
+        100.0 * serial_inception.critical_path_clocks as f64
+            / serial_inception.total_clocks as f64
+    );
+    println!(
+        "  resnet50@64: {} accel nodes, critical path {:.1}% of serial clocks\n",
+        serial_resnet.node_clocks.len(),
+        100.0 * serial_resnet.critical_path_clocks as f64 / serial_resnet.total_clocks as f64
+    );
+
+    let mut base: Option<(f64, f64)> = None;
+    for workers in [1usize, 2, 4] {
+        let pool = spawn_node_pool(workers, |_| Functional::new(KrakenConfig::paper()));
+
+        // Pooled execution must stay bit-identical before it is timed.
+        let check = run_graph_on_pool(&pool, &inception, &xi).expect("pooled inception");
+        assert_eq!(check.logits, serial_inception.logits, "inception logits at {workers}w");
+        assert_eq!(check.output.data, serial_inception.output.data);
+        let check = run_graph_on_pool(&pool, &resnet, &xr).expect("pooled resnet50");
+        assert_eq!(check.logits, serial_resnet.logits, "resnet50 logits at {workers}w");
+
+        let incep_s = harness::report(&format!("graph_sched_inception_w{workers}"), 7, || {
+            std::hint::black_box(
+                run_graph_on_pool(&pool, &inception, &xi).expect("pooled inception"),
+            );
+        });
+        let resnet_s = harness::report(&format!("graph_sched_resnet50_w{workers}"), 3, || {
+            std::hint::black_box(run_graph_on_pool(&pool, &resnet, &xr).expect("pooled resnet50"));
+        });
+        pool.shutdown();
+
+        let (incep_ratio, resnet_ratio) = match base {
+            None => {
+                base = Some((incep_s, resnet_s));
+                (1.0, 1.0)
+            }
+            Some((bi, br)) => (incep_s / bi, resnet_s / br),
+        };
+        println!(
+            "  workers {workers}: inception {:.3} ms ({incep_ratio:.2}× of 1w), \
+             resnet50@64 {:.1} ms ({resnet_ratio:.2}× of 1w)\n",
+            incep_s * 1e3,
+            resnet_s * 1e3
+        );
+        harness::emit_json(
+            &format!("graph_sched_workers_{workers}"),
+            &[
+                ("workers", workers as f64),
+                ("inception_ms", incep_s * 1e3),
+                ("inception_ratio_vs_1", incep_ratio),
+                ("resnet50_ms", resnet_s * 1e3),
+                ("resnet50_ratio_vs_1", resnet_ratio),
+                ("inception_critical_path_clocks", serial_inception.critical_path_clocks as f64),
+                ("inception_serial_clocks", serial_inception.total_clocks as f64),
+            ],
+        );
+    }
+}

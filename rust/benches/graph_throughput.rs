@@ -30,7 +30,9 @@ fn main() {
         let x = Tensor4::random([1, 28, 28, 3], 42);
         let mut backend = Functional::new(KrakenConfig::paper());
         let med = harness::report("graph_tiny_cnn_functional", 10, || {
-            std::hint::black_box(run_graph(&mut backend, &graph, &x).total_clocks);
+            std::hint::black_box(
+                run_graph(&mut backend, &graph, &x).expect("well-formed input").total_clocks,
+            );
         });
         println!("  tiny_cnn: {:.1} frames/s\n", 1.0 / med);
     }
@@ -45,7 +47,7 @@ fn main() {
     let mut backend = Functional::new(KrakenConfig::paper());
     let mut total_clocks = 0u64;
     let med = harness::report("graph_resnet50_functional", 3, || {
-        total_clocks = run_graph(&mut backend, &graph, &x).total_clocks;
+        total_clocks = run_graph(&mut backend, &graph, &x).expect("well-formed input").total_clocks;
         std::hint::black_box(total_clocks);
     });
     let fps = 1.0 / med;

@@ -36,7 +36,8 @@ fn main() {
                     &mut engine,
                     &tiny_cnn_graph(),
                     &Tensor4::random([1, 28, 28, 3], 1),
-                );
+                )
+                .expect("warmup input shape matches");
                 engine
             });
         // Settle: don't start the clock until the pool is serving.

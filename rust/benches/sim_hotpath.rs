@@ -56,7 +56,9 @@ fn main() {
         let macs: f64 =
             graph.accel_stages().map(|s| s.layer.macs_with_zpad() as f64).sum();
         harness::report_throughput("graph_tiny_cnn_e2e", 5, macs / 1e6, "M MAC/s", || {
-            std::hint::black_box(run_graph(&mut engine, &graph, &x).total_clocks);
+            std::hint::black_box(
+                run_graph(&mut engine, &graph, &x).expect("well-formed input").total_clocks,
+            );
         });
     }
 

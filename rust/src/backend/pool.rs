@@ -60,6 +60,79 @@ struct Inner<J> {
     available: Condvar,
 }
 
+impl<J> Inner<J> {
+    /// Enqueue a batch round-robin and wake the right number of
+    /// workers. `allow_draining`: a [`PoolHandle`] injector is itself a
+    /// worker still draining, so it may enqueue while shutdown is in
+    /// progress; external submitters may not.
+    fn enqueue(&self, jobs: impl IntoIterator<Item = J>, allow_draining: bool) {
+        let queued;
+        {
+            let mut q = self.queues.lock().expect("pool lock");
+            assert!(allow_draining || !q.shutdown, "submit after shutdown");
+            let mut count = 0usize;
+            for job in jobs {
+                let shard = q.next % q.shards.len();
+                q.next = q.next.wrapping_add(1);
+                q.shards[shard].push_back(job);
+                count += 1;
+            }
+            queued = count;
+        }
+        if queued == 1 {
+            self.available.notify_one();
+        } else if queued > 1 {
+            self.available.notify_all();
+        }
+    }
+
+    /// Remove and return one queued job matching `pred` (FIFO within
+    /// each shard, shard 0 upward) — or `None` when every matching job
+    /// is already running or done.
+    fn take_matching(&self, pred: impl Fn(&J) -> bool) -> Option<J> {
+        let mut q = self.queues.lock().expect("pool lock");
+        for shard in &mut q.shards {
+            if let Some(pos) = shard.iter().position(&pred) {
+                return shard.remove(pos);
+            }
+        }
+        None
+    }
+}
+
+/// A cloneable borrow of a pool's queues — submit and reclaim without
+/// owning the worker threads. This is the dispatch handle a worker that
+/// is itself *driving* a request uses to inject that request's sibling
+/// work (e.g. the graph scheduler's node tasks) and to take back any of
+/// it that is still queued while it waits, which is what makes waiting
+/// drivers deadlock-free even when every worker is a driver.
+pub struct PoolHandle<J: Send + 'static> {
+    inner: Arc<Inner<J>>,
+}
+
+impl<J: Send + 'static> Clone for PoolHandle<J> {
+    fn clone(&self) -> Self {
+        Self { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<J: Send + 'static> PoolHandle<J> {
+    /// Enqueue sibling jobs round-robin. Unlike
+    /// [`ShardedPool::submit_batch`] this is permitted during a
+    /// shutdown drain: the injector is a worker still draining, and it
+    /// reclaims its own jobs ([`PoolHandle::take_matching`]), so
+    /// injected work is never stranded even after siblings exit.
+    pub fn submit_batch(&self, jobs: impl IntoIterator<Item = J>) {
+        self.inner.enqueue(jobs, true);
+    }
+
+    /// Remove and return one queued job matching `pred`; `None` when
+    /// every matching job is already running or done.
+    pub fn take_matching(&self, pred: impl Fn(&J) -> bool) -> Option<J> {
+        self.inner.take_matching(pred)
+    }
+}
+
 /// N worker threads over N sharded deques with stealing.
 pub struct ShardedPool<J: Send + 'static> {
     inner: Arc<Inner<J>>,
@@ -159,24 +232,14 @@ impl<J: Send + 'static> ShardedPool<J> {
     /// woken worker can take or steal it); only multi-job batches wake
     /// the whole pool.
     pub fn submit_batch(&self, jobs: impl IntoIterator<Item = J>) {
-        let queued;
-        {
-            let mut q = self.inner.queues.lock().expect("pool lock");
-            assert!(!q.shutdown, "submit after shutdown");
-            let mut count = 0usize;
-            for job in jobs {
-                let shard = q.next % q.shards.len();
-                q.next = q.next.wrapping_add(1);
-                q.shards[shard].push_back(job);
-                count += 1;
-            }
-            queued = count;
-        }
-        if queued == 1 {
-            self.inner.available.notify_one();
-        } else if queued > 1 {
-            self.inner.available.notify_all();
-        }
+        self.inner.enqueue(jobs, false);
+    }
+
+    /// A cloneable queue handle for same-request sibling dispatch and
+    /// reclaim (see [`PoolHandle`]). Holding one keeps the queues (not
+    /// the workers) alive.
+    pub fn handle(&self) -> PoolHandle<J> {
+        PoolHandle { inner: Arc::clone(&self.inner) }
     }
 
     /// Jobs currently queued (all shards).
@@ -293,5 +356,35 @@ mod tests {
         let pool = ShardedPool::spawn(2, |_| (), |_, _, _job: u32| {});
         pool.submit(1);
         drop(pool); // must not deadlock
+    }
+
+    #[test]
+    fn handle_reclaims_queued_jobs_and_injects_new_ones() {
+        // One worker, gated on its first job so the rest stay queued:
+        // a PoolHandle must be able to take matching queued jobs back
+        // (the graph driver's "run my own sibling work inline" path)
+        // and inject fresh ones.
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let pool = ShardedPool::spawn(1, |_| (), move |_, _, job: u32| {
+            if job == 0 {
+                gate_rx.lock().unwrap().recv().unwrap();
+            }
+        });
+        pool.submit_batch([0u32, 1, 2, 3]);
+        // Wait until the worker holds job 0 (three jobs left queued).
+        while pool.queued() != 3 {
+            std::thread::yield_now();
+        }
+        let handle = pool.handle();
+        assert_eq!(handle.take_matching(|&j| j % 2 == 1), Some(1), "oldest match first");
+        assert_eq!(handle.take_matching(|&j| j % 2 == 1), Some(3));
+        assert_eq!(handle.take_matching(|&j| j % 2 == 1), None, "no odd jobs left queued");
+        handle.submit_batch([5u32]);
+        gate_tx.send(()).unwrap();
+        let stats = pool.shutdown();
+        // The worker completed 0, 2 and the injected 5; 1 and 3 were
+        // reclaimed through the handle.
+        assert_eq!(stats[0].completed, 3);
     }
 }

@@ -36,16 +36,25 @@
 //! Batching composes with partitioning: rows batch first, then a
 //! `partition(P)` service splits the *batched* layer across `P` chips
 //! ([`crate::partition::PartitionedPool`]).
+//!
+//! With [`ServiceBuilder::graph_parallelism`] a graph request's
+//! *branches* also go wide: the worker that picks the request up drives
+//! the level/branch scheduler ([`crate::model::sched`]), fanning the
+//! DAG's independent accelerated nodes out to pool siblings as
+//! [`Job::Node`] work and reclaiming anything still queued to run
+//! inline while it waits — bit-identical results, branchy-graph latency
+//! cut to the schedule's critical path.
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::arch::KrakenConfig;
-use crate::backend::pool::{panic_reason, ShardedPool};
+use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
 use crate::backend::{Accelerator, Estimator, Functional};
+use crate::model::sched::{self, NodeDispatcher, NodeTask};
 use crate::model::{run_graph, ModelGraph};
 use crate::partition::PartitionedPool;
 use crate::sim::Engine;
@@ -55,32 +64,22 @@ use super::batcher::DenseOp;
 
 /// A request that could not be served: the model was unknown, the
 /// payload malformed, or the worker's backend panicked (or died) while
-/// processing it.
-#[derive(Debug, Clone)]
-pub struct RunError {
-    /// Worker (shard) the request failed on; `usize::MAX` when the
-    /// failure happened before any worker touched it.
-    pub worker: usize,
-    pub reason: String,
-}
-
-impl std::fmt::Display for RunError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "request failed on worker {}: {}", self.worker, self.reason)
-    }
-}
-
-impl std::error::Error for RunError {}
+/// processing it. (Defined in [`crate::model`] — the graph executors
+/// return it directly; the service maps it onto tickets.)
+pub use crate::model::RunError;
 
 /// One graph-model request's result.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// Raw int32 accumulators of the graph's last accelerated node
-    /// (the classifier layer in every benchmark CNN).
+    /// Raw int32 accumulators of the graph's pinned logits node
+    /// ([`ModelGraph::logits_node`] — the classifier layer in every
+    /// benchmark CNN).
     pub logits: Vec<i32>,
     /// Time spent queued before a worker picked the request up.
     pub queue_us: f64,
-    /// Modeled device time (clock cycles / operating frequency).
+    /// Modeled device time (clock cycles / operating frequency): the
+    /// serial sum of the graph's nodes, or the schedule's critical
+    /// path under [`ServiceBuilder::graph_parallelism`].
     pub device_ms: f64,
     /// Backend clock cycles consumed.
     pub clocks: u64,
@@ -163,7 +162,10 @@ pub struct ServiceStats {
     pub total_clocks: u64,
     /// Workers (= backend instances) in the pool.
     pub workers: usize,
-    /// Requests served off a stolen (non-home-shard) job.
+    /// Pool jobs served off a stolen (non-home-shard) take. With
+    /// [`ServiceBuilder::graph_parallelism`] this includes
+    /// intra-request node tasks picked up by siblings — branch fan-out
+    /// working as designed — so it can exceed the request count.
     pub stolen: u64,
     /// Dense batches flushed (each is one shared engine pass).
     pub dense_flushes: u64,
@@ -239,6 +241,7 @@ pub struct ServiceBuilder {
     backend: BackendKind,
     workers: usize,
     partition: usize,
+    graph_par: bool,
     capacity: Option<usize>,
     window: Option<Duration>,
     models: Vec<(String, BuilderModel)>,
@@ -259,6 +262,7 @@ impl ServiceBuilder {
             backend: BackendKind::Engine,
             workers: 1,
             partition: 1,
+            graph_par: false,
             capacity: None,
             window: None,
             models: Vec::new(),
@@ -291,6 +295,21 @@ impl ServiceBuilder {
     pub fn partition(mut self, p: usize) -> Self {
         assert!(p >= 1, "partition factor must be at least 1");
         self.partition = p;
+        self
+    }
+
+    /// Graph-level branch scheduling: with `true`, each graph request's
+    /// independent branches (ResNet's projection blocks, inception/
+    /// attention heads) fan out across the worker pool through the
+    /// level/branch scheduler ([`crate::model::sched`]) instead of the
+    /// whole request pinning to one worker. Results are bit-identical
+    /// to the serial executor; [`Response::device_ms`] then reports the
+    /// schedule's critical path rather than the serial sum. Graphs with
+    /// no multi-accel level (pure chains) automatically keep the serial
+    /// executor — no per-node dispatch overhead where there is nothing
+    /// to overlap.
+    pub fn graph_parallelism(mut self, enabled: bool) -> Self {
+        self.graph_par = enabled;
         self
     }
 
@@ -395,13 +414,22 @@ impl ServiceBuilder {
             ..Default::default()
         }));
         let stats_in_pool = Arc::clone(&stats);
+        // Filled right after the pool exists (before any job can be
+        // submitted): the handle drivers use to fan one request's
+        // branch work out to pool siblings when graph parallelism is
+        // on.
+        let fanout: Arc<OnceLock<PoolHandle<Job>>> = Arc::new(OnceLock::new());
+        let fanout_in_pool = Arc::clone(&fanout);
+        let graph_par = self.graph_par;
         let pool = ShardedPool::spawn(
             self.workers,
             make_backend,
             move |worker_idx, backend: &mut B, job: Job| {
-                handle_job(worker_idx, backend, job, &stats_in_pool)
+                let fan = if graph_par { fanout_in_pool.get() } else { None };
+                handle_job(worker_idx, backend, job, &stats_in_pool, fan)
             },
         );
+        fanout.set(pool.handle()).unwrap_or_else(|_| unreachable!("fanout handle set once"));
         let inner = Arc::new(ServiceInner {
             pool,
             models,
@@ -438,6 +466,33 @@ enum Job {
         enqueued: Vec<Instant>,
         resps: Vec<mpsc::Sender<Result<DenseResponse, RunError>>>,
     },
+    /// One accelerated node of an in-flight graph request, injected by
+    /// a sibling driver under `graph_parallelism(true)` — the unit of
+    /// intra-request branch parallelism.
+    Node(NodeTask),
+}
+
+/// The service's [`NodeDispatcher`]: wrap the scheduler's node tasks in
+/// [`Job::Node`] on the way into the shared worker pool, and unwrap
+/// them when the waiting driver reclaims its own queued work.
+struct GraphFanout<'a> {
+    handle: &'a PoolHandle<Job>,
+}
+
+impl NodeDispatcher for GraphFanout<'_> {
+    fn dispatch(&self, tasks: Vec<NodeTask>) {
+        self.handle.submit_batch(tasks.into_iter().map(Job::Node));
+    }
+    fn reclaim(&self, req: u64) -> Option<NodeTask> {
+        match self
+            .handle
+            .take_matching(|j| matches!(j, Job::Node(t) if t.request() == req))
+        {
+            Some(Job::Node(task)) => Some(task),
+            Some(_) => unreachable!("predicate only matches node tasks"),
+            None => None,
+        }
+    }
 }
 
 /// A registered model inside the running service.
@@ -605,21 +660,43 @@ fn flusher_loop(inner: &ServiceInner) {
     }
 }
 
-/// Process one job on a worker, isolating panics per request.
+/// Process one job on a worker, isolating panics per request. `fanout`
+/// is `Some` when graph parallelism is on: graph requests then drive
+/// the level/branch scheduler, injecting their independent accelerated
+/// nodes as [`Job::Node`] siblings instead of running the whole DAG
+/// locally.
 fn handle_job<B: Accelerator>(
     worker_idx: usize,
     backend: &mut B,
     job: Job,
     stats: &Mutex<ServiceStats>,
+    fanout: Option<&PoolHandle<Job>>,
 ) {
     match job {
+        Job::Node(task) => {
+            // Sibling work of another worker's in-flight request: run it
+            // on this worker's backend; the driving worker gathers the
+            // result (and owns all stats/response bookkeeping).
+            sched::run_node_task(worker_idx, backend, task);
+        }
         Job::Infer { model, graph, input, enqueued, resp } => {
             let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
-            let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                run_graph(backend, &graph, &input)
+            let run = std::panic::catch_unwind(AssertUnwindSafe(|| match fanout {
+                // Only graphs with a multi-accel level can overlap
+                // branches; chains skip the scheduler's per-node
+                // dispatch overhead.
+                Some(handle) if graph.max_accel_level_width() > 1 => {
+                    sched::run_graph_scheduled(
+                        &GraphFanout { handle },
+                        Some(backend as &mut dyn Accelerator),
+                        &graph,
+                        &input,
+                    )
+                }
+                _ => run_graph(backend, &graph, &input),
             }));
             match run {
-                Ok(report) => {
+                Ok(Ok(report)) => {
                     {
                         let mut s = stats.lock().expect("service stats");
                         s.completed += 1;
@@ -636,6 +713,12 @@ fn handle_job<B: Accelerator>(
                         clocks: report.total_clocks,
                         worker: worker_idx,
                     }));
+                }
+                Ok(Err(err)) => {
+                    stats.lock().expect("service stats").failed += 1;
+                    let worker =
+                        if err.worker == usize::MAX { worker_idx } else { err.worker };
+                    let _ = resp.send(Err(RunError { worker, reason: err.reason }));
                 }
                 Err(payload) => {
                     stats.lock().expect("service stats").failed += 1;
@@ -1185,10 +1268,103 @@ mod tests {
         for seed in [X_SEED, 7, 8] {
             let x = Tensor4::random([1, 28, 28, 3], seed);
             let served = service.infer("tiny_cnn", x.clone()).expect("served");
-            let direct = run_graph(&mut backend, &graph, &x);
+            let direct = run_graph(&mut backend, &graph, &x).expect("direct run");
             assert_eq!(served.logits, direct.logits);
             assert_eq!(served.clocks, direct.total_clocks);
         }
         service.shutdown();
+    }
+
+    #[test]
+    fn graph_parallelism_is_bit_identical_and_reports_critical_path() {
+        // Branches fanned across pool siblings must serve the same
+        // logits/clocks as a pinned serial run; device_ms switches to
+        // the schedule's critical path (≤ the serial sum).
+        let graph = crate::networks::inception_block_graph(16, 32, 16, 4);
+        let mut backend = Functional::new(KrakenConfig::new(7, 96));
+        let inputs: Vec<Tensor4<i8>> =
+            (0..4).map(|i| Tensor4::random([1, 16, 1, 32], 4000 + i)).collect();
+        let direct: Vec<_> = inputs
+            .iter()
+            .map(|x| run_graph(&mut backend, &graph, x).expect("direct run"))
+            .collect();
+        for workers in [1usize, 2, 3] {
+            let service = ServiceBuilder::new()
+                .config(KrakenConfig::new(7, 96))
+                .backend(BackendKind::Functional)
+                .workers(workers)
+                .graph_parallelism(true)
+                .register_graph("incep", crate::networks::inception_block_graph(16, 32, 16, 4))
+                .build();
+            let got: Vec<_> = service
+                .submit_batch("incep", inputs.clone())
+                .into_iter()
+                .map(|t| t.wait().expect("served"))
+                .collect();
+            for (served, want) in got.iter().zip(&direct) {
+                assert_eq!(served.logits, want.logits, "{workers} workers");
+                assert_eq!(served.clocks, want.total_clocks, "{workers} workers");
+                assert!(
+                    served.device_ms <= want.modeled_ms + 1e-12,
+                    "{workers} workers: critical path {} must not exceed serial sum {}",
+                    served.device_ms,
+                    want.modeled_ms
+                );
+            }
+            let stats = service.shutdown();
+            assert_eq!(stats.completed, inputs.len() as u64);
+        }
+    }
+
+    /// Two parallel 1×1 convs off the input (one named `conv1`, the
+    /// Panicky sentinel layer) joined by a residual add — branchy, so
+    /// `graph_parallelism` really fans it out.
+    fn two_branch_conv1_graph() -> ModelGraph {
+        let mut b = crate::model::GraphBuilder::new("branchy");
+        let x = b.input([1, 4, 4, 3]);
+        let mk = |name: &str| crate::layers::Layer::conv(name, 1, 4, 4, 1, 1, 1, 1, 3, 8);
+        let q = QParams::from_scale(1.0 / 16.0, 0, false);
+        let a = b.accel(x, mk("conv1"), Tensor4::random([1, 1, 3, 8], 1), q);
+        let c = b.accel(x, mk("conv2"), Tensor4::random([1, 1, 3, 8], 2), q);
+        let sum = b.residual_add(a, c);
+        b.output(sum);
+        b.build().expect("well-formed")
+    }
+
+    #[test]
+    fn graph_parallelism_isolates_panics_and_serves_on() {
+        // A poisoned request under branch fan-out: the node-level panic
+        // is caught on whichever worker ran it, the driver resolves the
+        // ticket to a RunError, and both workers keep serving.
+        let graph = two_branch_conv1_graph();
+        assert!(graph.max_accel_level_width() > 1, "must take the fan-out path");
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .workers(2)
+            .graph_parallelism(true)
+            .register_graph("branchy", graph)
+            .build_with(|_| Panicky { inner: Functional::new(KrakenConfig::new(7, 96)) });
+        let mut good = Tensor4::random([1, 4, 4, 3], X_SEED);
+        good.data[0] = 1; // keep clear of the 99 sentinel
+        let mut bad = good.clone();
+        bad.data[0] = 99;
+        let results: Vec<_> = service
+            .submit_batch("branchy", [good.clone(), bad, good.clone()])
+            .into_iter()
+            .map(|t| t.wait())
+            .collect();
+        assert!(results[0].is_ok());
+        let err = results[1].as_ref().expect_err("poisoned request must fail");
+        assert!(err.reason.contains("poisoned"), "{}", err.reason);
+        assert!(results[2].is_ok(), "workers must survive the panic");
+        assert_eq!(
+            results[0].as_ref().unwrap().logits,
+            results[2].as_ref().unwrap().logits
+        );
+        // And the service still serves fresh requests afterwards.
+        assert!(service.infer("branchy", good).is_ok());
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 1);
     }
 }

@@ -86,6 +86,9 @@ pub use arch::KrakenConfig;
 pub use backend::{Accelerator, LayerData, LayerOutput};
 pub use coordinator::{BackendKind, KrakenService, ServiceBuilder, Ticket};
 pub use layers::{Layer, LayerKind};
-pub use model::{run_graph, GraphBuilder, GraphError, GraphReport, ModelGraph, NodeId, NodeOp};
+pub use model::{
+    run_graph, run_graph_on_pool, GraphBuilder, GraphError, GraphReport, ModelGraph, NodeId,
+    NodeOp, RunError,
+};
 pub use networks::Network;
 pub use partition::{PartitionPlan, PartitionedPool, SplitAxis};

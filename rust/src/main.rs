@@ -13,8 +13,8 @@ use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
 use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
 use kraken::model::{run_graph, ModelGraph};
 use kraken::networks::{
-    alexnet_graph, paper_networks, resnet50_graph_at, tiny_cnn_graph, tiny_mlp_graph, Network,
-    X_SEED,
+    alexnet_graph, inception_block_graph, paper_networks, resnet50_graph_at, tiny_cnn_graph,
+    tiny_mlp_graph, Network, X_SEED,
 };
 use kraken::partition::{plan_layer, PartitionedPool};
 use kraken::perf::PerfModel;
@@ -47,14 +47,17 @@ system:
   simulate        run TinyCNN through the clock-accurate simulator
   backends        cross-backend equivalence: cycle-accurate vs
                   functional vs baseline estimators on TinyCNN
-  serve N [E] [--partition P] [--window-us U]
-                  serve N TinyCNN requests AND N dense rows through
-                  one KrakenService over a pool of E cycle-accurate
-                  engines (default E=1), two named models registered;
+  serve N [E] [--partition P] [--window-us U] [--graph-par]
+                  serve N TinyCNN requests, N inception-block requests
+                  AND N dense rows through one KrakenService over a
+                  pool of E cycle-accurate engines (default E=1),
+                  three named models registered;
                   with --partition P each request's layers are split
                   across P chips (intra-request data parallelism);
                   with --window-us U straggling dense rows flush on a
-                  U-microsecond deadline tick instead of at shutdown
+                  U-microsecond deadline tick instead of at shutdown;
+                  with --graph-par each request's independent graph
+                  branches fan out across the engine pool
   partition P [net]
                   per-layer partition plan for P shards (split axis,
                   predicted vs measured clocks, overhead) on net ∈
@@ -63,8 +66,9 @@ system:
   graph <net> [res]
                   topology table of the executable model graph (nodes,
                   edges, shapes; accelerated vs host ops) for net ∈
-                  tiny_cnn|tiny_mlp|alexnet|resnet50; res scales
-                  ResNet-50's input (default 224, multiples of 16)
+                  tiny_cnn|tiny_mlp|alexnet|resnet50|inception; res
+                  scales ResNet-50's input (default 224, multiples
+                  of 16)
   report R C      per-network §V metrics for configuration R×C
 ";
 
@@ -104,10 +108,10 @@ fn main() {
         "simulate" => simulate(),
         "backends" => backends(),
         "serve" => {
-            let (positional, partition, window_us) = parse_serve_flags(&args[1..]);
+            let (positional, partition, window_us, graph_par) = parse_serve_flags(&args[1..]);
             let n: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8);
             let engines: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
-            serve(n, engines, partition, window_us);
+            serve(n, engines, partition, window_us, graph_par);
         }
         "partition" => {
             let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -194,7 +198,8 @@ fn verify() {
             ArtifactKind::TinyCnn => {
                 let (x, _w, logits) = runner.run_tiny_cnn().unwrap();
                 let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
-                let rep = run_graph(&mut engine, &tiny_cnn_graph(), &x);
+                let rep = run_graph(&mut engine, &tiny_cnn_graph(), &x)
+                    .expect("artifact input matches the TinyCNN graph");
                 assert_eq!(rep.logits, logits, "tiny_cnn logits mismatch");
                 println!("  {:<10} OK (8-layer logits bit-exact)", spec.name);
                 ok += 1;
@@ -209,7 +214,13 @@ fn simulate() {
     let mut engine = Engine::new(KrakenConfig::paper(), 8);
     let graph = tiny_cnn_graph();
     let x = Tensor4::random([1, 28, 28, 3], X_SEED);
-    let rep = run_graph(&mut engine, &graph, &x);
+    let rep = match run_graph(&mut engine, &graph, &x) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("simulation failed: {e}");
+            return;
+        }
+    };
     println!("TinyCNN through Kraken 7×96 (clock-accurate):");
     for (name, clocks) in &rep.node_clocks {
         println!("  {:<8} {:>9} clocks", name, clocks);
@@ -292,15 +303,18 @@ fn backends() {
     );
 }
 
-/// Pull optional `--partition P` / `--window-us U` flags out of an
-/// argument list, returning the remaining positionals.
-fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>) {
+/// Pull optional `--partition P` / `--window-us U` / `--graph-par`
+/// flags out of an argument list, returning the remaining positionals.
+fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>, bool) {
     let mut positional = Vec::new();
     let mut partition = 1usize;
     let mut window_us = None;
+    let mut graph_par = false;
     let mut iter = args.iter();
     while let Some(arg) = iter.next() {
-        if arg == "--partition" {
+        if arg == "--graph-par" {
+            graph_par = true;
+        } else if arg == "--partition" {
             partition = match iter.next().and_then(|s| s.parse().ok()) {
                 Some(p) if p >= 1 => p,
                 _ => {
@@ -320,7 +334,7 @@ fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>) {
             positional.push(arg);
         }
     }
-    (positional, partition, window_us)
+    (positional, partition, window_us, graph_par)
 }
 
 /// Serve N TinyCNN requests and N dense rows through one
@@ -330,14 +344,21 @@ fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>) {
 /// across chips — intra-request data parallelism that cuts the modeled
 /// device latency, on top of the pool's request parallelism. With a
 /// flush window, straggling dense rows are dispatched by the service's
-/// deadline tick instead of waiting for shutdown.
-fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
+/// deadline tick instead of waiting for shutdown. With `graph_par`,
+/// each request's independent graph branches fan out across the pool
+/// (bit-identical results; device latency becomes the critical path).
+fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>, graph_par: bool) {
     let (fc_ci, fc_co) = (64usize, 16usize);
+    // Small attention-style inception block: the branchy graph whose
+    // independent heads --graph-par actually fans across the pool.
+    let (incep_seq, incep_d) = (32usize, 64usize);
     let mut builder = ServiceBuilder::new()
         .backend(BackendKind::Engine)
         .workers(engines)
         .partition(partition)
+        .graph_parallelism(graph_par)
         .register_graph("tiny_cnn", tiny_cnn_graph())
+        .register_graph("inception", inception_block_graph(incep_seq, incep_d, 16, 4))
         .register_dense(
             "ranker_fc",
             DenseOp::new(
@@ -353,6 +374,9 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
             "intra-request partitioning: each request's layers split across {partition} chips"
         );
     }
+    if graph_par {
+        println!("graph parallelism: independent branches fan out across the engine pool");
+    }
     if let Some(us) = window_us {
         println!("dense flush window: {us} µs deadline tick");
         builder = builder.flush_window(std::time::Duration::from_micros(us));
@@ -363,6 +387,10 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
     let t0 = std::time::Instant::now();
     let tickets =
         service.submit_batch("tiny_cnn", (0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let incep_tickets = service.submit_batch(
+        "inception",
+        (0..n).map(|i| Tensor4::random([1, incep_seq, 1, incep_d], 900 + i as u64)),
+    );
     let dense_tickets: Vec<_> = (0..n)
         .map(|i| service.submit("ranker_fc", Tensor4::random([1, 1, 1, fc_ci], 300 + i as u64).data))
         .collect();
@@ -389,6 +417,21 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>) {
             Err(e) => {
                 failed += 1;
                 println!("req {i}: FAILED ({e})");
+            }
+        }
+    }
+    for (i, ticket) in incep_tickets.into_iter().enumerate() {
+        match ticket.wait() {
+            Ok(resp) => {
+                device_ms += resp.device_ms;
+                println!(
+                    "inception {i}: device={:.3} ms queue={:.0} µs clocks={} worker={}",
+                    resp.device_ms, resp.queue_us, resp.clocks, resp.worker
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("inception {i}: FAILED ({e})");
             }
         }
     }
@@ -441,6 +484,7 @@ fn graph_cmd(net: &str, res: usize) {
         "tiny_cnn" => tiny_cnn_graph(),
         "tiny_mlp" => tiny_mlp_graph(),
         "alexnet" => alexnet_graph(3000),
+        "inception" => inception_block_graph(64, 128, 32, 4),
         "resnet50" => {
             if res < 32 || res % 16 != 0 {
                 eprintln!("resnet50 input resolution must be a multiple of 16, ≥ 32 (got {res})");
@@ -449,7 +493,7 @@ fn graph_cmd(net: &str, res: usize) {
             resnet50_graph_at(res)
         }
         other => {
-            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|resnet50)");
+            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|resnet50|inception)");
             return;
         }
     };

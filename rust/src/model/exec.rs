@@ -1,8 +1,9 @@
-//! The generic graph executor: schedule a [`ModelGraph`]'s accelerated
-//! nodes through any [`Accelerator`] (a lone engine, a
-//! [`crate::backend::pool::ShardedPool`] worker, a multi-chip
-//! [`crate::partition::PartitionedPool`] — the backend seam is
-//! untouched) and run the host ops in between.
+//! The serial graph executor plus the node-eval core it shares with the
+//! level/branch scheduler ([`super::sched`]): schedule a
+//! [`ModelGraph`]'s accelerated nodes through any [`Accelerator`] (a
+//! lone engine, a [`crate::backend::pool::ShardedPool`] worker, a
+//! multi-chip [`crate::partition::PartitionedPool`] — the backend seam
+//! is untouched) and run the host ops in between.
 //!
 //! Activations flow as `Arc<Tensor4<i8>>`: a fan-out edge (the residual
 //! skip, a concat branch) shares the tensor by reference count instead
@@ -12,132 +13,259 @@
 
 use std::sync::Arc;
 
-use crate::backend::{Accelerator, LayerData};
+use crate::backend::{Accelerator, LayerData, LayerOutput};
 use crate::metrics::Counters;
 use crate::tensor::Tensor4;
 
-use super::graph::{ModelGraph, NodeId, NodeOp};
+use super::graph::{AccelStage, ModelGraph, NodeId, NodeOp};
 use super::ops;
+
+/// A request that could not be run: malformed at submission (wrong
+/// input shape, unknown model) or failed on a worker (backend panic,
+/// pool death). Shared by the direct executors here and the serving
+/// layer, which resolves tickets to it instead of panicking.
+#[derive(Debug, Clone)]
+pub struct RunError {
+    /// Worker (shard) the request failed on; `usize::MAX` when the
+    /// failure happened before any worker touched it.
+    pub worker: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for RunError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request failed on worker {}: {}", self.worker, self.reason)
+    }
+}
+
+impl std::error::Error for RunError {}
 
 /// Per-inference report — the graph-world analogue of the old
 /// pipeline report.
 #[derive(Debug, Clone)]
 pub struct GraphReport {
-    /// Raw int32 accumulators of the **last accelerated node** in
-    /// execution order (the classifier layer in every benchmark CNN).
-    /// Graphs with no accelerated nodes fall back to the widened int8
-    /// output.
+    /// Raw int32 accumulators of the graph's pinned logits node
+    /// ([`ModelGraph::logits_node`]: the accelerated ancestor of
+    /// `Output` latest in topo order — the classifier layer in every
+    /// benchmark CNN). Graphs with no accelerated ancestor fall back to
+    /// the widened int8 output.
     pub logits: Vec<i32>,
     /// The int8 tensor the graph's `Output` node yields.
     pub output: Tensor4<i8>,
-    /// `(layer name, clocks)` per accelerated node, execution order.
+    /// `(layer name, clocks)` per accelerated node, topo order —
+    /// identical between the serial and the pooled executor.
     pub node_clocks: Vec<(String, u64)>,
-    /// Total backend clocks across accelerated nodes.
+    /// Total backend clocks across accelerated nodes (the serial sum —
+    /// device *work*, not latency).
     pub total_clocks: u64,
+    /// Clocks along the longest dependency chain of accelerated nodes
+    /// anywhere in the graph — the makespan floor of a perfectly
+    /// branch-parallel schedule (dead-end branches count: the schedule
+    /// still executes them). Equal to `total_clocks` for linear graphs;
+    /// smaller for branchy ones.
+    pub critical_path_clocks: u64,
     /// Backend event deltas for this inference.
     pub counters: Counters,
-    /// Modeled wall time at the conv/FC operating points (§VI-A).
+    /// Modeled wall time at the conv/FC operating points (§VI-A):
+    /// the serial sum for [`run_graph`], the schedule's critical path
+    /// for [`super::run_graph_on_pool`].
     pub modeled_ms: f64,
 }
 
 /// Move the tensor out of an `Arc` when this was the last reference,
 /// clone otherwise — fan-out keeps sharing, linear chains stay
 /// zero-copy.
-fn into_owned(arc: Arc<Tensor4<i8>>) -> Tensor4<i8> {
+pub(crate) fn into_owned(arc: Arc<Tensor4<i8>>) -> Tensor4<i8> {
     Arc::try_unwrap(arc).unwrap_or_else(|shared| (*shared).clone())
 }
 
-/// Run one input through `graph` on any backend. The graph was
-/// validated and shape-checked at build time, so the only runtime
-/// precondition is the input shape (asserted here; the serving layer
-/// checks it before dispatch and resolves the ticket to an error).
+/// Take node `j`'s activation for one consumer: the last consumer moves
+/// the `Arc` out of the slab (freeing it after this node), earlier
+/// consumers share it.
+pub(crate) fn take_input(
+    acts: &mut [Option<Arc<Tensor4<i8>>>],
+    uses: &mut [usize],
+    j: usize,
+) -> Arc<Tensor4<i8>> {
+    uses[j] -= 1;
+    if uses[j] == 0 {
+        acts[j].take().expect("activation computed before use")
+    } else {
+        Arc::clone(acts[j].as_ref().expect("activation computed before use"))
+    }
+}
+
+/// Run one accelerated node on a backend — the single node-eval core
+/// both the serial executor and the pooled scheduler's workers use.
+pub(crate) fn eval_accel<B: Accelerator + ?Sized>(
+    backend: &mut B,
+    stage: &AccelStage,
+    input: Arc<Tensor4<i8>>,
+) -> LayerOutput {
+    if stage.layer.is_dense() {
+        // Borrowed fast path: repack the activation without copying
+        // (when un-shared) and borrow the resident weight tensor.
+        let act = into_owned(input);
+        let x_rows = Tensor4::from_vec([1, stage.layer.h, 1, stage.layer.ci], act.data);
+        backend.run_dense_tensors(&stage.layer, &x_rows, &stage.weights, stage.qparams)
+    } else {
+        backend.run_layer(&LayerData {
+            layer: &stage.layer,
+            x: input.as_ref(),
+            k: &stage.weights,
+            qparams: stage.qparams,
+        })
+    }
+}
+
+/// Run one non-accelerated node (`Input`/`Output`/§II-C host op) on the
+/// current thread — shared by the serial executor and the scheduler's
+/// between-level host phase.
+pub(crate) fn eval_host(
+    op: &NodeOp,
+    mut ins: Vec<Arc<Tensor4<i8>>>,
+    x: &Tensor4<i8>,
+) -> Arc<Tensor4<i8>> {
+    match op {
+        NodeOp::Input { .. } => Arc::new(x.clone()),
+        NodeOp::Output => ins.pop().expect("output node has one input"),
+        NodeOp::Accel(_) => unreachable!("accelerated nodes run through eval_accel"),
+        NodeOp::MaxPool { k, s, pad } => Arc::new(ops::maxpool(ins[0].as_ref(), *k, *s, *pad)),
+        NodeOp::GlobalAvgPool => Arc::new(ops::global_avg_pool(ins[0].as_ref())),
+        NodeOp::ResidualAdd => Arc::new(ops::residual_add(ins[0].as_ref(), ins[1].as_ref())),
+        NodeOp::Concat => {
+            let refs: Vec<&Tensor4<i8>> = ins.iter().map(|a| a.as_ref()).collect();
+            Arc::new(ops::concat_channels(&refs))
+        }
+        NodeOp::Requant(q) => Arc::new(ops::requant(ins[0].as_ref(), q)),
+        NodeOp::Flatten => {
+            // Pure reshape: reuse the buffer when un-shared.
+            let act = into_owned(ins.pop().expect("flatten node has one input"));
+            let len = act.data.len();
+            Arc::new(Tensor4::from_vec([1, 1, 1, len], act.data))
+        }
+    }
+}
+
+/// One accelerated node's measurements, slotted by node index so the
+/// serial and pooled executors report identically ordered results.
+pub(crate) struct NodeRecord {
+    pub name: String,
+    pub clocks: u64,
+    pub modeled_s: f64,
+}
+
+/// Assemble the shared [`GraphReport`] tail: `node_clocks` in topo
+/// order, serial-sum totals, and the critical path over the dependency
+/// DAG (accelerated nodes cost their clocks, host ops cost zero).
+/// `serial_latency` picks the `modeled_ms` semantics: the serial
+/// executor's per-node sum (`true`) or the pooled schedule's critical
+/// path (`false`).
+pub(crate) fn assemble_report(
+    graph: &ModelGraph,
+    records: Vec<Option<NodeRecord>>,
+    logits: Option<Vec<i32>>,
+    output: Tensor4<i8>,
+    counters: Counters,
+    serial_latency: bool,
+) -> GraphReport {
+    let nodes = graph.nodes();
+    // Critical path: longest (clocks, seconds) chain ending at each
+    // node. The makespan floor is the max over EVERY node, not just the
+    // chain into `Output` — a schedule executes (and waits on) dead-end
+    // branches too.
+    let mut cp: Vec<(u64, f64)> = vec![(0, 0.0); nodes.len()];
+    let mut critical_path_clocks = 0u64;
+    let mut critical_path_s = 0.0f64;
+    for &i in graph.topo_order() {
+        let (own_clocks, own_s) = records[i]
+            .as_ref()
+            .map_or((0, 0.0), |r| (r.clocks, r.modeled_s));
+        let (in_clocks, in_s) = nodes[i]
+            .inputs
+            .iter()
+            .map(|&NodeId(j)| cp[j])
+            .fold((0u64, 0.0f64), |(ac, asec), (c, s)| (ac.max(c), asec.max(s)));
+        cp[i] = (in_clocks + own_clocks, in_s + own_s);
+        critical_path_clocks = critical_path_clocks.max(cp[i].0);
+        critical_path_s = critical_path_s.max(cp[i].1);
+    }
+
+    let mut node_clocks = Vec::new();
+    let mut modeled_s_sum = 0.0;
+    for &i in graph.topo_order() {
+        if let Some(r) = &records[i] {
+            node_clocks.push((r.name.clone(), r.clocks));
+            modeled_s_sum += r.modeled_s;
+        }
+    }
+    GraphReport {
+        logits: logits.unwrap_or_else(|| output.data.iter().map(|&v| v as i32).collect()),
+        total_clocks: node_clocks.iter().map(|(_, c)| c).sum(),
+        critical_path_clocks,
+        node_clocks,
+        counters,
+        modeled_ms: if serial_latency { modeled_s_sum * 1e3 } else { critical_path_s * 1e3 },
+        output,
+    }
+}
+
+pub(crate) fn input_shape_error(graph: &ModelGraph, got: [usize; 4]) -> RunError {
+    RunError {
+        worker: usize::MAX,
+        reason: format!(
+            "graph '{}' expects input shape {:?}, got {got:?}",
+            graph.name,
+            graph.input_shape()
+        ),
+    }
+}
+
+/// Run one input through `graph` on any backend, node by node in topo
+/// order. The graph was validated and shape-checked at build time, so
+/// the only runtime check left is the input shape — a mismatch is a
+/// typed [`RunError`], not a panic (the serving layer resolves it to a
+/// failed ticket; direct callers get a `Result`).
 pub fn run_graph<B: Accelerator + ?Sized>(
     backend: &mut B,
     graph: &ModelGraph,
     x: &Tensor4<i8>,
-) -> GraphReport {
-    assert_eq!(
-        x.shape,
-        graph.input_shape(),
-        "graph '{}' expects input shape {:?}",
-        graph.name,
-        graph.input_shape()
-    );
+) -> Result<GraphReport, RunError> {
+    if x.shape != graph.input_shape() {
+        return Err(input_shape_error(graph, x.shape));
+    }
     let before = backend.counters();
     let nodes = graph.nodes();
     let mut acts: Vec<Option<Arc<Tensor4<i8>>>> = vec![None; nodes.len()];
     let mut uses: Vec<usize> = graph.consumers().to_vec();
-    let mut node_clocks: Vec<(String, u64)> = Vec::new();
-    let mut modeled_s = 0.0;
+    let mut records: Vec<Option<NodeRecord>> = Vec::with_capacity(nodes.len());
+    records.resize_with(nodes.len(), || None);
     let mut logits: Option<Vec<i32>> = None;
     let mut final_out: Option<Arc<Tensor4<i8>>> = None;
 
     for &i in graph.topo_order() {
         let node = &nodes[i];
-        // Take each input's activation: the last consumer moves the Arc
-        // out of the slab (freeing it after this node), earlier
-        // consumers share it.
-        let mut ins: Vec<Arc<Tensor4<i8>>> = Vec::with_capacity(node.inputs.len());
-        for &NodeId(j) in &node.inputs {
-            uses[j] -= 1;
-            let arc = if uses[j] == 0 {
-                acts[j].take().expect("activation computed before use")
-            } else {
-                Arc::clone(acts[j].as_ref().expect("activation computed before use"))
-            };
-            ins.push(arc);
-        }
+        let ins: Vec<Arc<Tensor4<i8>>> = node
+            .inputs
+            .iter()
+            .map(|&NodeId(j)| take_input(&mut acts, &mut uses, j))
+            .collect();
 
         let out: Arc<Tensor4<i8>> = match &node.op {
-            NodeOp::Input { .. } => Arc::new(x.clone()),
-            NodeOp::Output => ins.pop().expect("output node has one input"),
             NodeOp::Accel(stage) => {
-                let out = if stage.layer.is_dense() {
-                    // Borrowed fast path: repack the activation without
-                    // copying (when un-shared) and borrow the resident
-                    // weight tensor.
-                    let act = into_owned(ins.pop().expect("accel node has one input"));
-                    let x_rows = Tensor4::from_vec(
-                        [1, stage.layer.h, 1, stage.layer.ci],
-                        act.data,
-                    );
-                    backend.run_dense_tensors(
-                        &stage.layer,
-                        &x_rows,
-                        &stage.weights,
-                        stage.qparams,
-                    )
-                } else {
-                    backend.run_layer(&LayerData {
-                        layer: &stage.layer,
-                        x: ins[0].as_ref(),
-                        k: &stage.weights,
-                        qparams: stage.qparams,
-                    })
-                };
-                node_clocks.push((stage.layer.name.clone(), out.clocks));
-                modeled_s += backend.modeled_s(stage.layer.kind, out.clocks);
-                logits = Some(out.y_acc.data);
+                let mut ins = ins;
+                let out = eval_accel(backend, stage, ins.pop().expect("accel node has one input"));
+                records[i] = Some(NodeRecord {
+                    name: stage.layer.name.clone(),
+                    clocks: out.clocks,
+                    modeled_s: backend.modeled_s(stage.layer.kind, out.clocks),
+                });
+                if graph.logits_node() == Some(i) {
+                    logits = Some(out.y_acc.data);
+                }
                 Arc::new(out.y_q)
             }
-            NodeOp::MaxPool { k, s, pad } => {
-                Arc::new(ops::maxpool(ins[0].as_ref(), *k, *s, *pad))
-            }
-            NodeOp::GlobalAvgPool => Arc::new(ops::global_avg_pool(ins[0].as_ref())),
-            NodeOp::ResidualAdd => {
-                Arc::new(ops::residual_add(ins[0].as_ref(), ins[1].as_ref()))
-            }
-            NodeOp::Concat => {
-                let refs: Vec<&Tensor4<i8>> = ins.iter().map(|a| a.as_ref()).collect();
-                Arc::new(ops::concat_channels(&refs))
-            }
-            NodeOp::Requant(q) => Arc::new(ops::requant(ins[0].as_ref(), q)),
-            NodeOp::Flatten => {
-                // Pure reshape: reuse the buffer when un-shared.
-                let act = into_owned(ins.pop().expect("flatten node has one input"));
-                let len = act.data.len();
-                Arc::new(Tensor4::from_vec([1, 1, 1, len], act.data))
-            }
+            op => eval_host(op, ins, x),
         };
 
         if i == graph.output_index() {
@@ -151,15 +279,7 @@ pub fn run_graph<B: Accelerator + ?Sized>(
     drop(acts);
     let output = into_owned(final_out.expect("validated graph has an output node"));
     let counters = backend.counters().diff(&before);
-    GraphReport {
-        logits: logits
-            .unwrap_or_else(|| output.data.iter().map(|&v| v as i32).collect()),
-        total_clocks: node_clocks.iter().map(|(_, c)| c).sum(),
-        node_clocks,
-        counters,
-        modeled_ms: modeled_s * 1e3,
-        output,
-    }
+    Ok(assemble_report(graph, records, logits, output, counters, true))
 }
 
 #[cfg(test)]
@@ -190,16 +310,25 @@ mod tests {
         let graph = doubling_residual_graph();
         let x = Tensor4::from_vec([1, 2, 2, 1], vec![10i8, -20, 30, -40]);
         for (name, report) in [
-            ("engine", run_graph(&mut Engine::new(KrakenConfig::new(2, 8), 8), &graph, &x)),
-            ("functional", run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x)),
+            (
+                "engine",
+                run_graph(&mut Engine::new(KrakenConfig::new(2, 8), 8), &graph, &x).unwrap(),
+            ),
+            (
+                "functional",
+                run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).unwrap(),
+            ),
         ] {
             // conv doubles: y = [20, −40, 60, −80]; +x = [30, −60, 90,
             // −120]; ReLU = [30, 0, 90, 0].
             assert_eq!(report.output.data, vec![30, 0, 90, 0], "{name}");
-            // logits = the conv's raw accumulators (last accel node).
+            // logits = the conv's raw accumulators (the only accel
+            // ancestor of the output).
             assert_eq!(report.logits, vec![20, -40, 60, -80], "{name}");
             assert_eq!(report.node_clocks.len(), 1, "{name}");
             assert!(report.total_clocks > 0, "{name}");
+            // One accel node: the critical path IS the serial sum.
+            assert_eq!(report.critical_path_clocks, report.total_clocks, "{name}");
         }
     }
 
@@ -210,7 +339,8 @@ mod tests {
         // correct and the graph reports exactly one accel node).
         let graph = doubling_residual_graph();
         let x = Tensor4::from_vec([1, 2, 2, 1], vec![1i8, 2, 3, 4]);
-        let report = run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x);
+        let report =
+            run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).unwrap();
         assert_eq!(report.output.data, vec![3, 6, 9, 12]);
     }
 
@@ -221,18 +351,50 @@ mod tests {
         let p = b.maxpool(x, 2, 2, 0);
         b.output(p);
         let graph = b.build().expect("well-formed");
+        assert_eq!(graph.logits_node(), None);
         let x = Tensor4::from_vec([1, 4, 4, 1], (0..16).map(|v| v as i8).collect());
-        let report = run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x);
+        let report =
+            run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).unwrap();
         assert_eq!(report.output.data, vec![5, 7, 13, 15]);
         assert_eq!(report.logits, vec![5, 7, 13, 15]);
         assert_eq!(report.total_clocks, 0);
+        assert_eq!(report.critical_path_clocks, 0);
     }
 
     #[test]
-    #[should_panic(expected = "expects input shape")]
-    fn wrong_input_shape_is_rejected() {
+    fn wrong_input_shape_is_a_typed_error_not_a_panic() {
+        // Regression: this used to be an assert_eq! panic that took
+        // down direct callers (CLI, examples) on malformed input.
         let graph = doubling_residual_graph();
         let x = Tensor4::random([1, 3, 3, 1], 1);
-        run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x);
+        let err = run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x)
+            .expect_err("wrong input shape must be an error");
+        assert_eq!(err.worker, usize::MAX);
+        assert!(err.reason.contains("expects input shape"), "{}", err.reason);
+        assert!(err.reason.contains("[1, 3, 3, 1]"), "{}", err.reason);
+    }
+
+    #[test]
+    fn logits_pin_to_the_output_ancestor_not_execution_order() {
+        // A dead-end accel branch that executes *after* the classifier
+        // in topo order must not hijack the logits (the old "last accel
+        // node in execution order" rule did exactly that).
+        let mut b = GraphBuilder::new("dead_branch");
+        let x = b.input([1, 2, 2, 1]);
+        let double = Layer::conv("double", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let w2 = Tensor4::from_vec([1, 1, 1, 1], vec![2i8]);
+        let y = b.accel(x, double, w2, QParams::identity());
+        // Dead end: consumed by nothing, not an ancestor of Output.
+        let triple = Layer::conv("triple", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let w3 = Tensor4::from_vec([1, 1, 1, 1], vec![3i8]);
+        let _dead = b.accel(y, triple, w3, QParams::identity());
+        b.output(y);
+        let graph = b.build().expect("well-formed");
+        assert_eq!(graph.logits_node(), Some(1));
+        let x = Tensor4::from_vec([1, 2, 2, 1], vec![1i8, 2, 3, 4]);
+        let report =
+            run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).unwrap();
+        assert_eq!(report.logits, vec![2, 4, 6, 8], "doubling conv, not the dead tripler");
+        assert_eq!(report.output.data, vec![2, 4, 6, 8]);
     }
 }

@@ -197,6 +197,20 @@ pub struct ModelGraph {
     /// Fan-out (consumer edge count) per node — the executor drops an
     /// activation after its last consumer has read it.
     consumers: Vec<usize>,
+    /// Dependency levels: `levels[d]` holds (in topo order) every node
+    /// whose longest path from the `Input` node is `d` edges. Nodes of
+    /// one level are mutually independent — the unit of branch
+    /// parallelism the pooled scheduler dispatches concurrently.
+    levels: Vec<Vec<usize>>,
+    /// Widest level measured in accelerated nodes — `> 1` iff branch
+    /// scheduling can ever overlap work for this graph.
+    max_accel_width: usize,
+    /// The accelerated ancestor of `Output` latest in topo order — the
+    /// node whose raw accumulators a [`super::GraphReport`] reports as
+    /// `logits`. Pinned here (not "last in execution order") so the
+    /// choice is a property of the graph, identical under the serial
+    /// and the concurrent executor and blind to dead-end branches.
+    logits_node: Option<usize>,
 }
 
 impl ModelGraph {
@@ -284,7 +298,63 @@ impl ModelGraph {
             nodes[i].shape = shape;
         }
 
-        Ok(Self { name: name.into(), nodes, topo, input: inputs[0], output: outputs[0], consumers })
+        // Dependency levels (longest path from the input, in edges):
+        // nodes sharing a level have no path between them, so the
+        // pooled scheduler may run them concurrently.
+        let mut depth = vec![0usize; n];
+        let mut levels: Vec<Vec<usize>> = Vec::new();
+        for &i in &topo {
+            let d = nodes[i].inputs.iter().map(|id| depth[id.0] + 1).max().unwrap_or(0);
+            depth[i] = d;
+            if levels.len() <= d {
+                levels.resize_with(d + 1, Vec::new);
+            }
+            levels[d].push(i);
+        }
+
+        let max_accel_width = levels
+            .iter()
+            .map(|level| {
+                level
+                    .iter()
+                    .filter(|&&i| matches!(nodes[i].op, NodeOp::Accel(_)))
+                    .count()
+            })
+            .max()
+            .unwrap_or(0);
+
+        // Pin the logits source: the accelerated ancestor of `Output`
+        // latest in topo order. Walking ancestors (rather than "last
+        // accel node executed") keeps the choice deterministic under
+        // any execution order and ignores dead-end branches.
+        let mut ancestor = vec![false; n];
+        ancestor[outputs[0]] = true;
+        let mut stack = vec![outputs[0]];
+        while let Some(i) = stack.pop() {
+            for &NodeId(j) in &nodes[i].inputs {
+                if !ancestor[j] {
+                    ancestor[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        let logits_node = topo
+            .iter()
+            .rev()
+            .copied()
+            .find(|&i| ancestor[i] && matches!(nodes[i].op, NodeOp::Accel(_)));
+
+        Ok(Self {
+            name: name.into(),
+            nodes,
+            topo,
+            input: inputs[0],
+            output: outputs[0],
+            consumers,
+            levels,
+            max_accel_width,
+            logits_node,
+        })
     }
 
     /// Build a linear chain `input → ops[0] → … → ops[last] → output` —
@@ -316,6 +386,34 @@ impl ModelGraph {
     /// Node indices in execution (topological) order.
     pub fn topo_order(&self) -> &[usize] {
         &self.topo
+    }
+
+    /// Dependency levels: `levels()[d]` lists (topo order) the nodes at
+    /// longest-path depth `d` from the input. Nodes within one level
+    /// are mutually independent; every node's inputs live in strictly
+    /// shallower levels. The branch scheduler
+    /// ([`crate::model::run_graph_on_pool`]) dispatches each level's
+    /// accelerated nodes concurrently.
+    pub fn levels(&self) -> &[Vec<usize>] {
+        &self.levels
+    }
+
+    /// Widest dependency level measured in accelerated nodes. `> 1`
+    /// means independent branches exist for the pooled scheduler to
+    /// overlap; `<= 1` means the graph is effectively a chain and the
+    /// serving layer skips the scheduler's per-node dispatch overhead
+    /// even with graph parallelism enabled.
+    pub fn max_accel_level_width(&self) -> usize {
+        self.max_accel_width
+    }
+
+    /// The node whose raw int32 accumulators are reported as
+    /// [`super::GraphReport::logits`]: the accelerated ancestor of the
+    /// `Output` node latest in topo order (`None` for host-only
+    /// graphs). A graph property, not an execution-order artifact — the
+    /// serial and pooled executors agree by construction.
+    pub fn logits_node(&self) -> Option<usize> {
+        self.logits_node
     }
 
     pub(crate) fn consumers(&self) -> &[usize] {

@@ -22,16 +22,28 @@
 //!   estimator, or a multi-chip [`crate::partition::PartitionedPool`].
 //!   Fan-out edges share activations via `Arc` instead of cloning.
 //!
+//! * [`sched`] / [`run_graph_on_pool`] — the level/branch scheduler:
+//!   partition the DAG into dependency levels and fan each level's
+//!   independent accelerated nodes out across the workers of a
+//!   [`crate::backend::pool::ShardedPool`], bit-identical to the serial
+//!   executor but overlapping branches in wall time. Host ops run on
+//!   the dispatching thread between levels; the report's `modeled_ms`
+//!   becomes the schedule's critical path.
+//!
 //! Linear pipelines are the degenerate case ([`ModelGraph::linear`]);
 //! the executable network zoo ([`crate::networks::tiny_cnn_graph`],
 //! [`crate::networks::alexnet_graph`],
-//! [`crate::networks::resnet50_graph`]) builds on these primitives.
+//! [`crate::networks::resnet50_graph`],
+//! [`crate::networks::inception_block_graph`]) builds on these
+//! primitives.
 
 mod builder;
 mod exec;
 mod graph;
 pub mod ops;
+pub mod sched;
 
 pub use builder::GraphBuilder;
-pub use exec::{run_graph, GraphReport};
+pub use exec::{run_graph, GraphReport, RunError};
 pub use graph::{AccelStage, GraphError, ModelGraph, Node, NodeId, NodeOp};
+pub use sched::{run_graph_on_pool, spawn_node_pool};

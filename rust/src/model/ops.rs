@@ -7,8 +7,18 @@
 use crate::quant::QParams;
 use crate::tensor::Tensor4;
 
-/// Output size of one pooled dimension: `(d + 2·pad − k) / s + 1`.
+/// Output size of one pooled dimension: `(d + 2·pad − k) / s + 1`
+/// (trailing rows/columns that don't fill a window are dropped, the
+/// valid-pooling convention). Requires `pad < k`: with `pad ≥ k` the
+/// corner windows would contain no in-bounds tap and the op would
+/// fabricate `i8::MIN` pixels out of pure padding — [`GraphBuilder`]
+/// rejects such graphs at build time, and the op refuses them too.
+///
+/// [`GraphBuilder`]: crate::model::GraphBuilder
 pub fn pool_out_dim(d: usize, k: usize, s: usize, pad: usize) -> usize {
+    assert!(k >= 1 && s >= 1, "degenerate pool window k={k} s={s}");
+    assert!(pad < k, "padding {pad} ≥ window {k} would pool pure padding");
+    assert!(d + 2 * pad >= k, "window {k} (pad {pad}) larger than input {d}");
     (d + 2 * pad - k) / s + 1
 }
 
@@ -20,7 +30,8 @@ pub fn pool_out_dim(d: usize, k: usize, s: usize, pad: usize) -> usize {
 /// `maxpool(x, 3, 2, 1)` the ResNet-50 stem pool.
 pub fn maxpool(x: &Tensor4<i8>, k: usize, s: usize, pad: usize) -> Tensor4<i8> {
     let [n, h, w, c] = x.shape;
-    assert!(k >= 1 && s >= 1 && h + 2 * pad >= k && w + 2 * pad >= k, "degenerate pool window");
+    // `pool_out_dim` enforces the window contract (k, s ≥ 1; pad < k;
+    // window fits), so every output pixel sees at least one real tap.
     let (oh, ow) = (pool_out_dim(h, k, s, pad), pool_out_dim(w, k, s, pad));
     let mut y = Tensor4::<i8>::zeros([n, oh, ow, c]);
     for bn in 0..n {
@@ -138,6 +149,33 @@ mod tests {
         let y = maxpool(&x, 3, 2, 1);
         assert_eq!(y.shape, [1, 1, 1, 1]);
         assert_eq!(y.data, vec![-5]);
+    }
+
+    #[test]
+    fn maxpool_drops_a_non_divisible_trailing_row() {
+        // 5×5 ramp, 2×2/s2 valid: (5−2) % 2 ≠ 0, so the last input
+        // row/column never fills a window and must be dropped, not
+        // padded — output is 2×2 over rows/cols 0..4.
+        assert_eq!(pool_out_dim(5, 2, 2, 0), 2);
+        let x = Tensor4::from_vec([1, 5, 5, 1], (0..25).map(|v| v as i8).collect());
+        let y = maxpool(&x, 2, 2, 0);
+        assert_eq!(y.shape, [1, 2, 2, 1]);
+        assert_eq!(y.data, vec![6, 8, 16, 18]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool pure padding")]
+    fn maxpool_rejects_pad_ge_k() {
+        // Regression: pad ≥ k used to silently emit i8::MIN pixels from
+        // all-padding corner windows.
+        let x = Tensor4::from_vec([1, 4, 4, 1], vec![0i8; 16]);
+        let _ = maxpool(&x, 2, 1, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool pure padding")]
+    fn pool_out_dim_rejects_pad_ge_k() {
+        let _ = pool_out_dim(8, 3, 2, 3);
     }
 
     #[test]

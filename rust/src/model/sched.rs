@@ -1,0 +1,403 @@
+//! Graph-level branch scheduling: run independent branches of **one**
+//! request concurrently on pool siblings.
+//!
+//! The serial executor ([`super::run_graph`]) walks the DAG in topo
+//! order, so ResNet-50's projection blocks and any inception/attention
+//! topology leave pool siblings idle. This module partitions the
+//! validated graph into dependency levels ([`ModelGraph::levels`]) and,
+//! level by level, fans the mutually independent accelerated nodes out
+//! across the workers of a [`ShardedPool`]; §II-C host ops (pooling,
+//! residual adds, concat, requant) run on the dispatching thread
+//! between levels. Results merge in node-index order, so pooled
+//! execution is **bit-identical** to the serial executor on every
+//! backend — only wall time changes. The report's `modeled_ms` becomes
+//! the schedule's critical path ([`GraphReport::critical_path_clocks`])
+//! instead of the serial sum, which over-reports latency for branchy
+//! graphs.
+//!
+//! Deadlock freedom: a driver that is itself a pool worker (the serving
+//! layer's `graph_parallelism` path) injects its node tasks through a
+//! [`crate::backend::pool::PoolHandle`] and then *reclaims* any still
+//! queued task of its own request to run inline while it waits. Every
+//! task it waits on is therefore either queued (the driver takes it),
+//! running on a sibling (finishes in finite time — node evals never
+//! block), or done; drivers never wait on each other.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
+use crate::backend::Accelerator;
+use crate::metrics::Counters;
+use crate::tensor::Tensor4;
+
+use super::exec::{
+    assemble_report, eval_accel, eval_host, input_shape_error, into_owned, take_input,
+    GraphReport, NodeRecord, RunError,
+};
+use super::graph::{ModelGraph, NodeId, NodeOp};
+
+/// Distinguishes one in-flight request's sibling work from every other
+/// request sharing the pool.
+static NEXT_REQUEST: AtomicU64 = AtomicU64::new(0);
+
+/// One accelerated node of one request, dispatched to a pool sibling.
+/// Opaque outside the scheduler: embedders queue it (possibly wrapped
+/// in their own job enum) and hand it to [`run_node_task`] with the
+/// worker's backend.
+pub struct NodeTask {
+    request: u64,
+    node: usize,
+    graph: Arc<ModelGraph>,
+    input: Arc<Tensor4<i8>>,
+    /// Ship the raw accumulators back only for the pinned logits node.
+    keep_acc: bool,
+    resp: mpsc::Sender<NodeOutcome>,
+}
+
+impl NodeTask {
+    /// Token identifying the request this task belongs to — the key a
+    /// waiting driver uses to reclaim its own queued work
+    /// ([`PoolHandle::take_matching`]).
+    pub fn request(&self) -> u64 {
+        self.request
+    }
+}
+
+struct NodeOutcome {
+    node: usize,
+    result: Result<NodeDone, RunError>,
+}
+
+struct NodeDone {
+    y_q: Arc<Tensor4<i8>>,
+    y_acc: Option<Vec<i32>>,
+    clocks: u64,
+    modeled_s: f64,
+    counters: Counters,
+}
+
+/// Execute one [`NodeTask`] on `backend` and send the outcome back to
+/// the dispatching driver. Panics are caught per node and surface as a
+/// [`RunError`] on the driver side, so a poisoned node cannot kill a
+/// pool worker; `worker` tags a failure with the worker (shard) that
+/// actually ran the node (`usize::MAX` when the driver ran it inline —
+/// the serving layer substitutes the driver's own index).
+pub fn run_node_task<B: Accelerator + ?Sized>(worker: usize, backend: &mut B, task: NodeTask) {
+    let NodeTask { node, graph, input, keep_acc, resp, .. } = task;
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        let NodeOp::Accel(stage) = &graph.nodes()[node].op else {
+            panic!("node task {node} is not an accelerated node");
+        };
+        let out = eval_accel(backend, stage, input);
+        NodeDone {
+            y_q: Arc::new(out.y_q),
+            y_acc: keep_acc.then(|| out.y_acc.data),
+            clocks: out.clocks,
+            modeled_s: backend.modeled_s(stage.layer.kind, out.clocks),
+            counters: out.counters,
+        }
+    }))
+    .map_err(|payload| RunError { worker, reason: panic_reason(payload) });
+    // The driver may have bailed on an earlier failure; nothing to do.
+    let _ = resp.send(NodeOutcome { node, result });
+}
+
+/// How a scheduler run hands node tasks to pool siblings. The direct
+/// entry point goes through the [`PoolHandle`] of a
+/// [`ShardedPool<NodeTask>`]; the serving layer wraps tasks in its own
+/// job enum behind its own handle.
+pub trait NodeDispatcher {
+    /// Enqueue this level's sibling tasks.
+    fn dispatch(&self, tasks: Vec<NodeTask>);
+    /// Take back one still-queued task of request `req` so the waiting
+    /// driver can run it inline (`None`: everything is running or
+    /// done).
+    fn reclaim(&self, req: u64) -> Option<NodeTask>;
+}
+
+impl NodeDispatcher for PoolHandle<NodeTask> {
+    fn dispatch(&self, tasks: Vec<NodeTask>) {
+        self.submit_batch(tasks);
+    }
+    fn reclaim(&self, req: u64) -> Option<NodeTask> {
+        self.take_matching(|t| t.request == req)
+    }
+}
+
+/// Spawn a pool of `n` backends whose workers execute graph node tasks
+/// — the pool [`run_graph_on_pool`] schedules onto. `make_backend(i)`
+/// runs on worker `i`'s own thread.
+pub fn spawn_node_pool<B, F>(n: usize, make_backend: F) -> ShardedPool<NodeTask>
+where
+    B: Accelerator + 'static,
+    F: Fn(usize) -> B + Send + Sync + 'static,
+{
+    ShardedPool::spawn(n, make_backend, |i, backend: &mut B, task| {
+        run_node_task(i, backend, task)
+    })
+}
+
+/// Run one input through `graph` with its independent branches fanned
+/// out across `pool`'s workers. Bit-identical to [`super::run_graph`]
+/// (same logits, output, per-node clocks); `modeled_ms` reports the
+/// schedule's critical path instead of the serial sum. Host ops run on
+/// the calling thread between levels.
+pub fn run_graph_on_pool(
+    pool: &ShardedPool<NodeTask>,
+    graph: &Arc<ModelGraph>,
+    x: &Tensor4<i8>,
+) -> Result<GraphReport, RunError> {
+    run_graph_scheduled(&pool.handle(), None, graph, x)
+}
+
+/// The scheduler core shared by [`run_graph_on_pool`] and the serving
+/// layer: partition the graph into dependency levels, dispatch each
+/// level's accelerated nodes through `dispatcher`, gather
+/// deterministically, and run host ops inline between levels.
+///
+/// `helper` is the driver's own backend when the driver is itself a
+/// pool worker: singleton levels run on it directly (nothing to fan
+/// out), and while waiting the driver reclaims its own queued tasks to
+/// run inline — the no-deadlock guarantee when every worker is driving
+/// a request. Helper-less drivers (an external thread) must schedule
+/// onto a pool whose workers stay alive for the duration of the run.
+pub fn run_graph_scheduled<D: NodeDispatcher + ?Sized>(
+    dispatcher: &D,
+    mut helper: Option<&mut dyn Accelerator>,
+    graph: &Arc<ModelGraph>,
+    x: &Tensor4<i8>,
+) -> Result<GraphReport, RunError> {
+    if x.shape != graph.input_shape() {
+        return Err(input_shape_error(graph, x.shape));
+    }
+    let request = NEXT_REQUEST.fetch_add(1, Ordering::Relaxed);
+    let nodes = graph.nodes();
+    let n = nodes.len();
+    let mut acts: Vec<Option<Arc<Tensor4<i8>>>> = vec![None; n];
+    let mut uses: Vec<usize> = graph.consumers().to_vec();
+    let mut records: Vec<Option<NodeRecord>> = Vec::with_capacity(n);
+    records.resize_with(n, || None);
+    let mut counters = Counters::default();
+    let mut logits: Option<Vec<i32>> = None;
+    let mut final_out: Option<Arc<Tensor4<i8>>> = None;
+    let (tx, rx) = mpsc::channel::<NodeOutcome>();
+
+    for level in graph.levels() {
+        // Fan this level's accelerated nodes out to pool siblings.
+        let mut tasks: Vec<NodeTask> = Vec::new();
+        for &i in level {
+            if !matches!(nodes[i].op, NodeOp::Accel(_)) {
+                continue;
+            }
+            let NodeId(j) = nodes[i].inputs[0];
+            tasks.push(NodeTask {
+                request,
+                node: i,
+                graph: Arc::clone(graph),
+                input: take_input(&mut acts, &mut uses, j),
+                keep_acc: graph.logits_node() == Some(i),
+                resp: tx.clone(),
+            });
+        }
+        let mut outstanding = tasks.len();
+        match helper.as_mut() {
+            // A singleton level has no parallelism to mine: skip the
+            // queue round-trip and run it on the driver's backend.
+            Some(backend) if outstanding == 1 => {
+                run_node_task(usize::MAX, &mut **backend, tasks.pop().expect("one task"));
+            }
+            maybe_backend => {
+                if outstanding > 0 {
+                    dispatcher.dispatch(tasks);
+                    // Help while waiting: run any of our own still-queued
+                    // tasks inline. Siblings may be stealing them
+                    // concurrently — whoever wins the queue lock runs the
+                    // task; results all arrive on the channel either way.
+                    if let Some(backend) = maybe_backend {
+                        while let Some(task) = dispatcher.reclaim(request) {
+                            run_node_task(usize::MAX, &mut **backend, task);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Gather this level (order-independent: results slot by node
+        // index, so the merge is deterministic regardless of which
+        // sibling finished first).
+        let mut failure: Option<RunError> = None;
+        while outstanding > 0 {
+            // Infallible: the driver holds `tx` for the whole run, so
+            // the channel can never disconnect; every dispatched task is
+            // either queued (reclaimed above), running on a live worker
+            // (run_node_task catches panics and always sends), or done.
+            let outcome = rx
+                .recv()
+                .expect("node-task channel cannot disconnect: the driver holds a sender");
+            outstanding -= 1;
+            let i = outcome.node;
+            match outcome.result {
+                Ok(done) => {
+                    records[i] = Some(NodeRecord {
+                        name: match &nodes[i].op {
+                            NodeOp::Accel(stage) => stage.layer.name.clone(),
+                            _ => unreachable!("only accel nodes are dispatched"),
+                        },
+                        clocks: done.clocks,
+                        modeled_s: done.modeled_s,
+                    });
+                    counters.merge(&done.counters);
+                    if done.y_acc.is_some() {
+                        logits = done.y_acc;
+                    }
+                    if uses[i] > 0 {
+                        acts[i] = Some(done.y_q);
+                    }
+                }
+                Err(err) => {
+                    if failure.is_none() {
+                        failure = Some(err);
+                    }
+                }
+            }
+        }
+        if let Some(err) = failure {
+            return Err(err);
+        }
+
+        // Host ops (and Input/Output) of this level run on the
+        // dispatching thread — same-level nodes are independent, so
+        // running them after the level's accel nodes is safe.
+        for &i in level {
+            if matches!(nodes[i].op, NodeOp::Accel(_)) {
+                continue;
+            }
+            let ins: Vec<Arc<Tensor4<i8>>> = nodes[i]
+                .inputs
+                .iter()
+                .map(|&NodeId(j)| take_input(&mut acts, &mut uses, j))
+                .collect();
+            let out = eval_host(&nodes[i].op, ins, x);
+            if i == graph.output_index() {
+                final_out = Some(Arc::clone(&out));
+            }
+            if uses[i] > 0 {
+                acts[i] = Some(out);
+            }
+        }
+    }
+
+    drop(acts);
+    let output = into_owned(final_out.expect("validated graph has an output node"));
+    Ok(assemble_report(graph, records, logits, output, counters, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::backend::Functional;
+    use crate::layers::Layer;
+    use crate::model::{run_graph, GraphBuilder};
+    use crate::quant::QParams;
+    use crate::sim::Engine;
+
+    /// input → {conv ×2 in parallel} → residual_add → relu: the
+    /// smallest graph with a level the scheduler can fan out.
+    fn two_branch_graph() -> ModelGraph {
+        let mut b = GraphBuilder::new("two_branch");
+        let x = b.input([1, 4, 4, 2]);
+        let mk = |name: &str, seed: u64| {
+            (Layer::conv(name, 1, 4, 4, 3, 3, 1, 1, 2, 2), Tensor4::random([3, 3, 2, 2], seed))
+        };
+        let (la, wa) = mk("branch_a", 11);
+        let (lb, wb) = mk("branch_b", 22);
+        let q = QParams::from_scale(1.0 / 16.0, 0, false);
+        let a = b.accel(x, la, wa, q);
+        let bb = b.accel(x, lb, wb, q);
+        let sum = b.residual_add(a, bb);
+        let act = b.requant(sum, QParams { relu: true, ..QParams::identity() });
+        b.output(act);
+        b.build().expect("well-formed")
+    }
+
+    #[test]
+    fn levels_partition_the_topo_order() {
+        let g = two_branch_graph();
+        let levels = g.levels();
+        // input | {a, b} | add | requant | output.
+        assert_eq!(levels.len(), 5);
+        assert_eq!(levels[0], vec![0]);
+        assert_eq!(levels[1], vec![1, 2]);
+        let flat: Vec<usize> = levels.iter().flatten().copied().collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..g.nodes().len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pooled_two_branch_graph_matches_serial_bit_exactly() {
+        let graph = Arc::new(two_branch_graph());
+        let x = Tensor4::random([1, 4, 4, 2], 7);
+        let serial =
+            run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).unwrap();
+        for workers in [1usize, 2, 4] {
+            let pool = spawn_node_pool(workers, |_| Functional::new(KrakenConfig::new(2, 8)));
+            let pooled = run_graph_on_pool(&pool, &graph, &x).unwrap();
+            assert_eq!(pooled.output.data, serial.output.data, "{workers} workers");
+            assert_eq!(pooled.logits, serial.logits, "{workers} workers");
+            assert_eq!(pooled.node_clocks, serial.node_clocks, "{workers} workers");
+            assert_eq!(pooled.total_clocks, serial.total_clocks, "{workers} workers");
+            assert_eq!(
+                pooled.critical_path_clocks, serial.critical_path_clocks,
+                "{workers} workers"
+            );
+            assert_eq!(
+                pooled.counters.dram_total(),
+                serial.counters.dram_total(),
+                "{workers} workers"
+            );
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn pooled_engine_matches_pooled_functional() {
+        let graph = Arc::new(two_branch_graph());
+        let x = Tensor4::random([1, 4, 4, 2], 8);
+        let pe = spawn_node_pool(2, |_| Engine::new(KrakenConfig::new(2, 8), 8));
+        let pf = spawn_node_pool(2, |_| Functional::new(KrakenConfig::new(2, 8)));
+        let a = run_graph_on_pool(&pe, &graph, &x).unwrap();
+        let b = run_graph_on_pool(&pf, &graph, &x).unwrap();
+        assert_eq!(a.output.data, b.output.data);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.node_clocks, b.node_clocks);
+        pe.shutdown();
+        pf.shutdown();
+    }
+
+    #[test]
+    fn critical_path_beats_serial_sum_on_branchy_graphs() {
+        let graph = Arc::new(two_branch_graph());
+        let x = Tensor4::random([1, 4, 4, 2], 9);
+        let pool = spawn_node_pool(2, |_| Functional::new(KrakenConfig::new(2, 8)));
+        let report = run_graph_on_pool(&pool, &graph, &x).unwrap();
+        // Two equal-cost parallel branches: the critical path is one
+        // branch, the serial sum is both.
+        assert!(report.critical_path_clocks < report.total_clocks);
+        assert_eq!(report.critical_path_clocks * 2, report.total_clocks);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_shape_is_a_typed_error_on_the_pool_too() {
+        let graph = Arc::new(two_branch_graph());
+        let pool = spawn_node_pool(2, |_| Functional::new(KrakenConfig::new(2, 8)));
+        let err = run_graph_on_pool(&pool, &graph, &Tensor4::random([1, 3, 3, 2], 1))
+            .expect_err("shape mismatch must be an error");
+        assert!(err.reason.contains("expects input shape"), "{}", err.reason);
+        pool.shutdown();
+    }
+}

@@ -9,7 +9,7 @@
 //! artifact still verifies bit-exactly against the graph path.
 
 use crate::layers::Layer;
-use crate::model::{AccelStage, GraphError, ModelGraph, NodeOp};
+use crate::model::{AccelStage, GraphBuilder, GraphError, ModelGraph, NodeOp};
 use crate::quant::QParams;
 use crate::tensor::Tensor4;
 
@@ -75,6 +75,49 @@ pub fn tiny_mlp_graph() -> ModelGraph {
     ModelGraph::linear("tiny_mlp", [1, 1, 1, 256], ops).expect("TinyMLP graph is well-formed")
 }
 
+/// Weight-seed base for [`inception_block_graph`]; accelerated node
+/// `j` uses `INCEPTION_W_SEED + 10·j`.
+pub const INCEPTION_W_SEED: u64 = 30_000;
+
+/// An inception-style branchy block built from the attention matmul
+/// shapes of [`super::transformer_attention_products`]: `heads`
+/// independent three-matmul chains (input projection → Q·Kᵀ-shaped →
+/// A·V-shaped product) fan out from one `[1, seq, 1, dmodel]` input and
+/// join in a channel [`NodeOp::Concat`] — the first *executable* user
+/// of `Concat` — before a final output projection back to `dmodel`.
+///
+/// With `heads ≥ 2` every chain level holds `heads` mutually
+/// independent accelerated nodes, exactly the shape the level/branch
+/// scheduler ([`crate::model::run_graph_on_pool`]) mines for pool
+/// parallelism; only the output projection is serial.
+pub fn inception_block_graph(seq: usize, dmodel: usize, dk: usize, heads: usize) -> ModelGraph {
+    assert!(heads >= 2, "an inception block needs at least two branches");
+    // Keep magnitudes tame between chained int8 matmuls.
+    let q = QParams::from_scale(1.0 / 64.0, 0, false);
+    let mut b = GraphBuilder::new(format!(
+        "inception_attn(seq={seq}, d={dmodel}, dk={dk}, h={heads})"
+    ));
+    let mut seed = INCEPTION_W_SEED;
+    let mut accel = |b: &mut GraphBuilder, from, layer: Layer| {
+        let w = seeded_weights(&layer, seed);
+        seed += 10;
+        b.accel(from, layer, w, q)
+    };
+
+    let x = b.input([1, seq, 1, dmodel]);
+    let mut head_outs = Vec::with_capacity(heads);
+    for h in 0..heads {
+        let p = accel(&mut b, x, Layer::matmul(format!("h{h}_proj"), seq, dmodel, dk));
+        let qk = accel(&mut b, p, Layer::matmul(format!("h{h}_qkT"), seq, dk, seq));
+        let av = accel(&mut b, qk, Layer::matmul(format!("h{h}_av"), seq, seq, dk));
+        head_outs.push(av);
+    }
+    let cat = b.concat(&head_outs);
+    let o = accel(&mut b, cat, Layer::matmul("proj_o", seq, heads * dk, dmodel));
+    b.output(o);
+    b.build().expect("inception block graph is well-formed")
+}
+
 /// Lower a plain [`super::Network`] to a linear graph with seeded
 /// weights (layer `j` seeded `seed + 10·j`), inserting a `Flatten`
 /// at the first spatial→dense transition. Networks whose consecutive
@@ -116,13 +159,13 @@ mod tests {
         assert_eq!(graph.host_nodes(), 2); // maxpool + flatten
         let x = Tensor4::random([1, 28, 28, 3], X_SEED);
         let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
-        let report = run_graph(&mut engine, &graph, &x);
+        let report = run_graph(&mut engine, &graph, &x).expect("well-formed input");
         assert_eq!(report.logits.len(), 10);
         assert_eq!(report.node_clocks.len(), 8);
         assert!(report.total_clocks > 0);
         assert!(report.modeled_ms > 0.0);
         // Deterministic.
-        let report2 = run_graph(&mut engine, &graph, &x);
+        let report2 = run_graph(&mut engine, &graph, &x).expect("well-formed input");
         assert_eq!(report.logits, report2.logits);
     }
 
@@ -131,7 +174,8 @@ mod tests {
         let cfg = KrakenConfig::new(7, 96);
         let graph = tiny_cnn_graph();
         let x = Tensor4::random([1, 28, 28, 3], X_SEED);
-        let report = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
+        let report =
+            run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x).expect("well-formed input");
         for (stage, (name, clocks)) in graph.accel_stages().zip(&report.node_clocks) {
             let p = KrakenLayerParams::derive(&cfg, &stage.layer);
             assert_eq!(*clocks, p.q, "{name}");
@@ -145,8 +189,8 @@ mod tests {
         let cfg = KrakenConfig::new(7, 96);
         let graph = tiny_cnn_graph();
         let x = Tensor4::random([1, 28, 28, 3], X_SEED);
-        let a = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
-        let b = run_graph(&mut Functional::new(cfg), &graph, &x);
+        let a = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x).expect("engine run");
+        let b = run_graph(&mut Functional::new(cfg), &graph, &x).expect("functional run");
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.node_clocks, b.node_clocks);
         assert_eq!(a.total_clocks, b.total_clocks);
@@ -158,8 +202,42 @@ mod tests {
         let graph = tiny_mlp_graph();
         assert_eq!(graph.accel_stages().count(), 2);
         let x = Tensor4::random([1, 1, 1, 256], X_SEED);
-        let report = run_graph(&mut Functional::new(KrakenConfig::new(7, 96)), &graph, &x);
+        let report = run_graph(&mut Functional::new(KrakenConfig::new(7, 96)), &graph, &x)
+            .expect("well-formed input");
         assert_eq!(report.logits.len(), 10);
+    }
+
+    #[test]
+    fn inception_block_graph_is_branchy_and_runs() {
+        let g = inception_block_graph(16, 32, 16, 4);
+        // 4 heads × 3 matmuls + the output projection.
+        assert_eq!(g.accel_stages().count(), 13);
+        assert_eq!(g.host_nodes(), 1, "one concat join");
+        assert!(g.nodes().iter().any(|n| matches!(n.op, NodeOp::Concat)));
+        assert_eq!(g.input_shape(), [1, 16, 1, 32]);
+        assert_eq!(g.output_shape(), [1, 16, 1, 32]);
+        // Each chain level fans 4 independent accel nodes to siblings.
+        let widest = g
+            .levels()
+            .iter()
+            .map(|level| {
+                level
+                    .iter()
+                    .filter(|&&i| matches!(g.nodes()[i].op, NodeOp::Accel(_)))
+                    .count()
+            })
+            .max()
+            .unwrap();
+        assert_eq!(widest, 4);
+
+        let x = Tensor4::random([1, 16, 1, 32], X_SEED);
+        let report =
+            run_graph(&mut Functional::new(KrakenConfig::new(7, 96)), &g, &x).expect("runs");
+        assert_eq!(report.output.shape, [1, 16, 1, 32]);
+        assert_eq!(report.node_clocks.len(), 13);
+        // Parallel heads: the critical path (one 3-matmul chain + the
+        // output projection) is well below the 13-node serial sum.
+        assert!(report.critical_path_clocks < report.total_clocks);
     }
 
     #[test]

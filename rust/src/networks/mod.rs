@@ -16,8 +16,8 @@ mod vgg16;
 
 pub use alexnet::{alexnet, alexnet_graph};
 pub use graphs::{
-    network_to_linear_graph, seeded_accel, seeded_weights, tiny_cnn_graph, tiny_mlp_graph,
-    TINY_SCALE, W_SEED_BASE, X_SEED,
+    inception_block_graph, network_to_linear_graph, seeded_accel, seeded_weights, tiny_cnn_graph,
+    tiny_mlp_graph, INCEPTION_W_SEED, TINY_SCALE, W_SEED_BASE, X_SEED,
 };
 pub use network::{Network, NetworkStats};
 pub use resnet50::{resnet50, resnet50_graph, resnet50_graph_at};

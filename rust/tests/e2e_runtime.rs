@@ -99,7 +99,8 @@ fn tiny_cnn_logits_match_graph_executor() {
     let runner = runner();
     let (x, _weights, golden_logits) = runner.run_tiny_cnn().expect("tiny_cnn artifact");
     let mut engine = Engine::new(KrakenConfig::new(7, 96), 8);
-    let report = run_graph(&mut engine, &tiny_cnn_graph(), &x);
+    let report =
+        run_graph(&mut engine, &tiny_cnn_graph(), &x).expect("artifact input shape matches");
     assert_eq!(
         report.logits, golden_logits,
         "full-network logits: graph executor+simulator vs JAX/Pallas artifact"

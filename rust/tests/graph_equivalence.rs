@@ -11,14 +11,16 @@
 //!    through the service (reduced 32×32 input; full layer/channel/
 //!    skip structure).
 
+use std::sync::Arc;
+
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData};
 use kraken::coordinator::{BackendKind, ServiceBuilder};
 use kraken::layers::Layer;
-use kraken::model::{run_graph, GraphBuilder, NodeOp};
+use kraken::model::{run_graph, run_graph_on_pool, spawn_node_pool, GraphBuilder, NodeOp};
 use kraken::networks::{
-    resnet50_graph_at, tiny_cnn, tiny_cnn_graph, tiny_mlp, tiny_mlp_graph, TINY_SCALE,
-    W_SEED_BASE, X_SEED,
+    inception_block_graph, resnet50_graph_at, tiny_cnn, tiny_cnn_graph, tiny_mlp,
+    tiny_mlp_graph, TINY_SCALE, W_SEED_BASE, X_SEED,
 };
 use kraken::quant::QParams;
 use kraken::sim::Engine;
@@ -156,7 +158,8 @@ fn tiny_cnn_graph_bit_identical_to_stage_path_on_engine() {
         let x = Tensor4::random([1, 28, 28, 3], seed);
         let (logits, clocks, modeled_ms) =
             run_legacy_stages(&mut Engine::new(cfg.clone(), 8), &stages, &x);
-        let report = run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x);
+        let report =
+            run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x).expect("well-formed input");
         assert_eq!(report.logits, logits, "seed {seed}");
         let graph_clocks: Vec<u64> = report.node_clocks.iter().map(|(_, c)| *c).collect();
         assert_eq!(graph_clocks, clocks, "seed {seed}");
@@ -172,7 +175,7 @@ fn tiny_cnn_graph_bit_identical_to_stage_path_on_functional() {
     let x = Tensor4::random([1, 28, 28, 3], X_SEED);
     let (logits, clocks, _) =
         run_legacy_stages(&mut Functional::new(cfg.clone()), &stages, &x);
-    let report = run_graph(&mut Functional::new(cfg), &graph, &x);
+    let report = run_graph(&mut Functional::new(cfg), &graph, &x).expect("well-formed input");
     assert_eq!(report.logits, logits);
     assert_eq!(report.node_clocks.iter().map(|(_, c)| *c).collect::<Vec<_>>(), clocks);
 }
@@ -187,12 +190,12 @@ fn tiny_mlp_graph_bit_identical_to_stage_path() {
         (
             "engine",
             run_legacy_stages(&mut Engine::new(cfg.clone(), 8), &stages, &x),
-            run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x),
+            run_graph(&mut Engine::new(cfg.clone(), 8), &graph, &x).expect("engine run"),
         ),
         (
             "functional",
             run_legacy_stages(&mut Functional::new(cfg.clone()), &stages, &x),
-            run_graph(&mut Functional::new(cfg.clone()), &graph, &x),
+            run_graph(&mut Functional::new(cfg.clone()), &graph, &x).expect("functional run"),
         ),
     ] {
         assert_eq!(report.logits, logits, "{name}");
@@ -232,7 +235,8 @@ fn residual_block_matches_hand_computed_golden() {
             run_graph(&mut Engine::new(KrakenConfig::new(2, 8), 8), &graph, &x)
         } else {
             run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x)
-        };
+        }
+        .expect("well-formed input");
         assert_eq!(report.logits, vec![4, 3, 8, -9, -12, 15, 100, 120]);
         assert_eq!(report.output.data, vec![5, 5, 5, 0, 0, 9, 127, 127]);
         assert_eq!(report.output.shape, [1, 2, 2, 2]);
@@ -248,7 +252,10 @@ fn graph_served_through_service_matches_direct_execution() {
         (0..3).map(|i| Tensor4::random([1, 28, 28, 3], 6000 + i)).collect();
     let mut direct = Functional::new(KrakenConfig::paper());
     let want: Vec<Vec<i32>> =
-        inputs.iter().map(|x| run_graph(&mut direct, &graph, x).logits).collect();
+        inputs
+        .iter()
+        .map(|x| run_graph(&mut direct, &graph, x).expect("direct run").logits)
+        .collect();
 
     for partition in [1usize, 2] {
         let service = ServiceBuilder::new()
@@ -285,7 +292,8 @@ fn resnet50_residual_topology_serves_end_to_end() {
     );
 
     let x = Tensor4::random([1, 32, 32, 3], 77);
-    let direct = run_graph(&mut Functional::new(KrakenConfig::paper()), &graph, &x);
+    let direct = run_graph(&mut Functional::new(KrakenConfig::paper()), &graph, &x)
+        .expect("well-formed input");
     assert_eq!(direct.logits.len(), 1000);
     assert_eq!(direct.node_clocks.len(), 54);
     assert!(direct.total_clocks > 0);
@@ -301,4 +309,153 @@ fn resnet50_residual_topology_serves_end_to_end() {
     assert_eq!(served.clocks, direct.total_clocks);
     let stats = service.shutdown();
     assert_eq!(stats.per_model["resnet50"], 1);
+}
+
+// ---- 5. branch scheduling: pooled ≡ serial, under concurrency --------
+
+/// Direct scheduler entry: pooled execution of the branchy graphs is
+/// bit-identical to serial `run_graph` — logits, output tensor,
+/// per-node clocks, totals and DRAM words — on both Kraken backends.
+#[test]
+fn run_graph_on_pool_bit_identical_to_serial_on_branchy_graphs() {
+    let graphs = [
+        Arc::new(inception_block_graph(16, 32, 16, 4)),
+        Arc::new(resnet50_graph_at(32)),
+    ];
+    for graph in &graphs {
+        let x = Tensor4::random(graph.input_shape(), 55);
+        let serial =
+            run_graph(&mut Functional::new(KrakenConfig::paper()), graph, &x).expect("serial");
+        for workers in [2usize, 4] {
+            let pool = spawn_node_pool(workers, |_| Functional::new(KrakenConfig::paper()));
+            let pooled = run_graph_on_pool(&pool, graph, &x).expect("pooled");
+            assert_eq!(pooled.logits, serial.logits, "{} w{workers}", graph.name);
+            assert_eq!(pooled.output.data, serial.output.data, "{} w{workers}", graph.name);
+            assert_eq!(pooled.node_clocks, serial.node_clocks, "{} w{workers}", graph.name);
+            assert_eq!(pooled.total_clocks, serial.total_clocks, "{} w{workers}", graph.name);
+            assert_eq!(
+                pooled.critical_path_clocks, serial.critical_path_clocks,
+                "{} w{workers}",
+                graph.name
+            );
+            assert_eq!(
+                pooled.counters.dram_total(),
+                serial.counters.dram_total(),
+                "{} w{workers}",
+                graph.name
+            );
+            // Branchy graphs: the pooled report's latency is the
+            // critical path, strictly below the serial sum.
+            assert!(pooled.critical_path_clocks < pooled.total_clocks, "{}", graph.name);
+            pool.shutdown();
+        }
+    }
+}
+
+/// Concurrency stress: many simultaneous submissions of branchy graphs
+/// with `graph_parallelism(true)` at pool width ∈ {2, 4} stay
+/// bit-identical to the serial executor on every request — drivers
+/// fanning sibling work into the same pool must neither deadlock nor
+/// mix requests up.
+#[test]
+fn concurrent_branchy_submissions_stay_bit_identical() {
+    let graph = inception_block_graph(16, 32, 16, 4);
+    let mut direct = Functional::new(KrakenConfig::paper());
+    let inputs: Vec<Tensor4<i8>> =
+        (0..16).map(|i| Tensor4::random([1, 16, 1, 32], 8000 + i)).collect();
+    let want: Vec<Vec<i32>> = inputs
+        .iter()
+        .map(|x| run_graph(&mut direct, &graph, x).expect("serial").logits)
+        .collect();
+
+    for workers in [2usize, 4] {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .backend(BackendKind::Functional)
+            .workers(workers)
+            .graph_parallelism(true)
+            .register_graph("incep", inception_block_graph(16, 32, 16, 4))
+            .build();
+        // Everything at once: every worker becomes a driver with
+        // sibling node jobs interleaved across all shards.
+        let got: Vec<Vec<i32>> = service
+            .submit_batch("incep", inputs.clone())
+            .into_iter()
+            .map(|t| t.wait().expect("served").logits)
+            .collect();
+        assert_eq!(got, want, "width {workers}");
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, inputs.len() as u64);
+        assert_eq!(stats.failed, 0);
+    }
+}
+
+/// ResNet-50's two-branch (projection) blocks through the parallel
+/// service path: still bit-identical to the serial run.
+#[test]
+fn resnet50_graph_parallelism_matches_serial() {
+    let graph = resnet50_graph_at(32);
+    let inputs: Vec<Tensor4<i8>> =
+        (0..2).map(|i| Tensor4::random([1, 32, 32, 3], 91 + i)).collect();
+    let mut direct = Functional::new(KrakenConfig::paper());
+    let want: Vec<Vec<i32>> = inputs
+        .iter()
+        .map(|x| run_graph(&mut direct, &graph, x).expect("serial").logits)
+        .collect();
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::paper())
+        .backend(BackendKind::Functional)
+        .workers(2)
+        .graph_parallelism(true)
+        .register_graph("resnet50", resnet50_graph_at(32))
+        .build();
+    let got: Vec<Vec<i32>> = service
+        .submit_batch("resnet50", inputs.clone())
+        .into_iter()
+        .map(|t| t.wait().expect("served").logits)
+        .collect();
+    assert_eq!(got, want);
+    service.shutdown();
+}
+
+// ---- 6. logits determinism on multi-head graphs -----------------------
+
+/// Two accelerated heads joined by a concat: the logits must come from
+/// the pinned output-path ancestor (the topologically-last accel
+/// ancestor of `Output`), identically in the serial executor and under
+/// the concurrent scheduler — never from whichever head happened to
+/// finish last.
+#[test]
+fn two_head_graph_logits_are_pinned_and_deterministic() {
+    let mk = || {
+        let mut b = GraphBuilder::new("two_head");
+        let x = b.input([1, 2, 2, 1]);
+        let double = Layer::conv("head_double", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let triple = Layer::conv("head_triple", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let h1 = b.accel(x, double, Tensor4::from_vec([1, 1, 1, 1], vec![2i8]), QParams::identity());
+        let h2 = b.accel(x, triple, Tensor4::from_vec([1, 1, 1, 1], vec![3i8]), QParams::identity());
+        let cat = b.concat(&[h1, h2]);
+        b.output(cat);
+        b.build().expect("well-formed")
+    };
+    let graph = mk();
+    // Both heads are output ancestors; the pin is the later one in
+    // topo order — the tripling head (node 2).
+    assert_eq!(graph.logits_node(), Some(2));
+    let x = Tensor4::from_vec([1, 2, 2, 1], vec![1i8, 2, 3, 4]);
+    let want_logits = vec![3, 6, 9, 12];
+    let serial =
+        run_graph(&mut Functional::new(KrakenConfig::new(2, 8)), &graph, &x).expect("serial");
+    assert_eq!(serial.logits, want_logits);
+
+    // Under the concurrent scheduler the heads race; repeated runs must
+    // still always report the pinned head.
+    let graph = Arc::new(graph);
+    let pool = spawn_node_pool(4, |_| Functional::new(KrakenConfig::new(2, 8)));
+    for _ in 0..20 {
+        let pooled = run_graph_on_pool(&pool, &graph, &x).expect("pooled");
+        assert_eq!(pooled.logits, want_logits);
+        assert_eq!(pooled.output.data, vec![2, 3, 4, 6, 6, 9, 8, 12]);
+    }
+    pool.shutdown();
 }

@@ -58,7 +58,7 @@ fn multi_model_registry_routes_by_name() {
     let mut backend = Functional::new(KrakenConfig::new(7, 96));
     assert_eq!(
         cnn.wait().expect("tiny_cnn served").logits,
-        run_graph(&mut backend, &tiny_cnn_graph(), &image).logits
+        run_graph(&mut backend, &tiny_cnn_graph(), &image).expect("direct run").logits
     );
 
     let stats = service.shutdown();
@@ -84,7 +84,7 @@ fn tickets_bit_exact_vs_direct_graph_run() {
     let tickets = service.submit_batch("tiny_cnn", inputs.clone());
     for (x, ticket) in inputs.iter().zip(tickets) {
         let served = ticket.wait().expect("served");
-        let direct = run_graph(&mut engine, &graph, x);
+        let direct = run_graph(&mut engine, &graph, x).expect("direct run");
         assert_eq!(served.logits, direct.logits);
         assert_eq!(served.clocks, direct.total_clocks);
     }
