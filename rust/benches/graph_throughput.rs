@@ -42,7 +42,7 @@ fn main() {
     let graph = resnet50_graph_at(res);
     let accel_nodes = graph.accel_stages().count();
     let residual_adds =
-        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd)).count();
+        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd { .. })).count();
     let x = Tensor4::random([1, res, res, 3], 7);
     let mut backend = Functional::new(KrakenConfig::paper());
     let mut total_clocks = 0u64;

@@ -1,86 +1,108 @@
-//! Simulator hot-path benchmarks — the §Perf targets of DESIGN.md:
-//! the clock-accurate engine must simulate ≥ 50 M PE-MACs/s, and the
-//! analytical model must evaluate a full ResNet-50 in well under 10 ms
-//! so design-space sweeps stay interactive.
+//! Compute hot-path benchmark: per-layer speedup of the blocked int8
+//! GEMM fast path ([`kraken::tensor::gemm`]) over the direct-form
+//! reference loop nests it replaced as the functional backend's compute
+//! engine — measured on the real serving shapes (AlexNet conv1–5, the
+//! ResNet-50 stem, a ResNet 1×1 projection, one batched FC).
+//!
+//! Every timed pair is first checked bit-identical (the GEMM is the
+//! same i32 accumulation, reordered), then timed with the weights
+//! packed once outside the loop — exactly the steady-state the backend
+//! runs in, where packs are cached per layer.
+//!
+//! Emits `BENCH_gemm_speedup.json`; CI gates the geometric-mean conv
+//! speedup at ≥ 3× (the FC row is reported but not gated — the naive
+//! matmul is already cache-friendly).
 //!
 //! Run: `cargo bench --bench sim_hotpath`
 
 mod harness;
 
-use kraken::arch::KrakenConfig;
 use kraken::layers::Layer;
-use kraken::model::run_graph;
-use kraken::networks::{paper_networks, resnet50, tiny_cnn_graph};
-use kraken::perf::{sweep_design_space, PerfModel};
-use kraken::quant::QParams;
-use kraken::sim::{Engine, LayerData};
-use kraken::tensor::Tensor4;
+use kraken::tensor::gemm::{pack_weights, run_layer_gemm};
+use kraken::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, matmul_i8, Tensor4};
+
+/// Iterations for the slow reference side (each shape also gets one
+/// warmup run) and the fast GEMM side.
+const REF_ITERS: usize = 2;
+const GEMM_ITERS: usize = 10;
+
+fn bench_layer(layer: &Layer) -> f64 {
+    let x = if layer.is_dense() {
+        Tensor4::random([1, layer.h, 1, layer.ci], 7)
+    } else {
+        Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], 7)
+    };
+    let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 8);
+    let packed = pack_weights(&k, if layer.is_dense() { 1 } else { layer.groups });
+
+    // Bit-exactness first: a speedup over wrong answers is worthless.
+    let want = if layer.is_dense() {
+        Tensor4::from_vec(
+            [1, layer.h, 1, layer.co],
+            matmul_i8(&x.data, &k.data, layer.h, layer.ci, layer.co),
+        )
+    } else if layer.groups == 1 {
+        conv2d_same_i8(&x, &k, layer.sh, layer.sw)
+    } else {
+        conv2d_same_grouped_i8(&x, &k, layer.sh, layer.sw, layer.groups)
+    };
+    assert_eq!(run_layer_gemm(layer, &x, &packed), want, "{} diverged", layer.name);
+
+    let (ref_med, _, _) = harness::time(REF_ITERS, || {
+        let y = if layer.is_dense() {
+            matmul_i8(&x.data, &k.data, layer.h, layer.ci, layer.co)
+        } else if layer.groups == 1 {
+            conv2d_same_i8(&x, &k, layer.sh, layer.sw).data
+        } else {
+            conv2d_same_grouped_i8(&x, &k, layer.sh, layer.sw, layer.groups).data
+        };
+        std::hint::black_box(y.len());
+    });
+    let (gemm_med, _, _) = harness::time(GEMM_ITERS, || {
+        std::hint::black_box(run_layer_gemm(layer, &x, &packed).data.len());
+    });
+    let speedup = ref_med / gemm_med;
+    let macs = layer.macs_with_zpad() as f64;
+    println!(
+        "bench gemm_{:<24} ref {:>9.2} ms  gemm {:>9.2} ms  {:>6.2}x  ({:>8.1} M MAC/s)",
+        layer.name,
+        ref_med * 1e3,
+        gemm_med * 1e3,
+        speedup,
+        macs / gemm_med / 1e6,
+    );
+    speedup
+}
 
 fn main() {
-    println!("== simulator & model hot paths ==\n");
+    println!("== GEMM fast path vs direct-form reference ==\n");
 
-    // Clock-accurate engine on each shape class (7×96 array).
-    let classes = [
-        Layer::conv("vgg3x3", 1, 28, 28, 3, 3, 1, 1, 16, 32),
-        Layer::conv("alex5x1", 1, 27, 27, 5, 5, 1, 1, 16, 32),
-        Layer::conv("res7x2", 1, 28, 28, 7, 7, 2, 2, 8, 16),
-        Layer::conv("pw1x1", 1, 14, 14, 1, 1, 1, 1, 32, 64),
+    // AlexNet conv1–5 (Table I shapes), the ResNet-50 stem, a ResNet
+    // 1×1/s2 projection, and one R-row batched FC.
+    let conv_shapes = [
+        Layer::conv("alex_conv1", 1, 227, 227, 11, 11, 4, 4, 3, 96),
+        Layer::conv_grouped("alex_conv2", 1, 27, 27, 5, 5, 1, 1, 48, 256, 2),
+        Layer::conv("alex_conv3", 1, 13, 13, 3, 3, 1, 1, 256, 384),
+        Layer::conv_grouped("alex_conv4", 1, 13, 13, 3, 3, 1, 1, 192, 384, 2),
+        Layer::conv_grouped("alex_conv5", 1, 13, 13, 3, 3, 1, 1, 192, 256, 2),
+        Layer::conv("res_stem7x7", 1, 224, 224, 7, 7, 2, 2, 3, 64),
+        Layer::conv("res_proj1x1", 1, 56, 56, 1, 1, 2, 2, 256, 512),
     ];
-    for layer in &classes {
-        let x = Tensor4::random([1, layer.h, layer.w, layer.ci], 1);
-        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], 2);
-        let mut engine = Engine::new(KrakenConfig::paper(), 8);
-        let macs = layer.macs_with_zpad() as f64;
-        harness::report_throughput(
-            &format!("engine_{}", layer.name),
-            5,
-            macs / 1e6,
-            "M MAC/s",
-            || {
-                let out = engine.run_layer(&LayerData {
-                    layer,
-                    x: &x,
-                    k: &k,
-                    qparams: QParams::identity(),
-                });
-                std::hint::black_box(out.clocks);
-            },
-        );
-    }
+    let fc = Layer::fully_connected("fc_2048x1000", 7, 2048, 1000);
 
-    // Full TinyCNN through the graph executor.
-    {
-        let x = Tensor4::random([1, 28, 28, 3], 42);
-        let mut engine = Engine::new(KrakenConfig::paper(), 8);
-        let graph = tiny_cnn_graph();
-        let macs: f64 =
-            graph.accel_stages().map(|s| s.layer.macs_with_zpad() as f64).sum();
-        harness::report_throughput("graph_tiny_cnn_e2e", 5, macs / 1e6, "M MAC/s", || {
-            std::hint::black_box(
-                run_graph(&mut engine, &graph, &x).expect("well-formed input").total_clocks,
-            );
-        });
+    let mut fields: Vec<(String, f64)> = Vec::new();
+    let mut log_sum = 0.0f64;
+    for layer in &conv_shapes {
+        let s = bench_layer(layer);
+        log_sum += s.ln();
+        fields.push((format!("{}_speedup", layer.name), s));
     }
+    let geomean = (log_sum / conv_shapes.len() as f64).exp();
+    let fc_speedup = bench_layer(&fc);
+    fields.push((format!("{}_speedup", fc.name), fc_speedup));
+    fields.push(("geomean_conv_speedup".to_string(), geomean));
 
-    // Analytical model over full networks.
-    {
-        let model = PerfModel::paper();
-        let res = resnet50();
-        harness::report("analytical_resnet50_all_metrics", 50, || {
-            std::hint::black_box(model.conv_metrics(&res).q_total);
-        });
-    }
-
-    // Design-space sweep (91 points × 71 conv layers).
-    {
-        let nets = paper_networks();
-        harness::report("sweep_13r_x_7c_over_3_cnns", 5, || {
-            let s = sweep_design_space(
-                &nets,
-                (4..=16).step_by(1),
-                [12usize, 15, 24, 48, 96, 120, 192].into_iter(),
-            );
-            std::hint::black_box(s.points.len());
-        });
-    }
+    println!("\ngeomean conv speedup: {geomean:.2}x (gate: ≥ 3x)");
+    let borrowed: Vec<(&str, f64)> = fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    harness::emit_json("gemm_speedup", &borrowed);
 }

@@ -6,30 +6,76 @@
 //! bit-exact against the direct-form reference *and* clock-exact
 //! against eq. (17) (`rust/tests/sim_vs_analytical.rs`), both halves
 //! can be replaced by their ground truths: outputs from
-//! [`crate::tensor`]'s reference loop nests, clocks from
-//! [`KrakenLayerParams::derive`], DRAM word counts from eq. (20) in
-//! [`crate::perf::PerfModel`] (physical convention, which is what the
-//! engine's counters measure). The result is a backend that returns the
-//! *same* `LayerOutput` as the engine — same tensors, same clocks, same
-//! DRAM words — at in-memory-GEMM speed.
+//! [`crate::tensor`], clocks from [`KrakenLayerParams::derive`], DRAM
+//! word counts from eq. (20) in [`crate::perf::PerfModel`] (physical
+//! convention, which is what the engine's counters measure). The result
+//! is a backend that returns the *same* `LayerOutput` as the engine —
+//! same tensors, same clocks, same DRAM words — at in-memory-GEMM
+//! speed.
+//!
+//! Since PR 6 the compute side really is a GEMM: conv/FC/matmul run
+//! through the blocked int8 fast path of [`crate::tensor::gemm`], with
+//! each layer's weights packed once and cached (keyed by the weight
+//! buffer's address, revalidated by content so re-sliced partition
+//! shards can never hit a stale pack). The direct-form reference
+//! remains the oracle: [`Functional::set_force_reference`] routes
+//! around the GEMM for debugging, and debug builds cross-check every
+//! small-shape GEMM output against [`reference_output`] at runtime.
 //!
 //! SRAM counters are the analytic reuse counts (`M_K̂` words written
 //! once, read `N·L·W` times), not the engine's per-port event counts;
 //! the equivalence suite therefore pins outputs, clocks and DRAM words
 //! but not SRAM events.
 
+use std::collections::HashMap;
+
 use crate::arch::KrakenConfig;
 use crate::layers::{KrakenLayerParams, LayerKind};
 use crate::metrics::Counters;
 use crate::perf::{FcMemConvention, PerfModel, Tech};
+use crate::tensor::gemm::{self, PackedWeights};
+use crate::tensor::Tensor4;
 
 use super::{reference_output, Accelerator, LayerData, LayerOutput};
+
+/// Entries kept in the pack cache before it is dropped wholesale.
+/// Partitioned serving re-slices weight tensors per call, so the cache
+/// must be bounded; steady-state whole-model serving stays far below
+/// this.
+const PACK_CACHE_CAP: usize = 256;
+
+/// Cross-check GEMM outputs against the direct-form oracle in debug
+/// builds for layers up to this many MACs (keeps `cargo test` honest
+/// without doubling the big-shape benches).
+#[cfg(debug_assertions)]
+const CROSS_CHECK_MAC_LIMIT: u64 = 2_000_000;
+
+/// One cached weight pack. The key (buffer address + length) is only a
+/// fast hint — allocators reuse addresses — so every hit revalidates
+/// against the retained weight copy before the pack is trusted.
+struct PackEntry {
+    groups: usize,
+    weights: Tensor4<i8>,
+    packed: PackedWeights,
+}
+
+impl PackEntry {
+    fn new(k: &Tensor4<i8>, groups: usize) -> Self {
+        Self { groups, weights: k.clone(), packed: gemm::pack_weights(k, groups) }
+    }
+
+    fn valid_for(&self, k: &Tensor4<i8>, groups: usize) -> bool {
+        self.groups == groups && self.weights.shape == k.shape && self.weights.data == k.data
+    }
+}
 
 /// Functional backend over one static configuration.
 pub struct Functional {
     pub cfg: KrakenConfig,
     model: PerfModel,
     counters: Counters,
+    packed: HashMap<(usize, usize), PackEntry>,
+    force_reference: bool,
 }
 
 impl Functional {
@@ -42,12 +88,63 @@ impl Functional {
             // the engine's DRAM counters do.
             fc_mem: FcMemConvention::Physical,
         };
-        Self { cfg, model, counters: Counters::default() }
+        Self {
+            cfg,
+            model,
+            counters: Counters::default(),
+            packed: HashMap::new(),
+            force_reference: false,
+        }
     }
 
     /// The paper's synthesized 7×96 instance.
     pub fn paper() -> Self {
         Self::new(KrakenConfig::paper())
+    }
+
+    /// Route compute through the direct-form reference loop nests
+    /// instead of the tiled GEMM — for debugging the fast path (both
+    /// produce bit-identical tensors).
+    pub fn set_force_reference(&mut self, on: bool) {
+        self.force_reference = on;
+    }
+
+    /// The packed form of `k`, from cache when the entry revalidates
+    /// (content equality, not just address), freshly packed otherwise.
+    fn packed_for(&mut self, k: &Tensor4<i8>, groups: usize) -> &PackedWeights {
+        if self.packed.len() > PACK_CACHE_CAP {
+            self.packed.clear();
+        }
+        let key = (k.data.as_ptr() as usize, k.data.len());
+        let entry =
+            self.packed.entry(key).or_insert_with(|| PackEntry::new(k, groups));
+        if !entry.valid_for(k, groups) {
+            *entry = PackEntry::new(k, groups);
+        }
+        &entry.packed
+    }
+
+    /// Compute one layer's tensors through the GEMM fast path (or the
+    /// reference when forced), requantizing on the way out.
+    fn compute_output(&mut self, data: &LayerData) -> (Tensor4<i32>, Tensor4<i8>) {
+        if self.force_reference {
+            return reference_output(data);
+        }
+        let layer = data.layer;
+        let groups = if layer.is_dense() { 1 } else { layer.groups };
+        let packed = self.packed_for(data.k, groups);
+        let y_acc = gemm::run_layer_gemm(layer, data.x, packed);
+        #[cfg(debug_assertions)]
+        if layer.macs_with_zpad() <= CROSS_CHECK_MAC_LIMIT {
+            let (want, _) = reference_output(data);
+            assert_eq!(
+                y_acc, want,
+                "GEMM fast path diverged from the reference on {}",
+                layer.name
+            );
+        }
+        let y_q = Tensor4::from_vec(y_acc.shape, data.qparams.requantize_slice(&y_acc.data));
+        (y_acc, y_q)
     }
 }
 
@@ -59,7 +156,7 @@ impl Accelerator for Functional {
     fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
         let layer = data.layer;
         let p = KrakenLayerParams::derive(&self.cfg, layer);
-        let (y_acc, y_q) = reference_output(data);
+        let (y_acc, y_q) = self.compute_output(data);
         let m = self.model.layer(layer);
         let delta = Counters {
             clocks: p.q,
@@ -118,5 +215,46 @@ mod tests {
             b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
         assert_eq!(b.counters().reconfigs, 2);
         assert_eq!(b.counters().clocks, o1.clocks + o2.clocks);
+    }
+
+    #[test]
+    fn gemm_and_reference_paths_agree() {
+        // Same backend, both routes, grouped + dense + strided shapes:
+        // identical LayerOutputs.
+        let cfg = KrakenConfig::new(3, 12);
+        for (layer, xshape, kshape) in [
+            (Layer::conv("c", 1, 9, 9, 3, 3, 2, 2, 4, 8), [1, 9, 9, 4], [3, 3, 4, 8]),
+            (Layer::conv_grouped("g", 1, 7, 7, 3, 3, 1, 1, 3, 10, 2), [1, 7, 7, 6], [3, 3, 3, 10]),
+            (Layer::matmul("m", 5, 24, 9), [1, 5, 1, 24], [1, 1, 24, 9]),
+        ] {
+            let x = Tensor4::random(xshape, 60);
+            let k = Tensor4::random(kshape, 61);
+            let q = QParams::from_scale(0.25, 3, true);
+            let mut fast = Functional::new(cfg.clone());
+            let mut slow = Functional::new(cfg.clone());
+            slow.set_force_reference(true);
+            let a = fast.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: q });
+            let b = slow.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: q });
+            assert_eq!(a.y_acc, b.y_acc, "{}", layer.name);
+            assert_eq!(a.y_q, b.y_q, "{}", layer.name);
+            assert_eq!(a.clocks, b.clocks, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn pack_cache_survives_weight_buffer_reuse() {
+        // Dropping one weight tensor and allocating another of the same
+        // size can land on the same address (the ABA hazard) — the
+        // content revalidation must repack rather than reuse.
+        let cfg = KrakenConfig::new(3, 12);
+        let mut b = Functional::new(cfg);
+        let layer = Layer::conv("c", 1, 6, 6, 3, 3, 1, 1, 2, 4);
+        let x = Tensor4::random([1, 6, 6, 2], 70);
+        for seed in 0..8u64 {
+            let k = Tensor4::random([3, 3, 2, 4], 100 + seed);
+            let out =
+                b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+            assert_eq!(out.y_acc, conv2d_same_i8(&x, &k, 1, 1), "seed {seed}");
+        }
     }
 }

@@ -55,7 +55,7 @@ use crate::arch::KrakenConfig;
 use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
 use crate::backend::{Accelerator, Estimator, Functional};
 use crate::model::sched::{self, NodeDispatcher, NodeTask};
-use crate::model::{run_graph, ModelGraph};
+use crate::model::{fuse_graph, run_graph, ModelGraph};
 use crate::partition::PartitionedPool;
 use crate::sim::Engine;
 use crate::tensor::Tensor4;
@@ -332,9 +332,13 @@ impl ServiceBuilder {
     /// Register a named graph model (a validated
     /// [`ModelGraph`] — linear chains and branchy topologies alike).
     /// The graph (weights included) is shared read-only across all
-    /// workers; nothing is duplicated per worker.
+    /// workers; nothing is duplicated per worker. Registration runs the
+    /// operator-fusion pass ([`crate::model::fuse_graph`]) so every
+    /// serving path — serial workers and the pooled branch scheduler —
+    /// executes the shorter graph; fusion is bit-exact, so served
+    /// results still match direct runs of the unfused graph.
     pub fn register_graph(mut self, name: impl Into<String>, graph: ModelGraph) -> Self {
-        self.push_model(name.into(), BuilderModel::Graph(graph));
+        self.push_model(name.into(), BuilderModel::Graph(fuse_graph(&graph)));
         self
     }
 

@@ -60,7 +60,7 @@ impl GraphBuilder {
         weights: Tensor4<i8>,
         qparams: QParams,
     ) -> NodeId {
-        self.add_op(NodeOp::Accel(AccelStage { layer, weights, qparams }), &[from])
+        self.add_op(NodeOp::Accel(AccelStage { layer, weights, qparams, epilogue: None }), &[from])
     }
 
     /// Host `k`×`k` max pooling with stride `s` and `pad` rows/columns
@@ -76,7 +76,7 @@ impl GraphBuilder {
 
     /// Host element-wise saturating add (the residual skip connection).
     pub fn residual_add(&mut self, a: NodeId, b: NodeId) -> NodeId {
-        self.add_op(NodeOp::ResidualAdd, &[a, b])
+        self.add_op(NodeOp::ResidualAdd { requant: None }, &[a, b])
     }
 
     /// Host channel concatenation of same-spatial-shape branches.
@@ -136,7 +136,7 @@ mod tests {
         let mut b = GraphBuilder::new("bad");
         let x = b.input([1, 4, 4, 1]);
         // NodeId(7) does not exist.
-        b.add_op(NodeOp::ResidualAdd, &[x, NodeId(7)]);
+        b.add_op(NodeOp::ResidualAdd { requant: None }, &[x, NodeId(7)]);
         let err = b.build().expect_err("dangling edge must fail the build");
         assert_eq!(err, GraphError::DanglingEdge { node: NodeId(1), input: NodeId(7) });
     }
@@ -146,7 +146,7 @@ mod tests {
         let mut b = GraphBuilder::new("bad");
         let x = b.input([1, 4, 4, 2]);
         // n1 and n2 feed each other: a 2-cycle hanging off the input.
-        let n1 = b.add_op(NodeOp::ResidualAdd, &[x, NodeId(2)]);
+        let n1 = b.add_op(NodeOp::ResidualAdd { requant: None }, &[x, NodeId(2)]);
         let n2 = b.add_op(NodeOp::Requant(QParams::identity()), &[n1]);
         let o = b.add_op(NodeOp::Output, &[n2]);
         assert_eq!((n1, n2, o), (NodeId(1), NodeId(2), NodeId(3)));
@@ -192,7 +192,7 @@ mod tests {
         // ResidualAdd with one input.
         let mut b = GraphBuilder::new("bad");
         let x = b.input([1, 4, 4, 1]);
-        let bad = b.add_op(NodeOp::ResidualAdd, &[x]);
+        let bad = b.add_op(NodeOp::ResidualAdd { requant: None }, &[x]);
         b.output(bad);
         assert!(matches!(b.build(), Err(GraphError::Arity { got: 1, .. })));
 

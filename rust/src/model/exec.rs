@@ -102,7 +102,7 @@ pub(crate) fn eval_accel<B: Accelerator + ?Sized>(
     stage: &AccelStage,
     input: Arc<Tensor4<i8>>,
 ) -> LayerOutput {
-    if stage.layer.is_dense() {
+    let mut out = if stage.layer.is_dense() {
         // Borrowed fast path: repack the activation without copying
         // (when un-shared) and borrow the resident weight tensor.
         let act = into_owned(input);
@@ -115,7 +115,14 @@ pub(crate) fn eval_accel<B: Accelerator + ?Sized>(
             k: &stage.weights,
             qparams: stage.qparams,
         })
+    };
+    // A fused output-pipe epilogue (a folded host Requant) rescales the
+    // int8 stream on its way to the next node; `y_acc` — and with it the
+    // reported logits and clocks — is untouched.
+    if let Some(q) = &stage.epilogue {
+        out.y_q = ops::requant(&out.y_q, q);
     }
+    out
 }
 
 /// Run one non-accelerated node (`Input`/`Output`/§II-C host op) on the
@@ -132,7 +139,13 @@ pub(crate) fn eval_host(
         NodeOp::Accel(_) => unreachable!("accelerated nodes run through eval_accel"),
         NodeOp::MaxPool { k, s, pad } => Arc::new(ops::maxpool(ins[0].as_ref(), *k, *s, *pad)),
         NodeOp::GlobalAvgPool => Arc::new(ops::global_avg_pool(ins[0].as_ref())),
-        NodeOp::ResidualAdd => Arc::new(ops::residual_add(ins[0].as_ref(), ins[1].as_ref())),
+        NodeOp::ResidualAdd { requant } => {
+            let sum = ops::residual_add(ins[0].as_ref(), ins[1].as_ref());
+            Arc::new(match requant {
+                Some(q) => ops::requant(&sum, q),
+                None => sum,
+            })
+        }
         NodeOp::Concat => {
             let refs: Vec<&Tensor4<i8>> = ins.iter().map(|a| a.as_ref()).collect();
             Arc::new(ops::concat_channels(&refs))

@@ -1,0 +1,231 @@
+//! Graph-level operator fusion: fold host `Requant` nodes into the
+//! producing node's output pipe (§II-C: "max-pooling, zero-padding and
+//! the element-wise additions of ResNet [are] performed on the host
+//! **or folded into requantization**").
+//!
+//! Three rules, each applied only when the producer's sole consumer is
+//! the `Requant` being folded (fan-out must keep seeing the unscaled
+//! tensor) and the producer has no fused requant already:
+//!
+//! | chain                          | fused into                              |
+//! |--------------------------------|-----------------------------------------|
+//! | `Accel → Requant`              | the accel stage's `epilogue`             |
+//! | `Accel → Flatten → Requant`    | the accel stage's `epilogue` (reshape and per-element requant commute; `Flatten` stays) |
+//! | `ResidualAdd → Requant`        | the add's `requant` field                |
+//!
+//! Every rule is semantics-preserving per element, so the fused graph is
+//! **bit-identical** to the unfused one on every input — while each
+//! fired rule removes one host node (and its activation round-trip)
+//! from the executed graph. On ResNet-50 this eliminates all 16
+//! `ResidualAdd → Requant` round-trips.
+//!
+//! The pass rebuilds through [`ModelGraph::compile`], so topo order,
+//! dependency levels, consumer counts and the logits pin are recomputed
+//! for the shorter graph; accel clocks are untouched (`y_acc` never
+//! passes through an epilogue), so `total_clocks` and
+//! `critical_path_clocks` match the unfused graph exactly.
+//!
+//! [`crate::coordinator::ServiceBuilder::register_graph`] applies the
+//! pass to every registered graph, so both the serial executor and the
+//! pooled scheduler serve the fused form.
+
+use super::graph::{ModelGraph, Node, NodeId, NodeOp};
+
+/// Fold every foldable `Requant` node of `graph` into its producer's
+/// output pipe. Returns the (possibly identical) fused graph; the input
+/// graph is untouched, so callers can keep the unfused form as an
+/// oracle.
+pub fn fuse_graph(graph: &ModelGraph) -> ModelGraph {
+    let mut nodes: Vec<Node> = graph.nodes().to_vec();
+    let consumers = graph.consumers();
+    // alias[i] = the node whose output now stands in for removed node i.
+    let mut alias: Vec<Option<usize>> = vec![None; nodes.len()];
+
+    // Where a Requant's qparams land when a rule fires.
+    enum Fold {
+        Epilogue(usize),
+        IntoAdd(usize),
+    }
+
+    for i in 0..nodes.len() {
+        let NodeOp::Requant(q) = nodes[i].op else { continue };
+        let p = nodes[i].inputs[0].0;
+        if consumers[p] != 1 {
+            continue; // fan-out sees the unscaled tensor — must keep it
+        }
+        let target = match &nodes[p].op {
+            NodeOp::Accel(stage) if stage.epilogue.is_none() => Some(Fold::Epilogue(p)),
+            NodeOp::Flatten => {
+                // Accel → Flatten → Requant: per-element requant commutes
+                // with the pure reshape, so it moves past the Flatten
+                // into the accel's output pipe.
+                let pp = nodes[p].inputs[0].0;
+                match &nodes[pp].op {
+                    NodeOp::Accel(stage) if stage.epilogue.is_none() && consumers[pp] == 1 => {
+                        Some(Fold::Epilogue(pp))
+                    }
+                    _ => None,
+                }
+            }
+            NodeOp::ResidualAdd { requant: None } => Some(Fold::IntoAdd(p)),
+            _ => None,
+        };
+        match target {
+            Some(Fold::Epilogue(j)) => {
+                let NodeOp::Accel(stage) = &mut nodes[j].op else { unreachable!() };
+                stage.epilogue = Some(q);
+                alias[i] = Some(p);
+            }
+            Some(Fold::IntoAdd(j)) => {
+                nodes[j].op = NodeOp::ResidualAdd { requant: Some(q) };
+                alias[i] = Some(p);
+            }
+            None => {}
+        }
+    }
+
+    // Drop the folded Requant nodes and rewrite every edge: first
+    // resolve aliases (a consumer of a removed node now reads its
+    // producer), then remap indices into the compacted node list.
+    let resolve = |mut j: usize| -> usize {
+        while let Some(p) = alias[j] {
+            j = p;
+        }
+        j
+    };
+    let mut remap: Vec<Option<usize>> = vec![None; nodes.len()];
+    let mut fused: Vec<Node> = Vec::with_capacity(nodes.len());
+    for (j, node) in nodes.iter().enumerate() {
+        if alias[j].is_none() {
+            remap[j] = Some(fused.len());
+            fused.push(node.clone());
+        }
+    }
+    for node in &mut fused {
+        for input in &mut node.inputs {
+            *input = NodeId(remap[resolve(input.0)].expect("alias resolves to a kept node"));
+        }
+    }
+    ModelGraph::compile(graph.name.clone(), fused)
+        .expect("fusing a validated graph preserves validity")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::KrakenConfig;
+    use crate::backend::Functional;
+    use crate::layers::Layer;
+    use crate::model::{run_graph, GraphBuilder};
+    use crate::quant::QParams;
+    use crate::tensor::Tensor4;
+
+    fn post_q() -> QParams {
+        QParams { relu: true, ..QParams::identity() }
+    }
+
+    fn outputs_match(unfused: &ModelGraph, fused: &ModelGraph, x: &Tensor4<i8>) {
+        let cfg = KrakenConfig::new(3, 12);
+        let a = run_graph(&mut Functional::new(cfg.clone()), unfused, x).expect("unfused");
+        let b = run_graph(&mut Functional::new(cfg), fused, x).expect("fused");
+        assert_eq!(a.output, b.output, "{}", unfused.name);
+        assert_eq!(a.logits, b.logits, "{}", unfused.name);
+        assert_eq!(a.total_clocks, b.total_clocks, "{}", unfused.name);
+        assert_eq!(a.critical_path_clocks, b.critical_path_clocks, "{}", unfused.name);
+    }
+
+    #[test]
+    fn requant_after_accel_becomes_an_epilogue() {
+        let mut b = GraphBuilder::new("accel_requant");
+        let x = b.input([1, 6, 6, 2]);
+        let layer = Layer::conv("conv", 1, 6, 6, 3, 3, 1, 1, 2, 4);
+        let y = b.accel(x, layer, Tensor4::random([3, 3, 2, 4], 1), QParams::from_scale(0.5, 0, false));
+        let r = b.requant(y, post_q());
+        b.output(r);
+        let graph = b.build().expect("well-formed");
+        let fused = fuse_graph(&graph);
+        assert_eq!(fused.host_nodes(), graph.host_nodes() - 1);
+        let stage = fused.accel_stages().next().expect("one accel stage");
+        assert_eq!(stage.epilogue, Some(post_q()));
+        outputs_match(&graph, &fused, &Tensor4::random([1, 6, 6, 2], 9));
+    }
+
+    #[test]
+    fn requant_after_residual_add_folds_into_the_add() {
+        let mut b = GraphBuilder::new("res_requant");
+        let x = b.input([1, 4, 4, 2]);
+        let layer = Layer::conv("conv", 1, 4, 4, 3, 3, 1, 1, 2, 2);
+        let y = b.accel(x, layer, Tensor4::random([3, 3, 2, 2], 2), QParams::from_scale(1.0 / 64.0, 0, true));
+        let sum = b.residual_add(y, x);
+        let r = b.requant(sum, post_q());
+        b.output(r);
+        let graph = b.build().expect("well-formed");
+        let fused = fuse_graph(&graph);
+        assert_eq!(fused.host_nodes(), graph.host_nodes() - 1);
+        assert!(
+            fused
+                .nodes()
+                .iter()
+                .any(|n| matches!(n.op, NodeOp::ResidualAdd { requant: Some(_) })),
+            "the add must carry the folded requant"
+        );
+        outputs_match(&graph, &fused, &Tensor4::random([1, 4, 4, 2], 10));
+    }
+
+    #[test]
+    fn requant_after_flatten_moves_past_the_reshape() {
+        let mut b = GraphBuilder::new("flat_requant");
+        let x = b.input([1, 4, 4, 2]);
+        let layer = Layer::conv("conv", 1, 4, 4, 3, 3, 1, 1, 2, 3);
+        let y = b.accel(x, layer, Tensor4::random([3, 3, 2, 3], 3), QParams::from_scale(0.25, 0, false));
+        let f = b.flatten(y);
+        let r = b.requant(f, post_q());
+        b.output(r);
+        let graph = b.build().expect("well-formed");
+        let fused = fuse_graph(&graph);
+        assert_eq!(fused.host_nodes(), graph.host_nodes() - 1, "Flatten stays, Requant goes");
+        let stage = fused.accel_stages().next().expect("one accel stage");
+        assert_eq!(stage.epilogue, Some(post_q()));
+        outputs_match(&graph, &fused, &Tensor4::random([1, 4, 4, 2], 11));
+    }
+
+    #[test]
+    fn fan_out_producers_are_not_fused() {
+        // The conv's output feeds BOTH the requant and a maxpool — the
+        // pool must keep seeing the unscaled tensor, so nothing folds.
+        let mut b = GraphBuilder::new("fanout");
+        let x = b.input([1, 4, 4, 2]);
+        let layer = Layer::conv("conv", 1, 4, 4, 3, 3, 1, 1, 2, 2);
+        let y = b.accel(x, layer, Tensor4::random([3, 3, 2, 2], 4), QParams::identity());
+        let r = b.requant(y, post_q());
+        let p = b.maxpool(y, 2, 2, 0);
+        let f1 = b.flatten(r);
+        let f2 = b.flatten(p);
+        let cat = b.concat(&[f1, f2]);
+        b.output(cat);
+        let graph = b.build().expect("well-formed");
+        let fused = fuse_graph(&graph);
+        assert_eq!(fused.host_nodes(), graph.host_nodes(), "no rule may fire");
+        assert!(fused.accel_stages().all(|s| s.epilogue.is_none()));
+        outputs_match(&graph, &fused, &Tensor4::random([1, 4, 4, 2], 12));
+    }
+
+    #[test]
+    fn fused_graph_keeps_logits_pin_and_levels_consistent() {
+        let mut b = GraphBuilder::new("pin");
+        let x = b.input([1, 4, 4, 2]);
+        let layer = Layer::conv("conv", 1, 4, 4, 3, 3, 1, 1, 2, 2);
+        let y = b.accel(x, layer, Tensor4::random([3, 3, 2, 2], 5), QParams::identity());
+        let sum = b.residual_add(y, x);
+        let r = b.requant(sum, post_q());
+        b.output(r);
+        let graph = b.build().expect("well-formed");
+        let fused = fuse_graph(&graph);
+        let pinned = fused.logits_node().expect("accel ancestor exists");
+        assert!(matches!(fused.nodes()[pinned].op, NodeOp::Accel(_)));
+        // Levels must cover exactly the surviving nodes, each once.
+        let mut seen: Vec<usize> = fused.levels().iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..fused.nodes().len()).collect::<Vec<_>>());
+    }
+}

@@ -41,6 +41,12 @@ pub struct AccelStage {
     pub weights: Tensor4<i8>,
     /// Requantization applied on the way out (`Ŷ′ → Ŷ`, §IV).
     pub qparams: QParams,
+    /// A second requantization fused into this node's output pipe by
+    /// [`super::fuse_graph`] (a downstream host `Requant` folded in,
+    /// §II-C: "… the element-wise additions of ResNet [are] performed on
+    /// the host or folded into requantization"). Applied to `y_q` after
+    /// `qparams`; never set by builders directly.
+    pub epilogue: Option<QParams>,
 }
 
 /// One graph node's operation.
@@ -65,8 +71,12 @@ pub enum NodeOp {
     /// (round-half-away-from-zero), the ResNet-50 classifier head.
     GlobalAvgPool,
     /// Host element-wise saturating int8 add of two same-shape inputs
-    /// (the ResNet skip connection).
-    ResidualAdd,
+    /// (the ResNet skip connection). `requant` is a downstream host
+    /// `Requant` folded in by [`super::fuse_graph`] (`None` as built):
+    /// applied to the sum before the result leaves the node.
+    ResidualAdd {
+        requant: Option<QParams>,
+    },
     /// Host channel concatenation of ≥ 2 same-spatial-shape inputs.
     Concat,
     /// Host requantization of an int8 tensor (e.g. the fused
@@ -102,7 +112,10 @@ impl NodeOp {
             }
             NodeOp::MaxPool { k, s, pad } => format!("maxpool {k}×{k}/{s} p{pad}"),
             NodeOp::GlobalAvgPool => "global_avg_pool".into(),
-            NodeOp::ResidualAdd => "residual_add".into(),
+            NodeOp::ResidualAdd { requant: None } => "residual_add".into(),
+            NodeOp::ResidualAdd { requant: Some(q) } => {
+                format!("residual_add+requant{}", if q.relu { "+relu" } else { "" })
+            }
             NodeOp::Concat => "concat".into(),
             NodeOp::Requant(q) => {
                 format!("requant{}", if q.relu { "+relu" } else { "" })
@@ -121,7 +134,7 @@ impl NodeOp {
             | NodeOp::GlobalAvgPool
             | NodeOp::Requant(_)
             | NodeOp::Flatten => (1, 1),
-            NodeOp::ResidualAdd => (2, 2),
+            NodeOp::ResidualAdd { .. } => (2, 2),
             NodeOp::Concat => (2, usize::MAX),
         }
     }
@@ -574,7 +587,7 @@ fn infer_shape(
             let [n, _, _, c] = ins[0];
             Ok([n, 1, 1, c])
         }
-        NodeOp::ResidualAdd => {
+        NodeOp::ResidualAdd { .. } => {
             if ins[0] != ins[1] {
                 return Err(mismatch(format!(
                     "branch shapes differ: {:?} vs {:?}",

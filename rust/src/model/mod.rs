@@ -22,6 +22,11 @@
 //!   estimator, or a multi-chip [`crate::partition::PartitionedPool`].
 //!   Fan-out edges share activations via `Arc` instead of cloning.
 //!
+//! * [`fuse_graph`] — graph-level operator fusion: folds host
+//!   `Requant` nodes into the producing accelerated stage's output
+//!   pipe (or into the `ResidualAdd` that feeds them), shrinking the
+//!   executed graph without changing a single output bit. The serving
+//!   layer applies it at registration time.
 //! * [`sched`] / [`run_graph_on_pool`] — the level/branch scheduler:
 //!   partition the DAG into dependency levels and fan each level's
 //!   independent accelerated nodes out across the workers of a
@@ -39,11 +44,13 @@
 
 mod builder;
 mod exec;
+mod fuse;
 mod graph;
 pub mod ops;
 pub mod sched;
 
 pub use builder::GraphBuilder;
 pub use exec::{run_graph, GraphReport, RunError};
+pub use fuse::fuse_graph;
 pub use graph::{AccelStage, GraphError, ModelGraph, Node, NodeId, NodeOp};
 pub use sched::{run_graph_on_pool, spawn_node_pool};

@@ -39,7 +39,7 @@ pub fn seeded_weights(layer: &Layer, seed: u64) -> Tensor4<i8> {
 /// builder here uses.
 pub fn seeded_accel(layer: Layer, seed: u64, qparams: QParams) -> NodeOp {
     let weights = seeded_weights(&layer, seed);
-    NodeOp::Accel(AccelStage { layer, weights, qparams })
+    NodeOp::Accel(AccelStage { layer, weights, qparams, epilogue: None })
 }
 
 /// The TinyCNN as a linear graph with seeded weights — the exact

@@ -216,7 +216,7 @@ mod tests {
         let adds = g
             .nodes()
             .iter()
-            .filter(|node| matches!(node.op, NodeOp::ResidualAdd))
+            .filter(|node| matches!(node.op, NodeOp::ResidualAdd { .. }))
             .count();
         assert_eq!(adds, 16);
         assert_eq!(g.input_shape(), [1, 224, 224, 3]);

@@ -1,0 +1,365 @@
+//! Blocked, cache-tiled int8 GEMM — the functional backend's fast
+//! compute path.
+//!
+//! The direct-form loop nests in [`super::reference`] are the *oracle*:
+//! the simplest possible statement of eq. (1)/(2). This module lowers
+//! the same math into the form CNN engines (and the paper's own DRAM
+//! restructuring, Algorithm 1) actually execute: an im2col lowering of
+//! the `same`-padded / strided / grouped convolution into one
+//! `A[M, K] · B[K, N]` product with `i8` operands and `i32`
+//! accumulators, driven by a register-blocked micro-kernel over
+//! `[MR × NR]` output tiles.
+//!
+//! Weights are packed **once per layer** ([`pack_weights`]) into
+//! `K_C`-deep panels of `NR` columns — the software analogue of the
+//! offline `K → K̂` rotator image of [`crate::dataflow::tiling`]: the
+//! panel a micro-kernel streams is contiguous, pre-widened to `i32`,
+//! and small enough (`K_C · NR · 4` bytes ≤ 16 KiB) to stay
+//! L1-resident while it is swept over every row block of `A`.
+//!
+//! Bit-exactness: every output element is a sum of `i8 × i8` products
+//! in `i32`. Two's-complement addition is associative and commutative,
+//! so the tiled accumulation order produces **identical** `i32` results
+//! to the reference loop nests for every shape — the equivalence suites
+//! and the functional backend's `debug_assertions` cross-check hold
+//! this contract.
+
+use crate::layers::{same_padding, Layer};
+
+use super::nhwc::Tensor4;
+
+/// Micro-tile rows: output pixels (or dense rows) per register block.
+pub const MR: usize = 4;
+/// Micro-tile columns: output channels per register block (one packed
+/// panel width).
+pub const NR: usize = 16;
+/// `K`-panel depth: the reduction-dimension block size. One packed
+/// panel holds `KC · NR` widened words (≤ 16 KiB), sized to stay in L1
+/// across the whole `A` sweep.
+pub const KC: usize = 256;
+
+/// Weights packed for the tiled GEMM: per group, `K_C`-deep panels of
+/// `NR` columns, pre-widened to `i32`. Built once per layer
+/// ([`pack_weights`]) and cached by the functional backend; reused for
+/// every inference through that layer.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    /// The `[K_H, K_W, C_i, C_o]` shape the pack was built from.
+    shape: [usize; 4],
+    /// Convolution groups the pack was built for.
+    groups: usize,
+    /// Reduction depth per group: `K = K_H · K_W · C_i`.
+    kdepth: usize,
+    /// Output columns per group: `C_o / groups`.
+    cols: usize,
+    /// `NR`-wide column panels per group (last one zero-padded).
+    col_panels: usize,
+    /// `(k0, len)` of each `K_C` panel.
+    kc_panels: Vec<(usize, usize)>,
+    /// Packed panels: group-major, then `K_C` panel, then column panel,
+    /// then `len × NR` row-major words.
+    data: Vec<i32>,
+}
+
+impl PackedWeights {
+    /// `true` when this pack was built from weights of `shape` with
+    /// `groups` groups — the cache-validity check backends use.
+    pub fn matches(&self, shape: [usize; 4], groups: usize) -> bool {
+        self.shape == shape && self.groups == groups
+    }
+
+    /// Words per group in `data`.
+    fn group_stride(&self) -> usize {
+        self.kdepth * self.col_panels * NR
+    }
+
+    /// One `(group, k-panel, column-panel)` panel: `len · NR` words.
+    fn panel(&self, g: usize, k0: usize, len: usize, jp: usize) -> &[i32] {
+        let base = g * self.group_stride() + k0 * self.col_panels * NR + jp * len * NR;
+        &self.data[base..base + len * NR]
+    }
+}
+
+/// Pack a `[K_H, K_W, C_i, C_o]` weight tensor (dense: `[1, 1, C_i,
+/// C_o]`) into [`PackedWeights`]. `B[k][j] = K[kh, kw, ci, g·cols + j]`
+/// with `k` enumerating `(kh, kw, ci)` row-major — exactly the order an
+/// im2col row enumerates its taps, so the GEMM reduces over matching
+/// indices.
+pub fn pack_weights(k: &Tensor4<i8>, groups: usize) -> PackedWeights {
+    let [kh, kw, ci, co] = k.shape;
+    assert!(groups >= 1, "groups must be at least 1");
+    assert_eq!(co % groups, 0, "output channels must split evenly over groups");
+    let kdepth = kh * kw * ci;
+    let cols = co / groups;
+    let col_panels = cols.div_ceil(NR);
+    let kc_panels: Vec<(usize, usize)> =
+        (0..kdepth).step_by(KC).map(|k0| (k0, KC.min(kdepth - k0))).collect();
+    let mut data = vec![0i32; groups * kdepth * col_panels * NR];
+    let gstride = kdepth * col_panels * NR;
+    for g in 0..groups {
+        for &(k0, len) in &kc_panels {
+            for jp in 0..col_panels {
+                let base = g * gstride + k0 * col_panels * NR + jp * len * NR;
+                let jn = NR.min(cols - jp * NR);
+                for dk in 0..len {
+                    let src = (k0 + dk) * co + g * cols + jp * NR;
+                    let dst = base + dk * NR;
+                    for (d, &s) in data[dst..dst + jn].iter_mut().zip(&k.data[src..src + jn]) {
+                        *d = s as i32;
+                    }
+                    // Columns jn..NR stay zero: the tail panel multiplies
+                    // into scratch that is never written back.
+                }
+            }
+        }
+    }
+    PackedWeights { shape: k.shape, groups, kdepth, cols, col_panels, kc_panels, data }
+}
+
+/// `MR`-row micro-kernel: `acc[i][j] += rows[i][dk] · bw[dk][j]` over
+/// one packed panel. `rows` are unpacked `A` row slices of the panel's
+/// `len` reduction elements; `bp` is one `len × NR` packed panel.
+#[inline]
+fn microkernel(rows: [&[i8]; MR], bp: &[i32], acc: &mut [[i32; NR]; MR]) {
+    for (dk, bw) in bp.chunks_exact(NR).enumerate() {
+        let bw: &[i32; NR] = bw.try_into().expect("panel chunk is NR wide");
+        for (r, acc_r) in rows.iter().zip(acc.iter_mut()) {
+            let aik = r[dk] as i32;
+            for (a, &b) in acc_r.iter_mut().zip(bw) {
+                *a += aik * b;
+            }
+        }
+    }
+}
+
+/// Single-row tail of [`microkernel`] for `M % MR` leftover rows.
+#[inline]
+fn microkernel_1(row: &[i8], bp: &[i32], acc: &mut [i32; NR]) {
+    for (dk, bw) in bp.chunks_exact(NR).enumerate() {
+        let bw: &[i32; NR] = bw.try_into().expect("panel chunk is NR wide");
+        let aik = row[dk] as i32;
+        for (a, &b) in acc.iter_mut().zip(bw) {
+            *a += aik * b;
+        }
+    }
+}
+
+/// One group's blocked GEMM: `Y[.., col0..col0+cols] += A · B_g` where
+/// `A` is `m × kdepth` row-major (stride `lda`) and `Y` is row-major
+/// with stride `ldy`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_group(
+    a: &[i8],
+    m: usize,
+    lda: usize,
+    packed: &PackedWeights,
+    g: usize,
+    y: &mut [i32],
+    ldy: usize,
+    col0: usize,
+) {
+    for &(k0, len) in &packed.kc_panels {
+        for jp in 0..packed.col_panels {
+            let bp = packed.panel(g, k0, len, jp);
+            let jbase = jp * NR;
+            let jn = NR.min(packed.cols - jbase);
+            let mut i0 = 0;
+            while i0 + MR <= m {
+                let rows = [
+                    &a[i0 * lda + k0..][..len],
+                    &a[(i0 + 1) * lda + k0..][..len],
+                    &a[(i0 + 2) * lda + k0..][..len],
+                    &a[(i0 + 3) * lda + k0..][..len],
+                ];
+                let mut acc = [[0i32; NR]; MR];
+                microkernel(rows, bp, &mut acc);
+                for (i, acc_r) in acc.iter().enumerate() {
+                    let yrow = &mut y[(i0 + i) * ldy + col0 + jbase..][..jn];
+                    for (yv, &av) in yrow.iter_mut().zip(acc_r.iter()) {
+                        *yv += av;
+                    }
+                }
+                i0 += MR;
+            }
+            while i0 < m {
+                let mut acc = [0i32; NR];
+                microkernel_1(&a[i0 * lda + k0..][..len], bp, &mut acc);
+                let yrow = &mut y[i0 * ldy + col0 + jbase..][..jn];
+                for (yv, &av) in yrow.iter_mut().zip(acc.iter()) {
+                    *yv += av;
+                }
+                i0 += 1;
+            }
+        }
+    }
+}
+
+/// Valid kernel-tap range for output index `o` of one spatial
+/// dimension: taps `lo..hi` land in bounds, the first at input
+/// coordinate `o·stride + lo − pad`.
+#[inline]
+pub(crate) fn tap_range(o: usize, stride: usize, kernel: usize, pad: usize, limit: usize) -> (usize, usize) {
+    let base = o * stride;
+    let lo = pad.saturating_sub(base).min(kernel);
+    let hi = (limit + pad - base).min(kernel);
+    (lo, hi.max(lo))
+}
+
+/// im2col for one group: lower the `same`-padded strided convolution
+/// input into `A[M = N·OH·OW, K = K_H·K_W·C_i]`, taps ordered
+/// `(kh, kw, ci)` to match [`pack_weights`]. Out-of-bounds taps stay
+/// zero (the pre-filled buffer), and the per-output valid ranges are
+/// hoisted out of the copy loops — no per-tap padding arithmetic.
+fn im2col_group(x: &Tensor4<i8>, layer: &Layer, ci: usize, g: usize) -> Vec<i8> {
+    let [n, h, w, _] = x.shape;
+    let (kh, kw, sh, sw) = (layer.kh, layer.kw, layer.sh, layer.sw);
+    let (oh, ow) = (layer.out_h(), layer.out_w());
+    let (pad_top, _) = same_padding(h, kh, sh);
+    let (pad_left, _) = same_padding(w, kw, sw);
+    let kdepth = kh * kw * ci;
+    let w_rng: Vec<(usize, usize)> =
+        (0..ow).map(|ox| tap_range(ox, sw, kw, pad_left, w)).collect();
+    let mut a = vec![0i8; n * oh * ow * kdepth];
+    for bn in 0..n {
+        for oy in 0..oh {
+            let (dh_lo, dh_hi) = tap_range(oy, sh, kh, pad_top, h);
+            let ih0 = oy * sh + dh_lo - pad_top;
+            for ox in 0..ow {
+                let (dw_lo, dw_hi) = w_rng[ox];
+                let iw0 = ox * sw + dw_lo - pad_left;
+                let row = ((bn * oh + oy) * ow + ox) * kdepth;
+                for dh in dh_lo..dh_hi {
+                    let ih = ih0 + (dh - dh_lo);
+                    for dw in dw_lo..dw_hi {
+                        let iw = iw0 + (dw - dw_lo);
+                        let src = x.idx(bn, ih, iw, g * ci);
+                        let dst = row + (dh * kw + dw) * ci;
+                        a[dst..dst + ci].copy_from_slice(&x.data[src..src + ci]);
+                    }
+                }
+            }
+        }
+    }
+    a
+}
+
+/// Run one layer through the tiled GEMM: conv (grouped or not) via
+/// im2col, FC/matmul directly over the activation rows. `packed` must
+/// have been built from this layer's weight tensor
+/// ([`PackedWeights::matches`]). Returns the raw `i32` accumulators in
+/// the layer's output shape — bit-identical to
+/// [`super::reference::conv2d_same_i8`] /
+/// [`super::reference::conv2d_same_grouped_i8`] /
+/// [`super::reference::matmul_i8`].
+pub fn run_layer_gemm(layer: &Layer, x: &Tensor4<i8>, packed: &PackedWeights) -> Tensor4<i32> {
+    if layer.is_dense() {
+        assert!(packed.matches([1, 1, layer.ci, layer.co], 1), "pack/layer mismatch");
+        let m = layer.h;
+        assert_eq!(x.data.len(), m * layer.ci, "dense input row mismatch");
+        let mut y = vec![0i32; m * layer.co];
+        gemm_group(&x.data, m, layer.ci, packed, 0, &mut y, layer.co, 0);
+        Tensor4::from_vec([1, m, 1, layer.co], y)
+    } else {
+        let [kh, kw, ci, co] = packed.shape;
+        assert!(
+            (kh, kw, ci, co) == (layer.kh, layer.kw, layer.ci, layer.co)
+                && packed.groups == layer.groups,
+            "pack/layer mismatch"
+        );
+        assert_eq!(
+            x.shape,
+            [layer.n, layer.h, layer.w, layer.ci * layer.groups],
+            "conv input shape"
+        );
+        let (oh, ow) = (layer.out_h(), layer.out_w());
+        let m = layer.n * oh * ow;
+        let mut y = vec![0i32; m * co];
+        for g in 0..layer.groups {
+            let a = im2col_group(x, layer, ci, g);
+            gemm_group(&a, m, packed.kdepth, packed, g, &mut y, co, g * packed.cols);
+        }
+        Tensor4::from_vec([layer.n, oh, ow, co], y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{conv2d_same_grouped_i8, conv2d_same_i8, matmul_i8};
+
+    fn check_conv(layer: Layer, xseed: u64, wseed: u64) {
+        let x = Tensor4::random([layer.n, layer.h, layer.w, layer.ci * layer.groups], xseed);
+        let k = Tensor4::random([layer.kh, layer.kw, layer.ci, layer.co], wseed);
+        let want = if layer.groups == 1 {
+            conv2d_same_i8(&x, &k, layer.sh, layer.sw)
+        } else {
+            conv2d_same_grouped_i8(&x, &k, layer.sh, layer.sw, layer.groups)
+        };
+        let packed = pack_weights(&k, layer.groups);
+        let got = run_layer_gemm(&layer, &x, &packed);
+        assert_eq!(got, want, "{}", layer.name);
+    }
+
+    #[test]
+    fn conv_matches_reference_across_shapes() {
+        // Kernel sizes, strides, channel tails (co % NR ≠ 0), spatial
+        // tails (oh·ow % MR ≠ 0) and K panels > KC all covered.
+        for layer in [
+            Layer::conv("k1s1", 1, 5, 5, 1, 1, 1, 1, 3, 7),
+            Layer::conv("k3s1", 1, 9, 9, 3, 3, 1, 1, 4, 17),
+            Layer::conv("k3s2", 1, 11, 11, 3, 3, 2, 2, 5, 16),
+            Layer::conv("k5s3", 1, 13, 13, 5, 5, 3, 3, 3, 9),
+            Layer::conv("k7s2", 1, 16, 16, 7, 7, 2, 2, 3, 8),
+            Layer::conv("k1s2", 1, 8, 8, 1, 1, 2, 2, 12, 20),
+            Layer::conv("deepk", 1, 6, 6, 3, 3, 1, 1, 40, 10), // K = 360 > KC
+            Layer::conv("batch", 2, 7, 7, 3, 3, 1, 1, 3, 5),
+            Layer::conv("rect", 1, 10, 6, 3, 5, 2, 1, 4, 6),
+        ] {
+            check_conv(layer, 31, 32);
+        }
+    }
+
+    #[test]
+    fn grouped_conv_matches_reference() {
+        for layer in [
+            Layer::conv_grouped("g2", 1, 9, 9, 3, 3, 1, 1, 4, 10, 2),
+            Layer::conv_grouped("g2s2", 1, 11, 11, 5, 5, 2, 2, 3, 18, 2),
+            Layer::conv_grouped("g4", 1, 6, 6, 3, 3, 1, 1, 5, 20, 4),
+        ] {
+            check_conv(layer, 41, 42);
+        }
+    }
+
+    #[test]
+    fn dense_matches_reference() {
+        for (h, ci, co) in [(1usize, 12usize, 10usize), (7, 64, 33), (4, 300, 17), (3, 515, 40)] {
+            let layer = Layer::matmul("mm", h, ci, co);
+            let x = Tensor4::random([1, h, 1, ci], 51);
+            let k = Tensor4::random([1, 1, ci, co], 52);
+            let want = matmul_i8(&x.data, &k.data, h, ci, co);
+            let packed = pack_weights(&k, 1);
+            let got = run_layer_gemm(&layer, &x, &packed);
+            assert_eq!(got.data, want, "{h}x{ci}x{co}");
+            assert_eq!(got.shape, [1, h, 1, co]);
+        }
+    }
+
+    #[test]
+    fn pack_matches_validates_shape_and_groups() {
+        let k = Tensor4::random([3, 3, 4, 8], 61);
+        let packed = pack_weights(&k, 2);
+        assert!(packed.matches([3, 3, 4, 8], 2));
+        assert!(!packed.matches([3, 3, 4, 8], 1));
+        assert!(!packed.matches([1, 1, 4, 8], 2));
+    }
+
+    #[test]
+    fn tap_range_covers_same_padding() {
+        // K=3, S=1, pad 1 over 5: edge outputs lose one tap.
+        assert_eq!(tap_range(0, 1, 3, 1, 5), (1, 3));
+        assert_eq!(tap_range(2, 1, 3, 1, 5), (0, 3));
+        assert_eq!(tap_range(4, 1, 3, 1, 5), (0, 2));
+        // Degenerate: window entirely off the edge collapses to empty.
+        assert_eq!(tap_range(4, 2, 1, 0, 8), (0, 0));
+    }
+}

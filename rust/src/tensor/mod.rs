@@ -5,7 +5,14 @@
 //! over eq. (1)/(2)) against which the simulator's dataflow is verified
 //! bit-exactly, and which is itself verified against the JAX/Pallas
 //! artifacts through the PJRT runtime (three-way agreement).
+//!
+//! [`gemm`] is the production compute path: the same math lowered to a
+//! blocked int8 GEMM with packed weights, bit-identical to the reference
+//! loop nests (two's-complement accumulation is order-independent) and
+//! several times faster — the functional backend routes through it and
+//! keeps the reference as its oracle.
 
+pub mod gemm;
 mod nhwc;
 mod reference;
 

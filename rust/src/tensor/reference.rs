@@ -1,49 +1,67 @@
 //! Direct-form golden references for eq. (1) and eq. (2): the simplest
 //! possible loop nests, int8 inputs/weights, int32 accumulation, `same`
 //! zero padding — used to verify the simulator's dataflow bit-exactly.
+//!
+//! These are the *oracle* for [`super::gemm`]'s tiled fast path, so they
+//! stay direct-form — but the per-tap padding arithmetic (`isize` casts
+//! and bounds checks in the innermost loops) is hoisted into per-output
+//! valid-tap ranges computed once per coordinate, so CI runs that sweep
+//! the oracle over real layer shapes are not pathologically slow.
 
+use super::gemm::tap_range;
 use super::nhwc::Tensor4;
 use crate::layers::same_padding;
 
-/// Eq. (1): `same`-padded strided convolution.
-/// `x: [N,H,W,Ci]`, `k: [Kh,Kw,Ci,Co]` → `y: [N,ceil(H/Sh),ceil(W/Sw),Co]`
-/// with int32 accumulators.
-pub fn conv2d_same_i8(x: &Tensor4<i8>, k: &Tensor4<i8>, sh: usize, sw: usize) -> Tensor4<i32> {
-    let [n, h, w, ci] = x.shape;
-    let [kh, kw, kci, co] = k.shape;
-    assert_eq!(ci, kci, "channel mismatch");
+/// The shared direct-form loop nest: grouped `same`-padded strided
+/// convolution with hoisted valid-tap ranges. `groups == 1` is the
+/// ungrouped case. `x: [N,H,W,G·Ci]`, `k: [Kh,Kw,Ci,Co]` with filters
+/// `g·Co/G .. (g+1)·Co/G` applied to input channels `g·Ci .. (g+1)·Ci`.
+fn conv_core(x: &Tensor4<i8>, k: &Tensor4<i8>, sh: usize, sw: usize, groups: usize) -> Tensor4<i32> {
+    let [n, h, w, ci_total] = x.shape;
+    let [kh, kw, ci, co] = k.shape;
+    assert_eq!(ci_total, ci * groups, "channel mismatch");
+    assert_eq!(co % groups, 0, "output channels must split evenly over groups");
+    let co_g = co / groups;
     let oh = h.div_ceil(sh);
     let ow = w.div_ceil(sw);
     let (pad_top, _) = same_padding(h, kh, sh);
     let (pad_left, _) = same_padding(w, kw, sw);
+    // Valid kernel taps per output coordinate, computed once instead of
+    // per (pixel, channel, tap) inside the nest.
+    let h_rng: Vec<(usize, usize)> = (0..oh).map(|o| tap_range(o, sh, kh, pad_top, h)).collect();
+    let w_rng: Vec<(usize, usize)> = (0..ow).map(|o| tap_range(o, sw, kw, pad_left, w)).collect();
     let mut y = Tensor4::<i32>::zeros([n, oh, ow, co]);
     for bn in 0..n {
-        for yh in 0..oh {
-            for yw in 0..ow {
+        for (yh, &(dh_lo, dh_hi)) in h_rng.iter().enumerate() {
+            for (yw, &(dw_lo, dw_hi)) in w_rng.iter().enumerate() {
+                let ybase = ((bn * oh + yh) * ow + yw) * co;
                 for oc in 0..co {
+                    let g = oc / co_g;
                     let mut acc: i32 = 0;
-                    for dh in 0..kh {
-                        let ih = (yh * sh + dh) as isize - pad_top as isize;
-                        if ih < 0 || ih >= h as isize {
-                            continue;
-                        }
-                        for dw in 0..kw {
-                            let iw = (yw * sw + dw) as isize - pad_left as isize;
-                            if iw < 0 || iw >= w as isize {
-                                continue;
-                            }
+                    for dh in dh_lo..dh_hi {
+                        let ih = yh * sh + dh - pad_top;
+                        for dw in dw_lo..dw_hi {
+                            let iw = yw * sw + dw - pad_left;
+                            let xbase = ((bn * h + ih) * w + iw) * ci_total + g * ci;
+                            let kbase = ((dh * kw + dw) * ci) * co + oc;
                             for c in 0..ci {
-                                acc += x.get(bn, ih as usize, iw as usize, c) as i32
-                                    * k.get(dh, dw, c, oc) as i32;
+                                acc += x.data[xbase + c] as i32 * k.data[kbase + c * co] as i32;
                             }
                         }
                     }
-                    y.set(bn, yh, yw, oc, acc);
+                    y.data[ybase + oc] = acc;
                 }
             }
         }
     }
     y
+}
+
+/// Eq. (1): `same`-padded strided convolution.
+/// `x: [N,H,W,Ci]`, `k: [Kh,Kw,Ci,Co]` → `y: [N,ceil(H/Sh),ceil(W/Sw),Co]`
+/// with int32 accumulators.
+pub fn conv2d_same_i8(x: &Tensor4<i8>, k: &Tensor4<i8>, sh: usize, sw: usize) -> Tensor4<i32> {
+    conv_core(x, k, sh, sw, 1)
 }
 
 /// Grouped variant (AlexNet conv2/4/5): `x: [N,H,W,G·Ci]`,
@@ -56,48 +74,7 @@ pub fn conv2d_same_grouped_i8(
     sw: usize,
     groups: usize,
 ) -> Tensor4<i32> {
-    let [n, h, w, ci_total] = x.shape;
-    let [kh, kw, ci, co] = k.shape;
-    assert_eq!(ci_total, ci * groups);
-    assert_eq!(co % groups, 0);
-    let co_g = co / groups;
-    let oh = h.div_ceil(sh);
-    let ow = w.div_ceil(sw);
-    let mut y = Tensor4::<i32>::zeros([n, oh, ow, co]);
-    for g in 0..groups {
-        // Slice the group's channels into contiguous tensors.
-        let mut xg = Tensor4::<i8>::zeros([n, h, w, ci]);
-        for bn in 0..n {
-            for ih in 0..h {
-                for iw in 0..w {
-                    for c in 0..ci {
-                        xg.set(bn, ih, iw, c, x.get(bn, ih, iw, g * ci + c));
-                    }
-                }
-            }
-        }
-        let mut kg = Tensor4::<i8>::zeros([kh, kw, ci, co_g]);
-        for dh in 0..kh {
-            for dw in 0..kw {
-                for c in 0..ci {
-                    for oc in 0..co_g {
-                        kg.set(dh, dw, c, oc, k.get(dh, dw, c, g * co_g + oc));
-                    }
-                }
-            }
-        }
-        let yg = conv2d_same_i8(&xg, &kg, sh, sw);
-        for bn in 0..n {
-            for yh in 0..oh {
-                for yw in 0..ow {
-                    for oc in 0..co_g {
-                        y.set(bn, yh, yw, g * co_g + oc, yg.get(bn, yh, yw, oc));
-                    }
-                }
-            }
-        }
-    }
-    y
+    conv_core(x, k, sh, sw, groups)
 }
 
 /// Eq. (2) / (14): `m1: [H, Ci] · m2: [Ci, Co]` (stored as `[1,H,1,Ci]`
@@ -162,10 +139,78 @@ mod tests {
 
     #[test]
     fn grouped_matches_manual_split() {
+        // Two groups of ci=2, co=3: each group must equal the ungrouped
+        // conv over its channel slice.
         let x = Tensor4::random([1, 5, 5, 4], 4);
-        let k = Tensor4::random([3, 3, 2, 6], 5); // 2 groups of ci=2, co=3
+        let k = Tensor4::random([3, 3, 2, 6], 5);
         let y = conv2d_same_grouped_i8(&x, &k, 1, 1, 2);
         assert_eq!(y.shape, [1, 5, 5, 6]);
+        for g in 0..2usize {
+            let mut xg = Tensor4::<i8>::zeros([1, 5, 5, 2]);
+            for ih in 0..5 {
+                for iw in 0..5 {
+                    for c in 0..2 {
+                        xg.set(0, ih, iw, c, x.get(0, ih, iw, g * 2 + c));
+                    }
+                }
+            }
+            let mut kg = Tensor4::<i8>::zeros([3, 3, 2, 3]);
+            for dh in 0..3 {
+                for dw in 0..3 {
+                    for c in 0..2 {
+                        for oc in 0..3 {
+                            kg.set(dh, dw, c, oc, k.get(dh, dw, c, g * 3 + oc));
+                        }
+                    }
+                }
+            }
+            let yg = conv2d_same_i8(&xg, &kg, 1, 1);
+            for yh in 0..5 {
+                for yw in 0..5 {
+                    for oc in 0..3 {
+                        assert_eq!(y.get(0, yh, yw, g * 3 + oc), yg.get(0, yh, yw, oc));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_edges_match_unhoisted_math() {
+        // Brute-force re-derivation of the padding bounds for one shape:
+        // the hoisted tap ranges must reproduce the per-tap isize math.
+        let x = Tensor4::random([2, 7, 9, 3], 6);
+        let k = Tensor4::random([5, 3, 3, 4], 7);
+        let (sh, sw) = (2, 1);
+        let y = conv2d_same_i8(&x, &k, sh, sw);
+        let (pad_top, _) = same_padding(7, 5, sh);
+        let (pad_left, _) = same_padding(9, 3, sw);
+        for bn in 0..2 {
+            for yh in 0..y.shape[1] {
+                for yw in 0..y.shape[2] {
+                    for oc in 0..4 {
+                        let mut acc = 0i32;
+                        for dh in 0..5 {
+                            let ih = (yh * sh + dh) as isize - pad_top as isize;
+                            if ih < 0 || ih >= 7 {
+                                continue;
+                            }
+                            for dw in 0..3 {
+                                let iw = (yw * sw + dw) as isize - pad_left as isize;
+                                if iw < 0 || iw >= 9 {
+                                    continue;
+                                }
+                                for c in 0..3 {
+                                    acc += x.get(bn, ih as usize, iw as usize, c) as i32
+                                        * k.get(dh, dw, c, oc) as i32;
+                                }
+                            }
+                        }
+                        assert_eq!(y.get(bn, yh, yw, oc), acc);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

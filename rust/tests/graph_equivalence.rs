@@ -17,7 +17,9 @@ use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData};
 use kraken::coordinator::{BackendKind, ServiceBuilder};
 use kraken::layers::Layer;
-use kraken::model::{run_graph, run_graph_on_pool, spawn_node_pool, GraphBuilder, NodeOp};
+use kraken::model::{
+    fuse_graph, run_graph, run_graph_on_pool, spawn_node_pool, GraphBuilder, NodeOp,
+};
 use kraken::networks::{
     inception_block_graph, resnet50_graph_at, tiny_cnn, tiny_cnn_graph, tiny_mlp,
     tiny_mlp_graph, TINY_SCALE, W_SEED_BASE, X_SEED,
@@ -287,7 +289,7 @@ fn resnet50_residual_topology_serves_end_to_end() {
     let graph = resnet50_graph_at(32);
     assert_eq!(graph.accel_stages().count(), 54); // 53 convs + fc
     assert_eq!(
-        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd)).count(),
+        graph.nodes().iter().filter(|n| matches!(n.op, NodeOp::ResidualAdd { .. })).count(),
         16
     );
 
@@ -418,7 +420,72 @@ fn resnet50_graph_parallelism_matches_serial() {
     service.shutdown();
 }
 
-// ---- 6. logits determinism on multi-head graphs -----------------------
+// ---- 6. operator fusion: fused ≡ unfused, serial and pooled -----------
+
+/// The fused ResNet-50 graph drops exactly the 16 `ResidualAdd →
+/// Requant` host round-trips and stays bit-identical to the unfused
+/// graph — logits, output tensor, clock totals and the logits pin — in
+/// the serial executor and on node pools of width {1, 2, 4}.
+#[test]
+fn fused_resnet50_bit_identical_to_unfused_serial_and_pooled() {
+    let graph = resnet50_graph_at(32);
+    let fused = Arc::new(fuse_graph(&graph));
+
+    // Structure: 16 fewer host nodes — every Requant is gone (each one
+    // sat behind a single-consumer ResidualAdd), every add now carries
+    // its requant, and no node count changes anywhere else.
+    assert_eq!(fused.host_nodes(), graph.host_nodes() - 16);
+    assert_eq!(
+        fused.nodes().iter().filter(|n| matches!(n.op, NodeOp::Requant(_))).count(),
+        0,
+        "all 16 host Requants must fold"
+    );
+    assert_eq!(
+        fused
+            .nodes()
+            .iter()
+            .filter(|n| matches!(n.op, NodeOp::ResidualAdd { requant: Some(_) }))
+            .count(),
+        16
+    );
+    assert_eq!(fused.accel_stages().count(), graph.accel_stages().count());
+
+    // The logits pin survives fusion: same layer on both graphs.
+    let pinned = |g: &kraken::model::ModelGraph| {
+        let i = g.logits_node().expect("classifier exists");
+        match &g.nodes()[i].op {
+            NodeOp::Accel(stage) => stage.layer.name.clone(),
+            other => panic!("logits node must be accelerated, got {}", other.label()),
+        }
+    };
+    assert_eq!(pinned(&graph), pinned(&fused));
+
+    let x = Tensor4::random([1, 32, 32, 3], 78);
+    let unfused_report = run_graph(&mut Functional::new(KrakenConfig::paper()), &graph, &x)
+        .expect("unfused serial");
+    let fused_report = run_graph(&mut Functional::new(KrakenConfig::paper()), &fused, &x)
+        .expect("fused serial");
+    assert_eq!(fused_report.logits, unfused_report.logits);
+    assert_eq!(fused_report.output.data, unfused_report.output.data);
+    assert_eq!(fused_report.node_clocks, unfused_report.node_clocks);
+    assert_eq!(fused_report.total_clocks, unfused_report.total_clocks);
+    assert_eq!(fused_report.critical_path_clocks, unfused_report.critical_path_clocks);
+
+    for workers in [1usize, 2, 4] {
+        let pool = spawn_node_pool(workers, |_| Functional::new(KrakenConfig::paper()));
+        let pooled = run_graph_on_pool(&pool, &fused, &x).expect("fused pooled");
+        assert_eq!(pooled.logits, unfused_report.logits, "w{workers}");
+        assert_eq!(pooled.output.data, unfused_report.output.data, "w{workers}");
+        assert_eq!(pooled.total_clocks, unfused_report.total_clocks, "w{workers}");
+        assert_eq!(
+            pooled.critical_path_clocks, unfused_report.critical_path_clocks,
+            "w{workers}"
+        );
+        pool.shutdown();
+    }
+}
+
+// ---- 7. logits determinism on multi-head graphs -----------------------
 
 /// Two accelerated heads joined by a concat: the logits must come from
 /// the pinned output-path ancestor (the topologically-last accel

@@ -8,9 +8,9 @@ use std::time::Duration;
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
 use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
-use kraken::layers::LayerKind;
+use kraken::layers::{Layer, LayerKind};
 use kraken::metrics::Counters;
-use kraken::model::run_graph;
+use kraken::model::{fuse_graph, run_graph, GraphBuilder, ModelGraph};
 use kraken::networks::tiny_cnn_graph;
 use kraken::partition::plan_layer;
 use kraken::quant::QParams;
@@ -179,6 +179,83 @@ fn batching_then_partitioning_compose() {
     let batched = kraken::layers::Layer::fully_connected("fc", r, ci, co);
     let plan = plan_layer(&KrakenConfig::paper(), &batched, 2);
     assert!(plan.speedup() > 1.9, "speedup {}", plan.speedup());
+}
+
+/// A residual micro-graph whose `ResidualAdd → Requant` chain is
+/// exactly what [`fuse_graph`] folds at `register_graph` time.
+fn residual_block_graph() -> ModelGraph {
+    let mut b = GraphBuilder::new("res_block");
+    let x = b.input([1, 8, 8, 4]);
+    let conv = Layer::conv("conv", 1, 8, 8, 3, 3, 1, 1, 4, 4);
+    let y = b.accel(
+        x,
+        conv,
+        Tensor4::random([3, 3, 4, 4], 51),
+        QParams::from_scale(1.0 / 64.0, 0, true),
+    );
+    let sum = b.residual_add(y, x);
+    let r = b.requant(sum, QParams { relu: true, ..QParams::identity() });
+    let cls = Layer::conv("cls", 1, 8, 8, 1, 1, 1, 1, 4, 6);
+    let z = b.accel(r, cls, Tensor4::random([1, 1, 4, 6], 52), QParams::from_scale(0.5, 0, false));
+    b.output(z);
+    b.build().expect("well-formed residual block")
+}
+
+#[test]
+fn fused_graph_partitioned_serving_composes_with_batching() {
+    // The full stack at once: a graph that *fuses* at registration
+    // (its ResidualAdd → Requant chain folds into the add), served on a
+    // partition(2) pool next to a dense op whose rows batch into one
+    // pass — on every estimator backend. Everything must agree with a
+    // direct serial run of the UNFUSED graph through the functional
+    // backend: identical logits regardless of backend kind, shard
+    // count, fusion, or the GEMM fast path vs the estimators'
+    // reference compute.
+    let graph = residual_block_graph();
+    assert_eq!(
+        fuse_graph(&graph).host_nodes(),
+        graph.host_nodes() - 1,
+        "the fold this test rides on must actually fire"
+    );
+    let image = Tensor4::random([1, 8, 8, 4], 53);
+    let direct = run_graph(&mut Functional::new(KrakenConfig::paper()), &graph, &image)
+        .expect("direct unfused run");
+
+    let (ci, co, r_rows) = (32usize, 48usize, 4usize);
+    let weights = dense_op("fc", ci, co, 54).weights.data;
+    let rows: Vec<Vec<i8>> =
+        (0..r_rows as u64).map(|i| Tensor4::random([1, 1, 1, ci], 950 + i).data).collect();
+
+    for kind in [BackendKind::Functional, BackendKind::Eyeriss, BackendKind::Zascad, BackendKind::Carla] {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::paper())
+            .backend(kind)
+            .workers(1)
+            .partition(2)
+            .batch_capacity(r_rows)
+            .register_graph("res_block", residual_block_graph())
+            .register_dense("fc", dense_op("fc", ci, co, 54))
+            .build();
+
+        let dense_tickets: Vec<_> = rows.iter().map(|r| service.submit("fc", r.clone())).collect();
+        let graph_tickets: Vec<_> =
+            (0..2).map(|_| service.submit("res_block", image.clone())).collect();
+        for ticket in graph_tickets {
+            let resp = ticket.wait().expect("fused graph served");
+            assert_eq!(
+                resp.logits, direct.logits,
+                "{kind:?} shards diverged from the unfused serial run"
+            );
+        }
+        for (row, ticket) in rows.iter().zip(dense_tickets) {
+            let resp = ticket.wait().expect("dense served");
+            assert_eq!(resp.output, matmul_i8(row, &weights, 1, ci, co), "{kind:?}");
+            assert_eq!(resp.rows_in_batch, r_rows, "all rows share one pass");
+        }
+        let stats = service.shutdown();
+        assert_eq!(stats.dense_flushes, 1, "batching survived the composition");
+        assert_eq!(stats.per_model["res_block"], 2);
+    }
 }
 
 /// A backend that panics whenever it runs a layer whose name carries
