@@ -1,0 +1,228 @@
+//! Open-loop load bench: latency quantiles vs offered load.
+//!
+//! The closed-loop benches (`service_latency`, `pool_throughput`) wait
+//! for each response before issuing the next request, so they can never
+//! observe queueing collapse: the arrival rate self-throttles to the
+//! service rate. This bench drives the service **open-loop** — requests
+//! arrive on a Poisson schedule (seeded LCG, exponential inter-arrival
+//! gaps) regardless of how far behind the service is — and sweeps the
+//! offered load ρ from well below to well above the calibrated
+//! saturation rate. Below the knee the ticket latency sits near the
+//! closed-loop service time; past it the queue grows for the whole run
+//! and the tail quantiles blow up.
+//!
+//! Quantiles come from the service's own telemetry
+//! ([`kraken::coordinator::KrakenService::stats_snapshot`]): the
+//! per-model `total` latency histogram, i.e. exactly what a production
+//! scrape would report — the bench doubles as an end-to-end test of the
+//! live snapshot path under concurrent load.
+//!
+//! Emits one `BENCH_service_openloop.json` record with
+//! `rho{25,50,100,200,400}_{p50,p99,p999}_us`, the calibrated
+//! saturation rate, and the measured knee. CI gates on the ρ=0.5 p99
+//! staying within 5× the closed-loop lone-row p50
+//! (`BENCH_service_window_0us.json`) and on the p99-vs-ρ curve being
+//! (tolerantly) monotone.
+//!
+//! Run: `cargo bench --bench service_openloop`
+
+mod harness;
+
+use std::time::{Duration, Instant};
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{BackendKind, DenseOp, KrakenService, ServiceBuilder};
+use kraken::quant::QParams;
+use kraken::tensor::Tensor4;
+
+const CI: usize = 64;
+const CO: usize = 32;
+const REQUESTS: usize = 1024;
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants) — the offline build
+/// vendors no `rand`, and a seeded generator keeps the arrival schedule
+/// identical run-to-run.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    /// Uniform in (0, 1] — the `+ 1` keeps `ln` off zero.
+    fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+
+    /// Exponential inter-arrival gap with the given mean (seconds).
+    fn next_exp(&mut self, mean_s: f64) -> f64 {
+        -mean_s * self.next_f64().ln()
+    }
+}
+
+/// The same dense-fc workload as `service_latency`'s window-0 record
+/// (functional backend, lone rows on a capacity-8 lane, immediate
+/// deadline flush), so the CI gate compares like with like.
+fn build_service(workers: usize) -> KrakenService {
+    ServiceBuilder::new()
+        .config(KrakenConfig::paper())
+        .backend(BackendKind::Functional)
+        .workers(workers)
+        .batch_capacity(8)
+        .flush_window(Duration::ZERO)
+        .register_dense(
+            "fc",
+            DenseOp::new(
+                "fc",
+                CI,
+                CO,
+                Tensor4::random([1, 1, CI, CO], 11).data,
+                QParams::identity(),
+            ),
+        )
+        .build()
+}
+
+/// Closed-loop calibration: serve lone rows back-to-back and take the
+/// mean submit→wait time as the per-request service time. Its inverse
+/// is the saturation rate the ρ sweep is scaled against.
+fn calibrate(workers: usize) -> (f64, f64) {
+    let service = build_service(workers);
+    for i in 0..8 {
+        service.submit("fc", Tensor4::random([1, 1, 1, CI], i).data).wait().expect("warmup");
+    }
+    let n = 64usize;
+    let mut total_s = 0.0;
+    let mut lat_us: Vec<f64> = Vec::with_capacity(n);
+    for i in 0..n {
+        let row = Tensor4::random([1, 1, 1, CI], 100 + i as u64).data;
+        let t0 = Instant::now();
+        service.submit("fc", row).wait().expect("calibration row");
+        let dt = t0.elapsed().as_secs_f64();
+        total_s += dt;
+        lat_us.push(dt * 1e6);
+    }
+    service.shutdown();
+    lat_us.sort_by(f64::total_cmp);
+    let mean_s = total_s / n as f64;
+    (1.0 / mean_s, lat_us[n / 2])
+}
+
+/// Sleep-then-spin until `target`: sleeping burns no CPU for the bulk
+/// of the gap, the final spin keeps arrival jitter well under the
+/// microsecond latencies being measured.
+fn pace_until(target: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let gap = target - now;
+        if gap > Duration::from_micros(200) {
+            std::thread::sleep(gap - Duration::from_micros(100));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+struct LoadPoint {
+    rho: f64,
+    p50_us: u64,
+    p99_us: u64,
+    p999_us: u64,
+}
+
+/// Drive one offered-load point: Poisson arrivals at `rho` × the
+/// saturation rate, tickets collected without waiting (open loop), all
+/// drained afterwards; quantiles read from the live stats snapshot.
+fn run_load_point(workers: usize, sat_rps: f64, rho: f64, seed: u64) -> LoadPoint {
+    let service = build_service(workers);
+    for i in 0..8 {
+        service.submit("fc", Tensor4::random([1, 1, 1, CI], i).data).wait().expect("warmup");
+    }
+    let warm = service.stats_snapshot().latency["fc"].total.count();
+
+    let mean_gap_s = 1.0 / (rho * sat_rps);
+    let mut lcg = Lcg(seed);
+    let t0 = Instant::now();
+    let mut offset_s = 0.0;
+    let mut tickets = Vec::with_capacity(REQUESTS);
+    for i in 0..REQUESTS {
+        offset_s += lcg.next_exp(mean_gap_s);
+        pace_until(t0 + Duration::from_secs_f64(offset_s));
+        let row = Tensor4::random([1, 1, 1, CI], 1000 + i as u64).data;
+        tickets.push(service.submit("fc", row));
+    }
+    for t in tickets {
+        t.wait().expect("open-loop row served");
+    }
+
+    let snap = service.stats_snapshot();
+    let total = &snap.latency["fc"].total;
+    assert_eq!(
+        total.count(),
+        warm + REQUESTS as u64,
+        "every offered request must land in the histogram"
+    );
+    let point = LoadPoint {
+        rho,
+        p50_us: total.p50(),
+        p99_us: total.p99(),
+        p999_us: total.p999(),
+    };
+    println!(
+        "rho {:>4.2} ({:>8.0} req/s offered): p50 {:>8} µs  p99 {:>8} µs  p999 {:>8} µs  \
+         (peak queue {})",
+        rho,
+        rho * sat_rps,
+        point.p50_us,
+        point.p99_us,
+        point.p999_us,
+        snap.peak_queued
+    );
+    service.shutdown();
+    point
+}
+
+fn main() {
+    println!("== open-loop latency vs offered load (Poisson arrivals, dense fc lane) ==\n");
+    let workers = 2usize;
+    let (sat_rps, closed_p50_us) = calibrate(workers);
+    println!(
+        "calibration: closed-loop p50 {closed_p50_us:.1} µs → saturation ≈ {sat_rps:.0} req/s\n"
+    );
+
+    let rhos = [0.25f64, 0.5, 1.0, 2.0, 4.0];
+    let points: Vec<LoadPoint> = rhos
+        .iter()
+        .enumerate()
+        .map(|(i, &rho)| run_load_point(workers, sat_rps, rho, 0xC0FFEE + i as u64))
+        .collect();
+
+    // The saturation knee: the first offered load whose p99 leaves the
+    // service-time regime (an order of magnitude over the closed-loop
+    // median). Past the knee the queue grows for the whole run.
+    let knee_rho = points
+        .iter()
+        .find(|p| p.p99_us as f64 > 10.0 * closed_p50_us)
+        .map_or(rhos[rhos.len() - 1], |p| p.rho);
+    println!("\nsaturation knee ≈ ρ {knee_rho}");
+
+    let mut fields: Vec<(String, f64)> = vec![
+        ("requests_per_rho".into(), REQUESTS as f64),
+        ("workers".into(), workers as f64),
+        ("sat_rps_closed".into(), sat_rps),
+        ("closed_p50_us".into(), closed_p50_us),
+        ("knee_rho".into(), knee_rho),
+    ];
+    for p in &points {
+        let tag = format!("rho{}", (p.rho * 100.0).round() as u64);
+        fields.push((format!("{tag}_p50_us"), p.p50_us as f64));
+        fields.push((format!("{tag}_p99_us"), p.p99_us as f64));
+        fields.push((format!("{tag}_p999_us"), p.p999_us as f64));
+    }
+    let borrowed: Vec<(&str, f64)> = fields.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    harness::emit_json("service_openloop", &borrowed);
+}

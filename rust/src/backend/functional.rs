@@ -33,6 +33,7 @@ use crate::arch::KrakenConfig;
 use crate::layers::{KrakenLayerParams, LayerKind};
 use crate::metrics::Counters;
 use crate::perf::{FcMemConvention, PerfModel, Tech};
+use crate::telemetry;
 use crate::tensor::gemm::{self, PackedWeights};
 use crate::tensor::Tensor4;
 
@@ -75,6 +76,8 @@ pub struct Functional {
     model: PerfModel,
     counters: Counters,
     packed: HashMap<(usize, usize), PackEntry>,
+    pack_hits: u64,
+    pack_misses: u64,
     force_reference: bool,
 }
 
@@ -93,6 +96,8 @@ impl Functional {
             model,
             counters: Counters::default(),
             packed: HashMap::new(),
+            pack_hits: 0,
+            pack_misses: 0,
             force_reference: false,
         }
     }
@@ -109,6 +114,13 @@ impl Functional {
         self.force_reference = on;
     }
 
+    /// Lifetime pack-cache `(hits, misses)` for this backend instance.
+    /// A hit is a cached pack that revalidated by content; an address
+    /// collision that fails revalidation counts as a miss.
+    pub fn pack_cache_stats(&self) -> (u64, u64) {
+        (self.pack_hits, self.pack_misses)
+    }
+
     /// The packed form of `k`, from cache when the entry revalidates
     /// (content equality, not just address), freshly packed otherwise.
     fn packed_for(&mut self, k: &Tensor4<i8>, groups: usize) -> &PackedWeights {
@@ -116,12 +128,16 @@ impl Functional {
             self.packed.clear();
         }
         let key = (k.data.as_ptr() as usize, k.data.len());
-        let entry =
-            self.packed.entry(key).or_insert_with(|| PackEntry::new(k, groups));
-        if !entry.valid_for(k, groups) {
-            *entry = PackEntry::new(k, groups);
+        let hit = self.packed.get(&key).is_some_and(|e| e.valid_for(k, groups));
+        if hit {
+            self.pack_hits += 1;
+            telemetry::global().counter("kraken_gemm_pack_cache_hits_total").inc();
+        } else {
+            self.pack_misses += 1;
+            telemetry::global().counter("kraken_gemm_pack_cache_misses_total").inc();
+            self.packed.insert(key, PackEntry::new(k, groups));
         }
-        &entry.packed
+        &self.packed[&key].packed
     }
 
     /// Compute one layer's tensors through the GEMM fast path (or the
@@ -239,6 +255,28 @@ mod tests {
             assert_eq!(a.y_q, b.y_q, "{}", layer.name);
             assert_eq!(a.clocks, b.clocks, "{}", layer.name);
         }
+    }
+
+    #[test]
+    fn pack_cache_hit_miss_counters() {
+        let cfg = KrakenConfig::new(3, 12);
+        let mut b = Functional::new(cfg);
+        let layer = Layer::conv("c", 1, 6, 6, 3, 3, 1, 1, 2, 4);
+        let x = Tensor4::random([1, 6, 6, 2], 80);
+        let k = Tensor4::random([3, 3, 2, 4], 81);
+        for _ in 0..3 {
+            b.run_layer(&LayerData { layer: &layer, x: &x, k: &k, qparams: QParams::identity() });
+        }
+        // First call packs (miss), the next two revalidate (hits).
+        assert_eq!(b.pack_cache_stats(), (2, 1));
+        // A different weight tensor (new buffer or changed content —
+        // either fails the hit path) must count as a miss, never a hit.
+        let mut k2 = k.clone();
+        k2.data[0] = k2.data[0].wrapping_add(1);
+        b.run_layer(&LayerData { layer: &layer, x: &x, k: &k2, qparams: QParams::identity() });
+        let (hits, misses) = b.pack_cache_stats();
+        assert_eq!(hits + misses, 4);
+        assert!(misses >= 2, "changed weights must repack: {hits} hits / {misses} misses");
     }
 
     #[test]

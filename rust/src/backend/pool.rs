@@ -19,6 +19,7 @@
 //! with backends and request envelopes.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -35,7 +36,9 @@ pub(crate) fn panic_reason(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Per-worker completion statistics, returned by [`ShardedPool::shutdown`].
+/// Per-worker completion statistics. Readable live via
+/// [`ShardedPool::worker_stats`] and returned by
+/// [`ShardedPool::shutdown`].
 #[derive(Debug, Clone, Copy, Default)]
 pub struct WorkerStats {
     pub worker: usize,
@@ -43,6 +46,14 @@ pub struct WorkerStats {
     pub completed: u64,
     /// Of those, jobs stolen from another shard's deque.
     pub stolen: u64,
+}
+
+/// Live per-worker counters, updated by the worker thread with relaxed
+/// atomics so observers never contend with the hot path.
+#[derive(Debug, Default)]
+struct WorkerCell {
+    completed: AtomicU64,
+    stolen: AtomicU64,
 }
 
 struct Queues<J> {
@@ -58,6 +69,10 @@ struct Queues<J> {
 struct Inner<J> {
     queues: Mutex<Queues<J>>,
     available: Condvar,
+    /// One cell per worker; index = worker = shard.
+    cells: Vec<WorkerCell>,
+    /// High-water mark of total queued jobs across all shards.
+    peak_depth: AtomicU64,
 }
 
 impl<J> Inner<J> {
@@ -78,6 +93,8 @@ impl<J> Inner<J> {
                 count += 1;
             }
             queued = count;
+            let depth: usize = q.shards.iter().map(VecDeque::len).sum();
+            self.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
         }
         if queued == 1 {
             self.available.notify_one();
@@ -136,7 +153,7 @@ impl<J: Send + 'static> PoolHandle<J> {
 /// N worker threads over N sharded deques with stealing.
 pub struct ShardedPool<J: Send + 'static> {
     inner: Arc<Inner<J>>,
-    handles: Vec<JoinHandle<WorkerStats>>,
+    handles: Vec<JoinHandle<()>>,
 }
 
 impl<J: Send + 'static> ShardedPool<J> {
@@ -158,6 +175,8 @@ impl<J: Send + 'static> ShardedPool<J> {
                 next: 0,
             }),
             available: Condvar::new(),
+            cells: (0..n).map(|_| WorkerCell::default()).collect(),
+            peak_depth: AtomicU64::new(0),
         });
         let make_state = Arc::new(make_state);
         let handle = Arc::new(handle);
@@ -168,7 +187,6 @@ impl<J: Send + 'static> ShardedPool<J> {
                 let handle = Arc::clone(&handle);
                 std::thread::spawn(move || {
                     let mut state = make_state(i);
-                    let mut stats = WorkerStats { worker: i, ..Default::default() };
                     loop {
                         let job = {
                             let mut q = inner.queues.lock().expect("pool lock");
@@ -203,11 +221,12 @@ impl<J: Send + 'static> ShardedPool<J> {
                             }
                         };
                         match job {
-                            None => return stats,
+                            None => return,
                             Some((job, stolen)) => {
                                 handle(i, &mut state, job);
-                                stats.completed += 1;
-                                stats.stolen += stolen as u64;
+                                let cell = &inner.cells[i];
+                                cell.completed.fetch_add(1, Ordering::Relaxed);
+                                cell.stolen.fetch_add(stolen as u64, Ordering::Relaxed);
                             }
                         }
                     }
@@ -248,14 +267,35 @@ impl<J: Send + 'static> ShardedPool<J> {
         q.shards.iter().map(VecDeque::len).sum()
     }
 
+    /// High-water mark of total queued jobs since spawn.
+    pub fn peak_queued(&self) -> u64 {
+        self.inner.peak_depth.load(Ordering::Relaxed)
+    }
+
+    /// Live per-worker stats, readable while workers run. Counts are
+    /// relaxed-atomic reads, so a snapshot taken mid-job may trail a
+    /// worker by the job it is currently finishing.
+    pub fn worker_stats(&self) -> Vec<WorkerStats> {
+        self.inner
+            .cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| WorkerStats {
+                worker: i,
+                completed: c.completed.load(Ordering::Relaxed),
+                stolen: c.stolen.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
     /// Let the workers drain every queued job, stop them, and return
     /// their per-worker stats.
     pub fn shutdown(mut self) -> Vec<WorkerStats> {
         self.begin_shutdown();
-        self.handles
-            .drain(..)
-            .map(|h| h.join().expect("pool worker panicked"))
-            .collect()
+        for h in self.handles.drain(..) {
+            h.join().expect("pool worker panicked");
+        }
+        self.worker_stats()
     }
 
     fn begin_shutdown(&self) {
@@ -349,6 +389,30 @@ mod tests {
             stats.iter().map(|s| s.stolen).sum::<u64>() >= 1,
             "idle worker never stole from the jammed shard: {stats:?}"
         );
+    }
+
+    #[test]
+    fn live_worker_stats_and_peak_depth() {
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Mutex::new(gate_rx);
+        let pool = ShardedPool::spawn(1, |_| (), move |_, _, job: u32| {
+            if job == 0 {
+                gate_rx.lock().unwrap().recv().unwrap();
+            }
+        });
+        pool.submit_batch([0u32, 1, 2, 3]);
+        // Worker holds job 0; three jobs queued → peak depth ≥ 3.
+        while pool.queued() != 3 {
+            std::thread::yield_now();
+        }
+        assert!(pool.peak_queued() >= 3, "peak {}", pool.peak_queued());
+        let live = pool.worker_stats();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].completed, 0, "job 0 still in flight");
+        gate_tx.send(()).unwrap();
+        let stats = pool.shutdown();
+        assert_eq!(stats[0].completed, 4);
+        assert_eq!(stats[0].worker, 0);
     }
 
     #[test]

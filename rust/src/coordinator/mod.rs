@@ -31,6 +31,6 @@ pub mod service;
 
 pub use batcher::{BatchResult, DenseOp, FcBatcher};
 pub use service::{
-    BackendKind, DenseResponse, KrakenService, Payload, Response, RunError, ServiceBuilder,
-    ServiceStats, Ticket,
+    BackendKind, DenseResponse, KrakenService, ModelLatency, Payload, Response, RunError,
+    ServiceBuilder, ServiceStats, StatsSnapshot, Ticket,
 };

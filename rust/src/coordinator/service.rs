@@ -52,12 +52,13 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::arch::KrakenConfig;
-use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
+use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool, WorkerStats};
 use crate::backend::{Accelerator, Estimator, Functional};
 use crate::model::sched::{self, NodeDispatcher, NodeTask};
 use crate::model::{fuse_graph, run_graph, ModelGraph};
 use crate::partition::PartitionedPool;
 use crate::sim::Engine;
+use crate::telemetry::{self, AtomicF64, Counter, Histogram, HistogramSnapshot, Registry};
 use crate::tensor::Tensor4;
 
 use super::batcher::DenseOp;
@@ -151,7 +152,13 @@ impl<T> Ticket<T> {
     }
 }
 
-/// Aggregate serving statistics, returned by [`KrakenService::shutdown`].
+/// Aggregate serving statistics — readable live through
+/// [`KrakenService::stats_snapshot`] and returned (final) by
+/// [`KrakenService::shutdown`]. Every hot counter behind this view is a
+/// relaxed atomic, so assembling it never contends with the worker hot
+/// path; `completed` is *derived* as the sum of the per-model counters,
+/// which makes `completed == per_model.values().sum()` hold in every
+/// snapshot by construction, even under concurrent submits.
 #[derive(Debug, Clone, Default)]
 pub struct ServiceStats {
     /// Requests answered successfully (dense rows count individually).
@@ -178,6 +185,11 @@ pub struct ServiceStats {
     pub window_flushes: u64,
     /// Successful completions per registered model.
     pub per_model: HashMap<String, u64>,
+    /// Live per-worker pool counters (completed jobs / stolen takes),
+    /// indexed by worker. Pool *jobs* include dense flushes (one per
+    /// batch, not per row) and injected branch node tasks, so the sum
+    /// relates to — but does not equal — `completed`.
+    pub per_worker: Vec<WorkerStats>,
 }
 
 impl ServiceStats {
@@ -187,6 +199,99 @@ impl ServiceStats {
     /// when deriving modeled throughput.
     pub fn graph_completed(&self) -> u64 {
         self.completed - self.dense_rows
+    }
+}
+
+/// Per-model latency distributions, split by phase. All three are
+/// microsecond histograms ([`crate::telemetry::hist`]): `queue` is
+/// submission → worker pickup (dense rows: submission → batch pickup,
+/// lane wait included), `execute` is the worker-side run (dense: the
+/// shared batch pass, recorded once per flush), `total` is submission →
+/// response — the ticket latency a client observes.
+#[derive(Debug, Clone, Default)]
+pub struct ModelLatency {
+    pub queue: HistogramSnapshot,
+    pub execute: HistogramSnapshot,
+    pub total: HistogramSnapshot,
+}
+
+/// A live, non-consuming view of a running service, from
+/// [`KrakenService::stats_snapshot`]: the same aggregate counters
+/// `shutdown()` returns plus queue state and per-model latency
+/// distributions. Taking one costs relaxed atomic loads and one brief
+/// pool-queue lock — it never blocks the serving hot path.
+#[derive(Debug, Clone)]
+pub struct StatsSnapshot {
+    /// Aggregate counters, identical in shape to the final
+    /// [`KrakenService::shutdown`] stats.
+    pub stats: ServiceStats,
+    /// Pool jobs queued (not yet picked up) at snapshot time.
+    pub queued: usize,
+    /// High-water mark of the pool queue depth since the service
+    /// started.
+    pub peak_queued: u64,
+    /// Latency histograms per registered model, keyed by model name.
+    pub latency: HashMap<String, ModelLatency>,
+}
+
+/// One model's live metric handles: a completion counter plus the three
+/// phase histograms, registered in the service's [`Registry`] (named
+/// `kraken_request_latency_us{model="...",phase="..."}` so the
+/// Prometheus exposition carries the labels).
+struct ModelMetrics {
+    completed: Counter,
+    queue_us: Histogram,
+    exec_us: Histogram,
+    total_us: Histogram,
+}
+
+impl ModelMetrics {
+    fn register(registry: &Registry, model: &str) -> Self {
+        let hist = |phase: &str| {
+            registry.histogram(&format!(
+                "kraken_request_latency_us{{model=\"{model}\",phase=\"{phase}\"}}"
+            ))
+        };
+        ModelMetrics {
+            completed: registry
+                .counter(&format!("kraken_requests_completed_total{{model=\"{model}\"}}")),
+            queue_us: hist("queue"),
+            exec_us: hist("execute"),
+            total_us: hist("total"),
+        }
+    }
+
+    fn latency(&self) -> ModelLatency {
+        ModelLatency {
+            queue: self.queue_us.snapshot(),
+            execute: self.exec_us.snapshot(),
+            total: self.total_us.snapshot(),
+        }
+    }
+}
+
+/// Service-wide hot counters, shared between the worker closure and the
+/// snapshot path. Registry-backed so the Prometheus exposition sees
+/// them; `device_ms` is fractional and lives outside the registry.
+struct LiveStats {
+    failed: Counter,
+    dense_flushes: Counter,
+    dense_rows: Counter,
+    window_flushes: Counter,
+    total_clocks: Counter,
+    device_ms: AtomicF64,
+}
+
+impl LiveStats {
+    fn register(registry: &Registry) -> Self {
+        LiveStats {
+            failed: registry.counter("kraken_requests_failed_total"),
+            dense_flushes: registry.counter("kraken_dense_flushes_total"),
+            dense_rows: registry.counter("kraken_dense_rows_total"),
+            window_flushes: registry.counter("kraken_window_flushes_total"),
+            total_clocks: registry.counter("kraken_device_clocks_total"),
+            device_ms: AtomicF64::new(0.0),
+        }
     }
 }
 
@@ -398,11 +503,13 @@ impl ServiceBuilder {
     {
         assert!(self.workers >= 1, "service needs at least one worker");
         let capacity = self.capacity.unwrap_or_else(|| self.cfg.r.max(1));
-        let mut per_model = HashMap::new();
+        // One private registry per service: per-model metrics from two
+        // services (or two tests) never alias.
+        let registry = Registry::new();
+        let live = Arc::new(LiveStats::register(&registry));
         let mut models = HashMap::new();
         for (name, model) in self.models {
-            per_model.insert(name.clone(), 0u64);
-            let shared: Arc<str> = Arc::from(name.as_str());
+            let metrics = Arc::new(ModelMetrics::register(&registry, &name));
             let kind = match model {
                 BuilderModel::Graph(graph) => ModelKind::Graph(Arc::new(graph)),
                 BuilderModel::Dense(op) => ModelKind::Dense(DenseLane {
@@ -410,14 +517,9 @@ impl ServiceBuilder {
                     pending: Mutex::new(Vec::new()),
                 }),
             };
-            models.insert(name, ModelEntry { name: shared, kind });
+            models.insert(name, ModelEntry { kind, metrics });
         }
-        let stats = Arc::new(Mutex::new(ServiceStats {
-            workers: self.workers,
-            per_model,
-            ..Default::default()
-        }));
-        let stats_in_pool = Arc::clone(&stats);
+        let live_in_pool = Arc::clone(&live);
         // Filled right after the pool exists (before any job can be
         // submitted): the handle drivers use to fan one request's
         // branch work out to pool siblings when graph parallelism is
@@ -430,7 +532,7 @@ impl ServiceBuilder {
             make_backend,
             move |worker_idx, backend: &mut B, job: Job| {
                 let fan = if graph_par { fanout_in_pool.get() } else { None };
-                handle_job(worker_idx, backend, job, &stats_in_pool, fan)
+                handle_job(worker_idx, backend, job, &live_in_pool, fan)
             },
         );
         fanout.set(pool.handle()).unwrap_or_else(|_| unreachable!("fanout handle set once"));
@@ -440,7 +542,8 @@ impl ServiceBuilder {
             capacity,
             window: self.window,
             flush: FlushSignal::default(),
-            stats,
+            registry,
+            live,
         });
         let flusher = self.window.map(|_| {
             let inner = Arc::clone(&inner);
@@ -454,7 +557,7 @@ impl ServiceBuilder {
 enum Job {
     /// Full-graph inference for one named model.
     Infer {
-        model: Arc<str>,
+        metrics: Arc<ModelMetrics>,
         graph: Arc<ModelGraph>,
         input: Tensor4<i8>,
         enqueued: Instant,
@@ -464,7 +567,7 @@ enum Job {
     /// `R`-row engine pass, one response channel and submit timestamp
     /// per row (rows may have waited in the lane for a window tick).
     Dense {
-        model: Arc<str>,
+        metrics: Arc<ModelMetrics>,
         op: Arc<DenseOp>,
         rows: Vec<Vec<i8>>,
         enqueued: Vec<Instant>,
@@ -501,8 +604,10 @@ impl NodeDispatcher for GraphFanout<'_> {
 
 /// A registered model inside the running service.
 struct ModelEntry {
-    name: Arc<str>,
     kind: ModelKind,
+    /// Shared with every job dispatched for this model, so workers
+    /// record completions and latencies without a registry lookup.
+    metrics: Arc<ModelMetrics>,
 }
 
 enum ModelKind {
@@ -554,15 +659,34 @@ struct ServiceInner {
     capacity: usize,
     window: Option<Duration>,
     flush: FlushSignal,
-    stats: Arc<Mutex<ServiceStats>>,
+    /// This service's private metric registry (per-model histograms and
+    /// completion counters live here; pool gauges are set at render
+    /// time).
+    registry: Registry,
+    live: Arc<LiveStats>,
 }
 
 impl ServiceInner {
-    fn dense_lanes(&self) -> impl Iterator<Item = (&Arc<str>, &DenseLane)> + '_ {
+    fn dense_lanes(&self) -> impl Iterator<Item = (&ModelEntry, &DenseLane)> + '_ {
         self.models.values().filter_map(|entry| match &entry.kind {
-            ModelKind::Dense(lane) => Some((&entry.name, lane)),
+            ModelKind::Dense(lane) => Some((entry, lane)),
             ModelKind::Graph(_) => None,
         })
+    }
+
+    /// Assemble a [`ServiceStats`] from the live atomics. `per_worker`
+    /// comes from the pool (live cells, or the post-join values at
+    /// shutdown); `completed` is derived from the per-model counters so
+    /// the consistency invariant holds in every snapshot.
+    fn build_stats(&self, per_worker: Vec<WorkerStats>) -> ServiceStats {
+        assemble_stats(&self.models, &self.live, per_worker)
+    }
+
+    fn latency_snapshots(&self) -> HashMap<String, ModelLatency> {
+        self.models
+            .iter()
+            .map(|(name, entry)| (name.clone(), entry.metrics.latency()))
+            .collect()
     }
 
     /// Earliest deadline across every dense lane's oldest pending row.
@@ -580,7 +704,7 @@ impl ServiceInner {
     /// `window_triggered` marks deadline-tick flushes in the stats.
     fn drain_lane(
         &self,
-        name: &Arc<str>,
+        entry: &ModelEntry,
         lane: &DenseLane,
         window_triggered: bool,
         should_take: impl Fn(&PendingRow) -> bool,
@@ -595,27 +719,27 @@ impl ServiceInner {
                 pending.drain(..take).collect::<Vec<_>>()
             };
             if window_triggered {
-                self.stats.lock().expect("service stats").window_flushes += 1;
+                self.live.window_flushes.inc();
             }
-            self.dispatch_dense(name, &lane.op, batch);
+            self.dispatch_dense(entry, &lane.op, batch);
         }
     }
 
     /// Flush every lane whose oldest row's deadline has passed.
     fn flush_due(&self, now: Instant) {
-        for (name, lane) in self.dense_lanes() {
-            self.drain_lane(name, lane, true, |row| row.due <= now);
+        for (entry, lane) in self.dense_lanes() {
+            self.drain_lane(entry, lane, true, |row| row.due <= now);
         }
     }
 
     /// Drain every dense lane completely (manual flush / shutdown).
     fn flush_all(&self) {
-        for (name, lane) in self.dense_lanes() {
-            self.drain_lane(name, lane, false, |_| true);
+        for (entry, lane) in self.dense_lanes() {
+            self.drain_lane(entry, lane, false, |_| true);
         }
     }
 
-    fn dispatch_dense(&self, model: &Arc<str>, op: &Arc<DenseOp>, batch: Vec<PendingRow>) {
+    fn dispatch_dense(&self, entry: &ModelEntry, op: &Arc<DenseOp>, batch: Vec<PendingRow>) {
         let mut rows = Vec::with_capacity(batch.len());
         let mut enqueued = Vec::with_capacity(batch.len());
         let mut resps = Vec::with_capacity(batch.len());
@@ -625,7 +749,7 @@ impl ServiceInner {
             resps.push(row.resp);
         }
         self.pool.submit(Job::Dense {
-            model: Arc::clone(model),
+            metrics: Arc::clone(&entry.metrics),
             op: Arc::clone(op),
             rows,
             enqueued,
@@ -673,7 +797,7 @@ fn handle_job<B: Accelerator>(
     worker_idx: usize,
     backend: &mut B,
     job: Job,
-    stats: &Mutex<ServiceStats>,
+    live: &LiveStats,
     fanout: Option<&PoolHandle<Job>>,
 ) {
     match job {
@@ -683,8 +807,9 @@ fn handle_job<B: Accelerator>(
             // result (and owns all stats/response bookkeeping).
             sched::run_node_task(worker_idx, backend, task);
         }
-        Job::Infer { model, graph, input, enqueued, resp } => {
+        Job::Infer { metrics, graph, input, enqueued, resp } => {
             let queue_us = enqueued.elapsed().as_secs_f64() * 1e6;
+            let exec_start = Instant::now();
             let run = std::panic::catch_unwind(AssertUnwindSafe(|| match fanout {
                 // Only graphs with a multi-accel level can overlap
                 // branches; chains skip the scheduler's per-node
@@ -701,15 +826,12 @@ fn handle_job<B: Accelerator>(
             }));
             match run {
                 Ok(Ok(report)) => {
-                    {
-                        let mut s = stats.lock().expect("service stats");
-                        s.completed += 1;
-                        s.total_device_ms += report.modeled_ms;
-                        s.total_clocks += report.total_clocks;
-                        if let Some(count) = s.per_model.get_mut(&*model) {
-                            *count += 1;
-                        }
-                    }
+                    metrics.completed.inc();
+                    metrics.queue_us.record(queue_us as u64);
+                    metrics.exec_us.record(exec_start.elapsed().as_micros() as u64);
+                    metrics.total_us.record(enqueued.elapsed().as_micros() as u64);
+                    live.total_clocks.add(report.total_clocks);
+                    live.device_ms.add(report.modeled_ms);
                     let _ = resp.send(Ok(Response {
                         logits: report.logits,
                         queue_us,
@@ -719,13 +841,13 @@ fn handle_job<B: Accelerator>(
                     }));
                 }
                 Ok(Err(err)) => {
-                    stats.lock().expect("service stats").failed += 1;
+                    live.failed.inc();
                     let worker =
                         if err.worker == usize::MAX { worker_idx } else { err.worker };
                     let _ = resp.send(Err(RunError { worker, reason: err.reason }));
                 }
                 Err(payload) => {
-                    stats.lock().expect("service stats").failed += 1;
+                    live.failed.inc();
                     let _ = resp.send(Err(RunError {
                         worker: worker_idx,
                         reason: panic_reason(payload),
@@ -733,12 +855,13 @@ fn handle_job<B: Accelerator>(
                 }
             }
         }
-        Job::Dense { model, op, rows, enqueued, resps } => {
+        Job::Dense { metrics, op, rows, enqueued, resps } => {
             // Per-row queueing time: lane wait (capacity / window) plus
             // pool queue, measured from each row's own submission.
             let queue_us: Vec<f64> =
                 enqueued.iter().map(|t| t.elapsed().as_secs_f64() * 1e6).collect();
             let nf = rows.len();
+            let exec_start = Instant::now();
             let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
                 // Batch first, then split: one [N^f, C_i]·[C_i, C_o]
                 // pass; a PartitionedPool backend shards *that*.
@@ -746,19 +869,18 @@ fn handle_job<B: Accelerator>(
             }));
             match run {
                 Ok(result) => {
+                    metrics.completed.add(nf as u64);
+                    // One shared pass → one execute sample; queue/total
+                    // are per row below (each row waited its own time).
+                    metrics.exec_us.record(exec_start.elapsed().as_micros() as u64);
+                    live.dense_flushes.inc();
+                    live.dense_rows.add(nf as u64);
+                    live.total_clocks.add(result.clocks);
+                    for (((output, resp), queue_us), row_enqueued) in
+                        result.outputs.into_iter().zip(resps).zip(queue_us).zip(enqueued)
                     {
-                        let mut s = stats.lock().expect("service stats");
-                        s.completed += nf as u64;
-                        s.dense_flushes += 1;
-                        s.dense_rows += nf as u64;
-                        s.total_clocks += result.clocks;
-                        if let Some(count) = s.per_model.get_mut(&*model) {
-                            *count += nf as u64;
-                        }
-                    }
-                    for ((output, resp), queue_us) in
-                        result.outputs.into_iter().zip(resps).zip(queue_us)
-                    {
+                        metrics.queue_us.record(queue_us as u64);
+                        metrics.total_us.record(row_enqueued.elapsed().as_micros() as u64);
                         let _ = resp.send(Ok(DenseResponse {
                             output,
                             rows_in_batch: nf,
@@ -770,7 +892,7 @@ fn handle_job<B: Accelerator>(
                     }
                 }
                 Err(payload) => {
-                    stats.lock().expect("service stats").failed += nf as u64;
+                    live.failed.add(nf as u64);
                     let reason = panic_reason(payload);
                     for resp in resps {
                         let _ = resp.send(Err(RunError {
@@ -888,7 +1010,7 @@ impl KrakenService {
                 let (tx, ticket) = Ticket::channel();
                 tickets.push(ticket);
                 Some(Job::Infer {
-                    model: Arc::clone(&entry.name),
+                    metrics: Arc::clone(&entry.metrics),
                     graph: Arc::clone(graph),
                     input,
                     enqueued: Instant::now(),
@@ -951,7 +1073,7 @@ impl KrakenService {
             }
         };
         match batch {
-            Some(batch) => inner.dispatch_dense(&entry.name, &lane.op, batch),
+            Some(batch) => inner.dispatch_dense(entry, &lane.op, batch),
             // Only a lane's first row changes the earliest deadline —
             // later rows are strictly newer, so no re-arm is needed.
             None if newly_armed && inner.window.is_some() => inner.flush.kick(),
@@ -979,6 +1101,51 @@ impl KrakenService {
         }
     }
 
+    /// Live, non-consuming view of the service: aggregate counters,
+    /// pool queue depth, and per-model latency histograms. Safe to call
+    /// from any thread while requests are in flight; counters are
+    /// internally consistent (`completed == per_model.values().sum()`)
+    /// because `completed` is derived from the same per-model atomics.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        let inner = self.inner();
+        // Histograms before counters: workers record a request's
+        // latency samples *after* bumping its completion counter, so
+        // reading in the opposite order here guarantees every snapshot
+        // shows latency-sample counts ≤ completion counts.
+        let latency = inner.latency_snapshots();
+        StatsSnapshot {
+            stats: inner.build_stats(inner.pool.worker_stats()),
+            queued: inner.pool.queued(),
+            peak_queued: inner.pool.peak_queued(),
+            latency,
+        }
+    }
+
+    /// Render this service's metrics (plus the process-global registry,
+    /// e.g. GEMM pack-cache counters) in Prometheus text exposition
+    /// format. Pool gauges are refreshed at render time.
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner();
+        inner.registry.gauge("kraken_pool_queue_depth").set(inner.pool.queued() as i64);
+        inner
+            .registry
+            .gauge("kraken_pool_queue_depth_peak")
+            .set(inner.pool.peak_queued() as i64);
+        for (i, w) in inner.pool.worker_stats().iter().enumerate() {
+            inner
+                .registry
+                .counter(&format!("kraken_worker_completed_total{{worker=\"{i}\"}}"))
+                .set_to(w.completed);
+            inner
+                .registry
+                .counter(&format!("kraken_worker_stolen_total{{worker=\"{i}\"}}"))
+                .set_to(w.stolen);
+        }
+        let mut out = inner.registry.render_prometheus();
+        out.push_str(&telemetry::global().render_prometheus());
+        out
+    }
+
     /// Drain (including any straggling dense rows) and stop, returning
     /// aggregate stats.
     pub fn shutdown(mut self) -> ServiceStats {
@@ -988,10 +1155,11 @@ impl KrakenService {
             Ok(inner) => inner,
             Err(_) => unreachable!("service inner uniquely owned once the flusher joined"),
         };
-        let worker_stats = inner.pool.shutdown();
-        let mut stats = inner.stats.lock().expect("service stats").clone();
-        stats.stolen = worker_stats.iter().map(|w| w.stolen).sum();
-        stats
+        // Destructure so stats can be assembled after the pool (one
+        // field) is consumed by its own shutdown.
+        let ServiceInner { pool, models, live, .. } = inner;
+        let per_worker = pool.shutdown();
+        assemble_stats(&models, &live, per_worker)
     }
 }
 
@@ -1000,6 +1168,38 @@ impl Drop for KrakenService {
     /// and the pool drains before the workers join.
     fn drop(&mut self) {
         self.finish();
+    }
+}
+
+/// Assemble a [`ServiceStats`] from the live atomics. A free function
+/// (not a `ServiceInner` method) so shutdown can still build stats
+/// after `pool.shutdown()` has consumed the pool field. `completed` is
+/// derived from the per-model counters so the consistency invariant
+/// (`completed == per_model.values().sum()`) holds in every snapshot.
+fn assemble_stats(
+    models: &HashMap<String, ModelEntry>,
+    live: &LiveStats,
+    per_worker: Vec<WorkerStats>,
+) -> ServiceStats {
+    let mut per_model = HashMap::new();
+    let mut completed = 0u64;
+    for (name, entry) in models {
+        let c = entry.metrics.completed.get();
+        completed += c;
+        per_model.insert(name.clone(), c);
+    }
+    ServiceStats {
+        completed,
+        failed: live.failed.get(),
+        total_device_ms: live.device_ms.get(),
+        total_clocks: live.total_clocks.get(),
+        workers: per_worker.len(),
+        stolen: per_worker.iter().map(|w| w.stolen).sum(),
+        dense_flushes: live.dense_flushes.get(),
+        dense_rows: live.dense_rows.get(),
+        window_flushes: live.window_flushes.get(),
+        per_model,
+        per_worker,
     }
 }
 
@@ -1219,6 +1419,84 @@ mod tests {
         assert_eq!(stats.dense_rows, 8);
         assert_eq!(stats.window_flushes, 0, "no window configured");
         assert_eq!(stats.per_model["fc"], 8);
+    }
+
+    #[test]
+    fn live_stats_snapshot_and_prometheus_render() {
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .backend(BackendKind::Functional)
+            .workers(2)
+            .batch_capacity(2)
+            .register_graph("tiny_cnn", tiny_cnn_graph())
+            .register_dense("fc", dense_op(12, 10))
+            .build();
+        let graph_tickets = service.submit_batch(
+            "tiny_cnn",
+            (0..3).map(|i| Tensor4::random([1, 28, 28, 3], 300 + i)),
+        );
+        let row_tickets: Vec<_> = (0..4)
+            .map(|i| service.submit("fc", Tensor4::random([1, 1, 1, 12], 400 + i).data))
+            .collect();
+        for t in graph_tickets {
+            t.wait().expect("graph response");
+        }
+        for t in row_tickets {
+            t.wait().expect("dense response");
+        }
+
+        // Live snapshot, no shutdown: counters must already be settled
+        // (metrics are recorded before the response is sent) and
+        // internally consistent.
+        let snap = service.stats_snapshot();
+        assert_eq!(snap.stats.completed, 7);
+        assert_eq!(snap.stats.per_model["tiny_cnn"], 3);
+        assert_eq!(snap.stats.per_model["fc"], 4);
+        assert_eq!(
+            snap.stats.completed,
+            snap.stats.per_model.values().sum::<u64>(),
+            "completed must equal the per-model sum in every snapshot"
+        );
+        assert_eq!(snap.stats.failed, 0);
+        assert_eq!(snap.stats.dense_flushes, 2, "4 rows at capacity 2");
+        assert_eq!(snap.stats.dense_rows, 4);
+        assert_eq!(snap.queued, 0, "all tickets resolved");
+        assert!(snap.peak_queued >= 1, "submissions must raise the high-water mark");
+        let cnn = &snap.latency["tiny_cnn"];
+        assert_eq!(cnn.total.count(), 3);
+        assert_eq!(cnn.queue.count(), 3);
+        assert_eq!(cnn.execute.count(), 3);
+        assert!(cnn.total.p99() >= cnn.total.p50(), "quantiles must be monotone");
+        let fc = &snap.latency["fc"];
+        assert_eq!(fc.total.count(), 4, "one total sample per row");
+        assert_eq!(fc.execute.count(), 2, "one execute sample per shared pass");
+
+        // The exposition carries the same counters with labels.
+        let text = service.render_prometheus();
+        assert!(
+            text.contains("kraken_requests_completed_total{model=\"tiny_cnn\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("kraken_requests_completed_total{model=\"fc\"} 4"), "{text}");
+        assert!(text.contains("# TYPE kraken_request_latency_us histogram"), "{text}");
+        assert!(
+            text.contains("kraken_request_latency_us_count{model=\"fc\",phase=\"total\"} 4"),
+            "{text}"
+        );
+        assert!(text.contains("kraken_pool_queue_depth 0"), "{text}");
+        assert!(text.contains("kraken_worker_completed_total{worker=\"0\"}"), "{text}");
+
+        // The final shutdown stats agree with the live snapshot.
+        let stats = service.shutdown();
+        assert_eq!(stats.completed, snap.stats.completed);
+        assert_eq!(stats.per_model, snap.stats.per_model);
+        assert_eq!(stats.dense_flushes, snap.stats.dense_flushes);
+        assert_eq!(stats.dense_rows, snap.stats.dense_rows);
+        assert_eq!(
+            stats.per_worker.iter().map(|w| w.completed).sum::<u64>(),
+            5,
+            "3 graph jobs + 2 dense flushes"
+        );
     }
 
     #[test]

@@ -62,6 +62,12 @@
 //!   work-stealing backend pool, with unified
 //!   `submit(model, payload) -> Ticket<T>` job tickets and capacity- or
 //!   deadline-triggered dense batching.
+//! * [`telemetry`] — crate-wide observability: a dependency-free
+//!   [`telemetry::Registry`] of atomic counters, gauges and
+//!   log2-bucketed latency histograms (Prometheus text exposition),
+//!   plus a bounded per-node trace-span ring ([`telemetry::trace`])
+//!   that renders pooled graph runs as Chrome `trace_event` per-worker
+//!   timelines.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
 
@@ -80,6 +86,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod tensor;
 
 pub use arch::KrakenConfig;

@@ -70,6 +70,18 @@ system:
                   scales ResNet-50's input (default 224, multiples
                   of 16)
   report R C      per-network §V metrics for configuration R×C
+
+observability:
+  stats [N]       serve N mixed requests (default 16) through a
+                  functional pool, then print the live telemetry
+                  snapshot — per-model latency quantiles, queue
+                  depth, worker counters — and the Prometheus text
+                  exposition
+  trace <net> [W] record per-node trace spans for one pooled run of
+                  net ∈ tiny_cnn|alexnet|resnet50|inception over W
+                  workers (default 4; resnet50 at 64×64 input) and
+                  write a Chrome trace_event file TRACE_<net>.json
+                  (open in chrome://tracing or Perfetto)
 ";
 
 fn main() {
@@ -112,6 +124,15 @@ fn main() {
             let n: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8);
             let engines: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
             serve(n, engines, partition, window_us, graph_par);
+        }
+        "stats" => {
+            let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
+            stats_cmd(n);
+        }
+        "trace" => {
+            let net = args.get(1).map(String::as_str).unwrap_or("resnet50");
+            let workers: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+            trace_cmd(net, workers);
         }
         "partition" => {
             let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
@@ -473,6 +494,131 @@ fn serve(n: usize, engines: usize, partition: usize, window_us: Option<u64>, gra
         wall,
         stats.completed as f64 / wall
     );
+}
+
+/// Drive a small mixed workload through a functional pool, then show
+/// what the telemetry layer sees: the live stats snapshot (counters,
+/// queue depth, per-model latency quantiles) and the Prometheus text
+/// exposition a scrape endpoint would serve.
+fn stats_cmd(n: usize) {
+    let (fc_ci, fc_co) = (64usize, 16usize);
+    let service = ServiceBuilder::new()
+        .backend(BackendKind::Functional)
+        .workers(2)
+        .batch_capacity(8)
+        .flush_window(std::time::Duration::from_micros(200))
+        .register_graph("tiny_cnn", tiny_cnn_graph())
+        .register_dense(
+            "ranker_fc",
+            DenseOp::new(
+                "ranker_fc",
+                fc_ci,
+                fc_co,
+                Tensor4::random([1, 1, fc_ci, fc_co], 77).data,
+                QParams::identity(),
+            ),
+        )
+        .build();
+    let graph_tickets = service
+        .submit_batch("tiny_cnn", (0..n).map(|i| Tensor4::random([1, 28, 28, 3], 7 + i as u64)));
+    let row_tickets: Vec<_> = (0..n)
+        .map(|i| {
+            service.submit("ranker_fc", Tensor4::random([1, 1, 1, fc_ci], 300 + i as u64).data)
+        })
+        .collect();
+    for t in graph_tickets {
+        t.wait().expect("graph response");
+    }
+    for t in row_tickets {
+        t.wait().expect("dense response");
+    }
+
+    let snap = service.stats_snapshot();
+    println!(
+        "live snapshot: {} completed ({} failed), {} dense rows in {} flushes \
+         ({} by deadline), queue {} (peak {})",
+        snap.stats.completed,
+        snap.stats.failed,
+        snap.stats.dense_rows,
+        snap.stats.dense_flushes,
+        snap.stats.window_flushes,
+        snap.queued,
+        snap.peak_queued
+    );
+    for w in &snap.stats.per_worker {
+        println!("  worker {}: {} jobs ({} stolen)", w.worker, w.completed, w.stolen);
+    }
+    let mut models: Vec<_> = snap.latency.iter().collect();
+    models.sort_by(|a, b| a.0.cmp(b.0));
+    println!(
+        "  {:<10} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "model", "count", "p50_us", "p95_us", "p99_us", "max_us", "queue_p50"
+    );
+    for (name, lat) in models {
+        println!(
+            "  {:<10} {:>6} {:>9} {:>9} {:>9} {:>9} {:>9}",
+            name,
+            lat.total.count(),
+            lat.total.p50(),
+            lat.total.p95(),
+            lat.total.p99(),
+            lat.total.max(),
+            lat.queue.p50()
+        );
+    }
+    println!("\nPrometheus exposition:\n{}", service.render_prometheus());
+    service.shutdown();
+}
+
+/// Record per-node trace spans for one pooled graph run and write them
+/// as a Chrome `trace_event` JSON file (`TRACE_<net>.json`), one
+/// timeline row per pool worker plus a `driver` row for host ops.
+fn trace_cmd(net: &str, workers: usize) {
+    use kraken::telemetry::trace;
+
+    let graph: ModelGraph = match net {
+        "tiny_cnn" => tiny_cnn_graph(),
+        "alexnet" => alexnet_graph(3000),
+        "inception" => inception_block_graph(64, 128, 32, 4),
+        "resnet50" => resnet50_graph_at(64),
+        other => {
+            eprintln!("unknown network '{other}' (tiny_cnn|alexnet|resnet50|inception)");
+            return;
+        }
+    };
+    let shape = graph.input_shape();
+    let x = Tensor4::random(shape, X_SEED);
+    let graph = std::sync::Arc::new(graph);
+    let pool = kraken::model::spawn_node_pool(workers, |_| Functional::new(KrakenConfig::paper()));
+
+    trace::enable(1 << 16);
+    let report = kraken::model::run_graph_on_pool(&pool, &graph, &x).expect("traced run");
+    trace::disable();
+    let spans = trace::drain();
+    pool.shutdown();
+
+    let mut per_worker = std::collections::BTreeMap::new();
+    for s in &spans {
+        *per_worker.entry(s.worker).or_insert(0usize) += 1;
+    }
+    println!(
+        "traced {} over {workers} workers: {} nodes, {} spans (request {})",
+        net,
+        graph.nodes().len(),
+        spans.len(),
+        report.request_id
+    );
+    for (worker, count) in &per_worker {
+        if *worker == trace::DRIVER_WORKER {
+            println!("  driver: {count} spans (host ops)");
+        } else {
+            println!("  worker {worker}: {count} spans");
+        }
+    }
+    let json = trace::chrome_trace_json(&spans);
+    let path = format!("TRACE_{net}.json");
+    std::fs::write(&path, json).expect("write trace file");
+    println!("wrote {path} — open in chrome://tracing or https://ui.perfetto.dev");
 }
 
 /// Topology table of one executable model graph: every node in

@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::backend::{Accelerator, LayerData, LayerOutput};
 use crate::metrics::Counters;
+use crate::telemetry::trace::{self, SpanKind};
 use crate::tensor::Tensor4;
 
 use super::graph::{AccelStage, ModelGraph, NodeId, NodeOp};
@@ -44,6 +45,11 @@ impl std::error::Error for RunError {}
 /// pipeline report.
 #[derive(Debug, Clone)]
 pub struct GraphReport {
+    /// Process-unique id of this graph execution
+    /// ([`crate::telemetry::trace::next_request_id`]); trace spans
+    /// recorded during the run carry the same id, so one request's
+    /// timeline can be filtered out of a shared span ring.
+    pub request_id: u64,
     /// Raw int32 accumulators of the graph's pinned logits node
     /// ([`ModelGraph::logits_node`]: the accelerated ancestor of
     /// `Output` latest in topo order — the classifier layer in every
@@ -175,6 +181,7 @@ pub(crate) struct NodeRecord {
 /// executor's per-node sum (`true`) or the pooled schedule's critical
 /// path (`false`).
 pub(crate) fn assemble_report(
+    request_id: u64,
     graph: &ModelGraph,
     records: Vec<Option<NodeRecord>>,
     logits: Option<Vec<i32>>,
@@ -213,6 +220,7 @@ pub(crate) fn assemble_report(
         }
     }
     GraphReport {
+        request_id,
         logits: logits.unwrap_or_else(|| output.data.iter().map(|&v| v as i32).collect()),
         total_clocks: node_clocks.iter().map(|(_, c)| c).sum(),
         critical_path_clocks,
@@ -247,6 +255,7 @@ pub fn run_graph<B: Accelerator + ?Sized>(
     if x.shape != graph.input_shape() {
         return Err(input_shape_error(graph, x.shape));
     }
+    let request = trace::next_request_id();
     let before = backend.counters();
     let nodes = graph.nodes();
     let mut acts: Vec<Option<Arc<Tensor4<i8>>>> = vec![None; nodes.len()];
@@ -264,6 +273,7 @@ pub fn run_graph<B: Accelerator + ?Sized>(
             .map(|&NodeId(j)| take_input(&mut acts, &mut uses, j))
             .collect();
 
+        let span = trace::span_start();
         let out: Arc<Tensor4<i8>> = match &node.op {
             NodeOp::Accel(stage) => {
                 let mut ins = ins;
@@ -276,9 +286,25 @@ pub fn run_graph<B: Accelerator + ?Sized>(
                 if graph.logits_node() == Some(i) {
                     logits = Some(out.y_acc.data);
                 }
+                if let Some(s) = span {
+                    s.finish(
+                        request,
+                        i,
+                        &stage.layer.name,
+                        SpanKind::Accel,
+                        trace::DRIVER_WORKER,
+                        out.clocks,
+                    );
+                }
                 Arc::new(out.y_q)
             }
-            op => eval_host(op, ins, x),
+            op => {
+                let out = eval_host(op, ins, x);
+                if let Some(s) = span {
+                    s.finish(request, i, &op.label(), SpanKind::Host, trace::DRIVER_WORKER, 0);
+                }
+                out
+            }
         };
 
         if i == graph.output_index() {
@@ -292,7 +318,7 @@ pub fn run_graph<B: Accelerator + ?Sized>(
     drop(acts);
     let output = into_owned(final_out.expect("validated graph has an output node"));
     let counters = backend.counters().diff(&before);
-    Ok(assemble_report(graph, records, logits, output, counters, true))
+    Ok(assemble_report(request, graph, records, logits, output, counters, true))
 }
 
 #[cfg(test)]

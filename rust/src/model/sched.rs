@@ -24,12 +24,12 @@
 //! block), or done; drivers never wait on each other.
 
 use std::panic::AssertUnwindSafe;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 
 use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
 use crate::backend::Accelerator;
 use crate::metrics::Counters;
+use crate::telemetry::trace::{self, SpanKind};
 use crate::tensor::Tensor4;
 
 use super::exec::{
@@ -37,10 +37,6 @@ use super::exec::{
     GraphReport, NodeRecord, RunError,
 };
 use super::graph::{ModelGraph, NodeId, NodeOp};
-
-/// Distinguishes one in-flight request's sibling work from every other
-/// request sharing the pool.
-static NEXT_REQUEST: AtomicU64 = AtomicU64::new(0);
 
 /// One accelerated node of one request, dispatched to a pool sibling.
 /// Opaque outside the scheduler: embedders queue it (possibly wrapped
@@ -85,12 +81,16 @@ struct NodeDone {
 /// actually ran the node (`usize::MAX` when the driver ran it inline —
 /// the serving layer substitutes the driver's own index).
 pub fn run_node_task<B: Accelerator + ?Sized>(worker: usize, backend: &mut B, task: NodeTask) {
-    let NodeTask { node, graph, input, keep_acc, resp, .. } = task;
+    let NodeTask { request, node, graph, input, keep_acc, resp } = task;
     let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
         let NodeOp::Accel(stage) = &graph.nodes()[node].op else {
             panic!("node task {node} is not an accelerated node");
         };
+        let span = trace::span_start();
         let out = eval_accel(backend, stage, input);
+        if let Some(s) = span {
+            s.finish(request, node, &stage.layer.name, SpanKind::Accel, worker, out.clocks);
+        }
         NodeDone {
             y_q: Arc::new(out.y_q),
             y_acc: keep_acc.then(|| out.y_acc.data),
@@ -172,7 +172,7 @@ pub fn run_graph_scheduled<D: NodeDispatcher + ?Sized>(
     if x.shape != graph.input_shape() {
         return Err(input_shape_error(graph, x.shape));
     }
-    let request = NEXT_REQUEST.fetch_add(1, Ordering::Relaxed);
+    let request = trace::next_request_id();
     let nodes = graph.nodes();
     let n = nodes.len();
     let mut acts: Vec<Option<Arc<Tensor4<i8>>>> = vec![None; n];
@@ -279,7 +279,18 @@ pub fn run_graph_scheduled<D: NodeDispatcher + ?Sized>(
                 .iter()
                 .map(|&NodeId(j)| take_input(&mut acts, &mut uses, j))
                 .collect();
+            let span = trace::span_start();
             let out = eval_host(&nodes[i].op, ins, x);
+            if let Some(s) = span {
+                s.finish(
+                    request,
+                    i,
+                    &nodes[i].op.label(),
+                    SpanKind::Host,
+                    trace::DRIVER_WORKER,
+                    0,
+                );
+            }
             if i == graph.output_index() {
                 final_out = Some(Arc::clone(&out));
             }
@@ -291,7 +302,7 @@ pub fn run_graph_scheduled<D: NodeDispatcher + ?Sized>(
 
     drop(acts);
     let output = into_owned(final_out.expect("validated graph has an output node"));
-    Ok(assemble_report(graph, records, logits, output, counters, false))
+    Ok(assemble_report(request, graph, records, logits, output, counters, false))
 }
 
 #[cfg(test)]

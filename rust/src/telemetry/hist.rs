@@ -1,0 +1,270 @@
+//! Log2-bucketed latency histograms with lock-free recording.
+//!
+//! A [`Histogram`] is 65 `AtomicU64` buckets: bucket 0 counts exact
+//! zeros, bucket `i` (1 ≤ i ≤ 64) counts values `v` with
+//! `2^(i-1) ≤ v < 2^i` — i.e. `i = 64 - v.leading_zeros()`. Recording
+//! is a single relaxed `fetch_add` plus a `fetch_max` for the running
+//! maximum, so the serving hot path never takes a lock and never
+//! allocates. Quantiles are answered from a [`HistogramSnapshot`] by
+//! walking the cumulative distribution and interpolating linearly
+//! inside the landing bucket, clamped to the observed maximum so the
+//! coarse top buckets cannot inflate the tail beyond what was seen.
+//! Snapshots merge bucket-wise, which is what makes per-shard
+//! histograms recombinable into a whole.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets: one for zero plus one per power-of-two range.
+pub const BUCKETS: usize = 65;
+
+/// Index of the bucket that counts `v`.
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        64 - v.leading_zeros() as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+fn bucket_lower(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i`.
+fn bucket_upper(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else if i >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// Lock-free log2 histogram. Shared by handle ([`super::Histogram`])
+/// or embedded directly; all methods take `&self`.
+#[derive(Debug)]
+pub struct HistogramCore {
+    buckets: [AtomicU64; BUCKETS],
+    /// Saturating sum of recorded values (`u64::MAX` means "at least").
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for HistogramCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistogramCore {
+    pub fn new() -> Self {
+        HistogramCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Lock-free; safe from any thread.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        // Saturating add so a handful of huge samples can't wrap the
+        // sum back past zero and corrupt the reported mean.
+        let mut cur = self.sum.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(v);
+            match self
+                .sum
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counts. Concurrent `record`s may land
+    /// in either side of the snapshot; each bucket is individually
+    /// consistent and the total count is the bucket sum, so quantile
+    /// math never sees a rank beyond the last bucket.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; BUCKETS];
+        for (b, cell) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *b = cell.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            buckets,
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable copy of a histogram's state; all quantile math lives here.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub buckets: [u64; BUCKETS],
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot {
+            buckets: [0; BUCKETS],
+            sum: 0,
+            max: 0,
+        }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Total number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Mean of recorded values (0.0 when empty). The sum saturates at
+    /// `u64::MAX`, so the mean is a lower bound after extreme inputs.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]`.
+    ///
+    /// Walks the cumulative counts to the bucket holding rank
+    /// `ceil(q * count)` and interpolates linearly inside it, then
+    /// clamps to the observed maximum. Monotone in `q` by
+    /// construction: rank is nondecreasing, buckets are ordered, and
+    /// in-bucket interpolation is nondecreasing in rank.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        let mut before = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let cum = before.saturating_add(c);
+            if cum >= rank {
+                let lo = bucket_lower(i);
+                let hi = bucket_upper(i).min(self.max.max(lo));
+                if hi <= lo {
+                    return lo.min(self.max);
+                }
+                // rank ∈ [before+1, cum]; map it across [lo, hi].
+                let pos = (rank - before - 1) as f64;
+                let frac = if c > 1 { pos / (c - 1) as f64 } else { 1.0 };
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est.round() as u64).clamp(lo, hi);
+            }
+            before = cum;
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.quantile(0.999)
+    }
+
+    /// Largest value ever recorded.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Fold another snapshot into this one (bucket-wise saturating
+    /// add). Merging per-shard snapshots yields exactly the snapshot
+    /// of a single histogram that saw every shard's samples.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Cumulative `(upper_bound, cumulative_count)` pairs for every
+    /// non-empty bucket, in ascending order — the shape Prometheus
+    /// text exposition wants (`+Inf` is appended by the renderer).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum = cum.saturating_add(c);
+            out.push((bucket_upper(i), cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_index(1u64 << 63), 64);
+        assert_eq!(bucket_index((1u64 << 63) - 1), 63);
+    }
+
+    #[test]
+    fn bounds_are_consistent() {
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_index(bucket_lower(i)), i);
+            assert_eq!(bucket_index(bucket_upper(i)), i);
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = HistogramCore::new();
+        let s = h.snapshot();
+        assert!(s.is_empty());
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.quantile(0.5), 0);
+        assert_eq!(s.max(), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Crate-wide telemetry: dependency-free metrics and tracing.
+//!
+//! The Kraken paper's claims are distributional — per-layer clock and
+//! DRAM budgets, end-to-end fps (Tables VI–VIII) — so the reproduction
+//! needs to *observe* a running service, not just dump totals at
+//! shutdown. This module supplies the three pieces every later
+//! ingress/planner PR reports through:
+//!
+//! * **[`Registry`]** — named atomic [`Counter`]s, [`Gauge`]s and
+//!   log2-bucketed [`Histogram`]s ([`hist`]). Recording is lock-free
+//!   (one relaxed `fetch_add`); quantiles (p50/p95/p99/p999 + max)
+//!   come from mergeable [`HistogramSnapshot`]s with in-bucket linear
+//!   interpolation. [`Registry::render_prometheus`] emits text
+//!   exposition format. Each `KrakenService` owns a private registry;
+//!   [`global()`] holds process-wide backend counters (GEMM pack-cache
+//!   hits/misses).
+//! * **[`trace`]** — a bounded ring of per-node [`trace::SpanEvent`]s
+//!   (node id, op kind, worker, start/duration, modeled clocks),
+//!   recorded by both graph executors when armed via
+//!   [`trace::enable`], and rendered to Chrome `trace_event` JSON by
+//!   [`trace::chrome_trace_json`] — a pooled ResNet-50 run becomes a
+//!   per-worker timeline in `chrome://tracing`.
+//! * **[`AtomicF64`]** — CAS-on-bits accumulator for fractional
+//!   aggregates (modeled device milliseconds).
+//!
+//! Everything here is `std`-only, in keeping with the crate's
+//! dependency-free policy.
+
+pub mod hist;
+pub mod trace;
+
+mod registry;
+
+pub use hist::{HistogramSnapshot, BUCKETS};
+pub use registry::{global, AtomicF64, Counter, Gauge, Histogram, Registry};

@@ -1,0 +1,307 @@
+//! Metric registry: named atomic counters, gauges and histograms plus
+//! a Prometheus text-exposition renderer.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are `Arc`-backed and
+//! cheap to clone; the registry lock is taken only at registration and
+//! render time, never on the record path. Metric names may embed
+//! Prometheus labels directly — `requests_total{model="resnet50"}` —
+//! and the renderer groups label variants under one `# TYPE` line.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::hist::{HistogramCore, HistogramSnapshot};
+
+/// Monotone counter handle. Clones share the same cell.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Overwrite the counter. Intended for mirroring an externally
+    /// maintained monotone count (e.g. per-worker pool cells refreshed
+    /// at render time), not for general use.
+    pub fn set_to(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time gauge handle (signed, settable). Clones share state.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Shared-handle wrapper over [`HistogramCore`]. Clones share buckets.
+#[derive(Debug, Clone, Default)]
+pub struct Histogram(Arc<HistogramCore>);
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        self.0.snapshot()
+    }
+}
+
+/// Atomic `f64` accumulator (CAS on the bit pattern). Used for modeled
+/// device milliseconds, which are fractional and additive.
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    pub fn add(&self, d: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + d).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A named collection of metrics. `KrakenService` owns one per service
+/// instance (so tests and side-by-side services never share state);
+/// process-wide backend counters live in [`super::global`].
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or register the counter `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric kind.
+    pub fn counter(&self, name: &str) -> Counter {
+        match self.get_or_insert(name, || Metric::Counter(Counter::new())) {
+            Metric::Counter(c) => c,
+            other => panic!("metric `{name}` already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get or register the gauge `name`. Panics on a kind clash.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        match self.get_or_insert(name, || Metric::Gauge(Gauge::new())) {
+            Metric::Gauge(g) => g,
+            other => panic!("metric `{name}` already registered as {}", other.kind()),
+        }
+    }
+
+    /// Get or register the histogram `name`. Panics on a kind clash.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        match self.get_or_insert(name, || Metric::Histogram(Histogram::new())) {
+            Metric::Histogram(h) => h,
+            other => panic!("metric `{name}` already registered as {}", other.kind()),
+        }
+    }
+
+    fn get_or_insert(&self, name: &str, make: impl FnOnce() -> Metric) -> Metric {
+        let mut map = self.metrics.lock().expect("registry poisoned");
+        map.entry(name.to_string()).or_insert_with(make).clone()
+    }
+
+    /// Render every metric in Prometheus text exposition format.
+    ///
+    /// Registered names may carry labels (`name{k="v"}`); variants of
+    /// the same base name share one `# TYPE` line (BTreeMap ordering
+    /// keeps them adjacent). Histograms expand to cumulative
+    /// `_bucket{le="..."}` series plus `_sum` and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let map = self.metrics.lock().expect("registry poisoned");
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, metric) in map.iter() {
+            let (base, labels) = split_labels(name);
+            if base != last_base {
+                let _ = writeln!(out, "# TYPE {base} {}", metric.kind());
+                last_base = base.to_string();
+            }
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "{name} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "{name} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let snap = h.snapshot();
+                    let count = snap.count();
+                    for (upper, cum) in snap.cumulative_buckets() {
+                        let _ = writeln!(
+                            out,
+                            "{}_bucket{{{}le=\"{upper}\"}} {cum}",
+                            base,
+                            label_prefix(labels)
+                        );
+                    }
+                    let _ = writeln!(
+                        out,
+                        "{}_bucket{{{}le=\"+Inf\"}} {count}",
+                        base,
+                        label_prefix(labels)
+                    );
+                    let (sum_name, count_name) = match labels {
+                        Some(l) => (format!("{base}_sum{{{l}}}"), format!("{base}_count{{{l}}}")),
+                        None => (format!("{base}_sum"), format!("{base}_count")),
+                    };
+                    let _ = writeln!(out, "{sum_name} {}", snap.sum);
+                    let _ = writeln!(out, "{count_name} {count}");
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Split `name{k="v"}` into `("name", Some("k=\"v\""))`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.find('{') {
+        Some(i) => (&name[..i], Some(name[i + 1..].trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Labels followed by a comma, or empty — for splicing before `le=`.
+fn label_prefix(labels: Option<&str>) -> String {
+    match labels {
+        Some(l) if !l.is_empty() => format!("{l},"),
+        _ => String::new(),
+    }
+}
+
+/// The process-global registry. Holds metrics that have no service to
+/// hang off — e.g. the GEMM pack-cache hit/miss counters incremented
+/// deep inside `backend::functional`.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("jobs_total");
+        c.add(3);
+        r.counter("jobs_total").inc();
+        assert_eq!(c.get(), 4);
+        let g = r.gauge("depth");
+        g.set(-2);
+        assert_eq!(r.gauge("depth").get(), -2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_clash_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        r.gauge("x");
+    }
+
+    #[test]
+    fn prometheus_render_groups_label_variants() {
+        let r = Registry::new();
+        r.counter("req_total{model=\"a\"}").add(1);
+        r.counter("req_total{model=\"b\"}").add(2);
+        let text = r.render_prometheus();
+        assert_eq!(text.matches("# TYPE req_total counter").count(), 1);
+        assert!(text.contains("req_total{model=\"a\"} 1"));
+        assert!(text.contains("req_total{model=\"b\"} 2"));
+    }
+
+    #[test]
+    fn prometheus_render_histogram_shape() {
+        let r = Registry::new();
+        let h = r.histogram("lat_us{model=\"m\"}");
+        h.record(0);
+        h.record(5);
+        h.record(5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE lat_us histogram"));
+        assert!(text.contains("lat_us_bucket{model=\"m\",le=\"0\"} 1"));
+        assert!(text.contains("lat_us_bucket{model=\"m\",le=\"7\"} 3"));
+        assert!(text.contains("lat_us_bucket{model=\"m\",le=\"+Inf\"} 3"));
+        assert!(text.contains("lat_us_sum{model=\"m\"} 10"));
+        assert!(text.contains("lat_us_count{model=\"m\"} 3"));
+    }
+}

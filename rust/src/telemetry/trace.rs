@@ -1,0 +1,288 @@
+//! Per-node trace spans: a bounded global ring of [`SpanEvent`]s and a
+//! Chrome `trace_event` JSON writer.
+//!
+//! Recording is off by default and costs one relaxed atomic load per
+//! node when disabled. [`enable`] clears the ring and arms recording;
+//! the executors ([`crate::model::run_graph`] and the pool scheduler in
+//! [`crate::model::sched`]) then push one span per graph node with the
+//! worker that ran it, wall-clock start/duration in microseconds since
+//! the process trace epoch, and the node's modeled device clocks. The
+//! ring is bounded: once `capacity` spans are held the oldest are
+//! dropped (and counted), so tracing can stay on under load without
+//! growing without bound.
+//!
+//! [`chrome_trace_json`] renders spans as `"ph":"X"` complete events —
+//! one timeline row per worker — loadable in `chrome://tracing` or
+//! Perfetto. Request ids let a single run be filtered out of a ring
+//! that several concurrent requests share.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Sentinel worker index for spans executed on the driving thread
+/// (serial executor, host ops, inline reclaim) rather than a pool
+/// worker.
+pub const DRIVER_WORKER: usize = usize::MAX;
+
+/// What kind of node a span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// An accelerated layer (conv / FC / matmul) run through a backend.
+    Accel,
+    /// A host op (pool, residual add, concat, requant, reshape, I/O).
+    Host,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Accel => "accel",
+            SpanKind::Host => "host",
+        }
+    }
+}
+
+/// One executed graph node.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Request id of the graph run this node belonged to.
+    pub request: u64,
+    /// Node id within the graph.
+    pub node: usize,
+    /// Layer name or host-op label.
+    pub name: String,
+    pub kind: SpanKind,
+    /// Pool worker index, or [`DRIVER_WORKER`].
+    pub worker: usize,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Wall-clock duration in microseconds.
+    pub dur_us: u64,
+    /// Modeled device clocks for the node (0 for host ops).
+    pub clocks: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    cap: usize,
+    buf: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_REQUEST: AtomicU64 = AtomicU64::new(1);
+
+fn ring() -> &'static Mutex<Ring> {
+    static RING: OnceLock<Mutex<Ring>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(Ring::default()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Process-unique request id for one graph execution. Shared by the
+/// serial executor, the pool scheduler and the serving layer so spans
+/// from any path can be correlated.
+pub fn next_request_id() -> u64 {
+    NEXT_REQUEST.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Arm span recording with a ring of at most `capacity` spans. Clears
+/// any previously recorded spans.
+pub fn enable(capacity: usize) {
+    let mut r = ring().lock().expect("trace ring poisoned");
+    r.cap = capacity.max(1);
+    r.buf.clear();
+    r.dropped = 0;
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Disarm recording. Recorded spans stay in the ring until the next
+/// [`enable`] or [`drain`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Release);
+}
+
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// Microseconds since the process trace epoch.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Start-of-span marker; cheap to construct, records on [`finish`].
+/// `None` when tracing is disabled, so the hot path pays one atomic
+/// load.
+///
+/// [`finish`]: SpanStart::finish
+#[derive(Debug)]
+pub struct SpanStart {
+    start_us: u64,
+    at: Instant,
+}
+
+#[inline]
+pub fn span_start() -> Option<SpanStart> {
+    if is_enabled() {
+        Some(SpanStart {
+            start_us: now_us(),
+            at: Instant::now(),
+        })
+    } else {
+        None
+    }
+}
+
+impl SpanStart {
+    /// Record the span into the ring.
+    pub fn finish(self, request: u64, node: usize, name: &str, kind: SpanKind, worker: usize, clocks: u64) {
+        let dur_us = self.at.elapsed().as_micros() as u64;
+        record(SpanEvent {
+            request,
+            node,
+            name: name.to_string(),
+            kind,
+            worker,
+            start_us: self.start_us,
+            dur_us,
+            clocks,
+        });
+    }
+}
+
+/// Push a span into the ring (drops the oldest when full). No-op when
+/// recording is disabled.
+pub fn record(span: SpanEvent) {
+    if !is_enabled() {
+        return;
+    }
+    let mut r = ring().lock().expect("trace ring poisoned");
+    if r.cap == 0 {
+        return;
+    }
+    while r.buf.len() >= r.cap {
+        r.buf.pop_front();
+        r.dropped += 1;
+    }
+    r.buf.push_back(span);
+}
+
+/// Take every recorded span out of the ring (oldest first).
+pub fn drain() -> Vec<SpanEvent> {
+    let mut r = ring().lock().expect("trace ring poisoned");
+    r.buf.drain(..).collect()
+}
+
+/// Number of spans evicted because the ring was full, since the last
+/// [`enable`].
+pub fn dropped() -> u64 {
+    ring().lock().expect("trace ring poisoned").dropped
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Chrome `tid` for a span's worker; the driver thread gets a fixed
+/// high row so pool workers stay 0..N in the timeline.
+fn chrome_tid(worker: usize) -> u64 {
+    if worker == DRIVER_WORKER {
+        999_999
+    } else {
+        worker as u64
+    }
+}
+
+/// Render spans as a Chrome `trace_event` JSON document: one
+/// `"ph":"X"` complete event per span plus `thread_name` metadata so
+/// the timeline shows `worker 0..N` and `driver` rows. Open the output
+/// in `chrome://tracing` or <https://ui.perfetto.dev>.
+pub fn chrome_trace_json(spans: &[SpanEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut workers: Vec<usize> = spans.iter().map(|s| s.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+    for w in &workers {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let name = if *w == DRIVER_WORKER {
+            "driver".to_string()
+        } else {
+            format!("worker {w}")
+        };
+        let _ = write!(
+            out,
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{},\"args\":{{\"name\":\"{}\"}}}}",
+            chrome_tid(*w),
+            escape_json(&name)
+        );
+    }
+    for s in spans {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"request\":{},\"node\":{},\"clocks\":{}}}}}",
+            escape_json(&s.name),
+            s.kind.label(),
+            s.start_us,
+            s.dur_us,
+            chrome_tid(s.worker),
+            s.request,
+            s.node,
+            s.clocks
+        );
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_json_escapes_names() {
+        let spans = vec![SpanEvent {
+            request: 1,
+            node: 0,
+            name: "odd\"name\\".to_string(),
+            kind: SpanKind::Host,
+            worker: DRIVER_WORKER,
+            start_us: 10,
+            dur_us: 2,
+            clocks: 0,
+        }];
+        let json = chrome_trace_json(&spans);
+        assert!(json.contains("odd\\\"name\\\\"));
+        assert!(json.contains("\"tid\":999999"));
+        assert!(json.ends_with("\"displayTimeUnit\":\"ms\"}"));
+    }
+}

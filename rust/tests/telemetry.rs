@@ -1,0 +1,484 @@
+//! The telemetry layer, end to end: histogram quantile edge cases,
+//! merge-of-shards equivalence, concurrent recording, per-node trace
+//! spans from a pooled graph run (with a hand-rolled JSON well-formed
+//! check on the Chrome export — no serde in the offline build), and
+//! live `stats_snapshot` consistency under concurrent submitters.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::Functional;
+use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+use kraken::model::{run_graph_on_pool, spawn_node_pool};
+use kraken::networks::resnet50_graph_at;
+use kraken::networks::tiny_cnn_graph;
+use kraken::quant::QParams;
+use kraken::telemetry::hist::HistogramCore;
+use kraken::telemetry::trace::{self, SpanKind};
+use kraken::tensor::Tensor4;
+
+// ---------------------------------------------------------------- hist
+
+#[test]
+fn histogram_boundaries_zero_one_max() {
+    let h = HistogramCore::new();
+    h.record(0);
+    h.record(1);
+    h.record(u64::MAX);
+    let s = h.snapshot();
+    assert_eq!(s.count(), 3);
+    assert_eq!(s.max(), u64::MAX);
+    assert_eq!(s.sum, u64::MAX, "sum must saturate, not wrap");
+    // Rank 1 → the zero bucket; rank 2 → the [1,1] bucket; rank 3 →
+    // the top bucket clamped to the observed maximum.
+    assert_eq!(s.quantile(0.01), 0);
+    assert_eq!(s.quantile(0.5), 1);
+    assert_eq!(s.quantile(0.99), u64::MAX);
+    assert_eq!(s.p999(), u64::MAX);
+}
+
+#[test]
+fn histogram_quantiles_are_monotone_in_q() {
+    let h = HistogramCore::new();
+    // Deterministic spread over several orders of magnitude.
+    let mut x = 0x2545F4914F6CDD1Du64;
+    for _ in 0..10_000 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        h.record(x % 1_000_000);
+    }
+    let s = h.snapshot();
+    let mut prev = 0u64;
+    for i in 0..=1000 {
+        let q = i as f64 / 1000.0;
+        let v = s.quantile(q);
+        assert!(v >= prev, "quantile({q}) = {v} < quantile at previous q = {prev}");
+        prev = v;
+    }
+    assert!(s.quantile(1.0) <= s.max());
+    assert!(s.p50() <= s.p95() && s.p95() <= s.p99() && s.p99() <= s.p999());
+}
+
+#[test]
+fn merged_shard_snapshots_equal_the_whole() {
+    // Four per-shard histograms and one histogram that saw every
+    // sample: bucket-wise merge of the shard snapshots must equal the
+    // whole's snapshot exactly (this is what makes per-worker
+    // histograms recombinable).
+    let shards: Vec<HistogramCore> = (0..4).map(|_| HistogramCore::new()).collect();
+    let whole = HistogramCore::new();
+    let mut x = 99u64;
+    for i in 0..40_000u64 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let v = x % 100_000;
+        shards[(i % 4) as usize].record(v);
+        whole.record(v);
+    }
+    let mut merged = shards[0].snapshot();
+    for shard in &shards[1..] {
+        merged.merge(&shard.snapshot());
+    }
+    assert_eq!(merged, whole.snapshot());
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    let h = Arc::new(HistogramCore::new());
+    let threads = 8usize;
+    let per_thread = 10_000u64;
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let h = Arc::clone(&h);
+            std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    h.record((t as u64 + i) % 7);
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("recorder thread");
+    }
+    let s = h.snapshot();
+    assert_eq!(s.count(), threads as u64 * per_thread);
+    let expected_sum: u64 = (0..threads as u64)
+        .map(|t| (0..per_thread).map(|i| (t + i) % 7).sum::<u64>())
+        .sum();
+    assert_eq!(s.sum, expected_sum, "relaxed atomics must still lose no sample");
+}
+
+// --------------------------------------------------------------- trace
+
+/// Minimal recursive-descent JSON reader: validates well-formedness
+/// (the offline build has no serde). Returns the remaining input on
+/// success; panics with context on malformed input.
+struct JsonCheck<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> JsonCheck<'a> {
+    fn new(s: &'a str) -> Self {
+        JsonCheck { s: s.as_bytes(), i: 0 }
+    }
+
+    fn peek(&self) -> u8 {
+        assert!(self.i < self.s.len(), "unexpected end of JSON at byte {}", self.i);
+        self.s[self.i]
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && (self.s[self.i] as char).is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) {
+        self.skip_ws();
+        assert_eq!(
+            self.peek(),
+            c,
+            "expected '{}' at byte {}, found '{}'",
+            c as char,
+            self.i,
+            self.peek() as char
+        );
+        self.i += 1;
+    }
+
+    fn value(&mut self) {
+        self.skip_ws();
+        match self.peek() {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => self.string(),
+            b't' => self.literal(b"true"),
+            b'f' => self.literal(b"false"),
+            b'n' => self.literal(b"null"),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) {
+        self.expect(b'{');
+        self.skip_ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.skip_ws();
+            self.string();
+            self.expect(b':');
+            self.value();
+            self.skip_ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return;
+                }
+                c => panic!("expected ',' or '}}' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) {
+        self.expect(b'[');
+        self.skip_ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return;
+        }
+        loop {
+            self.value();
+            self.skip_ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return;
+                }
+                c => panic!("expected ',' or ']' at byte {}, found '{}'", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) {
+        self.expect(b'"');
+        loop {
+            let c = self.peek();
+            self.i += 1;
+            match c {
+                b'"' => return,
+                b'\\' => {
+                    let esc = self.peek();
+                    self.i += 1;
+                    assert!(
+                        matches!(esc, b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't' | b'u'),
+                        "bad escape '\\{}' at byte {}",
+                        esc as char,
+                        self.i
+                    );
+                    if esc == b'u' {
+                        for _ in 0..4 {
+                            assert!(
+                                (self.peek() as char).is_ascii_hexdigit(),
+                                "bad \\u escape at byte {}",
+                                self.i
+                            );
+                            self.i += 1;
+                        }
+                    }
+                }
+                c => assert!(c >= 0x20, "unescaped control byte {c:#x} in string"),
+            }
+        }
+    }
+
+    fn number(&mut self) {
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        assert!(self.i > start, "expected a JSON value at byte {start}");
+    }
+
+    fn literal(&mut self, lit: &[u8]) {
+        assert!(
+            self.s[self.i..].starts_with(lit),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += lit.len();
+    }
+
+    fn finish(mut self) {
+        self.skip_ws();
+        assert_eq!(self.i, self.s.len(), "trailing bytes after the JSON document");
+    }
+}
+
+/// One test owns every interaction with the global span ring (tests in
+/// this binary run on parallel threads; splitting this up would race on
+/// `enable`/`drain`).
+#[test]
+fn pooled_resnet_run_records_one_span_per_node() {
+    let graph = Arc::new(resnet50_graph_at(32));
+    let pool = spawn_node_pool(4, |_| Functional::new(KrakenConfig::paper()));
+    let x = Tensor4::random(graph.input_shape(), 11);
+
+    trace::enable(1 << 16);
+    let report = run_graph_on_pool(&pool, &graph, &x).expect("traced resnet run");
+    trace::disable();
+    let spans: Vec<_> = trace::drain()
+        .into_iter()
+        .filter(|s| s.request == report.request_id)
+        .collect();
+    pool.shutdown();
+
+    // Exactly one span per graph node, each node covered once.
+    let n = graph.nodes().len();
+    assert_eq!(spans.len(), n, "one span per node");
+    let mut seen = vec![false; n];
+    for s in &spans {
+        assert!(!seen[s.node], "node {} recorded twice", s.node);
+        seen[s.node] = true;
+    }
+    assert!(seen.iter().all(|&b| b), "every node must be covered");
+
+    // Kinds match the graph: accel nodes from pool workers (or the
+    // driver when reclaimed inline), host ops always on the driver.
+    let by_node: Vec<&trace::SpanEvent> = {
+        let mut v: Vec<&trace::SpanEvent> = spans.iter().collect();
+        v.sort_by_key(|s| s.node);
+        v
+    };
+    for (node, span) in graph.nodes().iter().zip(&by_node) {
+        let is_accel = matches!(node.op, kraken::model::NodeOp::Accel(_));
+        match span.kind {
+            SpanKind::Accel => assert!(is_accel, "accel span on host node {}", span.node),
+            SpanKind::Host => {
+                assert!(!is_accel, "host span on accel node {}", span.node);
+                assert_eq!(span.worker, trace::DRIVER_WORKER, "host ops run on the driver");
+            }
+        }
+    }
+
+    // Dependency nesting: a node's span cannot start before every
+    // input's span has ended (floor arithmetic keeps this exact:
+    // ⌊a⌋ + ⌊b⌋ ≤ ⌊a + b⌋ and ends precede dependent starts in real
+    // time, across threads, because Instant is monotonic).
+    for (i, node) in graph.nodes().iter().enumerate() {
+        for input in &node.inputs {
+            let (si, sj) = (by_node[i], by_node[input.0]);
+            assert!(
+                si.start_us >= sj.start_us + sj.dur_us,
+                "node {} (start {}) began before its input {} ended ({} + {})",
+                i,
+                si.start_us,
+                input.0,
+                sj.start_us,
+                sj.dur_us
+            );
+        }
+    }
+
+    // With >1 worker the accel spans must actually spread across the
+    // pool rows (ResNet-50's projection blocks have parallel branches).
+    let workers: std::collections::BTreeSet<usize> =
+        spans.iter().filter(|s| s.kind == SpanKind::Accel).map(|s| s.worker).collect();
+    assert!(!workers.is_empty());
+
+    // The Chrome export must be a single well-formed JSON document with
+    // one "X" event per span (hand-parsed; no serde offline).
+    let json = trace::chrome_trace_json(&spans);
+    let mut check = JsonCheck::new(&json);
+    check.value();
+    check.finish();
+    assert_eq!(
+        json.matches("\"ph\":\"X\"").count(),
+        spans.len(),
+        "one complete event per span"
+    );
+    let distinct_workers: std::collections::BTreeSet<usize> =
+        spans.iter().map(|s| s.worker).collect();
+    assert_eq!(
+        json.matches("\"ph\":\"M\"").count(),
+        distinct_workers.len(),
+        "one thread_name metadata event per timeline row"
+    );
+    assert!(json.contains("\"args\":{\"name\":\"driver\"}"), "driver row must be named");
+}
+
+// ------------------------------------------------------------- service
+
+#[test]
+fn stats_snapshot_is_consistent_under_concurrent_submits() {
+    let (ci, co) = (16usize, 8usize);
+    let service = Arc::new(
+        ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .backend(BackendKind::Functional)
+            .workers(2)
+            .batch_capacity(4)
+            .register_graph("tiny_cnn", tiny_cnn_graph())
+            .register_dense(
+                "fc",
+                DenseOp::new(
+                    "fc",
+                    ci,
+                    co,
+                    Tensor4::random([1, 1, ci, co], 5).data,
+                    QParams::identity(),
+                ),
+            )
+            .build(),
+    );
+
+    let submitters = 4usize;
+    let graphs_each = 3usize;
+    let rows_each = 8usize;
+    let done = Arc::new(AtomicBool::new(false));
+
+    // A watcher hammers the live snapshot while submitters run: every
+    // snapshot it takes must satisfy the counter invariant, and the
+    // completed count must never go backwards.
+    let watcher = {
+        let service = Arc::clone(&service);
+        let done = Arc::clone(&done);
+        std::thread::spawn(move || {
+            let mut last_completed = 0u64;
+            let mut taken = 0usize;
+            while !done.load(Ordering::Acquire) {
+                let snap = service.stats_snapshot();
+                assert_eq!(
+                    snap.stats.completed,
+                    snap.stats.per_model.values().sum::<u64>(),
+                    "completed must equal the per-model sum in every live snapshot"
+                );
+                assert!(
+                    snap.stats.completed >= last_completed,
+                    "completed went backwards"
+                );
+                let lat_total: u64 =
+                    snap.latency.values().map(|l| l.total.count()).sum();
+                assert!(
+                    lat_total <= snap.stats.completed,
+                    "latency samples ({lat_total}) cannot exceed completions"
+                );
+                last_completed = snap.stats.completed;
+                taken += 1;
+                std::thread::yield_now();
+            }
+            taken
+        })
+    };
+
+    let handles: Vec<_> = (0..submitters)
+        .map(|t| {
+            let service = Arc::clone(&service);
+            std::thread::spawn(move || {
+                for g in 0..graphs_each {
+                    let x = Tensor4::random([1, 28, 28, 3], (t * 100 + g) as u64);
+                    service.submit("tiny_cnn", x).wait().expect("graph served");
+                }
+                let tickets: Vec<_> = (0..rows_each)
+                    .map(|r| {
+                        let row = Tensor4::random([1, 1, 1, ci], (t * 1000 + r) as u64).data;
+                        service.submit("fc", row)
+                    })
+                    .collect();
+                for ticket in tickets {
+                    ticket.wait().expect("row served");
+                }
+            })
+        })
+        .collect();
+    for handle in handles {
+        handle.join().expect("submitter");
+    }
+    service.flush();
+    done.store(true, Ordering::Release);
+    let snapshots_taken = watcher.join().expect("watcher");
+    assert!(snapshots_taken > 0);
+
+    let graphs = (submitters * graphs_each) as u64;
+    let rows = (submitters * rows_each) as u64;
+    let snap = service.stats_snapshot();
+    assert_eq!(snap.stats.completed, graphs + rows);
+    assert_eq!(snap.stats.per_model["tiny_cnn"], graphs);
+    assert_eq!(snap.stats.per_model["fc"], rows);
+    assert_eq!(snap.stats.failed, 0);
+    assert_eq!(snap.latency["tiny_cnn"].total.count(), graphs);
+    assert_eq!(snap.latency["fc"].total.count(), rows);
+    assert!(snap.latency["tiny_cnn"].total.max() > 0, "a real run takes > 1 µs");
+
+    // The exposition agrees with the snapshot, and carries the
+    // process-global GEMM pack-cache counters after functional runs.
+    let text = service.render_prometheus();
+    assert!(
+        text.contains(&format!("kraken_requests_completed_total{{model=\"tiny_cnn\"}} {graphs}")),
+        "{text}"
+    );
+    assert!(text.contains("# TYPE kraken_request_latency_us histogram"), "{text}");
+    assert!(text.contains("kraken_gemm_pack_cache_hits_total"), "{text}");
+
+    // Quiesced: shutdown totals must match the last live snapshot, and
+    // pool jobs (graphs + dense flushes) must account for every worker
+    // cell increment.
+    let service = Arc::try_unwrap(service).ok().expect("all clones dropped");
+    let stats = service.shutdown();
+    assert_eq!(stats.completed, snap.stats.completed);
+    assert_eq!(stats.per_model, snap.stats.per_model);
+    assert_eq!(stats.dense_rows, rows);
+    assert_eq!(
+        stats.per_worker.iter().map(|w| w.completed).sum::<u64>(),
+        graphs + stats.dense_flushes,
+        "worker cells must count one job per graph request and per dense flush"
+    );
+}
