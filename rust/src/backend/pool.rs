@@ -94,7 +94,12 @@ impl<J> Inner<J> {
             }
             queued = count;
             let depth: usize = q.shards.iter().map(VecDeque::len).sum();
-            self.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+            // Release pairs with the Acquire load in `peak_queued`: a
+            // reader that observes the new high-water mark also observes
+            // the queue state that produced it (the fetch_max happens
+            // under the queue lock, but the gauge is read lock-free from
+            // other threads).
+            self.peak_depth.fetch_max(depth as u64, Ordering::Release);
         }
         if queued == 1 {
             self.available.notify_one();
@@ -225,6 +230,10 @@ impl<J: Send + 'static> ShardedPool<J> {
                             Some((job, stolen)) => {
                                 handle(i, &mut state, job);
                                 let cell = &inner.cells[i];
+                                // Relaxed is sufficient: each counter is a
+                                // monotonic statistic read standalone by
+                                // `worker_stats` — no other memory is
+                                // published through these increments.
                                 cell.completed.fetch_add(1, Ordering::Relaxed);
                                 cell.stolen.fetch_add(stolen as u64, Ordering::Relaxed);
                             }
@@ -269,7 +278,9 @@ impl<J: Send + 'static> ShardedPool<J> {
 
     /// High-water mark of total queued jobs since spawn.
     pub fn peak_queued(&self) -> u64 {
-        self.inner.peak_depth.load(Ordering::Relaxed)
+        // Acquire pairs with the Release fetch_max in `submit`: cross-
+        // thread handoff of the high-water mark, not just a statistic.
+        self.inner.peak_depth.load(Ordering::Acquire)
     }
 
     /// Live per-worker stats, readable while workers run. Counts are

@@ -55,7 +55,7 @@ use crate::arch::KrakenConfig;
 use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool, WorkerStats};
 use crate::backend::{Accelerator, Estimator, Functional};
 use crate::model::sched::{self, NodeDispatcher, NodeTask};
-use crate::model::{fuse_graph, run_graph, ModelGraph};
+use crate::model::{analyze_registration, fuse_graph, run_graph, AnalysisError, ModelGraph};
 use crate::partition::PartitionedPool;
 use crate::sim::Engine;
 use crate::telemetry::{self, AtomicF64, Counter, Histogram, HistogramSnapshot, Registry};
@@ -349,6 +349,7 @@ pub struct ServiceBuilder {
     graph_par: bool,
     capacity: Option<usize>,
     window: Option<Duration>,
+    strict: bool,
     models: Vec<(String, BuilderModel)>,
 }
 
@@ -370,8 +371,23 @@ impl ServiceBuilder {
             graph_par: false,
             capacity: None,
             window: None,
+            strict: false,
             models: Vec::new(),
         }
+    }
+
+    /// Static-verification policy for graph registration. Every
+    /// [`register_graph`](Self::register_graph) call runs the static
+    /// analyzer ([`crate::model::analyze_graph`]) plus the fusion
+    /// legality checker over the graph it is about to serve. With
+    /// `strict = false` (the default) error findings only log a warning;
+    /// with `strict = true` they reject the model — `register_graph`
+    /// panics and [`try_register_graph`](Self::try_register_graph)
+    /// returns the typed [`AnalysisError`]. Set this *before*
+    /// registering the graphs it should police.
+    pub fn strict_verify(mut self, strict: bool) -> Self {
+        self.strict = strict;
+        self
     }
 
     /// Static array configuration for every constructed backend.
@@ -442,9 +458,41 @@ impl ServiceBuilder {
     /// serving path — serial workers and the pooled branch scheduler —
     /// executes the shorter graph; fusion is bit-exact, so served
     /// results still match direct runs of the unfused graph.
-    pub fn register_graph(mut self, name: impl Into<String>, graph: ModelGraph) -> Self {
-        self.push_model(name.into(), BuilderModel::Graph(fuse_graph(&graph)));
-        self
+    ///
+    /// Registration also runs the static verifier (quantization ranges,
+    /// liveness, fusion legality, schedule soundness). Error findings
+    /// panic under [`strict_verify(true)`](Self::strict_verify) and log
+    /// to stderr otherwise; use
+    /// [`try_register_graph`](Self::try_register_graph) to handle the
+    /// typed [`AnalysisError`] instead.
+    pub fn register_graph(self, name: impl Into<String>, graph: ModelGraph) -> Self {
+        match self.try_register_graph(name, graph) {
+            Ok(builder) => builder,
+            Err(e) => panic!("register_graph: {e}"),
+        }
+    }
+
+    /// Fallible [`register_graph`](Self::register_graph): runs the
+    /// static verifier over the fused graph and, under
+    /// [`strict_verify(true)`](Self::strict_verify), returns the typed
+    /// [`AnalysisError`] instead of registering a model that can
+    /// saturate, over-retain, or mis-schedule.
+    pub fn try_register_graph(
+        mut self,
+        name: impl Into<String>,
+        graph: ModelGraph,
+    ) -> Result<Self, AnalysisError> {
+        let name = name.into();
+        let fused = fuse_graph(&graph);
+        let report = analyze_registration(&graph, &fused);
+        if let Some(err) = report.into_error() {
+            if self.strict {
+                return Err(err);
+            }
+            eprintln!("[kraken] model '{name}' registered with analysis errors (strict_verify off): {err}");
+        }
+        self.push_model(name, BuilderModel::Graph(fused));
+        Ok(self)
     }
 
     /// Register a named dense op: concurrent rows submitted to it batch

@@ -71,6 +71,11 @@
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
 
+// The crate is `unsafe`-free except for one FFI cast in the PJRT bridge,
+// which only compiles under `--cfg pjrt_native` (see `runtime::pjrt`).
+// Default builds prove the absence of unsafe code at compile time.
+#![cfg_attr(not(pjrt_native), forbid(unsafe_code))]
+
 pub mod arch;
 pub mod backend;
 pub mod baselines;

@@ -11,7 +11,7 @@ use std::path::Path;
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
 use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
-use kraken::model::{run_graph, ModelGraph};
+use kraken::model::{analyze_graph, fuse_graph, run_graph, verify_fusion, ModelGraph};
 use kraken::networks::{
     alexnet_graph, inception_block_graph, paper_networks, resnet50_graph_at, tiny_cnn_graph,
     tiny_mlp_graph, Network, X_SEED,
@@ -69,6 +69,13 @@ system:
                   tiny_cnn|tiny_mlp|alexnet|resnet50|inception; res
                   scales ResNet-50's input (default 224, multiples
                   of 16)
+  check <net> [res]
+                  static verifier: prove quantization ranges (i32
+                  accumulator / i8 post-requant intervals), activation
+                  liveness and peak memory per schedule width, fusion
+                  legality, and schedule soundness for the same nets as
+                  `graph` — without executing the model; exits 1 on any
+                  error finding
   report R C      per-network §V metrics for configuration R×C
 
 observability:
@@ -138,6 +145,11 @@ fn main() {
             let shards: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
             let net = args.get(2).map(String::as_str).unwrap_or("tiny_cnn");
             partition_cmd(shards, net);
+        }
+        "check" => {
+            let net = args.get(1).map(String::as_str).unwrap_or("tiny_cnn");
+            let res: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(224);
+            check_cmd(net, res);
         }
         "graph" => {
             let net = args.get(1).map(String::as_str).unwrap_or("tiny_cnn");
@@ -621,34 +633,69 @@ fn trace_cmd(net: &str, workers: usize) {
     println!("wrote {path} — open in chrome://tracing or https://ui.perfetto.dev");
 }
 
+/// Build one zoo graph by name — the shared dispatch behind `graph` and
+/// `check`. `res` only affects ResNet-50.
+fn zoo_graph(net: &str, res: usize) -> Option<ModelGraph> {
+    match net {
+        "tiny_cnn" => Some(tiny_cnn_graph()),
+        "tiny_mlp" => Some(tiny_mlp_graph()),
+        "alexnet" => Some(alexnet_graph(3000)),
+        "inception" => Some(inception_block_graph(64, 128, 32, 4)),
+        "resnet50" => {
+            if res < 32 || res % 16 != 0 {
+                eprintln!("resnet50 input resolution must be a multiple of 16, ≥ 32 (got {res})");
+                return None;
+            }
+            Some(resnet50_graph_at(res))
+        }
+        other => {
+            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|resnet50|inception)");
+            None
+        }
+    }
+}
+
 /// Topology table of one executable model graph: every node in
 /// execution order with its op (accelerated layer vs §II-C host op),
 /// input edges and output tensor shape — the `Network`-can't-express
 /// structure (pools, flattens, residual skips) made visible.
 fn graph_cmd(net: &str, res: usize) {
-    let graph: ModelGraph = match net {
-        "tiny_cnn" => tiny_cnn_graph(),
-        "tiny_mlp" => tiny_mlp_graph(),
-        "alexnet" => alexnet_graph(3000),
-        "inception" => inception_block_graph(64, 128, 32, 4),
-        "resnet50" => {
-            if res < 32 || res % 16 != 0 {
-                eprintln!("resnet50 input resolution must be a multiple of 16, ≥ 32 (got {res})");
-                return;
-            }
-            resnet50_graph_at(res)
-        }
-        other => {
-            eprintln!("unknown network '{other}' (tiny_cnn|tiny_mlp|alexnet|resnet50|inception)");
-            return;
-        }
-    };
+    let Some(graph) = zoo_graph(net, res) else { return };
     print!("{}", graph.describe());
     println!(
         "\ninput {:?} → output {:?}; host ops run between accelerated passes (§II-C)",
         graph.input_shape(),
         graph.output_shape()
     );
+}
+
+/// Static verifier (`kraken check`): run the four analysis passes —
+/// quantization ranges, activation liveness/peak memory, fusion
+/// legality, schedule soundness — over one zoo graph without executing
+/// it, print the per-node report, and exit non-zero on any error
+/// finding.
+fn check_cmd(net: &str, res: usize) {
+    let Some(graph) = zoo_graph(net, res) else {
+        std::process::exit(2);
+    };
+    let fused = fuse_graph(&graph);
+    match verify_fusion(&graph, &fused) {
+        Ok(s) => println!(
+            "fusion legal: {} requant(s) folded ({} epilogue(s), {} into residual adds)",
+            s.folded_requants, s.epilogues_added, s.adds_fused
+        ),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+    let report = analyze_graph(&fused);
+    print!("{}", report.render());
+    if !report.is_clean() {
+        eprintln!("check failed: {} error finding(s)", report.errors().count());
+        std::process::exit(1);
+    }
+    println!("check ok: {net} is statically clean (warnings above, if any, are non-fatal)");
 }
 
 /// Per-layer partition plan table: split axis, predicted speedup and

@@ -1,0 +1,1193 @@
+//! Static analysis over a compiled [`ModelGraph`] — no execution needed.
+//!
+//! Kraken's uniform dataflow makes a registered model fully analyzable at
+//! compile time: shapes, weights, and quantization parameters are all known
+//! before the first inference. This module proves (or refutes) the
+//! invariants the runtime otherwise only checks dynamically, in four
+//! passes:
+//!
+//! 1. **Quantization range analysis** — interval propagation of the `i32`
+//!    accumulator and `i8` post-requant ranges through every node, using
+//!    the actual weight tensors and [`QParams`]. Proves per node that
+//!    saturation cannot occur, or flags the exact nodes where it can
+//!    (may-clamp) or must (always-clamps).
+//! 2. **Activation liveness & peak memory** — last-consumer lifetime
+//!    intervals mirroring the executor's `Arc` drop discipline, yielding
+//!    peak live activation bytes for the serial order and for each
+//!    `levels()` schedule width.
+//! 3. **Fusion legality** — [`verify_fusion`] structurally diffs a fused
+//!    graph against its pre-fusion source: node-count deltas, epilogue
+//!    placement, fan-out producers never folded, and the layer/weight
+//!    equality that makes fusion clocks-invariant.
+//! 4. **Schedule soundness** — proves each dependency level is
+//!    read-write/write-write conflict free and that the `logits_node()`
+//!    pin is a real accel ancestor of the output, independent of
+//!    execution order within a level.
+//!
+//! Entry points: [`analyze_graph`] → [`AnalysisReport`];
+//! [`verify_fusion`] → [`FusionSummary`] or [`AnalysisError`]. The
+//! service runs both at registration time (see
+//! `ServiceBuilder::strict_verify`), and `kraken check <net>` prints the
+//! per-node report from the CLI.
+
+use std::fmt;
+
+use crate::quant::QParams;
+
+use super::graph::{AccelStage, ModelGraph, Node, NodeOp};
+
+// ---------------------------------------------------------------------------
+// Report types
+// ---------------------------------------------------------------------------
+
+/// A closed integer interval `[lo, hi]` in i64 arithmetic — wide enough to
+/// expose i32 accumulator overflow instead of wrapping through it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub const I8: Interval = Interval { lo: i8::MIN as i64, hi: i8::MAX as i64 };
+
+    fn hull(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    fn clamp_i8(self) -> Interval {
+        Interval {
+            lo: self.lo.clamp(i8::MIN as i64, i8::MAX as i64),
+            hi: self.hi.clamp(i8::MIN as i64, i8::MAX as i64),
+        }
+    }
+
+    fn fits_i32(self) -> bool {
+        self.lo >= i32::MIN as i64 && self.hi <= i32::MAX as i64
+    }
+}
+
+impl fmt::Display for Interval {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}, {}]", self.lo, self.hi)
+    }
+}
+
+/// Severity of one finding. Only `Error` findings make a graph fail
+/// `strict_verify` / `kraken check`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// What a finding is about.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FindingKind {
+    /// An accel node's i32 accumulator can mathematically exceed i32
+    /// range for some int8 input — the hardware would wrap silently.
+    AccumulatorOverflow,
+    /// `acc + bias` can leave i32 range; `requantize` saturates the add,
+    /// silently flattening extreme accumulators.
+    BiasOverflow,
+    /// The pre-clamp requant/sum interval lies entirely outside i8: every
+    /// possible input saturates and all signal is destroyed.
+    GuaranteedSaturation,
+    /// A `ResidualAdd` sum can exceed i8 for some inputs (saturating add
+    /// engages). Informational — int8 residual joins clamp by design.
+    MaySaturate,
+    /// More than one maximal accel ancestor feeds the output; the logits
+    /// pin resolves to the topologically last one, which is
+    /// deterministic but worth knowing about on multi-head graphs.
+    AmbiguousLogitsPin,
+    /// A node's value never reaches the output.
+    DeadBranch,
+    /// A dependency level is not conflict free, or levels don't partition
+    /// the graph.
+    ScheduleViolation,
+    /// `logits_node()` is absent, not an accel node, or not an ancestor
+    /// of the output.
+    LogitsPinViolation,
+    /// The fused graph is not a legal fusion of its pre-fusion source.
+    FusionViolation,
+}
+
+/// One analysis finding, tied to a node where that makes sense.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub node: Option<usize>,
+    pub severity: Severity,
+    pub kind: FindingKind,
+    pub detail: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        match self.node {
+            Some(n) => write!(f, "{sev} [{:?}] node {n}: {}", self.kind, self.detail),
+            None => write!(f, "{sev} [{:?}]: {}", self.kind, self.detail),
+        }
+    }
+}
+
+/// Per-node row of the range pass.
+#[derive(Debug, Clone)]
+pub struct NodeRange {
+    pub node: usize,
+    pub label: String,
+    /// i32 accumulator interval — accel nodes only.
+    pub acc: Option<Interval>,
+    /// Value interval before the final clamp to i8 (meaningful for nodes
+    /// that requantize or saturate).
+    pub pre_clamp: Interval,
+    /// i8 interval of the tensor on this node's out edge.
+    pub out: Interval,
+    /// The i8 clamp can engage for some reachable input.
+    pub may_clamp: bool,
+    /// The clamp engages for every reachable input.
+    pub always_clamps: bool,
+    /// Bytes this node's output tensor occupies (0 for aliasing nodes).
+    pub out_bytes: u64,
+}
+
+/// Everything the static verifier learned about one graph.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub graph: String,
+    /// One row per node, in topological order.
+    pub ranges: Vec<NodeRange>,
+    /// Peak live activation bytes under the serial (`topo_order`) executor.
+    pub peak_serial_bytes: u64,
+    /// `(width, peak live bytes)` under the level scheduler dispatching at
+    /// most `width` accel nodes per batch, for widths `1..=max`.
+    pub peak_by_width: Vec<(usize, u64)>,
+    pub levels: usize,
+    pub max_accel_width: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl AnalysisReport {
+    pub fn errors(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.severity == Severity::Error)
+    }
+
+    pub fn warnings(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.severity == Severity::Warning)
+    }
+
+    /// No `Error`-severity findings (warnings are fine).
+    pub fn is_clean(&self) -> bool {
+        self.errors().next().is_none()
+    }
+
+    /// Consume the report into a typed error when it carries any
+    /// `Error`-severity findings.
+    pub fn into_error(self) -> Option<AnalysisError> {
+        if self.is_clean() {
+            None
+        } else {
+            let findings =
+                self.findings.into_iter().filter(|f| f.severity == Severity::Error).collect();
+            Some(AnalysisError { graph: self.graph, findings })
+        }
+    }
+
+    /// Human-readable per-node table + findings, for `kraken check`.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("static analysis: {}\n", self.graph));
+        s.push_str(&format!(
+            "{:>4}  {:<38} {:>24}  {:>14}  {:>6}  {:>10}\n",
+            "node", "op", "acc range (i32)", "out range (i8)", "clamp", "bytes"
+        ));
+        for r in &self.ranges {
+            let acc = r.acc.map_or_else(|| "-".into(), |a| a.to_string());
+            let clamp = if r.always_clamps {
+                "always"
+            } else if r.may_clamp {
+                "may"
+            } else {
+                "no"
+            };
+            s.push_str(&format!(
+                "{:>4}  {:<38} {:>24}  {:>14}  {:>6}  {:>10}\n",
+                r.node,
+                r.label,
+                acc,
+                r.out.to_string(),
+                clamp,
+                r.out_bytes
+            ));
+        }
+        s.push_str(&format!(
+            "levels: {}  max accel width: {}\n",
+            self.levels, self.max_accel_width
+        ));
+        s.push_str(&format!("peak live bytes (serial): {}\n", self.peak_serial_bytes));
+        for &(w, b) in &self.peak_by_width {
+            s.push_str(&format!("peak live bytes (width {w}): {b}\n"));
+        }
+        if self.findings.is_empty() {
+            s.push_str("findings: none\n");
+        } else {
+            s.push_str(&format!("findings: {}\n", self.findings.len()));
+            for f in &self.findings {
+                s.push_str(&format!("  {f}\n"));
+            }
+        }
+        s
+    }
+}
+
+/// Typed rejection carrying every `Error`-severity finding.
+#[derive(Debug, Clone)]
+pub struct AnalysisError {
+    pub graph: String,
+    pub findings: Vec<Finding>,
+}
+
+impl fmt::Display for AnalysisError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "graph '{}' failed static verification ({} error(s)):", self.graph, self.findings.len())?;
+        for finding in &self.findings {
+            write!(f, "\n  {finding}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for AnalysisError {}
+
+/// What [`verify_fusion`] proved about a legal pre→post fusion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionSummary {
+    /// `Requant` nodes removed from the pre-fusion graph.
+    pub folded_requants: usize,
+    /// Requants that became accel-stage epilogues.
+    pub epilogues_added: usize,
+    /// Requants that fused into a `ResidualAdd`.
+    pub adds_fused: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Pass 1 — quantization range analysis
+// ---------------------------------------------------------------------------
+
+/// Mirror of `QParams::requantize` on one i64 endpoint, with the final i8
+/// clamp left off so callers can see the pre-clamp value. The incoming
+/// value is saturated to i32 exactly as the runtime's `saturating_add`
+/// would behave at the extremes.
+fn requant_endpoint(acc: i64, q: &QParams) -> i64 {
+    let mut v = acc
+        .saturating_add(q.bias as i64)
+        .clamp(i32::MIN as i64, i32::MAX as i64);
+    if q.relu {
+        v = v.max(0);
+    }
+    let prod = v * q.multiplier as i64;
+    let half = 1i64 << (q.shift.saturating_sub(1).min(62));
+    let rounded = if q.shift == 0 {
+        prod
+    } else if prod >= 0 {
+        (prod + half) >> q.shift
+    } else {
+        -((-prod + half) >> q.shift)
+    };
+    rounded + q.zero_point as i64
+}
+
+/// Interval image of `QParams::requantize`: `(pre_clamp, post_clamp,
+/// bias_can_overflow)`. Sound for any multiplier sign because both
+/// endpoints are evaluated and re-ordered.
+fn requant_interval(v: Interval, q: &QParams) -> (Interval, Interval, bool) {
+    let bias_overflow = {
+        let lo = v.lo + q.bias as i64;
+        let hi = v.hi + q.bias as i64;
+        lo < i32::MIN as i64 || hi > i32::MAX as i64
+    };
+    let a = requant_endpoint(v.lo, q);
+    let b = requant_endpoint(v.hi, q);
+    let pre = Interval { lo: a.min(b), hi: a.max(b) };
+    (pre, pre.clamp_i8(), bias_overflow)
+}
+
+fn clamp_flags(pre: Interval) -> (bool, bool) {
+    let may = pre.lo < i8::MIN as i64 || pre.hi > i8::MAX as i64;
+    let always = pre.hi < i8::MIN as i64 || pre.lo > i8::MAX as i64;
+    (may, always)
+}
+
+/// Accumulator interval of one accel stage given the input-edge interval.
+///
+/// Each output channel `oc` (last weight axis) sums its own column of
+/// taps; a tap with weight `w` contributes `hull(w·x.lo, w·x.hi)` —
+/// hulled with 0 where implicit zero padding can supply the operand
+/// (spatial kernels wider than 1×1; never for dense/matmul stages).
+/// The result is the hull over all output channels, so it bounds every
+/// accumulator the stage can ever produce for i8 inputs.
+fn accel_acc_interval(stage: &AccelStage, x: Interval) -> Interval {
+    let w = &stage.weights;
+    let co = w.shape[3];
+    let padded = !stage.layer.is_dense() && (stage.layer.kh > 1 || stage.layer.kw > 1);
+    let mut lo = vec![0i64; co];
+    let mut hi = vec![0i64; co];
+    for (idx, &wv) in w.data.iter().enumerate() {
+        let oc = idx % co;
+        let wv = wv as i64;
+        let (a, b) = (wv * x.lo, wv * x.hi);
+        let (mut tl, mut th) = if a <= b { (a, b) } else { (b, a) };
+        if padded {
+            tl = tl.min(0);
+            th = th.max(0);
+        }
+        lo[oc] += tl;
+        hi[oc] += th;
+    }
+    let lo = lo.into_iter().min().unwrap_or(0);
+    let hi = hi.into_iter().max().unwrap_or(0);
+    Interval { lo, hi }
+}
+
+fn range_pass(graph: &ModelGraph, findings: &mut Vec<Finding>) -> Vec<NodeRange> {
+    let nodes = graph.nodes();
+    let out_idx = graph.output_index();
+    let mut out: Vec<Interval> = vec![Interval::I8; nodes.len()];
+    let mut rows = Vec::with_capacity(nodes.len());
+
+    for &i in graph.topo_order() {
+        let node = &nodes[i];
+        let ins: Vec<Interval> = node.inputs.iter().map(|id| out[id.0]).collect();
+        let mut acc_iv = None;
+        let mut pre = Interval::I8;
+        let mut may = false;
+        let mut always = false;
+        let o = match &node.op {
+            NodeOp::Input { .. } => Interval::I8,
+            NodeOp::Output | NodeOp::Flatten => ins[0],
+            // Max over window values (with −∞ padding) and the
+            // round-half-away mean both stay inside the input hull.
+            NodeOp::MaxPool { .. } | NodeOp::GlobalAvgPool => ins[0],
+            NodeOp::Concat => ins.iter().copied().reduce(Interval::hull).unwrap_or(Interval::I8),
+            NodeOp::Requant(q) => {
+                let (p, post, bias_ovf) = requant_interval(ins[0], q);
+                pre = p;
+                (may, always) = clamp_flags(p);
+                if bias_ovf {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::BiasOverflow,
+                        detail: format!("acc+bias leaves i32 for input {} bias {}", ins[0], q.bias),
+                    });
+                }
+                if always {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::GuaranteedSaturation,
+                        detail: format!("pre-clamp range {p} lies entirely outside i8"),
+                    });
+                }
+                post
+            }
+            NodeOp::ResidualAdd { requant } => {
+                // The runtime saturating-adds in i8 first, then applies
+                // the fused requant to the clamped sum (exec.rs).
+                let sum = Interval { lo: ins[0].lo + ins[1].lo, hi: ins[0].hi + ins[1].hi };
+                pre = sum;
+                (may, always) = clamp_flags(sum);
+                if always {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::GuaranteedSaturation,
+                        detail: format!("residual sum range {sum} lies entirely outside i8"),
+                    });
+                } else if may {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Warning,
+                        kind: FindingKind::MaySaturate,
+                        detail: format!("residual sum range {sum} can exceed i8 (saturating add engages)"),
+                    });
+                }
+                let clamped = sum.clamp_i8();
+                match requant {
+                    Some(q) => {
+                        let (p2, post, bias_ovf) = requant_interval(clamped, q);
+                        let (m2, a2) = clamp_flags(p2);
+                        may |= m2;
+                        always |= a2;
+                        if bias_ovf {
+                            findings.push(Finding {
+                                node: Some(i),
+                                severity: Severity::Error,
+                                kind: FindingKind::BiasOverflow,
+                                detail: format!(
+                                    "fused requant acc+bias leaves i32 for sum {clamped} bias {}",
+                                    q.bias
+                                ),
+                            });
+                        }
+                        if a2 {
+                            findings.push(Finding {
+                                node: Some(i),
+                                severity: Severity::Error,
+                                kind: FindingKind::GuaranteedSaturation,
+                                detail: format!("fused requant pre-clamp range {p2} lies entirely outside i8"),
+                            });
+                        }
+                        post
+                    }
+                    None => clamped,
+                }
+            }
+            NodeOp::Accel(stage) => {
+                let acc = accel_acc_interval(stage, ins[0]);
+                acc_iv = Some(acc);
+                if !acc.fits_i32() {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::AccumulatorOverflow,
+                        detail: format!(
+                            "accumulator range {acc} exceeds i32 [{}, {}] — wraps on hardware",
+                            i32::MIN,
+                            i32::MAX
+                        ),
+                    });
+                }
+                // Continue with the representable slice so downstream
+                // rows stay meaningful after the overflow is flagged.
+                let acc32 = Interval {
+                    lo: acc.lo.clamp(i32::MIN as i64, i32::MAX as i64),
+                    hi: acc.hi.clamp(i32::MIN as i64, i32::MAX as i64),
+                };
+                let (p, post, bias_ovf) = requant_interval(acc32, &stage.qparams);
+                pre = p;
+                (may, always) = clamp_flags(p);
+                if bias_ovf {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::BiasOverflow,
+                        detail: format!(
+                            "acc+bias leaves i32 for accumulator {acc32} bias {}",
+                            stage.qparams.bias
+                        ),
+                    });
+                }
+                if always {
+                    findings.push(Finding {
+                        node: Some(i),
+                        severity: Severity::Error,
+                        kind: FindingKind::GuaranteedSaturation,
+                        detail: format!("requant pre-clamp range {p} lies entirely outside i8"),
+                    });
+                }
+                match &stage.epilogue {
+                    Some(q) => {
+                        let (p2, post2, _) = requant_interval(post, q);
+                        let (m2, a2) = clamp_flags(p2);
+                        may |= m2;
+                        always |= a2;
+                        if a2 {
+                            findings.push(Finding {
+                                node: Some(i),
+                                severity: Severity::Error,
+                                kind: FindingKind::GuaranteedSaturation,
+                                detail: format!("epilogue pre-clamp range {p2} lies entirely outside i8"),
+                            });
+                        }
+                        post2
+                    }
+                    None => post,
+                }
+            }
+        };
+        out[i] = o;
+        rows.push(NodeRange {
+            node: i,
+            label: node.op.label(),
+            acc: acc_iv,
+            pre_clamp: pre,
+            out: o,
+            may_clamp: may,
+            always_clamps: always,
+            out_bytes: node_out_bytes(node, i, out_idx),
+        });
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Pass 2 — activation liveness & peak memory
+// ---------------------------------------------------------------------------
+
+/// Bytes a node's output tensor newly occupies. `Output` forwards its
+/// input `Arc` (zero copy); everything else materializes `shape`
+/// (`Flatten`'s possible buffer reuse is modeled in the simulator).
+fn node_out_bytes(node: &Node, idx: usize, out_idx: usize) -> u64 {
+    if idx == out_idx {
+        0
+    } else {
+        node.shape.iter().product::<usize>() as u64
+    }
+}
+
+/// Liveness simulator sharing the executor's drop discipline: a node's
+/// inputs stay live while it evaluates; its output becomes live if any
+/// consumer remains; an activation frees when its last consumer has run.
+/// The `Output` node forwards its input, which the caller retains.
+struct LiveSim<'g> {
+    graph: &'g ModelGraph,
+    uses: Vec<usize>,
+    live_bytes: u64,
+    alive: Vec<bool>,
+    peak: u64,
+}
+
+impl<'g> LiveSim<'g> {
+    fn new(graph: &'g ModelGraph) -> Self {
+        LiveSim {
+            graph,
+            uses: graph.consumers().to_vec(),
+            live_bytes: 0,
+            alive: vec![false; graph.nodes().len()],
+            peak: 0,
+        }
+    }
+
+    fn bytes(&self, i: usize) -> u64 {
+        node_out_bytes(&self.graph.nodes()[i], i, self.graph.output_index())
+    }
+
+    /// `Flatten` with a sole owner reshapes in place (`into_owned` moves
+    /// the buffer), allocating nothing.
+    fn is_in_place(&self, i: usize) -> bool {
+        let node = &self.graph.nodes()[i];
+        matches!(node.op, NodeOp::Flatten) && self.uses[node.inputs[0].0] == 1
+    }
+
+    /// Run a batch of nodes whose inputs are all already live: the peak
+    /// candidate is the current live set plus every batch output, then
+    /// outputs retain per-consumer-count and inputs release.
+    fn step_batch(&mut self, batch: &[usize]) {
+        // In-place nodes reuse their operand's buffer, so they add no
+        // fresh bytes at the peak candidate; their output still counts as
+        // live below (the matching input release keeps the net at zero).
+        let fresh: u64 =
+            batch.iter().filter(|&&i| !self.is_in_place(i)).map(|&i| self.bytes(i)).sum();
+        self.peak = self.peak.max(self.live_bytes + fresh);
+        let out_idx = self.graph.output_index();
+        for &i in batch {
+            if self.uses[i] > 0 {
+                self.live_bytes += self.bytes(i);
+                self.alive[i] = true;
+            }
+        }
+        for &i in batch {
+            for id in &self.graph.nodes()[i].inputs {
+                let j = id.0;
+                self.uses[j] -= 1;
+                // The output node's operand is retained as the final
+                // result — it never frees.
+                if self.uses[j] == 0 && self.alive[j] && i != out_idx {
+                    self.live_bytes -= self.bytes(j);
+                    self.alive[j] = false;
+                }
+            }
+        }
+    }
+}
+
+/// Peak live activation bytes under the serial executor (`topo_order`).
+fn peak_bytes_serial(graph: &ModelGraph) -> u64 {
+    let mut sim = LiveSim::new(graph);
+    for &i in graph.topo_order() {
+        sim.step_batch(&[i]);
+    }
+    sim.peak
+}
+
+/// Peak live activation bytes under the level scheduler dispatching at
+/// most `width` accel nodes concurrently; host ops run serially between
+/// batches, as in `sched.rs`.
+fn peak_bytes_at_width(graph: &ModelGraph, width: usize) -> u64 {
+    let width = width.max(1);
+    let mut sim = LiveSim::new(graph);
+    for level in graph.levels() {
+        let (accel, host): (Vec<usize>, Vec<usize>) = level
+            .iter()
+            .copied()
+            .partition(|&i| matches!(graph.nodes()[i].op, NodeOp::Accel(_)));
+        for batch in accel.chunks(width) {
+            sim.step_batch(batch);
+        }
+        for i in host {
+            sim.step_batch(&[i]);
+        }
+    }
+    sim.peak
+}
+
+// ---------------------------------------------------------------------------
+// Pass 4 — schedule soundness
+// ---------------------------------------------------------------------------
+
+/// Strict-ancestor bitsets: `anc[i]` has bit `j` set iff `j` precedes `i`
+/// on some path. One `Vec<u64>` row per node, filled along `topo_order`.
+struct Ancestors {
+    words: usize,
+    bits: Vec<u64>,
+}
+
+impl Ancestors {
+    fn build(graph: &ModelGraph) -> Self {
+        let n = graph.nodes().len();
+        let words = n.div_ceil(64);
+        let mut bits = vec![0u64; n * words];
+        for &i in graph.topo_order() {
+            for id in &graph.nodes()[i].inputs {
+                let j = id.0;
+                // anc[i] |= anc[j] | {j}
+                for k in 0..words {
+                    let v = bits[j * words + k];
+                    bits[i * words + k] |= v;
+                }
+                bits[i * words + j / 64] |= 1u64 << (j % 64);
+            }
+        }
+        Ancestors { words, bits }
+    }
+
+    /// Is `j` a strict ancestor of `i`?
+    fn is_ancestor(&self, i: usize, j: usize) -> bool {
+        self.bits[i * self.words + j / 64] >> (j % 64) & 1 == 1
+    }
+}
+
+fn schedule_pass(graph: &ModelGraph, findings: &mut Vec<Finding>) {
+    let nodes = graph.nodes();
+    let n = nodes.len();
+    let anc = Ancestors::build(graph);
+
+    // Levels must partition the node set: each node exactly once is the
+    // write-write proof (every node writes only its own activation slot).
+    let mut level_of = vec![usize::MAX; n];
+    for (d, level) in graph.levels().iter().enumerate() {
+        for &i in level {
+            if level_of[i] != usize::MAX {
+                findings.push(Finding {
+                    node: Some(i),
+                    severity: Severity::Error,
+                    kind: FindingKind::ScheduleViolation,
+                    detail: format!("node scheduled in level {} and again in level {d}", level_of[i]),
+                });
+            }
+            level_of[i] = d;
+        }
+    }
+    for (i, &l) in level_of.iter().enumerate() {
+        if l == usize::MAX {
+            findings.push(Finding {
+                node: Some(i),
+                severity: Severity::Error,
+                kind: FindingKind::ScheduleViolation,
+                detail: "node missing from every dependency level".into(),
+            });
+        }
+    }
+
+    // Read-write freedom: a node's operands are finished strictly before
+    // its level starts, and no level contains a dependent pair — so any
+    // execution order within a level computes the same values.
+    for (i, node) in nodes.iter().enumerate() {
+        for id in &node.inputs {
+            let j = id.0;
+            if level_of[j] != usize::MAX && level_of[i] != usize::MAX && level_of[j] >= level_of[i]
+            {
+                findings.push(Finding {
+                    node: Some(i),
+                    severity: Severity::Error,
+                    kind: FindingKind::ScheduleViolation,
+                    detail: format!(
+                        "input node {j} (level {}) does not precede level {}",
+                        level_of[j], level_of[i]
+                    ),
+                });
+            }
+        }
+    }
+    for level in graph.levels() {
+        for (k, &a) in level.iter().enumerate() {
+            for &b in &level[k + 1..] {
+                if anc.is_ancestor(a, b) || anc.is_ancestor(b, a) {
+                    findings.push(Finding {
+                        node: Some(a.max(b)),
+                        severity: Severity::Error,
+                        kind: FindingKind::ScheduleViolation,
+                        detail: format!("dependent nodes {a} and {b} share a level"),
+                    });
+                }
+            }
+        }
+    }
+
+    // Logits pin: must be the unique topologically-last accel ancestor of
+    // the output — a property of the DAG, not of any execution order.
+    let out = graph.output_index();
+    let accel_ancestors: Vec<usize> = (0..n)
+        .filter(|&i| matches!(nodes[i].op, NodeOp::Accel(_)) && anc.is_ancestor(out, i))
+        .collect();
+    match graph.logits_node() {
+        None => {
+            if !accel_ancestors.is_empty() {
+                findings.push(Finding {
+                    node: None,
+                    severity: Severity::Error,
+                    kind: FindingKind::LogitsPinViolation,
+                    detail: format!(
+                        "no logits pin although {} accel node(s) feed the output",
+                        accel_ancestors.len()
+                    ),
+                });
+            }
+        }
+        Some(p) => {
+            if !accel_ancestors.contains(&p) {
+                findings.push(Finding {
+                    node: Some(p),
+                    severity: Severity::Error,
+                    kind: FindingKind::LogitsPinViolation,
+                    detail: "logits pin is not an accel ancestor of the output".into(),
+                });
+            }
+            // Independent re-derivation: last accel ancestor in topo order.
+            let last =
+                graph.topo_order().iter().rev().find(|i| accel_ancestors.contains(i)).copied();
+            if last != Some(p) {
+                findings.push(Finding {
+                    node: Some(p),
+                    severity: Severity::Error,
+                    kind: FindingKind::LogitsPinViolation,
+                    detail: format!("logits pin disagrees with topo-last accel ancestor {last:?}"),
+                });
+            }
+            let maximal: Vec<usize> = accel_ancestors
+                .iter()
+                .copied()
+                .filter(|&i| !accel_ancestors.iter().any(|&k| k != i && anc.is_ancestor(k, i)))
+                .collect();
+            if maximal.len() > 1 {
+                findings.push(Finding {
+                    node: Some(p),
+                    severity: Severity::Warning,
+                    kind: FindingKind::AmbiguousLogitsPin,
+                    detail: format!(
+                        "{} maximal accel heads feed the output ({maximal:?}); pin is the topo-last",
+                        maximal.len()
+                    ),
+                });
+            }
+        }
+    }
+
+    // Dead branches: values that never reach the output.
+    for i in 0..n {
+        if i != out && !anc.is_ancestor(out, i) {
+            findings.push(Finding {
+                node: Some(i),
+                severity: Severity::Warning,
+                kind: FindingKind::DeadBranch,
+                detail: "node output never reaches the graph output".into(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry point
+// ---------------------------------------------------------------------------
+
+/// Run the range, liveness, and schedule passes over one compiled graph.
+/// Fusion legality is a two-graph property — see [`verify_fusion`].
+pub fn analyze_graph(graph: &ModelGraph) -> AnalysisReport {
+    let mut findings = Vec::new();
+    let ranges = range_pass(graph, &mut findings);
+    let peak_serial_bytes = peak_bytes_serial(graph);
+    let max_accel_width = graph.max_accel_level_width().max(1);
+    let peak_by_width =
+        (1..=max_accel_width).map(|w| (w, peak_bytes_at_width(graph, w))).collect();
+    schedule_pass(graph, &mut findings);
+    AnalysisReport {
+        graph: graph.name.clone(),
+        ranges,
+        peak_serial_bytes,
+        peak_by_width,
+        levels: graph.levels().len(),
+        max_accel_width,
+        findings,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pass 3 — fusion legality (two-graph diff)
+// ---------------------------------------------------------------------------
+
+fn fusion_violation(detail: String) -> Finding {
+    Finding { node: None, severity: Severity::Error, kind: FindingKind::FusionViolation, detail }
+}
+
+/// Structurally verify that `post` is a legal fusion of `pre`
+/// (independently of `fuse_graph`'s own bookkeeping):
+///
+/// - accel stages pair 1:1 in topo order with identical layer geometry,
+///   weights, and qparams (the clocks-invariance precondition — fusion
+///   only rewires the output pipe, never the MAC schedule);
+/// - every epilogue gained in `post` corresponds to a `Requant` (possibly
+///   past a `Flatten`) that was the accel node's **sole** consumer in
+///   `pre` — fan-out producers are never folded;
+/// - every requant gained by a `ResidualAdd` was the add's sole-consumer
+///   `Requant` in `pre`;
+/// - the node-count delta equals exactly the `Requant` nodes folded;
+/// - non-requant host ops survive in kind and order.
+pub fn verify_fusion(pre: &ModelGraph, post: &ModelGraph) -> Result<FusionSummary, AnalysisError> {
+    let mut v: Vec<Finding> = Vec::new();
+    let pre_nodes = pre.nodes();
+
+    // Out-edge lists for the pre graph (consumers() only stores counts).
+    let mut pre_out: Vec<Vec<usize>> = vec![Vec::new(); pre_nodes.len()];
+    for (i, node) in pre_nodes.iter().enumerate() {
+        for id in &node.inputs {
+            pre_out[id.0].push(i);
+        }
+    }
+    let sole_consumer = |i: usize| -> Option<usize> {
+        if pre_out[i].len() == 1 {
+            Some(pre_out[i][0])
+        } else {
+            None
+        }
+    };
+
+    let pre_accels: Vec<usize> = pre
+        .topo_order()
+        .iter()
+        .copied()
+        .filter(|&i| matches!(pre_nodes[i].op, NodeOp::Accel(_)))
+        .collect();
+    let post_accels: Vec<usize> = post
+        .topo_order()
+        .iter()
+        .copied()
+        .filter(|&i| matches!(post.nodes()[i].op, NodeOp::Accel(_)))
+        .collect();
+    if pre_accels.len() != post_accels.len() {
+        v.push(fusion_violation(format!(
+            "accel stage count changed: {} pre vs {} post",
+            pre_accels.len(),
+            post_accels.len()
+        )));
+    }
+
+    let mut epilogues_added = 0usize;
+    let mut adds_fused = 0usize;
+    for (&pi, &qi) in pre_accels.iter().zip(&post_accels) {
+        let (NodeOp::Accel(ps), NodeOp::Accel(qs)) = (&pre_nodes[pi].op, &post.nodes()[qi].op)
+        else {
+            unreachable!("filtered to accel nodes");
+        };
+        if ps.layer != qs.layer {
+            v.push(fusion_violation(format!(
+                "accel pair {pi}→{qi}: layer geometry changed ('{}' vs '{}') — clocks invariance broken",
+                ps.layer.name, qs.layer.name
+            )));
+            continue;
+        }
+        if ps.weights != qs.weights {
+            v.push(fusion_violation(format!("accel pair {pi}→{qi}: weights changed")));
+        }
+        if ps.qparams != qs.qparams {
+            v.push(fusion_violation(format!("accel pair {pi}→{qi}: qparams changed")));
+        }
+        match (&ps.epilogue, &qs.epilogue) {
+            (None, None) => {}
+            (Some(a), Some(b)) if a == b => {}
+            (Some(_), _) => {
+                v.push(fusion_violation(format!(
+                    "accel pair {pi}→{qi}: pre-existing epilogue dropped or rewritten"
+                )));
+            }
+            (None, Some(q)) => {
+                epilogues_added += 1;
+                let legal = match sole_consumer(pi) {
+                    Some(c) => match &pre_nodes[c].op {
+                        NodeOp::Requant(qq) => qq == q,
+                        NodeOp::Flatten => sole_consumer(c).is_some_and(|c2| {
+                            matches!(&pre_nodes[c2].op, NodeOp::Requant(qq) if qq == q)
+                        }),
+                        _ => false,
+                    },
+                    None => false,
+                };
+                if !legal {
+                    v.push(fusion_violation(format!(
+                        "accel pair {pi}→{qi}: epilogue has no sole-consumer Requant chain in pre \
+                         (fan-out producers must never fold)"
+                    )));
+                }
+            }
+        }
+    }
+
+    let pre_adds: Vec<usize> = pre
+        .topo_order()
+        .iter()
+        .copied()
+        .filter(|&i| matches!(pre_nodes[i].op, NodeOp::ResidualAdd { .. }))
+        .collect();
+    let post_adds: Vec<usize> = post
+        .topo_order()
+        .iter()
+        .copied()
+        .filter(|&i| matches!(post.nodes()[i].op, NodeOp::ResidualAdd { .. }))
+        .collect();
+    if pre_adds.len() != post_adds.len() {
+        v.push(fusion_violation(format!(
+            "residual-add count changed: {} pre vs {} post",
+            pre_adds.len(),
+            post_adds.len()
+        )));
+    }
+    for (&pi, &qi) in pre_adds.iter().zip(&post_adds) {
+        let (
+            NodeOp::ResidualAdd { requant: pr },
+            NodeOp::ResidualAdd { requant: qr },
+        ) = (&pre_nodes[pi].op, &post.nodes()[qi].op)
+        else {
+            unreachable!("filtered to residual adds");
+        };
+        match (pr, qr) {
+            (None, None) => {}
+            (Some(a), Some(b)) if a == b => {}
+            (Some(_), _) => {
+                v.push(fusion_violation(format!(
+                    "residual-add pair {pi}→{qi}: pre-existing fused requant dropped or rewritten"
+                )));
+            }
+            (None, Some(q)) => {
+                adds_fused += 1;
+                let legal = sole_consumer(pi).is_some_and(|c| {
+                    matches!(&pre_nodes[c].op, NodeOp::Requant(qq) if qq == q)
+                });
+                if !legal {
+                    v.push(fusion_violation(format!(
+                        "residual-add pair {pi}→{qi}: fused requant has no sole-consumer Requant in pre"
+                    )));
+                }
+            }
+        }
+    }
+
+    let count = |g: &ModelGraph, f: fn(&NodeOp) -> bool| -> usize {
+        g.nodes().iter().filter(|n| f(&n.op)).count()
+    };
+    let folded = count(pre, |op| matches!(op, NodeOp::Requant(_))) as i64
+        - count(post, |op| matches!(op, NodeOp::Requant(_))) as i64;
+    if folded != (epilogues_added + adds_fused) as i64 {
+        v.push(fusion_violation(format!(
+            "requant delta {folded} ≠ epilogues added {epilogues_added} + adds fused {adds_fused}"
+        )));
+    }
+    let node_delta = pre_nodes.len() as i64 - post.nodes().len() as i64;
+    if node_delta != folded {
+        v.push(fusion_violation(format!(
+            "node-count delta {node_delta} ≠ folded requants {folded} — fusion added or lost nodes"
+        )));
+    }
+
+    // Non-requant host ops (and Input/Output) must survive in kind and
+    // topo order — fusion only ever deletes Requant nodes.
+    let census = |g: &ModelGraph| -> Vec<String> {
+        g.topo_order()
+            .iter()
+            .map(|&i| &g.nodes()[i].op)
+            .filter(|op| !matches!(op, NodeOp::Accel(_) | NodeOp::Requant(_)))
+            .map(|op| match op {
+                // Fused adds differ only by the folded requant; compare kind.
+                NodeOp::ResidualAdd { .. } => "residual_add".to_string(),
+                other => other.label(),
+            })
+            .collect()
+    };
+    if census(pre) != census(post) {
+        v.push(fusion_violation("host-op sequence changed (beyond Requant removal)".into()));
+    }
+
+    if pre.name != post.name {
+        v.push(fusion_violation(format!("graph renamed: '{}' vs '{}'", pre.name, post.name)));
+    }
+
+    if v.is_empty() {
+        Ok(FusionSummary { folded_requants: folded as usize, epilogues_added, adds_fused })
+    } else {
+        Err(AnalysisError { graph: post.name.clone(), findings: v })
+    }
+}
+
+/// Registration-time convenience: verify `fused` against its source and
+/// analyze it, folding any fusion violations into the report.
+pub fn analyze_registration(pre: &ModelGraph, fused: &ModelGraph) -> AnalysisReport {
+    let mut report = analyze_graph(fused);
+    if let Err(e) = verify_fusion(pre, fused) {
+        report.findings.extend(e.findings);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layers::Layer;
+    use crate::model::{fuse_graph, GraphBuilder};
+    use crate::networks::{seeded_weights, tiny_cnn_graph};
+    use crate::tensor::Tensor4;
+
+    /// Brute-force oracle: the interval image of `requantize` over a
+    /// small accumulator range must match the endpoint evaluation.
+    #[test]
+    fn requant_interval_matches_brute_force() {
+        let qs = [
+            QParams::identity(),
+            QParams::from_scale(1.0 / 64.0, 7, true),
+            QParams::from_scale(0.3, -11, false),
+            QParams { multiplier: 1 << 30, shift: 30, bias: 40, zero_point: -5, relu: true },
+        ];
+        for q in qs {
+            for (lo, hi) in [(-300i64, 300i64), (-5000, -100), (90, 4000)] {
+                let (_, post, _) = requant_interval(Interval { lo, hi }, &q);
+                let mut bl = i64::MAX;
+                let mut bh = i64::MIN;
+                for acc in lo..=hi {
+                    let y = q.requantize(acc as i32) as i64;
+                    bl = bl.min(y);
+                    bh = bh.max(y);
+                }
+                assert_eq!((post.lo, post.hi), (bl, bh), "q={q:?} range=[{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn accel_interval_exact_for_point_kernel() {
+        // 1×1 conv, single weight 2, no padding possible: acc = 2x.
+        let layer = Layer::conv("pt", 1, 4, 4, 1, 1, 1, 1, 1, 1);
+        let stage = AccelStage {
+            layer,
+            weights: Tensor4::from_vec([1, 1, 1, 1], vec![2i8]),
+            qparams: QParams::identity(),
+            epilogue: None,
+        };
+        let acc = accel_acc_interval(&stage, Interval::I8);
+        assert_eq!(acc, Interval { lo: -256, hi: 254 });
+    }
+
+    #[test]
+    fn padding_hull_includes_zero() {
+        // 3×3 all-ones kernel with a strictly positive input range: the
+        // interior sum is ≥ 9·100, but edge pixels see zero padding, so
+        // the sound lower bound is 0.
+        let layer = Layer::conv("pad", 1, 4, 4, 3, 3, 1, 1, 1, 1);
+        let stage = AccelStage {
+            layer,
+            weights: Tensor4::from_vec([3, 3, 1, 1], vec![1i8; 9]),
+            qparams: QParams::identity(),
+            epilogue: None,
+        };
+        let acc = accel_acc_interval(&stage, Interval { lo: 100, hi: 127 });
+        assert_eq!(acc.lo, 0);
+        assert_eq!(acc.hi, 9 * 127);
+    }
+
+    #[test]
+    fn serial_peak_counts_chain() {
+        // input [1,2,2,1] (4 B) → maxpool 1×1 (4 B) → output (aliases).
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input([1, 2, 2, 1]);
+        let p = b.maxpool(x, 1, 1, 0);
+        b.output(p);
+        let g = b.build().unwrap();
+        // Peak: input (4) live while maxpool writes its 4 → 8.
+        assert_eq!(peak_bytes_serial(&g), 8);
+    }
+
+    #[test]
+    fn zoo_graph_clean_and_schedule_sound() {
+        let g = tiny_cnn_graph();
+        let fused = fuse_graph(&g);
+        let summary = verify_fusion(&g, &fused).expect("tiny_cnn fusion must be legal");
+        assert_eq!(
+            summary.folded_requants,
+            summary.epilogues_added + summary.adds_fused
+        );
+        for graph in [&g, &fused] {
+            let report = analyze_graph(graph);
+            assert!(report.is_clean(), "findings: {:?}", report.findings);
+            assert!(report.peak_serial_bytes > 0);
+            assert!(!report.render().is_empty());
+        }
+    }
+
+    #[test]
+    fn swapped_fusion_arguments_are_rejected() {
+        let g = tiny_cnn_graph();
+        let fused = fuse_graph(&g);
+        if g.nodes().len() != fused.nodes().len() {
+            // Claiming the fused graph "unfuses" into the original must
+            // fail: epilogues/requants would have to appear from nowhere.
+            let err = verify_fusion(&fused, &g).expect_err("reverse diff must be illegal");
+            assert!(err.findings.iter().all(|f| f.kind == FindingKind::FusionViolation));
+        }
+    }
+
+    #[test]
+    fn overflow_accumulator_is_flagged() {
+        let ci = 140_000usize;
+        let mut b = GraphBuilder::new("wide");
+        let x = b.input([1, 1, 1, ci]);
+        let layer = Layer::fully_connected("wide_fc", 1, ci, 1);
+        let w = Tensor4::from_vec([1, 1, ci, 1], vec![127i8; ci]);
+        let a = b.accel(x, layer, w, QParams::from_scale(1.0 / 1024.0, 0, false));
+        b.output(a);
+        let g = b.build().unwrap();
+        let report = analyze_graph(&g);
+        assert!(report
+            .errors()
+            .any(|f| f.kind == FindingKind::AccumulatorOverflow));
+    }
+
+    #[test]
+    fn dead_branch_and_logits_pin_flags() {
+        // Two parallel 1×1 convs into a residual add: both heads are
+        // maximal accel ancestors → ambiguous-pin warning, still clean.
+        let mut b = GraphBuilder::new("two_head");
+        let x = b.input([1, 2, 2, 1]);
+        let layer = Layer::conv("head", 1, 2, 2, 1, 1, 1, 1, 1, 1);
+        let w = seeded_weights(&layer, 7);
+        let a = b.accel(x, layer.clone(), w.clone(), QParams::identity());
+        let c = b.accel(x, layer, w, QParams::identity());
+        let add = b.residual_add(a, c);
+        b.output(add);
+        let g = b.build().unwrap();
+        let report = analyze_graph(&g);
+        assert!(report.is_clean());
+        assert!(report
+            .warnings()
+            .any(|f| f.kind == FindingKind::AmbiguousLogitsPin));
+    }
+}

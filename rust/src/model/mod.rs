@@ -27,6 +27,12 @@
 //!   pipe (or into the `ResidualAdd` that feeds them), shrinking the
 //!   executed graph without changing a single output bit. The serving
 //!   layer applies it at registration time.
+//! * [`analyze_graph`] / [`verify_fusion`] — the static verifier: prove
+//!   quantization ranges, activation liveness/peak memory, fusion
+//!   legality, and schedule soundness over a compiled graph without
+//!   executing it. `ServiceBuilder::strict_verify` turns
+//!   [`AnalysisError`] findings into registration-time rejections, and
+//!   `kraken check <net>` prints the per-node [`AnalysisReport`].
 //! * [`sched`] / [`run_graph_on_pool`] — the level/branch scheduler:
 //!   partition the DAG into dependency levels and fan each level's
 //!   independent accelerated nodes out across the workers of a
@@ -42,6 +48,7 @@
 //! [`crate::networks::inception_block_graph`]) builds on these
 //! primitives.
 
+mod analyze;
 mod builder;
 mod exec;
 mod fuse;
@@ -49,6 +56,10 @@ mod graph;
 pub mod ops;
 pub mod sched;
 
+pub use analyze::{
+    analyze_graph, analyze_registration, verify_fusion, AnalysisError, AnalysisReport, Finding,
+    FindingKind, FusionSummary, Interval, NodeRange, Severity,
+};
 pub use builder::GraphBuilder;
 pub use exec::{run_graph, GraphReport, RunError};
 pub use fuse::fuse_graph;

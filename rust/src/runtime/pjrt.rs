@@ -67,6 +67,13 @@ mod native {
                 .map(|(data, shape)| {
                     // i8 has no NativeType impl in xla 0.1.6; build the S8
                     // literal from raw bytes instead.
+                    //
+                    // SAFETY: reinterpreting `&[i8]` as `&[u8]` of the same
+                    // length is sound — both have size/align 1, every bit
+                    // pattern is valid for u8, and the borrow keeps `data`
+                    // alive for the slice's lifetime. This is the crate's
+                    // only unsafe block and compiles only under
+                    // `--cfg pjrt_native` (lib.rs forbids unsafe elsewhere).
                     let bytes: &[u8] = unsafe {
                         std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len())
                     };

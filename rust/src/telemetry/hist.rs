@@ -73,6 +73,12 @@ impl HistogramCore {
     }
 
     /// Record one value. Lock-free; safe from any thread.
+    ///
+    /// Every atomic here is `Relaxed` on purpose: each cell (bucket,
+    /// sum, max) is a self-contained monotone statistic — no reader
+    /// infers the state of *other* memory from any one of them, so no
+    /// happens-before edge is needed. `snapshot` tolerates torn
+    /// cross-bucket views by construction (see its doc).
     pub fn record(&self, v: u64) {
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         // Saturating add so a handful of huge samples can't wrap the

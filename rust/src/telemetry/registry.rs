@@ -18,6 +18,12 @@ use super::hist::{HistogramCore, HistogramSnapshot};
 #[derive(Debug, Clone, Default)]
 pub struct Counter(Arc<AtomicU64>);
 
+// Counter/Gauge/AtomicF64 operations below are deliberately `Relaxed`:
+// each handle is one standalone metric cell. Readers (`get`, the
+// Prometheus renderer) never derive the state of other memory from a
+// metric's value, so no acquire/release pairing is required; cells used
+// for actual cross-thread handoff live elsewhere (see
+// `backend::pool::PoolHandle::peak_queued`).
 impl Counter {
     pub fn new() -> Self {
         Self::default()

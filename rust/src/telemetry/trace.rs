@@ -89,6 +89,10 @@ fn epoch() -> Instant {
 /// serial executor, the pool scheduler and the serving layer so spans
 /// from any path can be correlated.
 pub fn next_request_id() -> u64 {
+    // Relaxed: uniqueness only needs the RMW's atomicity; ids carry no
+    // ordering contract between threads. (`ENABLED` below, by contrast,
+    // uses Release/Acquire so a thread that sees recording armed also
+    // sees the ring it must append to.)
     NEXT_REQUEST.fetch_add(1, Ordering::Relaxed)
 }
 

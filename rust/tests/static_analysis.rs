@@ -1,0 +1,211 @@
+//! Static-verifier acceptance: the analyzer proves the zoo clean,
+//! flags hand-built pathological graphs, re-verifies fusion legality
+//! on ResNet-50, and enforces the peak-memory/schedule-width model —
+//! all without executing a single inference.
+
+use kraken::coordinator::ServiceBuilder;
+use kraken::layers::Layer;
+use kraken::model::{
+    analyze_graph, fuse_graph, verify_fusion, FindingKind, GraphBuilder, ModelGraph,
+};
+use kraken::networks::{
+    alexnet_graph, inception_block_graph, resnet50_graph_at, tiny_cnn_graph, tiny_mlp_graph,
+};
+use kraken::quant::QParams;
+use kraken::tensor::Tensor4;
+
+fn zoo() -> Vec<(&'static str, ModelGraph)> {
+    vec![
+        ("tiny_cnn", tiny_cnn_graph()),
+        ("tiny_mlp", tiny_mlp_graph()),
+        ("alexnet", alexnet_graph(3000)),
+        ("resnet50", resnet50_graph_at(32)),
+        ("inception", inception_block_graph(32, 64, 16, 4)),
+    ]
+}
+
+/// A graph whose `ResidualAdd` provably saturates: both operands are
+/// requantized into [100, 127] (zero_point 100 after ReLU), so the sum
+/// lies in [200, 254] — entirely above i8.
+fn saturating_graph() -> ModelGraph {
+    let q = QParams { multiplier: 1 << 30, shift: 30, bias: 0, zero_point: 100, relu: true };
+    let mut b = GraphBuilder::new("saturating");
+    let x = b.input([1, 4, 4, 2]);
+    let a = b.requant(x, q);
+    let c = b.requant(x, q);
+    let add = b.residual_add(a, c);
+    b.output(add);
+    b.build().expect("valid topology")
+}
+
+#[test]
+fn zoo_graphs_pass_static_checks() {
+    for (name, graph) in zoo() {
+        let fused = fuse_graph(&graph);
+        let summary =
+            verify_fusion(&graph, &fused).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(
+            summary.folded_requants,
+            summary.epilogues_added + summary.adds_fused,
+            "{name}: fold accounting"
+        );
+        for (which, g) in [("unfused", &graph), ("fused", &fused)] {
+            let report = analyze_graph(g);
+            assert!(
+                report.is_clean(),
+                "{name} ({which}) has error findings: {:?}",
+                report.findings
+            );
+            assert!(report.peak_serial_bytes > 0, "{name}: empty liveness");
+            assert_eq!(report.ranges.len(), g.nodes().len(), "{name}: row per node");
+        }
+    }
+}
+
+#[test]
+fn resnet50_fusion_diff_accounts_for_every_requant() {
+    let pre = resnet50_graph_at(32);
+    let post = fuse_graph(&pre);
+    let summary = verify_fusion(&pre, &post).expect("resnet50 fusion is legal");
+    // ResNet-50's 16 residual joins each carried a post-add requant.
+    assert_eq!(summary.adds_fused, 16, "{summary:?}");
+    assert_eq!(
+        pre.nodes().len() - post.nodes().len(),
+        summary.folded_requants,
+        "node delta must equal folded requants"
+    );
+    // Swapping the arguments claims fusion *added* nodes — must fail.
+    let err = verify_fusion(&post, &pre).expect_err("reverse diff is illegal");
+    assert!(err.findings.iter().all(|f| f.kind == FindingKind::FusionViolation));
+    // A fused graph from a *different* source is not a legal diff of
+    // this one either (host-op census mismatch at minimum).
+    let other = fuse_graph(&tiny_cnn_graph());
+    assert!(verify_fusion(&pre, &other).is_err());
+}
+
+#[test]
+fn saturating_residual_add_is_flagged() {
+    let report = analyze_graph(&saturating_graph());
+    assert!(!report.is_clean());
+    assert!(
+        report
+            .errors()
+            .any(|f| f.kind == FindingKind::GuaranteedSaturation),
+        "findings: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn overwide_accumulator_is_flagged() {
+    // 140k all-max weights against i8 inputs: |acc| can reach ~2.28e9,
+    // past i32::MAX — the MAC column would wrap on hardware.
+    let ci = 140_000usize;
+    let mut b = GraphBuilder::new("overwide");
+    let x = b.input([1, 1, 1, ci]);
+    let layer = Layer::fully_connected("wide_fc", 1, ci, 1);
+    let w = Tensor4::from_vec([1, 1, ci, 1], vec![127i8; ci]);
+    let a = b.accel(x, layer, w, QParams::from_scale(1.0 / 1024.0, 0, false));
+    b.output(a);
+    let report = analyze_graph(&b.build().expect("valid topology"));
+    assert!(
+        report
+            .errors()
+            .any(|f| f.kind == FindingKind::AccumulatorOverflow),
+        "findings: {:?}",
+        report.findings
+    );
+}
+
+#[test]
+fn strict_verify_rejects_saturating_graph_with_typed_error() {
+    let err = ServiceBuilder::new()
+        .strict_verify(true)
+        .try_register_graph("bad", saturating_graph())
+        .expect_err("strict registration must reject");
+    assert_eq!(err.graph, "saturating");
+    assert!(err.findings.iter().any(|f| f.kind == FindingKind::GuaranteedSaturation));
+    assert!(!err.to_string().is_empty());
+}
+
+#[test]
+#[should_panic(expected = "register_graph")]
+fn strict_verify_register_graph_panics() {
+    let _ = ServiceBuilder::new()
+        .strict_verify(true)
+        .register_graph("bad", saturating_graph());
+}
+
+#[test]
+fn non_strict_registration_still_serves() {
+    // Default policy: warn, register anyway (back-compat with every
+    // existing caller).
+    let builder = ServiceBuilder::new()
+        .try_register_graph("tolerated", saturating_graph())
+        .expect("non-strict registration succeeds");
+    drop(builder);
+}
+
+#[test]
+fn zoo_graphs_register_under_strict_verify() {
+    let mut builder = ServiceBuilder::new().strict_verify(true);
+    for (name, graph) in zoo() {
+        builder = builder
+            .try_register_graph(name, graph)
+            .unwrap_or_else(|e| panic!("{e}"));
+    }
+    drop(builder);
+}
+
+/// N parallel fat→thin branches: each branch inflates 1→8 channels
+/// (big intermediate) then reduces back to 1. A wider level schedule
+/// keeps more of the thin outputs in flight *on top of* all the fat
+/// ones, so peak memory must grow monotonically with width.
+#[test]
+fn peak_memory_is_monotone_in_schedule_width() {
+    let mut b = GraphBuilder::new("branches");
+    let x = b.input([1, 4, 4, 1]);
+    let mut heads = Vec::new();
+    for i in 0..4 {
+        let fat = Layer::conv(format!("fat{i}"), 1, 4, 4, 1, 1, 1, 1, 1, 8);
+        let thin = Layer::conv(format!("thin{i}"), 1, 4, 4, 1, 1, 1, 1, 8, 1);
+        let wf = Tensor4::from_vec([1, 1, 1, 8], vec![1i8; 8]);
+        let wt = Tensor4::from_vec([1, 1, 8, 1], vec![1i8; 8]);
+        let a = b.accel(x, fat, wf, QParams::from_scale(0.25, 0, true));
+        let t = b.accel(a, thin, wt, QParams::from_scale(0.25, 0, true));
+        heads.push(t);
+    }
+    let cat = b.concat(&heads);
+    b.output(cat);
+    let report = analyze_graph(&b.build().expect("valid topology"));
+    assert!(report.is_clean(), "findings: {:?}", report.findings);
+    assert_eq!(report.max_accel_width, 4);
+    let peaks: Vec<u64> = report.peak_by_width.iter().map(|&(_, p)| p).collect();
+    assert_eq!(peaks.len(), 4);
+    for pair in peaks.windows(2) {
+        assert!(pair[0] <= pair[1], "peaks not monotone: {peaks:?}");
+    }
+    assert!(
+        peaks[peaks.len() - 1] > peaks[0],
+        "widest schedule must retain strictly more than width 1: {peaks:?}"
+    );
+    assert!(
+        report.peak_serial_bytes <= peaks[peaks.len() - 1],
+        "serial execution cannot out-retain the widest schedule here"
+    );
+}
+
+#[test]
+fn check_report_renders_every_node() {
+    let graph = fuse_graph(&tiny_cnn_graph());
+    let report = analyze_graph(&graph);
+    let rendered = report.render();
+    for node in graph.nodes() {
+        assert!(
+            rendered.contains(&node.op.label()),
+            "render missing op '{}'",
+            node.op.label()
+        );
+    }
+    assert!(rendered.contains("peak live bytes"));
+}
