@@ -1,0 +1,318 @@
+//! Loopback ingress bench: what the HTTP front door costs, and what
+//! admission control buys under overload.
+//!
+//! Phase 1 — **added latency**: the same tiny_mlp request served (a)
+//! in-process via `KrakenService::infer` and (b) over a keep-alive
+//! loopback HTTP connection. The per-request delta (parse + route +
+//! admission + JSON + two socket hops) is the transport tax; it is
+//! emitted as `added_p50_us`/`added_p99_us`.
+//!
+//! Phase 2 — **overload**: paced Poisson clients offer ~4× the
+//! calibrated closed-loop saturation rate, every request carrying a
+//! deadline and 1-in-4 riding the batch lane. Without admission
+//! control this regime grows the queue for the whole run and the tail
+//! explodes (see `service_openloop`); with it, the excess turns into
+//! `429`/`503` sheds while the *admitted* interactive tail stays
+//! bounded by the deadline. CI gates on exactly that: sheds > 0,
+//! successes > 0, and interactive-success p99 ≤ 2× the deadline.
+//!
+//! Emits `BENCH_ingress_http.json`.
+//! Run: `cargo bench --bench ingress_http`
+
+mod harness;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use kraken::arch::KrakenConfig;
+use kraken::coordinator::{BackendKind, ServiceBuilder};
+use kraken::ingress::wire::encode_tensor;
+use kraken::ingress::{AdmissionConfig, IngressConfig, IngressServer};
+use kraken::networks::tiny_mlp_graph;
+use kraken::tensor::Tensor4;
+
+const WORKERS: usize = 2;
+const CLOSED_LOOP_N: usize = 200;
+const OVERLOAD_CLIENTS: usize = 6;
+const OVERLOAD_ATTEMPTS_PER_CLIENT: usize = 150;
+const OVERLOAD_RHO: f64 = 4.0;
+
+/// Deterministic 64-bit LCG (Knuth MMIX constants) — no vendored
+/// `rand`; a seeded schedule keeps the run repeatable.
+struct Lcg(u64);
+
+impl Lcg {
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.0
+    }
+
+    fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+
+    fn next_exp(&mut self, mean_s: f64) -> f64 {
+        -mean_s * self.next_f64().ln()
+    }
+}
+
+fn start_server() -> IngressServer {
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .backend(BackendKind::Functional)
+        .workers(WORKERS)
+        .register_graph("tiny_mlp", tiny_mlp_graph())
+        .build();
+    let cfg = IngressConfig {
+        handler_threads: OVERLOAD_CLIENTS + 2,
+        max_body_bytes: 1 << 20,
+        admission: AdmissionConfig {
+            // Small in-flight cap so overload sheds instead of queueing;
+            // low batch threshold so the utilization gate bites.
+            queue_cap: 4,
+            batch_depth_threshold: 2,
+            ..AdmissionConfig::default()
+        },
+    };
+    IngressServer::bind(service, ("127.0.0.1", 0), cfg).expect("bind loopback")
+}
+
+/// One keep-alive HTTP client connection.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect loopback");
+        stream.set_nodelay(true).expect("nodelay");
+        let reader = BufReader::new(stream.try_clone().expect("clone stream"));
+        Client { stream, reader }
+    }
+
+    /// POST one tensor payload; returns the response status.
+    fn infer(&mut self, payload: &[u8], headers: &[(&str, String)]) -> u16 {
+        let mut head = format!(
+            "POST /v1/infer/tiny_mlp HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n",
+            payload.len()
+        );
+        for (name, value) in headers {
+            head.push_str(&format!("{name}: {value}\r\n"));
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes()).expect("write head");
+        self.stream.write_all(payload).expect("write body");
+
+        let mut status_line = String::new();
+        self.reader.read_line(&mut status_line).expect("status line");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .expect("status code")
+            .parse()
+            .expect("numeric status");
+        let mut content_length = 0usize;
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).expect("header line");
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some(value) = line.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_length = value.trim().parse().expect("content-length");
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body).expect("body");
+        status
+    }
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p).round() as usize;
+    sorted_us[idx]
+}
+
+/// Closed-loop latency distribution of `f` over `n` calls, in µs,
+/// sorted ascending.
+fn closed_loop_us(n: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..16 {
+        f(); // warmup
+    }
+    let mut samples: Vec<f64> = (0..n)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e6
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples
+}
+
+/// Sleep-then-spin until `target` (arrival pacing).
+fn pace_until(target: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= target {
+            return;
+        }
+        let gap = target - now;
+        if gap > Duration::from_micros(200) {
+            thread::sleep(gap - Duration::from_micros(100));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[derive(Default)]
+struct OverloadTally {
+    ok: u64,
+    shed_429: u64,
+    shed_503: u64,
+    other: u64,
+    interactive_ok_us: Vec<f64>,
+}
+
+fn main() {
+    println!("== loopback HTTP ingress: added latency + overload shedding ==\n");
+    let server = start_server();
+    let addr = server.local_addr();
+    let x = Tensor4::random([1, 1, 1, 256], 42);
+    let payload = encode_tensor(&x);
+
+    // -- phase 1: added latency, closed loop ---------------------------
+    let direct = closed_loop_us(CLOSED_LOOP_N, || {
+        server.service().infer("tiny_mlp", x.clone()).expect("direct infer");
+    });
+    let mut client = Client::connect(addr);
+    let http = closed_loop_us(CLOSED_LOOP_N, || {
+        assert_eq!(client.infer(&payload, &[]), 200);
+    });
+    let (direct_p50, direct_p99) = (percentile(&direct, 0.50), percentile(&direct, 0.99));
+    let (http_p50, http_p99) = (percentile(&http, 0.50), percentile(&http, 0.99));
+    println!(
+        "direct submit : p50 {direct_p50:>8.1} µs  p99 {direct_p99:>8.1} µs  ({CLOSED_LOOP_N} reqs)"
+    );
+    println!(
+        "loopback HTTP : p50 {http_p50:>8.1} µs  p99 {http_p99:>8.1} µs  \
+         (added p50 {:+.1} µs, p99 {:+.1} µs)",
+        http_p50 - direct_p50,
+        http_p99 - direct_p99
+    );
+
+    // -- phase 2: overload at ~rho × saturation ------------------------
+    // Closed-loop HTTP latency calibrates the knee: WORKERS requests in
+    // flight complete one per (p50 / WORKERS) seconds at saturation.
+    let sat_rps = WORKERS as f64 / (http_p50 / 1e6);
+    let offered_rps = OVERLOAD_RHO * sat_rps;
+    let deadline_us: u64 = ((http_p50 * 10.0) as u64).max(20_000);
+    println!(
+        "\noverload: {OVERLOAD_CLIENTS} clients offering ≈{offered_rps:.0} req/s \
+         (ρ={OVERLOAD_RHO} × {sat_rps:.0} req/s), deadline {deadline_us} µs, 1-in-4 batch lane"
+    );
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..OVERLOAD_CLIENTS)
+        .map(|c| {
+            let payload = payload.clone();
+            thread::spawn(move || {
+                let mut client = Client::connect(addr);
+                let mut lcg = Lcg(0xBADCAFE + c as u64);
+                let mean_gap_s = OVERLOAD_CLIENTS as f64 / offered_rps;
+                let mut tally = OverloadTally::default();
+                let start = Instant::now();
+                let mut offset_s = 0.0;
+                for i in 0..OVERLOAD_ATTEMPTS_PER_CLIENT {
+                    offset_s += lcg.next_exp(mean_gap_s);
+                    pace_until(start + Duration::from_secs_f64(offset_s));
+                    let batch = i % 4 == 3;
+                    let mut headers =
+                        vec![("x-kraken-deadline-us", deadline_us.to_string())];
+                    if batch {
+                        headers.push(("x-kraken-lane", "batch".to_string()));
+                    }
+                    let t = Instant::now();
+                    let status = client.infer(&payload, &headers);
+                    let us = t.elapsed().as_secs_f64() * 1e6;
+                    match status {
+                        200 => {
+                            tally.ok += 1;
+                            if !batch {
+                                tally.interactive_ok_us.push(us);
+                            }
+                        }
+                        429 => tally.shed_429 += 1,
+                        503 => tally.shed_503 += 1,
+                        _ => tally.other += 1,
+                    }
+                }
+                tally
+            })
+        })
+        .collect();
+    let tallies: Vec<OverloadTally> =
+        clients.into_iter().map(|h| h.join().expect("overload client")).collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut total = OverloadTally::default();
+    for t in tallies {
+        total.ok += t.ok;
+        total.shed_429 += t.shed_429;
+        total.shed_503 += t.shed_503;
+        total.other += t.other;
+        total.interactive_ok_us.extend(t.interactive_ok_us);
+    }
+    total.interactive_ok_us.sort_by(f64::total_cmp);
+    let attempts = total.ok + total.shed_429 + total.shed_503 + total.other;
+    let achieved_rho = (attempts as f64 / wall_s) / sat_rps;
+    let interactive_p50 = percentile(&total.interactive_ok_us, 0.50);
+    let interactive_p99 = percentile(&total.interactive_ok_us, 0.99);
+    println!(
+        "overload result: {attempts} attempts in {wall_s:.2} s (achieved ρ≈{achieved_rho:.1}): \
+         {} ok, {} shed 429, {} shed 503, {} other",
+        total.ok, total.shed_429, total.shed_503, total.other
+    );
+    println!(
+        "admitted interactive tail: p50 {interactive_p50:.0} µs  p99 {interactive_p99:.0} µs \
+         (deadline {deadline_us} µs)"
+    );
+    assert_eq!(total.other, 0, "only 200/429/503 are expected under overload");
+
+    println!("\nglobal ingress counters:");
+    for (name, value) in kraken::telemetry::global().counters_with_prefix("ingress_") {
+        println!("  {name} {value}");
+    }
+    server.shutdown();
+
+    harness::emit_json(
+        "ingress_http",
+        &[
+            ("closed_loop_n", CLOSED_LOOP_N as f64),
+            ("workers", WORKERS as f64),
+            ("direct_p50_us", direct_p50),
+            ("direct_p99_us", direct_p99),
+            ("http_p50_us", http_p50),
+            ("http_p99_us", http_p99),
+            ("added_p50_us", http_p50 - direct_p50),
+            ("added_p99_us", http_p99 - direct_p99),
+            ("overload_rho_target", OVERLOAD_RHO),
+            ("overload_rho_achieved", achieved_rho),
+            ("overload_attempts", attempts as f64),
+            ("overload_ok", total.ok as f64),
+            ("overload_shed_429", total.shed_429 as f64),
+            ("overload_shed_503", total.shed_503 as f64),
+            ("deadline_us", deadline_us as f64),
+            ("interactive_ok_p50_us", interactive_p50),
+            ("interactive_ok_p99_us", interactive_p99),
+        ],
+    );
+}

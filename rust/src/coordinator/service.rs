@@ -139,6 +139,23 @@ impl<T> Ticket<T> {
         })
     }
 
+    /// Block until the result arrives or `timeout` elapses. On timeout
+    /// the ticket itself comes back (`Err(ticket)`) so the caller can
+    /// keep waiting or drop it — dropping closes the channel, and the
+    /// worker's eventual `send` to a closed channel is ignored, so a
+    /// late result is discarded without stranding the worker. The
+    /// ingress deadline path (`503`) is built on exactly that drop.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Result<T, RunError>, Ticket<T>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => Ok(result),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(self),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Ok(Err(RunError {
+                worker: usize::MAX,
+                reason: "service stopped before responding".into(),
+            })),
+        }
+    }
+
     /// Non-blocking poll: `None` while the request is still in flight.
     pub fn try_wait(&self) -> Option<Result<T, RunError>> {
         match self.rx.try_recv() {
@@ -1000,6 +1017,13 @@ impl KrakenService {
         self.inner().pool.workers()
     }
 
+    /// Live pool queue depth: jobs accepted but not yet picked up by a
+    /// worker. The ingress admission layer reads this as its
+    /// utilization signal (batch-lane gating).
+    pub fn queue_depth(&self) -> usize {
+        self.inner().pool.queued()
+    }
+
     /// Registered model names (sorted).
     pub fn models(&self) -> Vec<String> {
         let mut names: Vec<String> = self.inner().models.keys().cloned().collect();
@@ -1437,6 +1461,79 @@ mod tests {
         let stats = service.shutdown();
         assert_eq!(stats.completed, 3);
         assert_eq!(stats.failed, 1);
+    }
+
+    /// A backend that blocks inside `run_layer` until its gate opens —
+    /// a stand-in for a slow device, used to force deadline expiry.
+    struct Gated {
+        inner: Functional,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Accelerator for Gated {
+        fn name(&self) -> String {
+            "gated".into()
+        }
+        fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+            let (open, cv) = &*self.gate;
+            let mut open = open.lock().expect("gate");
+            while !*open {
+                open = cv.wait(open).expect("gate");
+            }
+            drop(open);
+            self.inner.run_layer(data)
+        }
+        fn counters(&self) -> Counters {
+            self.inner.counters()
+        }
+        fn freq_hz(&self, kind: LayerKind) -> f64 {
+            self.inner.freq_hz(kind)
+        }
+    }
+
+    #[test]
+    fn timed_out_ticket_discards_late_result_without_stranding_worker() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let backend_gate = Arc::clone(&gate);
+        let service = ServiceBuilder::new()
+            .config(KrakenConfig::new(7, 96))
+            .workers(1)
+            .register_graph("tiny_cnn", tiny_cnn_graph())
+            .build_with(move |_| Gated {
+                inner: Functional::new(KrakenConfig::new(7, 96)),
+                gate: Arc::clone(&backend_gate),
+            });
+        let x = Tensor4::random([1, 28, 28, 3], X_SEED);
+
+        // Gate closed: the worker blocks inside conv1, so the deadline
+        // must expire and hand the ticket back.
+        let ticket = service.submit("tiny_cnn", x.clone());
+        let ticket = ticket
+            .wait_timeout(Duration::from_millis(25))
+            .expect_err("gated request cannot finish inside the deadline");
+        // The ingress 503 path: drop the timed-out ticket. The worker's
+        // eventual send goes to a closed channel and is discarded.
+        drop(ticket);
+
+        // Open the gate; the stranded-looking worker finishes the stale
+        // request and must keep serving fresh ones.
+        {
+            let (open, cv) = &*gate;
+            *open.lock().expect("gate") = true;
+            cv.notify_all();
+        }
+        let resp = service
+            .submit("tiny_cnn", x)
+            .wait_timeout(Duration::from_secs(30))
+            .expect("fresh request finishes once the gate opens")
+            .expect("response");
+        assert!(!resp.logits.is_empty());
+
+        let stats = service.shutdown();
+        // Both requests completed worker-side; the first one's result
+        // simply had nobody listening.
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.failed, 0);
     }
 
     fn dense_op(ci: usize, co: usize) -> DenseOp {

@@ -1,0 +1,358 @@
+//! Admission control: bounded per-model queues, QoS lanes, and load
+//! shedding in front of [`crate::coordinator::KrakenService::submit`].
+//!
+//! The open-loop bench (PR 7) showed what happens without this: past
+//! the saturation knee the pool queue grows for the whole run and the
+//! tail quantiles blow up. The admission layer keeps the *admitted*
+//! load inside the regime where tail latency is bounded, and turns the
+//! excess into fast, cheap rejections:
+//!
+//! * **Bounded per-model queues** — each (model, lane) pair carries an
+//!   in-flight cap ([`AdmissionConfig::queue_cap`]). A request over the
+//!   cap is shed immediately (HTTP `429` + `Retry-After`) instead of
+//!   joining an unbounded pool queue.
+//! * **Two QoS lanes** — [`Lane::Interactive`] (the default) and
+//!   [`Lane::Batch`], selected per request by the `x-kraken-lane`
+//!   header. Batch traffic is additionally gated on the live pool
+//!   queue-depth gauge ([`crate::coordinator::KrakenService::queue_depth`]):
+//!   when the pool is already deeper than
+//!   [`AdmissionConfig::batch_depth_threshold`], batch requests shed so
+//!   interactive traffic keeps the headroom.
+//! * **Deadlines** — a per-request budget (`x-kraken-deadline-us`,
+//!   bounded by [`AdmissionConfig::max_deadline`]) enforced via
+//!   [`crate::coordinator::Ticket::wait_timeout`]; an expired request
+//!   answers `503` and its late result is dropped without stranding the
+//!   worker.
+//!
+//! Every admit/shed decision lands in the process-global telemetry
+//! registry ([`crate::telemetry::global`]) as per-lane counters
+//! (`ingress_admitted_total`, `ingress_shed_queue_full_total`,
+//! `ingress_shed_deadline_total`), so sheds are visible in `/metrics`,
+//! `/stats` and `kraken stats` the moment they start happening.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::telemetry::{self, Counter};
+
+/// QoS class of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive traffic: admitted whenever the model's
+    /// bounded queue has room.
+    Interactive = 0,
+    /// Throughput traffic: additionally shed while the pool queue sits
+    /// above the utilization threshold.
+    Batch = 1,
+}
+
+pub const LANES: [Lane; 2] = [Lane::Interactive, Lane::Batch];
+
+impl Lane {
+    pub fn label(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+        }
+    }
+
+    /// Parse an `x-kraken-lane` header value. `None` is not a default —
+    /// the caller treats an absent header as interactive and an
+    /// unparseable one as a client error.
+    pub fn parse(value: &str) -> Option<Lane> {
+        match value.to_ascii_lowercase().as_str() {
+            "interactive" => Some(Lane::Interactive),
+            "batch" => Some(Lane::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Deployment policy for the admission layer.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// In-flight cap per (model, lane): requests admitted but not yet
+    /// answered. Over the cap ⇒ shed with `429`.
+    pub queue_cap: usize,
+    /// Batch-lane utilization gate: batch requests are shed while the
+    /// live pool queue depth is at or above this many jobs.
+    pub batch_depth_threshold: usize,
+    /// Hard ceiling on client-requested deadlines; longer requests are
+    /// clamped (a client cannot pin a handler forever).
+    pub max_deadline: Duration,
+    /// Deadline applied when the client sends none. `None` waits
+    /// indefinitely (the pre-ingress `Ticket::wait` behavior).
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_cap: 64,
+            batch_depth_threshold: 8,
+            max_deadline: Duration::from_secs(30),
+            default_deadline: None,
+        }
+    }
+}
+
+/// Why a request was shed. [`Shed::status`] maps onto the HTTP answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shed {
+    /// The (model, lane) in-flight cap is full.
+    QueueFull { inflight: usize, cap: usize },
+    /// Batch lane gated on pool utilization.
+    BatchUtilization { depth: usize, threshold: usize },
+}
+
+impl Shed {
+    /// Both sheds are backpressure (`429 Too Many Requests`); deadline
+    /// expiry — decided after admission — answers `503` instead.
+    pub fn status(self) -> u16 {
+        429
+    }
+
+    pub fn reason(self) -> String {
+        match self {
+            Shed::QueueFull { inflight, cap } => {
+                format!("queue full: {inflight} in flight at cap {cap}")
+            }
+            Shed::BatchUtilization { depth, threshold } => format!(
+                "batch lane shed: pool queue depth {depth} at or above threshold {threshold}"
+            ),
+        }
+    }
+}
+
+/// Per-lane shed/admit counters, registered process-globally so every
+/// scrape surface sees them.
+struct LaneCounters {
+    admitted: Counter,
+    shed_queue_full: Counter,
+    shed_deadline: Counter,
+}
+
+impl LaneCounters {
+    fn register(lane: Lane) -> Self {
+        let global = telemetry::global();
+        let name = |stem: &str| format!("{stem}{{lane=\"{}\"}}", lane.label());
+        LaneCounters {
+            admitted: global.counter(&name("ingress_admitted_total")),
+            shed_queue_full: global.counter(&name("ingress_shed_queue_full_total")),
+            shed_deadline: global.counter(&name("ingress_shed_deadline_total")),
+        }
+    }
+}
+
+/// The admission gate. One per [`crate::ingress::IngressServer`];
+/// models are fixed at construction (the service registry is closed
+/// after `build()`), so the hot path is lock-free — two relaxed atomic
+/// ops per request.
+pub struct Admission {
+    cfg: AdmissionConfig,
+    /// In-flight request count per model, indexed `[lane]`.
+    inflight: HashMap<String, [AtomicUsize; 2]>,
+    counters: [LaneCounters; 2],
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig, models: impl IntoIterator<Item = String>) -> Self {
+        Admission {
+            cfg,
+            inflight: models
+                .into_iter()
+                .map(|m| (m, [AtomicUsize::new(0), AtomicUsize::new(0)]))
+                .collect(),
+            counters: [
+                LaneCounters::register(Lane::Interactive),
+                LaneCounters::register(Lane::Batch),
+            ],
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Clamp a requested deadline to the policy ceiling, or apply the
+    /// default when the client sent none.
+    pub fn effective_deadline(&self, requested: Option<Duration>) -> Option<Duration> {
+        requested.map(|d| d.min(self.cfg.max_deadline)).or(self.cfg.default_deadline)
+    }
+
+    /// Whether `model` was in the construction-time model set (the
+    /// router's `404` check — [`Admission::try_admit`] panics on
+    /// unknown models by contract).
+    pub fn knows(&self, model: &str) -> bool {
+        self.inflight.contains_key(model)
+    }
+
+    /// Admit or shed one request. `pool_depth` is the live pool queue-depth
+    /// gauge read at the door. On admission the returned [`Permit`]
+    /// holds the (model, lane) in-flight slot until dropped.
+    ///
+    /// # Panics
+    /// If `model` was not in the construction-time model set — the
+    /// server resolves unknown models to `404` *before* admission.
+    pub fn try_admit(&self, model: &str, lane: Lane, pool_depth: usize) -> Result<Permit<'_>, Shed> {
+        let counters = &self.counters[lane as usize];
+        if lane == Lane::Batch && pool_depth >= self.cfg.batch_depth_threshold {
+            counters.shed_queue_full.inc();
+            return Err(Shed::BatchUtilization {
+                depth: pool_depth,
+                threshold: self.cfg.batch_depth_threshold,
+            });
+        }
+        let slot = &self.inflight[model][lane as usize];
+        // Optimistic increment, undone on shed: two concurrent admits
+        // can never both observe a free last slot.
+        let was = slot.fetch_add(1, Ordering::Relaxed);
+        if was >= self.cfg.queue_cap {
+            slot.fetch_sub(1, Ordering::Relaxed);
+            counters.shed_queue_full.inc();
+            return Err(Shed::QueueFull { inflight: was, cap: self.cfg.queue_cap });
+        }
+        counters.admitted.inc();
+        Ok(Permit { slot, counters })
+    }
+
+    /// Current in-flight count for one (model, lane) — surfaced in
+    /// `/stats`.
+    pub fn inflight(&self, model: &str, lane: Lane) -> usize {
+        self.inflight
+            .get(model)
+            .map_or(0, |lanes| lanes[lane as usize].load(Ordering::Relaxed))
+    }
+
+    /// Per-lane totals `(admitted, shed_queue_full, shed_deadline)`.
+    /// These read the process-global counters, so across servers in one
+    /// process they are cumulative — compare deltas, not absolutes.
+    pub fn lane_totals(&self, lane: Lane) -> (u64, u64, u64) {
+        let c = &self.counters[lane as usize];
+        (c.admitted.get(), c.shed_queue_full.get(), c.shed_deadline.get())
+    }
+}
+
+/// An admitted request's slot in its (model, lane) bounded queue.
+/// Dropping it releases the slot; a deadline expiry is recorded through
+/// [`Permit::deadline_expired`] before the drop.
+pub struct Permit<'a> {
+    slot: &'a AtomicUsize,
+    counters: &'a LaneCounters,
+}
+
+impl Permit<'_> {
+    /// Record that this admitted request timed out waiting for its
+    /// result (the `503` path).
+    pub fn deadline_expired(&self) {
+        self.counters.shed_deadline.inc();
+    }
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.slot.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admission(queue_cap: usize, batch_depth_threshold: usize) -> Admission {
+        Admission::new(
+            AdmissionConfig { queue_cap, batch_depth_threshold, ..AdmissionConfig::default() },
+            ["m".to_string(), "other".to_string()],
+        )
+    }
+
+    #[test]
+    fn admits_to_cap_then_sheds_then_recovers() {
+        let a = admission(2, 8);
+        let (admitted0, shed0, _) = a.lane_totals(Lane::Interactive);
+        let p1 = a.try_admit("m", Lane::Interactive, 0).expect("slot 1");
+        let p2 = a.try_admit("m", Lane::Interactive, 0).expect("slot 2");
+        let shed = a.try_admit("m", Lane::Interactive, 0).expect_err("cap reached");
+        assert!(matches!(shed, Shed::QueueFull { inflight: 2, cap: 2 }));
+        assert_eq!(shed.status(), 429);
+        assert_eq!(a.inflight("m", Lane::Interactive), 2);
+        drop(p1);
+        let p3 = a.try_admit("m", Lane::Interactive, 0).expect("slot freed by drop");
+        drop(p2);
+        drop(p3);
+        assert_eq!(a.inflight("m", Lane::Interactive), 0);
+        // Counters are process-global and other tests run concurrently:
+        // assert monotone deltas, not exact values.
+        let (admitted, shed_full, _) = a.lane_totals(Lane::Interactive);
+        assert!(admitted >= admitted0 + 3, "{admitted} vs {admitted0}");
+        assert!(shed_full >= shed0 + 1, "{shed_full} vs {shed0}");
+    }
+
+    #[test]
+    fn models_and_lanes_are_independent_queues() {
+        let a = admission(1, 8);
+        let _m_int = a.try_admit("m", Lane::Interactive, 0).expect("m interactive");
+        // Same model, other lane; other model, same lane: both admit.
+        let _m_batch = a.try_admit("m", Lane::Batch, 0).expect("m batch");
+        let _o_int = a.try_admit("other", Lane::Interactive, 0).expect("other interactive");
+        a.try_admit("m", Lane::Interactive, 0).expect_err("m interactive is full");
+    }
+
+    #[test]
+    fn batch_lane_gates_on_pool_depth_interactive_does_not() {
+        let a = admission(4, 2);
+        let (_, batch_shed0, _) = a.lane_totals(Lane::Batch);
+        assert!(a.try_admit("m", Lane::Batch, 1).is_ok(), "below threshold");
+        let shed = a.try_admit("m", Lane::Batch, 2).expect_err("at threshold");
+        assert!(matches!(shed, Shed::BatchUtilization { depth: 2, threshold: 2 }));
+        assert!(
+            a.try_admit("m", Lane::Interactive, 100).is_ok(),
+            "interactive ignores pool depth"
+        );
+        let (_, batch_shed, _) = a.lane_totals(Lane::Batch);
+        assert!(batch_shed >= batch_shed0 + 1, "{batch_shed} vs {batch_shed0}");
+        assert_eq!(a.inflight("m", Lane::Batch), 1, "utilization shed never took a slot");
+    }
+
+    #[test]
+    fn deadline_expiry_counts_per_lane() {
+        let a = admission(4, 8);
+        let (_, _, dl0) = a.lane_totals(Lane::Interactive);
+        let p = a.try_admit("m", Lane::Interactive, 0).expect("admitted");
+        p.deadline_expired();
+        drop(p);
+        let (_, _, dl) = a.lane_totals(Lane::Interactive);
+        assert!(dl >= dl0 + 1, "{dl} vs {dl0}");
+        assert_eq!(a.inflight("m", Lane::Interactive), 0);
+    }
+
+    #[test]
+    fn effective_deadline_clamps_and_defaults() {
+        let cfg = AdmissionConfig {
+            max_deadline: Duration::from_millis(100),
+            default_deadline: Some(Duration::from_millis(50)),
+            ..Default::default()
+        };
+        let a = Admission::new(cfg, ["m".to_string()]);
+        assert_eq!(
+            a.effective_deadline(Some(Duration::from_secs(9))),
+            Some(Duration::from_millis(100)),
+            "client deadline clamps to the ceiling"
+        );
+        assert_eq!(
+            a.effective_deadline(Some(Duration::from_millis(7))),
+            Some(Duration::from_millis(7))
+        );
+        assert_eq!(a.effective_deadline(None), Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn lane_parsing() {
+        assert_eq!(Lane::parse("interactive"), Some(Lane::Interactive));
+        assert_eq!(Lane::parse("Batch"), Some(Lane::Batch));
+        assert_eq!(Lane::parse("bulk"), None);
+        assert_eq!(Lane::Interactive.label(), "interactive");
+        assert_eq!(Lane::Batch.label(), "batch");
+    }
+}

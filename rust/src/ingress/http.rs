@@ -1,0 +1,441 @@
+//! Minimal HTTP/1.1 framing: request parsing and response writing.
+//!
+//! The offline build vendors no hyper/tiny-http, so the ingress speaks
+//! exactly the slice of HTTP/1.1 a serving endpoint needs — request
+//! line, headers, `Content-Length`-framed bodies, keep-alive — over any
+//! [`BufRead`]/[`Write`] pair. Everything else (chunked encoding,
+//! trailers, upgrades, 100-continue) is rejected with a typed
+//! [`HttpError`] that maps onto a 4xx status instead of panicking or
+//! hanging the connection.
+//!
+//! Parsing limits are hard-coded where the number is a protocol-safety
+//! bound (header bytes/count, request-line length) and caller-supplied
+//! where it is a deployment policy (`max_body`, set from
+//! [`crate::ingress::IngressConfig::max_body_bytes`]).
+
+use std::fmt;
+use std::io::{self, BufRead, Write};
+
+/// Cap on the request line (`METHOD SP PATH SP VERSION`).
+const MAX_REQUEST_LINE: usize = 8 * 1024;
+/// Cap on the total header block.
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on the number of header fields.
+const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path as sent (query strings are kept verbatim; the router splits
+    /// them off if it cares).
+    pub path: String,
+    /// Header fields in arrival order, names lower-cased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// `HTTP/1.1` (keep-alive by default) vs `HTTP/1.0` (close by
+    /// default).
+    http11: bool,
+}
+
+impl Request {
+    /// First value of `name` (ASCII case-insensitive; stored
+    /// lower-cased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after the response:
+    /// HTTP/1.1 unless `Connection: close`, HTTP/1.0 only with
+    /// `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+#[cfg(test)]
+impl Request {
+    /// Build a request without a socket — router-level tests only.
+    pub(crate) fn synthetic(
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Vec<u8>,
+    ) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            headers: headers
+                .iter()
+                .map(|(k, v)| (k.to_ascii_lowercase(), v.to_string()))
+                .collect(),
+            body,
+            http11: true,
+        }
+    }
+}
+
+/// Why a request could not be parsed. [`HttpError::status`] maps each
+/// variant onto the response code the connection handler sends before
+/// closing.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line / header syntax.
+    Malformed(&'static str),
+    /// Request line or header block over the hard caps.
+    TooLarge(&'static str),
+    /// `Content-Length` missing on a method that requires a body.
+    LengthRequired,
+    /// Declared body length over the deployment cap.
+    BodyTooLarge { declared: usize, cap: usize },
+    /// `Transfer-Encoding` (chunked) is not supported.
+    UnsupportedTransferEncoding,
+    /// Peer closed mid-request (clean EOF *before* any byte is
+    /// [`ReadOutcome::Closed`], not an error).
+    UnexpectedEof,
+    /// Transport error.
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// The status code the handler answers with before closing.
+    pub fn status(&self) -> u16 {
+        match self {
+            HttpError::Malformed(_) => 400,
+            HttpError::TooLarge(_) => 431,
+            HttpError::LengthRequired => 411,
+            HttpError::BodyTooLarge { .. } => 413,
+            HttpError::UnsupportedTransferEncoding => 501,
+            HttpError::UnexpectedEof | HttpError::Io(_) => 400,
+        }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::Malformed(what) => write!(f, "malformed request: {what}"),
+            HttpError::TooLarge(what) => write!(f, "{what} exceeds the header limits"),
+            HttpError::LengthRequired => write!(f, "Content-Length required"),
+            HttpError::BodyTooLarge { declared, cap } => {
+                write!(f, "declared body of {declared} bytes exceeds the {cap}-byte cap")
+            }
+            HttpError::UnsupportedTransferEncoding => {
+                write!(f, "Transfer-Encoding is not supported; frame with Content-Length")
+            }
+            HttpError::UnexpectedEof => write!(f, "connection closed mid-request"),
+            HttpError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            HttpError::UnexpectedEof
+        } else {
+            HttpError::Io(e)
+        }
+    }
+}
+
+/// Result of [`read_request`]: a parsed request, or a connection the
+/// peer closed cleanly between requests (keep-alive end-of-life).
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(Request),
+    Closed,
+}
+
+/// Read one line up to and including `\n`, bounded by `cap` bytes.
+/// Returns `None` on clean EOF with nothing read.
+fn read_line(
+    reader: &mut impl BufRead,
+    cap: usize,
+    what: &'static str,
+) -> Result<Option<String>, HttpError> {
+    let mut line = Vec::new();
+    // take() bounds a hostile endless line; hitting the cap without a
+    // terminator is a TooLarge, not an honest EOF.
+    let n = reader.take(cap as u64 + 1).read_until(b'\n', &mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if !line.ends_with(b"\n") {
+        return Err(if line.len() > cap {
+            HttpError::TooLarge(what)
+        } else {
+            HttpError::UnexpectedEof
+        });
+    }
+    while line.last().is_some_and(|b| *b == b'\n' || *b == b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line).map(Some).map_err(|_| HttpError::Malformed("non-UTF-8 bytes"))
+}
+
+/// Parse one request off the connection. `max_body` caps the declared
+/// `Content-Length` (the deployment's payload policy); header limits
+/// are the module's hard caps. Requests with bodies must be
+/// `Content-Length`-framed.
+pub fn read_request(
+    reader: &mut impl BufRead,
+    max_body: usize,
+) -> Result<ReadOutcome, HttpError> {
+    let Some(request_line) = read_line(reader, MAX_REQUEST_LINE, "request line")? else {
+        return Ok(ReadOutcome::Closed);
+    };
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => return Err(HttpError::Malformed("request line")),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::Malformed("HTTP version")),
+    };
+
+    let mut headers = Vec::new();
+    let mut header_bytes = 0usize;
+    loop {
+        let line = read_line(reader, MAX_HEADER_BYTES, "header block")?
+            .ok_or(HttpError::UnexpectedEof)?;
+        if line.is_empty() {
+            break;
+        }
+        header_bytes += line.len();
+        if header_bytes > MAX_HEADER_BYTES {
+            return Err(HttpError::TooLarge("header block"));
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::TooLarge("header count"));
+        }
+        let (name, value) =
+            line.split_once(':').ok_or(HttpError::Malformed("header field"))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::Malformed("header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let request = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+        http11,
+    };
+
+    if request.header("transfer-encoding").is_some() {
+        return Err(HttpError::UnsupportedTransferEncoding);
+    }
+    let declared = match request.header("content-length") {
+        Some(v) => {
+            Some(v.parse::<usize>().map_err(|_| HttpError::Malformed("Content-Length"))?)
+        }
+        None => None,
+    };
+    let len = match (request.method.as_str(), declared) {
+        // Body-bearing methods must declare a length so keep-alive
+        // framing stays sound.
+        ("POST" | "PUT" | "PATCH", None) => return Err(HttpError::LengthRequired),
+        (_, None) => 0,
+        (_, Some(n)) => n,
+    };
+    if len > max_body {
+        return Err(HttpError::BodyTooLarge { declared: len, cap: max_body });
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(ReadOutcome::Request(Request { body, ..request }))
+}
+
+/// One response to serialize. Construct with the typed helpers so the
+/// status/reason/content-type stay consistent across handlers.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+    content_type: &'static str,
+    /// Extra headers (e.g. `Retry-After` on sheds).
+    extra: Vec<(&'static str, String)>,
+}
+
+impl Response {
+    fn new(status: u16, content_type: &'static str, body: impl Into<Vec<u8>>) -> Self {
+        Response { status, body: body.into(), content_type, extra: Vec::new() }
+    }
+
+    /// 200 with a JSON body.
+    pub fn json(body: String) -> Self {
+        Self::new(200, "application/json", body.into_bytes())
+    }
+
+    /// 200 with a plain-text body (e.g. the Prometheus exposition).
+    pub fn text(body: String) -> Self {
+        Self::new(200, "text/plain; version=0.0.4; charset=utf-8", body.into_bytes())
+    }
+
+    /// An error status with a one-line plain-text explanation.
+    pub fn error(status: u16, reason: impl fmt::Display) -> Self {
+        Self::new(status, "text/plain; charset=utf-8", format!("{reason}\n").into_bytes())
+    }
+
+    /// Attach an extra header (chainable).
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Self {
+        self.extra.push((name, value.into()));
+        self
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            411 => "Length Required",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            501 => "Not Implemented",
+            503 => "Service Unavailable",
+            _ => "",
+        }
+    }
+
+    /// Serialize onto the connection. `keep_alive` controls the
+    /// `Connection` header (the handler mirrors the request's wish
+    /// unless the server is draining).
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        )?;
+        for (name, value) in &self.extra {
+            write!(w, "{name}: {value}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &[u8]) -> Result<ReadOutcome, HttpError> {
+        read_request(&mut BufReader::new(raw), 1 << 20)
+    }
+
+    fn parse_ok(raw: &[u8]) -> Request {
+        match parse(raw).expect("parses") {
+            ReadOutcome::Request(r) => r,
+            ReadOutcome::Closed => panic!("unexpected clean close"),
+        }
+    }
+
+    #[test]
+    fn parses_get_with_headers() {
+        let r = parse_ok(b"GET /healthz HTTP/1.1\r\nHost: x\r\nX-Kraken-Lane: batch\r\n\r\n");
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert_eq!(r.header("x-kraken-lane"), Some("batch"));
+        assert_eq!(r.header("X-KRAKEN-LANE"), Some("batch"), "lookup is case-insensitive");
+        assert!(r.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_body_by_content_length() {
+        let r = parse_ok(b"POST /v1/infer/m HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello");
+        assert_eq!(r.body, b"hello");
+    }
+
+    #[test]
+    fn keep_alive_follows_connection_header_and_version() {
+        let r = parse_ok(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!r.keep_alive());
+        let r = parse_ok(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!r.keep_alive(), "HTTP/1.0 defaults to close");
+        let r = parse_ok(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_between_requests_is_closed_not_error() {
+        assert!(matches!(parse(b"").expect("clean close"), ReadOutcome::Closed));
+    }
+
+    #[test]
+    fn malformed_inputs_map_to_4xx() {
+        for (raw, status) in [
+            (&b"garbage\r\n\r\n"[..], 400),
+            (&b"GET nopath HTTP/1.1\r\n\r\n"[..], 400),
+            (&b"GET / HTTP/2\r\n\r\n"[..], 400),
+            (&b"GET / HTTP/1.1\r\nbroken header\r\n\r\n"[..], 400),
+            (&b"POST / HTTP/1.1\r\n\r\n"[..], 411),
+            (&b"POST / HTTP/1.1\r\nContent-Length: nan\r\n\r\n"[..], 400),
+            (&b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"[..], 501),
+        ] {
+            let err = match parse(raw) {
+                Err(e) => e,
+                Ok(_) => panic!("{:?} must not parse", String::from_utf8_lossy(raw)),
+            };
+            assert_eq!(err.status(), status, "{:?} → {err}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn declared_body_over_cap_is_413_without_reading_it() {
+        let err = read_request(
+            &mut BufReader::new(&b"POST / HTTP/1.1\r\nContent-Length: 100\r\n\r\n"[..]),
+            64,
+        )
+        .expect_err("over-cap body must be rejected");
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn truncated_body_is_unexpected_eof() {
+        let err = parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").expect_err("eof");
+        assert!(matches!(err, HttpError::UnexpectedEof), "{err:?}");
+    }
+
+    #[test]
+    fn oversized_header_block_is_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.resize(raw.len() + 20 * 1024, b'a');
+        let err = parse(&raw).expect_err("oversized header line");
+        assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn response_serializes_with_framing_headers() {
+        let mut out = Vec::new();
+        Response::json("{\"ok\":true}".into())
+            .with_header("Retry-After", "1")
+            .write_to(&mut out, true)
+            .expect("write");
+        let text = String::from_utf8(out).expect("utf8");
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "{text}");
+    }
+}

@@ -1,0 +1,37 @@
+//! Network ingress: serve a [`crate::coordinator::KrakenService`] over
+//! HTTP with admission control.
+//!
+//! The coordinator (PRs 5–7) made the engine a *service* — typed
+//! submits, a work-stealing pool, live telemetry — but only for
+//! in-process callers. This subsystem is the network front door, built
+//! so the admitted load stays inside the regime where tail latency is
+//! bounded (the open-loop bench's knee) and the excess is turned into
+//! cheap, explicit rejections instead of unbounded queue growth:
+//!
+//! * [`http`] — the dependency-free HTTP/1.1 slice (request parsing,
+//!   `Content-Length` framing, keep-alive, response writing);
+//! * [`wire`] — the binary tensor payload codec
+//!   (`KRKN` header + NHWC int8 data) and response JSON;
+//! * [`admission`] — bounded per-model queues, `interactive`/`batch`
+//!   QoS lanes, deadlines, and the per-lane shed counters exported to
+//!   the process-global telemetry registry;
+//! * [`server`] — the acceptor + bounded handler pool tying it all to
+//!   a [`std::net::TcpListener`], with graceful drain into
+//!   [`crate::coordinator::KrakenService::shutdown`].
+//!
+//! Endpoints: `POST /v1/infer/<model>` (binary tensor in, logits +
+//! timing JSON out; `x-kraken-lane` and `x-kraken-deadline-us` headers
+//! select QoS), `GET /metrics` (Prometheus text exposition),
+//! `GET /stats` (JSON snapshot), `GET /healthz`. Backpressure answers:
+//! `429` + `Retry-After` on queue-full / batch-utilization sheds, `503`
+//! on deadline expiry (the late result is discarded via
+//! [`crate::coordinator::Ticket::wait_timeout`] without stranding a
+//! worker) and on handler-pool saturation.
+
+pub mod admission;
+pub mod http;
+pub mod server;
+pub mod wire;
+
+pub use admission::{Admission, AdmissionConfig, Lane, Permit, Shed};
+pub use server::{IngressConfig, IngressServer};

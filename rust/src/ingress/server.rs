@@ -1,0 +1,547 @@
+//! The ingress server: acceptor thread + bounded connection-handler
+//! pool over [`std::net::TcpListener`], routing onto a
+//! [`crate::coordinator::KrakenService`] through the admission layer.
+//!
+//! Threading model: one acceptor thread `accept()`s and hands each
+//! connection to a bounded [`mpsc::sync_channel`]; `handler_threads`
+//! workers each own one connection at a time and run its keep-alive
+//! request loop. When the handoff channel is full the acceptor answers
+//! `503` and closes — connection-level shedding, before any request
+//! parsing. Request-level shedding (`429`/`503`) is the admission
+//! layer's job ([`crate::ingress::Admission`]).
+//!
+//! Graceful shutdown ([`IngressServer::shutdown`]): set the stop flag,
+//! poke the listener loose with a loopback connect, join the acceptor,
+//! let handlers finish their *in-flight request* (keep-alive
+//! connections close at the next request boundary; the response carries
+//! `Connection: close`), then consume the service's own
+//! [`crate::coordinator::KrakenService::shutdown`] for the final stats.
+
+use std::io::{self, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::{KrakenService, ServiceStats};
+use crate::ingress::admission::{Admission, AdmissionConfig, Lane, LANES};
+use crate::ingress::http::{read_request, HttpError, ReadOutcome, Request, Response};
+use crate::ingress::wire::{decode_tensor, infer_response_json, json_escape};
+
+/// How often an idle keep-alive connection polls the stop flag.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+/// Read timeout once a request's first byte has arrived — a stalled
+/// client cannot pin a handler forever.
+const REQUEST_READ_TIMEOUT: Duration = Duration::from_secs(30);
+/// `Retry-After` seconds suggested on every shed.
+const RETRY_AFTER_S: &str = "1";
+
+/// Deployment knobs for one [`IngressServer`].
+#[derive(Debug, Clone)]
+pub struct IngressConfig {
+    /// Connection-handler threads (concurrent connections served).
+    pub handler_threads: usize,
+    /// Cap on a request body's declared `Content-Length`.
+    pub max_body_bytes: usize,
+    /// Request-level admission policy.
+    pub admission: AdmissionConfig,
+}
+
+impl Default for IngressConfig {
+    fn default() -> Self {
+        IngressConfig {
+            handler_threads: 8,
+            // tiny_cnn's input is ~2.4 KB; 16 MB admits any plausible
+            // benchmark tensor while bounding a hostile declared length.
+            max_body_bytes: 16 << 20,
+            admission: AdmissionConfig::default(),
+        }
+    }
+}
+
+/// State shared by the acceptor, every handler, and the owning
+/// [`IngressServer`].
+struct Shared {
+    service: KrakenService,
+    admission: Admission,
+    max_body_bytes: usize,
+    stop: AtomicBool,
+}
+
+/// A running ingress: owns the service, the listener thread and the
+/// handler pool. Dropping without [`IngressServer::shutdown`] still
+/// stops cleanly (threads are joined, the service drains).
+pub struct IngressServer {
+    /// `Some` until `shutdown` consumes it (the `Drop` impl forbids a
+    /// plain field move).
+    shared: Option<Arc<Shared>>,
+    local_addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+impl IngressServer {
+    /// Bind `addr` (use port 0 for an ephemeral port) and start serving
+    /// `service` — the server takes ownership so shutdown can drain and
+    /// consume it.
+    pub fn bind(
+        service: KrakenService,
+        addr: impl ToSocketAddrs,
+        cfg: IngressConfig,
+    ) -> io::Result<IngressServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let admission = Admission::new(cfg.admission.clone(), service.models());
+        let shared = Arc::new(Shared {
+            service,
+            admission,
+            max_body_bytes: cfg.max_body_bytes,
+            stop: AtomicBool::new(false),
+        });
+
+        let threads = cfg.handler_threads.max(1);
+        // Bounded handoff: a connection the pool cannot absorb within
+        // 2× the pool width is shed at the door with a 503.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(threads * 2);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let handlers: Vec<JoinHandle<()>> = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("kraken-ingress-{i}"))
+                    .spawn(move || {
+                        loop {
+                            let next = rx.lock().expect("handler queue").recv();
+                            match next {
+                                Ok(stream) => handle_connection(&shared, stream),
+                                // Acceptor gone and queue drained.
+                                Err(mpsc::RecvError) => break,
+                            }
+                        }
+                    })
+                    .expect("spawn ingress handler")
+            })
+            .collect();
+
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            thread::Builder::new()
+                .name("kraken-ingress-accept".into())
+                .spawn(move || accept_loop(&listener, &shared, &tx))
+                .expect("spawn ingress acceptor")
+        };
+
+        Ok(IngressServer {
+            shared: Some(shared),
+            local_addr,
+            acceptor: Some(acceptor),
+            handlers,
+        })
+    }
+
+    fn shared_ref(&self) -> &Arc<Shared> {
+        self.shared.as_ref().expect("ingress shared state present until shutdown")
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The served [`KrakenService`] — still fully usable in-process
+    /// (tests compare HTTP-served logits against direct `submit` on the
+    /// *same* service).
+    pub fn service(&self) -> &KrakenService {
+        &self.shared_ref().service
+    }
+
+    /// The admission gate (live shed/in-flight introspection).
+    pub fn admission(&self) -> &Admission {
+        &self.shared_ref().admission
+    }
+
+    fn stop_threads(&mut self) {
+        if let Some(shared) = self.shared.as_ref() {
+            shared.stop.store(true, Ordering::SeqCst);
+        }
+        // accept() has no timeout; a throwaway loopback connection
+        // wakes it so it can observe the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(acceptor) = self.acceptor.take() {
+            let _ = acceptor.join();
+        }
+        for handler in self.handlers.drain(..) {
+            let _ = handler.join();
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, let every in-flight request
+    /// finish and its connection close, then drain and stop the service
+    /// itself, returning its final stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        self.stop_threads();
+        let shared = self.shared.take().expect("ingress shared state present until shutdown");
+        let shared = Arc::try_unwrap(shared)
+            .unwrap_or_else(|_| unreachable!("ingress threads joined; no other owners"));
+        shared.service.shutdown()
+    }
+}
+
+impl Drop for IngressServer {
+    /// A dropped (not `shutdown()`) server still stops cleanly: threads
+    /// are joined, and the service's own `Drop` drains it.
+    fn drop(&mut self) {
+        self.stop_threads();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Shared, tx: &mpsc::SyncSender<TcpStream>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            // The shutdown wake-up poke (or a straggler) — close it.
+            break;
+        }
+        match tx.try_send(stream) {
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(mut stream)) => {
+                // Connection-level shed: every handler busy and the
+                // handoff queue full. Cheap 503 before any parsing.
+                let _ = Response::error(503, "ingress handler pool saturated")
+                    .with_header("Retry-After", RETRY_AFTER_S)
+                    .write_to(&mut stream, false);
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => break,
+        }
+    }
+}
+
+/// Serve one connection's keep-alive request loop.
+fn handle_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        // Idle phase: wait for the next request's first byte, polling
+        // the stop flag so a draining server closes keep-alive
+        // connections at a request boundary (never mid-parse).
+        if !wait_for_request(shared, &mut reader, &writer) {
+            return;
+        }
+        if writer.set_read_timeout(Some(REQUEST_READ_TIMEOUT)).is_err() {
+            return;
+        }
+        let request = match read_request(&mut reader, shared.max_body_bytes) {
+            Ok(ReadOutcome::Request(request)) => request,
+            Ok(ReadOutcome::Closed) => return,
+            Err(HttpError::UnexpectedEof) => return,
+            Err(err) => {
+                // Framing is unrecoverable after a parse error: answer
+                // and close.
+                let _ = Response::error(err.status(), &err).write_to(&mut writer, false);
+                return;
+            }
+        };
+        let keep_alive =
+            request.keep_alive() && !shared.stop.load(Ordering::SeqCst);
+        let response = route(shared, &request);
+        if response.write_to(&mut writer, keep_alive).is_err() || !keep_alive {
+            return;
+        }
+    }
+}
+
+/// Block until the connection has bytes to parse. Returns `false` when
+/// the connection should close instead (peer gone, server draining, or
+/// transport error).
+fn wait_for_request(shared: &Shared, reader: &mut BufReader<TcpStream>, stream: &TcpStream) -> bool {
+    loop {
+        // A pipelined next request may already sit in the BufReader —
+        // the socket would show nothing.
+        if !reader.buffer().is_empty() {
+            return true;
+        }
+        if shared.stop.load(Ordering::SeqCst) {
+            return false;
+        }
+        if stream.set_read_timeout(Some(IDLE_POLL)).is_err() {
+            return false;
+        }
+        let mut probe = [0u8; 1];
+        match stream.peek(&mut probe) {
+            Ok(0) => return false,
+            Ok(_) => return true,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Map one parsed request onto a response.
+fn route(shared: &Shared, request: &Request) -> Response {
+    let path = request.path.as_str();
+    match (request.method.as_str(), path) {
+        ("GET", "/healthz") => Response::text("ok\n".to_string()),
+        ("GET", "/metrics") => Response::text(shared.service.render_prometheus()),
+        ("GET", "/stats") => Response::json(stats_json(shared)),
+        (_, "/healthz" | "/metrics" | "/stats") => {
+            Response::error(405, format!("{path} only answers GET"))
+        }
+        ("POST", _) if path.starts_with("/v1/infer/") => {
+            handle_infer(shared, &path["/v1/infer/".len()..], request)
+        }
+        (_, _) if path.starts_with("/v1/infer/") => {
+            Response::error(405, "/v1/infer/<model> only answers POST")
+        }
+        _ => Response::error(404, format!("no route for {path}")),
+    }
+}
+
+/// The `POST /v1/infer/<model>` pipeline: parse headers → decode the
+/// payload → admit → submit → wait (under the deadline) → render.
+fn handle_infer(shared: &Shared, model: &str, request: &Request) -> Response {
+    let lane = match request.header("x-kraken-lane") {
+        None => Lane::Interactive,
+        Some(v) => match Lane::parse(v) {
+            Some(lane) => lane,
+            None => {
+                return Response::error(
+                    400,
+                    format!("unknown lane {v:?} (x-kraken-lane: interactive | batch)"),
+                )
+            }
+        },
+    };
+    let requested_deadline = match request.header("x-kraken-deadline-us") {
+        None => None,
+        Some(v) => match v.parse::<u64>() {
+            Ok(us) => Some(Duration::from_micros(us)),
+            Err(_) => {
+                return Response::error(
+                    400,
+                    format!("x-kraken-deadline-us must be an integer, got {v:?}"),
+                )
+            }
+        },
+    };
+    // Cheap validation before the door: a malformed payload never
+    // counts as admitted traffic.
+    let tensor = match decode_tensor(&request.body) {
+        Ok(tensor) => tensor,
+        Err(err) => return Response::error(400, err),
+    };
+    if !shared.admission.knows(model) {
+        return Response::error(
+            404,
+            format!("unknown model '{model}' (registered: {:?})", shared.service.models()),
+        );
+    }
+    let permit =
+        match shared.admission.try_admit(model, lane, shared.service.queue_depth()) {
+            Ok(permit) => permit,
+            Err(shed) => {
+                return Response::error(shed.status(), shed.reason())
+                    .with_header("Retry-After", RETRY_AFTER_S)
+            }
+        };
+
+    let ticket = shared.service.submit(model, tensor);
+    let result = match shared.admission.effective_deadline(requested_deadline) {
+        None => ticket.wait(),
+        Some(deadline) => match ticket.wait_timeout(deadline) {
+            Ok(result) => result,
+            Err(late_ticket) => {
+                permit.deadline_expired();
+                // Dropping the ticket closes its channel; the worker's
+                // late send is discarded, nobody is stranded.
+                drop(late_ticket);
+                return Response::error(
+                    503,
+                    format!("deadline of {} µs expired", deadline.as_micros()),
+                )
+                .with_header("Retry-After", RETRY_AFTER_S);
+            }
+        },
+    };
+    drop(permit);
+    match result {
+        Ok(resp) => Response::json(infer_response_json(model, &resp)),
+        // A shape mismatch is the client's fault; anything else
+        // (worker panic, service stopping) is the server's.
+        Err(err) if err.reason.contains("does not match") => Response::error(400, err.reason),
+        Err(err) => Response::error(500, err.reason),
+    }
+}
+
+/// The `/stats` JSON: service aggregate counters + queue state +
+/// per-lane admission totals + live per-model in-flight counts.
+fn stats_json(shared: &Shared) -> String {
+    let snapshot = shared.service.stats_snapshot();
+    let mut out = String::with_capacity(512);
+    out.push_str(&format!(
+        "{{\"completed\":{},\"failed\":{},\"queued\":{},\"peak_queued\":{},\"workers\":{}",
+        snapshot.stats.completed,
+        snapshot.stats.failed,
+        snapshot.queued,
+        snapshot.peak_queued,
+        snapshot.stats.workers,
+    ));
+    out.push_str(",\"admission\":{");
+    for (i, lane) in LANES.iter().enumerate() {
+        let (admitted, shed_queue_full, shed_deadline) = shared.admission.lane_totals(*lane);
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"admitted\":{admitted},\"shed_queue_full\":{shed_queue_full},\"shed_deadline\":{shed_deadline}}}",
+            lane.label(),
+        ));
+    }
+    out.push_str("},\"inflight\":{");
+    for (i, model) in shared.service.models().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\"{}\":{{\"interactive\":{},\"batch\":{}}}",
+            json_escape(model),
+            shared.admission.inflight(model, Lane::Interactive),
+            shared.admission.inflight(model, Lane::Batch),
+        ));
+    }
+    out.push_str("}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendKind, ServiceBuilder};
+    use crate::ingress::wire::encode_tensor;
+    use crate::networks::tiny_mlp_graph;
+    use crate::tensor::Tensor4;
+
+    fn shared(queue_cap: usize) -> Shared {
+        let service = ServiceBuilder::new()
+            .backend(BackendKind::Functional)
+            .workers(1)
+            .register_graph("tiny_mlp", tiny_mlp_graph())
+            .build();
+        let admission = Admission::new(
+            AdmissionConfig { queue_cap, ..AdmissionConfig::default() },
+            service.models(),
+        );
+        Shared {
+            service,
+            admission,
+            max_body_bytes: 1 << 20,
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    fn get(path: &str) -> Request {
+        Request::synthetic("GET", path, &[], Vec::new())
+    }
+
+    #[test]
+    fn routes_observability_endpoints() {
+        let shared = shared(4);
+        assert_eq!(route(&shared, &get("/healthz")).status, 200);
+        let metrics = route(&shared, &get("/metrics"));
+        assert_eq!(metrics.status, 200);
+        assert!(String::from_utf8(metrics.body)
+            .expect("utf8")
+            .contains("ingress_admitted_total"));
+        let stats = route(&shared, &get("/stats"));
+        assert_eq!(stats.status, 200);
+        let body = String::from_utf8(stats.body).expect("utf8");
+        assert!(body.contains("\"admission\""), "{body}");
+        assert!(body.contains("\"tiny_mlp\""), "{body}");
+        assert_eq!(route(&shared, &get("/nope")).status, 404);
+        assert_eq!(
+            route(&shared, &Request::synthetic("POST", "/metrics", &[], Vec::new())).status,
+            405
+        );
+        assert_eq!(route(&shared, &get("/v1/infer/tiny_mlp")).status, 405);
+        shared.service.shutdown();
+    }
+
+    #[test]
+    fn infer_route_serves_and_rejects() {
+        let shared = shared(4);
+        let x = Tensor4::random([1, 1, 1, 256], 11);
+        let body = encode_tensor(&x);
+
+        let ok = route(
+            &shared,
+            &Request::synthetic("POST", "/v1/infer/tiny_mlp", &[], body.clone()),
+        );
+        assert_eq!(ok.status, 200);
+        let want = shared.service.infer("tiny_mlp", x).expect("direct submit");
+        let json = String::from_utf8(ok.body).expect("utf8");
+        let logits = want.logits.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+        assert!(json.contains(&format!("\"logits\":[{logits}]")), "{json}");
+
+        let unknown = route(
+            &shared,
+            &Request::synthetic("POST", "/v1/infer/nope", &[], body.clone()),
+        );
+        assert_eq!(unknown.status, 404);
+
+        let garbage =
+            route(&shared, &Request::synthetic("POST", "/v1/infer/tiny_mlp", &[], vec![1, 2]));
+        assert_eq!(garbage.status, 400);
+
+        let bad_lane = route(
+            &shared,
+            &Request::synthetic(
+                "POST",
+                "/v1/infer/tiny_mlp",
+                &[("x-kraken-lane", "bulk")],
+                body.clone(),
+            ),
+        );
+        assert_eq!(bad_lane.status, 400);
+
+        let bad_deadline = route(
+            &shared,
+            &Request::synthetic(
+                "POST",
+                "/v1/infer/tiny_mlp",
+                &[("x-kraken-deadline-us", "soon")],
+                body,
+            ),
+        );
+        assert_eq!(bad_deadline.status, 400);
+        shared.service.shutdown();
+    }
+
+    #[test]
+    fn wrong_input_shape_maps_to_400() {
+        let shared = shared(4);
+        let body = encode_tensor(&Tensor4::random([1, 2, 2, 3], 5));
+        let resp =
+            route(&shared, &Request::synthetic("POST", "/v1/infer/tiny_mlp", &[], body));
+        assert_eq!(resp.status, 400, "{}", String::from_utf8_lossy(&resp.body));
+        shared.service.shutdown();
+    }
+}

@@ -1,0 +1,219 @@
+//! The binary wire format for inference payloads and the JSON shapes
+//! the ingress answers with.
+//!
+//! A `POST /v1/infer/<model>` body is a raw NHWC int8 tensor behind a
+//! 21-byte header:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"KRKN"
+//!      4     1  version (currently 1)
+//!      5    16  shape   [N, H, W, C] as four u32 little-endian
+//!     21   N·H·W·C  tensor data, i8, NHWC row-major
+//! ```
+//!
+//! Responses are JSON (hand-rolled — the build vendors no serde): the
+//! pinned logits plus the [`crate::coordinator::Response`] timing
+//! fields a client needs to account its own latency budget
+//! (`queue_us`, `device_ms`, `clocks`, `worker`).
+
+use std::fmt;
+
+use crate::coordinator::Response as InferResponse;
+use crate::tensor::Tensor4;
+
+/// Leading bytes of every inference payload.
+pub const MAGIC: [u8; 4] = *b"KRKN";
+/// Wire format version this build speaks.
+pub const VERSION: u8 = 1;
+/// Bytes before the tensor data.
+pub const HEADER_LEN: usize = 21;
+
+/// Why a payload failed to decode. Always a client error (HTTP 400).
+#[derive(Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// Body shorter than the fixed header.
+    TooShort { got: usize },
+    BadMagic([u8; 4]),
+    BadVersion(u8),
+    /// Declared shape needs a different number of data bytes than the
+    /// body carries.
+    LengthMismatch { expect: usize, got: usize },
+    /// Declared shape overflows the address space (or a zero dim).
+    BadShape([u32; 4]),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::TooShort { got } => {
+                write!(f, "payload of {got} bytes is shorter than the {HEADER_LEN}-byte header")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic {m:?} (expected {MAGIC:?})"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v} (speak {VERSION})"),
+            WireError::LengthMismatch { expect, got } => {
+                write!(f, "shape declares {expect} data bytes but the body carries {got}")
+            }
+            WireError::BadShape(s) => write!(f, "unreasonable tensor shape {s:?}"),
+        }
+    }
+}
+
+/// Serialize one NHWC int8 tensor as an inference payload — the client
+/// half of the wire format (tests and benches drive the server with
+/// it).
+pub fn encode_tensor(t: &Tensor4<i8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + t.data.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    for dim in t.shape {
+        out.extend_from_slice(&u32::try_from(dim).expect("tensor dim fits u32").to_le_bytes());
+    }
+    // i8 → u8 is a bijection on the bit pattern.
+    out.extend(t.data.iter().map(|&v| v as u8));
+    out
+}
+
+/// Decode one inference payload back into a tensor — the server half.
+pub fn decode_tensor(body: &[u8]) -> Result<Tensor4<i8>, WireError> {
+    if body.len() < HEADER_LEN {
+        return Err(WireError::TooShort { got: body.len() });
+    }
+    let magic: [u8; 4] = body[0..4].try_into().expect("4 bytes");
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    if body[4] != VERSION {
+        return Err(WireError::BadVersion(body[4]));
+    }
+    let mut dims = [0u32; 4];
+    for (i, dim) in dims.iter_mut().enumerate() {
+        *dim = u32::from_le_bytes(body[5 + 4 * i..9 + 4 * i].try_into().expect("4 bytes"));
+    }
+    let shape = [dims[0] as usize, dims[1] as usize, dims[2] as usize, dims[3] as usize];
+    let expect = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| if d == 0 { None } else { acc.checked_mul(d) })
+        .ok_or(WireError::BadShape(dims))?;
+    let data = &body[HEADER_LEN..];
+    if data.len() != expect {
+        return Err(WireError::LengthMismatch { expect, got: data.len() });
+    }
+    Ok(Tensor4::from_vec(shape, data.iter().map(|&b| b as i8).collect()))
+}
+
+/// Render one served inference as the response JSON.
+pub fn infer_response_json(model: &str, resp: &InferResponse) -> String {
+    let mut out = String::with_capacity(64 + 12 * resp.logits.len());
+    out.push_str("{\"model\":\"");
+    out.push_str(&json_escape(model));
+    out.push_str("\",\"logits\":[");
+    for (i, v) in resp.logits.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&v.to_string());
+    }
+    out.push_str(&format!(
+        "],\"queue_us\":{:.1},\"device_ms\":{:.6},\"clocks\":{},\"worker\":{}}}",
+        resp.queue_us, resp.device_ms, resp.clocks, resp.worker
+    ));
+    out
+}
+
+/// Escape a string for embedding in a JSON literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_roundtrips_bit_exactly() {
+        let t = Tensor4::random([2, 5, 3, 7], 99);
+        let wire = encode_tensor(&t);
+        assert_eq!(wire.len(), HEADER_LEN + 2 * 5 * 3 * 7);
+        let back = decode_tensor(&wire).expect("roundtrip");
+        assert_eq!(back.shape, t.shape);
+        assert_eq!(back.data, t.data);
+    }
+
+    #[test]
+    fn negative_values_survive_the_u8_cast() {
+        let t = Tensor4::from_vec([1, 1, 1, 4], vec![-128i8, -1, 0, 127]);
+        let back = decode_tensor(&encode_tensor(&t)).expect("roundtrip");
+        assert_eq!(back.data, vec![-128i8, -1, 0, 127]);
+    }
+
+    #[test]
+    fn corrupt_payloads_are_typed_errors() {
+        let good = encode_tensor(&Tensor4::random([1, 2, 2, 3], 1));
+
+        assert_eq!(decode_tensor(&good[..10]), Err(WireError::TooShort { got: 10 }));
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_tensor(&bad), Err(WireError::BadMagic(_))));
+
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(decode_tensor(&bad), Err(WireError::BadVersion(9)));
+
+        let mut truncated = good.clone();
+        truncated.pop();
+        assert_eq!(
+            decode_tensor(&truncated),
+            Err(WireError::LengthMismatch { expect: 12, got: 11 })
+        );
+
+        let mut zero_dim = good;
+        zero_dim[5..9].copy_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(decode_tensor(&zero_dim), Err(WireError::BadShape(_))));
+    }
+
+    #[test]
+    fn overflowing_shape_is_rejected_before_allocation() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&MAGIC);
+        wire.push(VERSION);
+        for _ in 0..4 {
+            wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        assert!(matches!(decode_tensor(&wire), Err(WireError::BadShape(_))));
+    }
+
+    #[test]
+    fn response_json_shape() {
+        let resp = InferResponse {
+            logits: vec![-3, 0, 250],
+            queue_us: 12.25,
+            device_ms: 0.5,
+            clocks: 1234,
+            worker: 1,
+        };
+        let json = infer_response_json("tiny_cnn", &resp);
+        assert!(json.starts_with("{\"model\":\"tiny_cnn\",\"logits\":[-3,0,250],"), "{json}");
+        assert!(json.contains("\"clocks\":1234"), "{json}");
+        assert!(json.contains("\"worker\":1"), "{json}");
+        assert!(json.ends_with('}'), "{json}");
+    }
+
+    #[test]
+    fn json_escape_covers_quotes_and_control_bytes() {
+        assert_eq!(json_escape("a\"b\\c\nd\u{1}"), "a\\\"b\\\\c\\nd\\u0001");
+    }
+}

@@ -62,6 +62,13 @@
 //!   work-stealing backend pool, with unified
 //!   `submit(model, payload) -> Ticket<T>` job tickets and capacity- or
 //!   deadline-triggered dense batching.
+//! * [`ingress`] — the network front door: a dependency-free HTTP/1.1
+//!   server ([`ingress::IngressServer`]) over `std::net` exposing
+//!   `POST /v1/infer/<model>`, `/metrics`, `/stats` and `/healthz`,
+//!   with admission control in front of the service — bounded
+//!   per-model queues (`429` backpressure), `interactive`/`batch` QoS
+//!   lanes gated on live pool depth, per-request deadlines (`503`) via
+//!   [`Ticket::wait_timeout`], and graceful drain.
 //! * [`telemetry`] — crate-wide observability: a dependency-free
 //!   [`telemetry::Registry`] of atomic counters, gauges and
 //!   log2-bucketed latency histograms (Prometheus text exposition),
@@ -81,6 +88,7 @@ pub mod backend;
 pub mod baselines;
 pub mod coordinator;
 pub mod dataflow;
+pub mod ingress;
 pub mod layers;
 pub mod metrics;
 pub mod model;
@@ -97,6 +105,7 @@ pub mod tensor;
 pub use arch::KrakenConfig;
 pub use backend::{Accelerator, LayerData, LayerOutput};
 pub use coordinator::{BackendKind, KrakenService, ServiceBuilder, Ticket};
+pub use ingress::{IngressConfig, IngressServer};
 pub use layers::{Layer, LayerKind};
 pub use model::{
     run_graph, run_graph_on_pool, GraphBuilder, GraphError, GraphReport, ModelGraph, NodeId,

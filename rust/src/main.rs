@@ -11,6 +11,7 @@ use std::path::Path;
 use kraken::arch::KrakenConfig;
 use kraken::backend::{Accelerator, Estimator, Functional, LayerData};
 use kraken::coordinator::{BackendKind, DenseOp, ServiceBuilder};
+use kraken::ingress::{IngressConfig, IngressServer};
 use kraken::model::{analyze_graph, fuse_graph, run_graph, verify_fusion, ModelGraph};
 use kraken::networks::{
     alexnet_graph, inception_block_graph, paper_networks, resnet50_graph_at, tiny_cnn_graph,
@@ -58,6 +59,17 @@ system:
                   U-microsecond deadline tick instead of at shutdown;
                   with --graph-par each request's independent graph
                   branches fan out across the engine pool
+  serve-http <port> [--workers N] [--queue-cap Q] [--graph-par]
+                  serve tiny_cnn / tiny_mlp / inception over HTTP on
+                  127.0.0.1:<port> (port 0 picks an ephemeral port)
+                  through a functional pool of N workers (default 2):
+                  POST /v1/infer/<model> (binary KRKN tensor payload),
+                  GET /metrics | /stats | /healthz; per-model bounded
+                  queues of Q in-flight requests (default 64) shed
+                  with 429, batch lane (x-kraken-lane: batch) gated on
+                  live pool depth, deadlines (x-kraken-deadline-us)
+                  answer 503; press Enter (or close stdin) for a
+                  graceful drain + final stats
   partition P [net]
                   per-layer partition plan for P shards (split axis,
                   predicted vs measured clocks, overhead) on net ∈
@@ -131,6 +143,11 @@ fn main() {
             let n: usize = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8);
             let engines: usize = positional.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
             serve(n, engines, partition, window_us, graph_par);
+        }
+        "serve-http" => {
+            let (positional, workers, queue_cap, graph_par) = parse_serve_http_flags(&args[1..]);
+            let port: u16 = positional.first().and_then(|s| s.parse().ok()).unwrap_or(8080);
+            serve_http(port, workers, queue_cap, graph_par);
         }
         "stats" => {
             let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(16);
@@ -368,6 +385,95 @@ fn parse_serve_flags(args: &[String]) -> (Vec<&String>, usize, Option<u64>, bool
         }
     }
     (positional, partition, window_us, graph_par)
+}
+
+/// Pull optional `--workers N` / `--queue-cap Q` / `--graph-par` flags
+/// out of a `serve-http` argument list, returning the remaining
+/// positionals.
+fn parse_serve_http_flags(args: &[String]) -> (Vec<&String>, usize, usize, bool) {
+    let mut positional = Vec::new();
+    let mut workers = 2usize;
+    let mut queue_cap = 64usize;
+    let mut graph_par = false;
+    let mut iter = args.iter();
+    while let Some(arg) = iter.next() {
+        if arg == "--graph-par" {
+            graph_par = true;
+        } else if arg == "--workers" {
+            workers = match iter.next().and_then(|s| s.parse().ok()) {
+                Some(n) if n >= 1 => n,
+                _ => {
+                    eprintln!("--workers needs a positive integer");
+                    std::process::exit(2);
+                }
+            };
+        } else if arg == "--queue-cap" {
+            queue_cap = match iter.next().and_then(|s| s.parse().ok()) {
+                Some(q) if q >= 1 => q,
+                _ => {
+                    eprintln!("--queue-cap needs a positive integer");
+                    std::process::exit(2);
+                }
+            };
+        } else {
+            positional.push(arg);
+        }
+    }
+    (positional, workers, queue_cap, graph_par)
+}
+
+/// Serve the zoo's small graph models over HTTP until stdin closes
+/// (or the operator presses Enter), then drain gracefully and print the
+/// final service stats. The functional backend keeps responses
+/// bit-exact with the cycle-accurate engine while serving fast enough
+/// to demo admission control interactively.
+fn serve_http(port: u16, workers: usize, queue_cap: usize, graph_par: bool) {
+    let (incep_seq, incep_d) = (32usize, 64usize);
+    let service = ServiceBuilder::new()
+        .backend(BackendKind::Functional)
+        .workers(workers)
+        .graph_parallelism(graph_par)
+        .register_graph("tiny_cnn", tiny_cnn_graph())
+        .register_graph("tiny_mlp", tiny_mlp_graph())
+        .register_graph("inception", inception_block_graph(incep_seq, incep_d, 16, 4))
+        .build();
+    let cfg = IngressConfig {
+        admission: kraken::ingress::AdmissionConfig {
+            queue_cap,
+            ..kraken::ingress::AdmissionConfig::default()
+        },
+        ..IngressConfig::default()
+    };
+    let server = match IngressServer::bind(service, ("127.0.0.1", port), cfg) {
+        Ok(server) => server,
+        Err(e) => {
+            eprintln!("failed to bind 127.0.0.1:{port}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let addr = server.local_addr();
+    println!("kraken ingress listening on http://{addr}");
+    println!("  models: {:?} ({workers} workers, queue cap {queue_cap})", server.service().models());
+    println!("  POST /v1/infer/<model>   binary KRKN tensor → logits JSON");
+    println!("                           headers: x-kraken-lane: interactive|batch,");
+    println!("                                    x-kraken-deadline-us: <µs>");
+    println!("  GET  /metrics            Prometheus text exposition");
+    println!("  GET  /stats              JSON snapshot (admission + service counters)");
+    println!("  GET  /healthz");
+    println!("  e.g. curl http://{addr}/stats");
+    println!("press Enter (or close stdin) for graceful shutdown…");
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line);
+    println!("draining…");
+    let stats = server.shutdown();
+    println!(
+        "served {} requests ({} failed) on {} worker(s); {} stolen",
+        stats.completed, stats.failed, stats.workers, stats.stolen
+    );
+    let sheds = kraken::telemetry::global().counters_with_prefix("ingress_");
+    for (name, value) in sheds {
+        println!("  {name} {value}");
+    }
 }
 
 /// Serve N TinyCNN requests and N dense rows through one

@@ -183,6 +183,22 @@ impl Registry {
         map.entry(name.to_string()).or_insert_with(make).clone()
     }
 
+    /// Snapshot every counter whose full registered name (labels
+    /// included) starts with `prefix`, as `(name, value)` pairs in
+    /// registry (BTreeMap) order. `kraken stats` uses this to surface
+    /// the ingress admission counters without scraping the full
+    /// Prometheus exposition.
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        let map = self.metrics.lock().expect("registry poisoned");
+        map.iter()
+            .filter(|(name, _)| name.starts_with(prefix))
+            .filter_map(|(name, metric)| match metric {
+                Metric::Counter(c) => Some((name.clone(), c.get())),
+                _ => None,
+            })
+            .collect()
+    }
+
     /// Render every metric in Prometheus text exposition format.
     ///
     /// Registered names may carry labels (`name{k="v"}`); variants of
@@ -274,6 +290,24 @@ mod tests {
         let g = r.gauge("depth");
         g.set(-2);
         assert_eq!(r.gauge("depth").get(), -2);
+    }
+
+    #[test]
+    fn counters_with_prefix_filters_by_name_and_kind() {
+        let r = Registry::new();
+        r.counter("ingress_admitted_total{lane=\"interactive\"}").add(7);
+        r.counter("ingress_admitted_total{lane=\"batch\"}").add(2);
+        r.counter("other_total").add(9);
+        r.gauge("ingress_depth").set(5); // non-counter: excluded
+        let got = r.counters_with_prefix("ingress_");
+        assert_eq!(
+            got,
+            vec![
+                ("ingress_admitted_total{lane=\"batch\"}".to_string(), 2),
+                ("ingress_admitted_total{lane=\"interactive\"}".to_string(), 7),
+            ]
+        );
+        assert!(r.counters_with_prefix("nope_").is_empty());
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Loopback integration tests for the HTTP ingress: real sockets
+//! against a real [`IngressServer`], proving the wire path is a pure
+//! transport (bit-identical logits vs direct `submit`), that admission
+//! control sheds exactly as specified (`429` queue-full / batch gate,
+//! `503` deadline), that malformed traffic maps onto clean 4xx
+//! answers, that `/metrics` speaks valid Prometheus text exposition,
+//! and that graceful shutdown drains in-flight requests.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use kraken::arch::KrakenConfig;
+use kraken::backend::{Accelerator, Functional, LayerData, LayerOutput};
+use kraken::coordinator::{BackendKind, ServiceBuilder};
+use kraken::ingress::wire::encode_tensor;
+use kraken::ingress::{AdmissionConfig, IngressConfig, IngressServer};
+use kraken::layers::LayerKind;
+use kraken::metrics::Counters;
+use kraken::networks::{tiny_cnn_graph, tiny_mlp_graph, X_SEED};
+use kraken::tensor::Tensor4;
+
+// ---------------------------------------------------------------- helpers
+
+fn functional_server(queue_cap: usize, batch_depth_threshold: usize) -> IngressServer {
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .backend(BackendKind::Functional)
+        .workers(2)
+        .register_graph("tiny_cnn", tiny_cnn_graph())
+        .register_graph("tiny_mlp", tiny_mlp_graph())
+        .build();
+    let cfg = IngressConfig {
+        handler_threads: 4,
+        max_body_bytes: 1 << 20,
+        admission: AdmissionConfig {
+            queue_cap,
+            batch_depth_threshold,
+            ..AdmissionConfig::default()
+        },
+    };
+    IngressServer::bind(service, ("127.0.0.1", 0), cfg).expect("bind ephemeral port")
+}
+
+/// A backend that blocks inside `run_layer` until its gate opens — lets
+/// tests hold a request in flight deterministically.
+struct Gated {
+    inner: Functional,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Accelerator for Gated {
+    fn name(&self) -> String {
+        "gated".into()
+    }
+    fn run_layer(&mut self, data: &LayerData) -> LayerOutput {
+        let (open, cv) = &*self.gate;
+        let mut open = open.lock().expect("gate");
+        while !*open {
+            open = cv.wait(open).expect("gate");
+        }
+        drop(open);
+        self.inner.run_layer(data)
+    }
+    fn counters(&self) -> Counters {
+        self.inner.counters()
+    }
+    fn freq_hz(&self, kind: LayerKind) -> f64 {
+        self.inner.freq_hz(kind)
+    }
+}
+
+fn gated_server(
+    queue_cap: usize,
+) -> (IngressServer, Arc<(Mutex<bool>, Condvar)>) {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let backend_gate = Arc::clone(&gate);
+    let service = ServiceBuilder::new()
+        .config(KrakenConfig::new(7, 96))
+        .workers(1)
+        .register_graph("tiny_cnn", tiny_cnn_graph())
+        .build_with(move |_| Gated {
+            inner: Functional::new(KrakenConfig::new(7, 96)),
+            gate: Arc::clone(&backend_gate),
+        });
+    let cfg = IngressConfig {
+        handler_threads: 4,
+        max_body_bytes: 1 << 20,
+        admission: AdmissionConfig { queue_cap, ..AdmissionConfig::default() },
+    };
+    let server = IngressServer::bind(service, ("127.0.0.1", 0), cfg).expect("bind");
+    (server, gate)
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (open, cv) = &**gate;
+    *open.lock().expect("gate") = true;
+    cv.notify_all();
+}
+
+fn write_request(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+    close: bool,
+) {
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: loopback\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    for (name, value) in headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes()).expect("write request head");
+    stream.write_all(body).expect("write request body");
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed status line {status_line:?}"))
+        .parse()
+        .expect("numeric status");
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("header line");
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line.split_once(':').expect("header colon");
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(name, _)| name == "content-length")
+        .map(|(_, value)| value.parse().expect("content-length"))
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).expect("response body");
+    (status, headers, body)
+}
+
+/// One whole request/response exchange on a fresh connection.
+fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+) -> (u16, Vec<(String, String)>, Vec<u8>) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write_request(&mut stream, method, path, headers, body, true);
+    read_response(&mut BufReader::new(stream))
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+}
+
+fn logits_from_json(body: &[u8]) -> Vec<i32> {
+    let text = std::str::from_utf8(body).expect("utf8 body");
+    let start = text.find("\"logits\":[").expect("logits field") + "\"logits\":[".len();
+    let end = start + text[start..].find(']').expect("closing bracket");
+    text[start..end]
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse().expect("integer logit"))
+        .collect()
+}
+
+fn wait_until(what: &str, mut pred: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        if pred() {
+            return;
+        }
+        thread::sleep(Duration::from_millis(10));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+// ------------------------------------------------------------------ tests
+
+#[test]
+fn http_served_logits_bit_identical_to_direct_submit() {
+    let server = functional_server(64, 8);
+    let addr = server.local_addr();
+    for (model, shape) in
+        [("tiny_cnn", [1usize, 28, 28, 3]), ("tiny_mlp", [1, 1, 1, 256])]
+    {
+        let x = Tensor4::random(shape, X_SEED);
+        let want = server.service().infer(model, x.clone()).expect("direct submit");
+        let (status, _, body) =
+            request(addr, "POST", &format!("/v1/infer/{model}"), &[], &encode_tensor(&x));
+        assert_eq!(status, 200, "{model}: {}", String::from_utf8_lossy(&body));
+        assert_eq!(
+            logits_from_json(&body),
+            want.logits,
+            "{model}: HTTP-served logits must be bit-identical to direct submit"
+        );
+    }
+    let stats = server.shutdown();
+    assert!(stats.completed >= 4, "2 HTTP + 2 direct requests completed");
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let server = functional_server(64, 8);
+    let x = Tensor4::random([1, 1, 1, 256], 42);
+    let want = server.service().infer("tiny_mlp", x.clone()).expect("direct submit");
+    let payload = encode_tensor(&x);
+
+    let mut stream = TcpStream::connect(server.local_addr()).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    for round in 0..2 {
+        write_request(&mut stream, "POST", "/v1/infer/tiny_mlp", &[], &payload, false);
+        let (status, headers, body) = read_response(&mut reader);
+        assert_eq!(status, 200, "round {round}");
+        assert_eq!(header(&headers, "connection"), Some("keep-alive"), "round {round}");
+        assert_eq!(logits_from_json(&body), want.logits, "round {round}");
+    }
+    // Third request asks to close; the server must honor it.
+    write_request(&mut stream, "GET", "/healthz", &[], b"", true);
+    let (status, headers, _) = read_response(&mut reader);
+    assert_eq!(status, 200);
+    assert_eq!(header(&headers, "connection"), Some("close"));
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let server = functional_server(64, 8);
+    let addr = server.local_addr();
+    let x = Tensor4::random([1, 1, 1, 256], 7);
+    let want = server.service().infer("tiny_mlp", x.clone()).expect("direct submit").logits;
+    let payload = encode_tensor(&x);
+
+    let clients: Vec<_> = (0..6)
+        .map(|_| {
+            let payload = payload.clone();
+            let want = want.clone();
+            thread::spawn(move || {
+                for _ in 0..3 {
+                    let (status, _, body) =
+                        request(addr, "POST", "/v1/infer/tiny_mlp", &[], &payload);
+                    assert_eq!(status, 200, "{}", String::from_utf8_lossy(&body));
+                    assert_eq!(logits_from_json(&body), want);
+                }
+            })
+        })
+        .collect();
+    for client in clients {
+        client.join().expect("client thread");
+    }
+    let stats = server.shutdown();
+    assert!(stats.completed >= 19, "18 HTTP + 1 direct, got {}", stats.completed);
+}
+
+#[test]
+fn malformed_requests_map_to_clean_4xx() {
+    let server = functional_server(64, 8);
+    let addr = server.local_addr();
+    let good = encode_tensor(&Tensor4::random([1, 1, 1, 256], 1));
+
+    // Garbage request line.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"garbage\r\n\r\n").expect("write");
+    let (status, _, _) = read_response(&mut BufReader::new(stream));
+    assert_eq!(status, 400);
+
+    // POST without Content-Length.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(b"POST /v1/infer/tiny_mlp HTTP/1.1\r\nHost: x\r\n\r\n")
+        .expect("write");
+    let (status, _, _) = read_response(&mut BufReader::new(stream));
+    assert_eq!(status, 411);
+
+    // Corrupt tensor payload.
+    let (status, _, _) = request(addr, "POST", "/v1/infer/tiny_mlp", &[], b"not a tensor");
+    assert_eq!(status, 400);
+
+    // Unknown model; unknown route; wrong methods; bad QoS headers.
+    let (status, _, _) = request(addr, "POST", "/v1/infer/nope", &[], &good);
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "GET", "/nope", &[], b"");
+    assert_eq!(status, 404);
+    let (status, _, _) = request(addr, "GET", "/v1/infer/tiny_mlp", &[], b"");
+    assert_eq!(status, 405);
+    let (status, _, _) = request(addr, "POST", "/metrics", &[], b"");
+    assert_eq!(status, 405);
+    let (status, _, _) = request(
+        addr,
+        "POST",
+        "/v1/infer/tiny_mlp",
+        &[("x-kraken-lane", "bulk".to_string())],
+        &good,
+    );
+    assert_eq!(status, 400);
+    let (status, _, _) = request(
+        addr,
+        "POST",
+        "/v1/infer/tiny_mlp",
+        &[("x-kraken-deadline-us", "soon".to_string())],
+        &good,
+    );
+    assert_eq!(status, 400);
+
+    // The server survives all of it.
+    let (status, _, _) = request(addr, "GET", "/healthz", &[], b"");
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn queue_cap_overflow_sheds_429_and_is_visible_in_metrics() {
+    let (server, gate) = gated_server(1);
+    let addr = server.local_addr();
+    let payload = encode_tensor(&Tensor4::random([1, 28, 28, 3], X_SEED));
+
+    // Client A: admitted, then parked inside the gated backend.
+    let a_payload = payload.clone();
+    let a = thread::spawn(move || {
+        let (status, _, _) = request(addr, "POST", "/v1/infer/tiny_cnn", &[], &a_payload);
+        status
+    });
+    wait_until("request A to be admitted and in flight", || {
+        let (_, _, body) = request(addr, "GET", "/stats", &[], b"");
+        String::from_utf8_lossy(&body).contains("\"tiny_cnn\":{\"interactive\":1")
+    });
+
+    // Client B: the 1-slot queue is full — shed with 429 + Retry-After.
+    let (status, headers, body) = request(addr, "POST", "/v1/infer/tiny_cnn", &[], &payload);
+    assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(header(&headers, "retry-after"), Some("1"));
+
+    // The shed is visible in the Prometheus exposition.
+    let (status, _, metrics) = request(addr, "GET", "/metrics", &[], b"");
+    assert_eq!(status, 200);
+    let metrics = String::from_utf8(metrics).expect("utf8 metrics");
+    let shed_line = metrics
+        .lines()
+        .find(|l| l.starts_with("ingress_shed_queue_full_total{lane=\"interactive\"}"))
+        .expect("shed counter exported");
+    let shed: u64 =
+        shed_line.rsplit(' ').next().expect("value").parse().expect("integer");
+    assert!(shed >= 1, "{shed_line}");
+
+    // Release A; it must still complete.
+    open_gate(&gate);
+    assert_eq!(a.join().expect("client A"), 200);
+    server.shutdown();
+}
+
+#[test]
+fn batch_lane_sheds_on_pool_utilization_while_interactive_serves() {
+    // Threshold 0: the pool is always "too deep" for batch traffic.
+    let server = functional_server(64, 0);
+    let addr = server.local_addr();
+    let payload = encode_tensor(&Tensor4::random([1, 1, 1, 256], 3));
+
+    let (status, headers, _) = request(
+        addr,
+        "POST",
+        "/v1/infer/tiny_mlp",
+        &[("x-kraken-lane", "batch".to_string())],
+        &payload,
+    );
+    assert_eq!(status, 429, "batch lane must shed at threshold 0");
+    assert_eq!(header(&headers, "retry-after"), Some("1"));
+
+    let (status, _, _) = request(
+        addr,
+        "POST",
+        "/v1/infer/tiny_mlp",
+        &[("x-kraken-lane", "interactive".to_string())],
+        &payload,
+    );
+    assert_eq!(status, 200, "interactive lane is not utilization-gated");
+    server.shutdown();
+}
+
+#[test]
+fn deadline_expiry_is_503_and_the_worker_survives() {
+    let (server, gate) = gated_server(4);
+    let addr = server.local_addr();
+    let payload = encode_tensor(&Tensor4::random([1, 28, 28, 3], X_SEED));
+
+    // Gate closed: a 50 ms deadline must expire.
+    let (status, headers, body) = request(
+        addr,
+        "POST",
+        "/v1/infer/tiny_cnn",
+        &[("x-kraken-deadline-us", "50000".to_string())],
+        &payload,
+    );
+    assert_eq!(status, 503, "{}", String::from_utf8_lossy(&body));
+    assert_eq!(header(&headers, "retry-after"), Some("1"));
+
+    let (_, _, metrics) = request(addr, "GET", "/metrics", &[], b"");
+    let metrics = String::from_utf8(metrics).expect("utf8 metrics");
+    assert!(
+        metrics
+            .lines()
+            .any(|l| l.starts_with("ingress_shed_deadline_total{lane=\"interactive\"}")
+                && !l.ends_with(" 0")),
+        "deadline shed counter must be exported and non-zero"
+    );
+
+    // Open the gate: the worker finishes the stale request (result
+    // discarded) and keeps serving fresh ones.
+    open_gate(&gate);
+    let (status, _, _) = request(addr, "POST", "/v1/infer/tiny_cnn", &[], &payload);
+    assert_eq!(status, 200, "worker must survive the dropped late result");
+    server.shutdown();
+}
+
+#[test]
+fn metrics_pass_line_level_prometheus_exposition_check() {
+    let server = functional_server(64, 8);
+    let addr = server.local_addr();
+    // Traffic first, so histograms and counters carry real series.
+    let payload = encode_tensor(&Tensor4::random([1, 1, 1, 256], 5));
+    let (status, _, _) = request(addr, "POST", "/v1/infer/tiny_mlp", &[], &payload);
+    assert_eq!(status, 200);
+
+    let (status, headers, body) = request(addr, "GET", "/metrics", &[], b"");
+    assert_eq!(status, 200);
+    assert!(
+        header(&headers, "content-type").is_some_and(|ct| ct.starts_with("text/plain")),
+        "exposition content type"
+    );
+    let text = String::from_utf8(body).expect("utf8 exposition");
+    assert!(text.contains("ingress_admitted_total"), "admission counters exported");
+    check_prometheus_exposition(&text);
+    server.shutdown();
+}
+
+/// Line-level Prometheus text exposition checker: every line is a
+/// comment or a `name[{labels}] value` series with a valid metric name,
+/// a parseable value, and a preceding `# TYPE` for its family.
+fn check_prometheus_exposition(text: &str) {
+    fn valid_name(name: &str) {
+        assert!(!name.is_empty(), "empty metric name");
+        let mut chars = name.chars();
+        let first = chars.next().expect("non-empty");
+        assert!(
+            first.is_ascii_alphabetic() || first == '_' || first == ':',
+            "bad metric name start in {name:?}"
+        );
+        assert!(
+            chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name {name:?}"
+        );
+    }
+
+    let mut typed: HashSet<&str> = HashSet::new();
+    let mut series_seen = 0usize;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().expect("TYPE line carries a name");
+            let kind = parts.next().expect("TYPE line carries a kind");
+            assert!(
+                ["counter", "gauge", "histogram", "summary", "untyped"].contains(&kind),
+                "unknown TYPE kind {kind:?} in {line:?}"
+            );
+            assert!(parts.next().is_none(), "trailing tokens in {line:?}");
+            valid_name(name);
+            typed.insert(name);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("series line without a value: {line:?}")
+        });
+        value.parse::<f64>().unwrap_or_else(|_| {
+            panic!("non-numeric sample value {value:?} in {line:?}")
+        });
+        let base = match series.find('{') {
+            Some(i) => {
+                assert!(series.ends_with('}'), "unbalanced labels in {line:?}");
+                assert!(
+                    series[i..].contains("=\""),
+                    "labels without quoted values in {line:?}"
+                );
+                &series[..i]
+            }
+            None => series,
+        };
+        valid_name(base);
+        // Histogram series attach to their family's TYPE line.
+        let family = [base]
+            .into_iter()
+            .chain(base.strip_suffix("_bucket"))
+            .chain(base.strip_suffix("_sum"))
+            .chain(base.strip_suffix("_count"))
+            .find(|candidate| typed.contains(candidate));
+        assert!(family.is_some(), "series {base:?} has no # TYPE line");
+        series_seen += 1;
+    }
+    assert!(series_seen > 0, "exposition must carry at least one series");
+}
+
+#[test]
+fn graceful_shutdown_drains_the_inflight_request() {
+    let (server, gate) = gated_server(4);
+    let addr = server.local_addr();
+    let payload = encode_tensor(&Tensor4::random([1, 28, 28, 3], X_SEED));
+
+    // Park one request inside the backend.
+    let a = thread::spawn(move || {
+        let (status, _, _) = request(addr, "POST", "/v1/infer/tiny_cnn", &[], &payload);
+        status
+    });
+    wait_until("request to be admitted and in flight", || {
+        let (_, _, body) = request(addr, "GET", "/stats", &[], b"");
+        String::from_utf8_lossy(&body).contains("\"tiny_cnn\":{\"interactive\":1")
+    });
+
+    // Open the gate shortly after the drain starts, so shutdown really
+    // has an in-flight request to wait for.
+    let opener = {
+        let gate = Arc::clone(&gate);
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(100));
+            open_gate(&gate);
+        })
+    };
+    let stats = server.shutdown();
+    opener.join().expect("gate opener");
+
+    // The parked client got a real answer, not a reset.
+    assert_eq!(a.join().expect("client"), 200);
+    assert!(stats.completed >= 1);
+
+    // And the listener is really gone: a fresh exchange must fail.
+    let refused = TcpStream::connect(addr)
+        .and_then(|mut s| {
+            write_request(&mut s, "GET", "/healthz", &[], b"", true);
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).map(|_| buf)
+        })
+        .map(|buf| buf.is_empty())
+        .unwrap_or(true);
+    assert!(refused, "post-shutdown connections must not be served");
+}
