@@ -21,9 +21,9 @@
 
 mod harness;
 
+use kraken::sync::thread;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::thread;
 use std::time::{Duration, Instant};
 
 use kraken::arch::KrakenConfig;

@@ -18,10 +18,10 @@
 //! serving layer ([`crate::coordinator::service`]) instantiates it
 //! with backends and request envelopes.
 
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 /// Human-readable message out of a `catch_unwind` payload — shared by
 /// the serving layer and the partition executor, which both isolate
@@ -190,7 +190,7 @@ impl<J: Send + 'static> ShardedPool<J> {
                 let inner = Arc::clone(&inner);
                 let make_state = Arc::clone(&make_state);
                 let handle = Arc::clone(&handle);
-                std::thread::spawn(move || {
+                thread::spawn(move || {
                     let mut state = make_state(i);
                     loop {
                         let job = {
@@ -329,8 +329,8 @@ impl<J: Send + 'static> Drop for ShardedPool<J> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicU64, Ordering};
-    use std::sync::mpsc;
+    use crate::sync::atomic::{AtomicU64, Ordering};
+    use crate::sync::mpsc;
 
     #[test]
     fn every_job_processed_exactly_once() {
@@ -387,7 +387,7 @@ mod tests {
             2,
             |_| (),
             |_, _, ms: u64| {
-                std::thread::sleep(std::time::Duration::from_millis(ms));
+                thread::sleep(std::time::Duration::from_millis(ms));
             },
         );
         let jobs = (0..16u64).map(|i| if i % 2 == 0 { 30 } else { 0 });
@@ -414,7 +414,7 @@ mod tests {
         pool.submit_batch([0u32, 1, 2, 3]);
         // Worker holds job 0; three jobs queued → peak depth ≥ 3.
         while pool.queued() != 3 {
-            std::thread::yield_now();
+            thread::yield_now();
         }
         assert!(pool.peak_queued() >= 3, "peak {}", pool.peak_queued());
         let live = pool.worker_stats();
@@ -449,7 +449,7 @@ mod tests {
         pool.submit_batch([0u32, 1, 2, 3]);
         // Wait until the worker holds job 0 (three jobs left queued).
         while pool.queued() != 3 {
-            std::thread::yield_now();
+            thread::yield_now();
         }
         let handle = pool.handle();
         assert_eq!(handle.take_matching(|&j| j % 2 == 1), Some(1), "oldest match first");

@@ -1,0 +1,137 @@
+//! Vector clocks: the happens-before algebra under the model checker.
+//!
+//! Each virtual thread carries a [`VClock`]; each synchronization object
+//! (mutex, condvar edge, atomic store) carries the clock of its last
+//! releasing writer. `join` merges knowledge on acquire edges, `tick`
+//! advances a thread's own component on every visible operation, and the
+//! partial order (`le`) is what "happens-before" *means* here: event A
+//! with clock `a` happens-before event B with clock `b` iff `a ≤ b`
+//! component-wise. Two events neither of which ≤ the other are
+//! concurrent — the race detector's trigger condition.
+
+/// A vector clock over virtual-thread ids. Thread ids are small dense
+/// indices assigned by the controller, so a plain `Vec<u64>` (implicitly
+/// zero-extended) is the whole representation.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct VClock {
+    slots: Vec<u64>,
+}
+
+impl VClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// This clock's component for thread `tid` (0 if never seen).
+    pub fn get(&self, tid: usize) -> u64 {
+        self.slots.get(tid).copied().unwrap_or(0)
+    }
+
+    fn slot_mut(&mut self, tid: usize) -> &mut u64 {
+        if self.slots.len() <= tid {
+            self.slots.resize(tid + 1, 0);
+        }
+        &mut self.slots[tid]
+    }
+
+    /// Advance `tid`'s own component: a new event on that thread.
+    pub fn tick(&mut self, tid: usize) {
+        *self.slot_mut(tid) += 1;
+    }
+
+    /// Merge `other`'s knowledge into this clock (component-wise max).
+    /// This is the acquire edge: after `join`, everything `other` had
+    /// seen happens-before this thread's subsequent events.
+    pub fn join(&mut self, other: &VClock) {
+        for (tid, &v) in other.slots.iter().enumerate() {
+            let slot = self.slot_mut(tid);
+            *slot = (*slot).max(v);
+        }
+    }
+
+    /// `self ≤ other` in the component-wise partial order: every event
+    /// this clock has seen, `other` has also seen.
+    pub fn le(&self, other: &VClock) -> bool {
+        self.slots
+            .iter()
+            .enumerate()
+            .all(|(tid, &v)| v <= other.get(tid))
+    }
+
+    /// Neither clock dominates: the two events are concurrent.
+    pub fn concurrent(&self, other: &VClock) -> bool {
+        !self.le(other) && !other.le(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_clocks_are_equal_and_ordered_both_ways() {
+        let a = VClock::new();
+        let b = VClock::new();
+        assert!(a.le(&b) && b.le(&a));
+        assert!(!a.concurrent(&b));
+    }
+
+    #[test]
+    fn tick_orders_after_the_old_clock() {
+        let before = VClock::new();
+        let mut after = before.clone();
+        after.tick(0);
+        assert!(before.le(&after));
+        assert!(!after.le(&before));
+        assert_eq!(after.get(0), 1);
+        assert_eq!(after.get(7), 0);
+    }
+
+    #[test]
+    fn independent_ticks_are_concurrent() {
+        let mut a = VClock::new();
+        let mut b = VClock::new();
+        a.tick(0);
+        b.tick(1);
+        assert!(a.concurrent(&b));
+        assert!(b.concurrent(&a));
+    }
+
+    #[test]
+    fn join_is_component_wise_max_and_restores_order() {
+        let mut a = VClock::new();
+        let mut b = VClock::new();
+        a.tick(0);
+        a.tick(0); // a = [2]
+        b.tick(1); // b = [0,1]
+        assert!(a.concurrent(&b));
+        // b acquires from a (e.g. locks a mutex a released): b now
+        // dominates both histories.
+        b.join(&a);
+        assert!(a.le(&b));
+        assert_eq!(b.get(0), 2);
+        assert_eq!(b.get(1), 1);
+        // join is idempotent
+        let snap = b.clone();
+        b.join(&a);
+        assert_eq!(b, snap);
+    }
+
+    #[test]
+    fn transitivity_through_a_release_acquire_chain() {
+        // t0 ticks, releases into `edge`; t1 acquires, ticks, releases
+        // into `edge2`; t2 acquires. t2 must be ordered after t0's event.
+        let mut t0 = VClock::new();
+        t0.tick(0);
+        let edge = t0.clone();
+
+        let mut t1 = VClock::new();
+        t1.join(&edge);
+        t1.tick(1);
+        let edge2 = t1.clone();
+
+        let mut t2 = VClock::new();
+        t2.join(&edge2);
+        assert!(t0.le(&t2), "happens-before must be transitive");
+    }
+}

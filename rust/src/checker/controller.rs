@@ -1,0 +1,935 @@
+//! The model-checking controller: virtual threads, one token, one tape.
+//!
+//! A schedule run executes the checked closure on real OS threads, but
+//! only **one** of them — the token holder — makes progress at any
+//! moment. Every visible operation (lock, unlock, condvar wait/notify,
+//! atomic load/store/RMW, spawn, join, yield) funnels through this
+//! controller, which at each operation boundary consults the *tape* — a
+//! list of pre-made decisions supplied by the explorer — to decide which
+//! runnable thread executes next, which eligible store a weak load
+//! observes, which condvar waiter a `notify_one` wakes, and whether a
+//! `wait_timeout` fires its timeout branch. Decisions past the end of
+//! the tape default to "keep running the current thread" (or a seeded
+//! pseudo-random pick in random mode) and are recorded, so the explorer
+//! can backtrack: the full decision record of a run is exactly what
+//! [`crate::checker::explore`] needs to enumerate the next schedule.
+//!
+//! Happens-before is tracked with vector clocks ([`super::clock`]):
+//! mutexes, condvars and release-store edges carry the releasing
+//! thread's clock, and acquiring threads join it. Shimmed atomics keep a
+//! per-address store history so a `Relaxed`/`Acquire` load may observe
+//! *any* store not excluded by coherence or happens-before — the value
+//! choice is itself a tape decision, which is how the checker proves
+//! (or refutes) the crate's `Ordering` annotations.
+//!
+//! Failure (assertion panic inside the model, deadlock, step-budget
+//! blowout) sets an abort flag; every parked thread wakes, unwinds with
+//! a private panic token, and the run reports the recorded trace.
+
+use super::clock::VClock;
+use crate::sync::raw::{self, MutexGuard, RawCondvar, RawMutex};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::panic::{self, AssertUnwindSafe, Location};
+use std::sync::Arc;
+
+/// Unwind token: "this run is aborting, exit quietly".
+struct Abort;
+
+fn bail() -> ! {
+    panic::panic_any(Abort);
+}
+
+/// Orderings the shims report, mirrored locally so the controller does
+/// not depend on which `atomic::Ordering` the facade currently exports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Ord8 {
+    Relaxed,
+    Acquire,
+    Release,
+    AcqRel,
+    SeqCst,
+}
+
+impl Ord8 {
+    fn acquires(self) -> bool {
+        matches!(self, Ord8::Acquire | Ord8::AcqRel | Ord8::SeqCst)
+    }
+    fn releases(self) -> bool {
+        matches!(self, Ord8::Release | Ord8::AcqRel | Ord8::SeqCst)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) enum Block {
+    Mutex(usize),
+    CondWait { cv: usize, timeout: bool },
+    Join(usize),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Wake {
+    Notified,
+    TimedOut,
+    Spurious,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    Blocked(Block),
+    Finished,
+}
+
+struct ThreadSt {
+    name: String,
+    status: Status,
+    clock: VClock,
+    wake: Option<Wake>,
+    /// Per-atomic coherence frontier: newest store index this thread
+    /// has observed (read from or written), keyed by object address.
+    obs: HashMap<usize, usize>,
+}
+
+#[derive(Default)]
+struct MxObj {
+    holder: Option<usize>,
+    /// Clock released into the lock by the last unlocker.
+    edge: VClock,
+}
+
+#[derive(Default)]
+struct CvObj {
+    /// Accumulated clocks of every notifier; waiters woken by a
+    /// notification join this on resume.
+    edge: VClock,
+}
+
+struct StoreElem {
+    val: u64,
+    /// Writer's clock at the store (for coherence / happens-before).
+    clock: VClock,
+    /// Release edge an acquire-load of this store synchronizes with.
+    /// `None` for relaxed stores (which also break a release sequence);
+    /// relaxed RMWs propagate their predecessor's edge.
+    release: Option<VClock>,
+}
+
+struct AtObj {
+    stores: Vec<StoreElem>,
+}
+
+/// One recorded decision: how many options existed, which was taken,
+/// and which options would have cost a preemption.
+#[derive(Clone, Debug)]
+pub(crate) struct Choice {
+    pub preempt: Vec<bool>,
+    pub chosen: usize,
+}
+
+/// One executed visible operation, for the failure trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub(crate) struct Event {
+    pub tid: usize,
+    pub thread: String,
+    pub desc: String,
+    pub loc: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SchedOpt {
+    Run(usize),
+    Timeout(usize),
+    Spurious(usize),
+}
+
+pub(crate) struct ExecState {
+    threads: Vec<ThreadSt>,
+    active: Option<usize>,
+    tape: Vec<usize>,
+    cursor: usize,
+    /// Seeded xorshift state; `Some` ⇒ decisions past the tape are
+    /// pseudo-random instead of "first option".
+    rng: Option<u64>,
+    spurious_enabled: bool,
+    record: Vec<Choice>,
+    trace: Vec<Event>,
+    steps: u64,
+    max_steps: u64,
+    mutexes: HashMap<usize, MxObj>,
+    condvars: HashMap<usize, CvObj>,
+    atomics: HashMap<usize, AtObj>,
+    /// Stable per-run display numbers for sync objects, by address.
+    labels: HashMap<usize, usize>,
+    failure: Option<String>,
+    abort: bool,
+    os_live: usize,
+}
+
+impl ExecState {
+    fn label(&mut self, kind: &str, addr: usize) -> String {
+        let next = self.labels.len();
+        let n = *self.labels.entry(addr).or_insert(next);
+        format!("{kind}#{n}")
+    }
+
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+        self.abort = true;
+    }
+
+    fn event(&mut self, tid: usize, desc: String, loc: &'static Location<'static>) {
+        self.steps += 1;
+        if self.steps > self.max_steps {
+            self.fail(format!(
+                "step budget exceeded ({} visible ops) — livelock or unbounded loop?",
+                self.max_steps
+            ));
+        }
+        self.threads[tid].clock.tick(tid);
+        self.trace.push(Event {
+            tid,
+            thread: self.threads[tid].name.clone(),
+            desc,
+            loc: format!("{}:{}", loc.file(), loc.line()),
+        });
+    }
+
+    /// Take one decision among `preempt.len()` options: from the tape,
+    /// else randomly (random mode), else option 0. Always recorded.
+    fn choose(&mut self, preempt: Vec<bool>) -> usize {
+        let n = preempt.len();
+        debug_assert!(n > 0);
+        let k = if self.cursor < self.tape.len() {
+            self.tape[self.cursor].min(n - 1)
+        } else if let Some(s) = &mut self.rng {
+            // xorshift64*
+            *s ^= *s << 13;
+            *s ^= *s >> 7;
+            *s ^= *s << 17;
+            (*s % n as u64) as usize
+        } else {
+            0
+        };
+        self.cursor += 1;
+        self.record.push(Choice { preempt, chosen: k });
+        k
+    }
+
+    fn runnable(&self, t: usize) -> bool {
+        self.threads[t].status == Status::Runnable
+    }
+
+    /// Pick the next token holder. `me` is the thread at the decision
+    /// point (it may be runnable, blocked, or finished).
+    fn pick_next(&mut self, me: usize) {
+        let mut opts = Vec::new();
+        if self.runnable(me) {
+            opts.push(SchedOpt::Run(me));
+        }
+        for t in 0..self.threads.len() {
+            if t != me && self.runnable(t) {
+                opts.push(SchedOpt::Run(t));
+            }
+        }
+        for t in 0..self.threads.len() {
+            if let Status::Blocked(Block::CondWait { timeout: true, .. }) = self.threads[t].status {
+                opts.push(SchedOpt::Timeout(t));
+            }
+        }
+        if self.spurious_enabled {
+            for t in 0..self.threads.len() {
+                if let Status::Blocked(Block::CondWait { .. }) = self.threads[t].status {
+                    opts.push(SchedOpt::Spurious(t));
+                }
+            }
+        }
+        if opts.is_empty() {
+            if self.threads.iter().all(|t| t.status == Status::Finished) {
+                self.active = None;
+                return;
+            }
+            self.fail(self.deadlock_report());
+            return;
+        }
+        let me_runnable = self.runnable(me);
+        let flags = opts
+            .iter()
+            .map(|o| me_runnable && *o != SchedOpt::Run(me))
+            .collect();
+        let k = self.choose(flags);
+        match opts[k] {
+            SchedOpt::Run(t) => self.active = Some(t),
+            SchedOpt::Timeout(t) => {
+                self.threads[t].wake = Some(Wake::TimedOut);
+                self.threads[t].status = Status::Runnable;
+                self.active = Some(t);
+            }
+            SchedOpt::Spurious(t) => {
+                self.threads[t].wake = Some(Wake::Spurious);
+                self.threads[t].status = Status::Runnable;
+                self.active = Some(t);
+            }
+        }
+    }
+
+    fn deadlock_report(&self) -> String {
+        let mut msg = String::from("deadlock: no runnable thread and no timeout to fire\n");
+        let mut cond_waiters = 0;
+        for (t, th) in self.threads.iter().enumerate() {
+            if let Status::Blocked(b) = &th.status {
+                let what = match b {
+                    Block::Mutex(a) => format!("blocked locking mutex@{a:#x}"),
+                    Block::CondWait { cv, .. } => {
+                        cond_waiters += 1;
+                        format!("waiting on condvar@{cv:#x} (no pending notify)")
+                    }
+                    Block::Join(o) => format!("joining t{o} '{}'", self.threads[*o].name),
+                };
+                let _ = writeln!(msg, "  t{t} '{}': {what}", th.name);
+            }
+        }
+        if cond_waiters > 0 {
+            msg.push_str(
+                "  ^ condvar waiters with every potential notifier blocked or finished: \
+                 a missed-wakeup bug unless a timeout was expected\n",
+            );
+        }
+        msg
+    }
+
+    /// Release a virtually held mutex: publish the holder's clock into
+    /// the lock edge and make every blocked locker runnable (they race
+    /// for re-acquisition under subsequent scheduling choices). This is
+    /// *not* a yield point, so guard drops stay panic-safe on unwind.
+    fn mutex_release(&mut self, me: usize, addr: usize) {
+        let clk = self.threads[me].clock.clone();
+        let held = match self.mutexes.get_mut(&addr) {
+            Some(obj) if obj.holder == Some(me) => {
+                obj.holder = None;
+                obj.edge.join(&clk);
+                true
+            }
+            _ => false,
+        };
+        if !held {
+            self.fail(format!("t{me} unlocked mutex@{addr:#x} it does not hold"));
+            return;
+        }
+        for th in &mut self.threads {
+            if th.status == Status::Blocked(Block::Mutex(addr)) {
+                th.status = Status::Runnable;
+            }
+        }
+    }
+
+    fn ensure_atomic(&mut self, addr: usize, init: u64) {
+        self.atomics.entry(addr).or_insert_with(|| AtObj {
+            stores: vec![StoreElem {
+                val: init,
+                clock: VClock::new(),
+                release: Some(VClock::new()),
+            }],
+        });
+    }
+
+    /// Store indices a load by `me` may legally observe: at or after
+    /// both (a) the newest store that happens-before the read and
+    /// (b) this thread's own coherence frontier for the address.
+    fn eligible_floor(&self, me: usize, addr: usize) -> usize {
+        let obj = &self.atomics[&addr];
+        let clk = &self.threads[me].clock;
+        let mut hb_floor = 0;
+        for (i, s) in obj.stores.iter().enumerate() {
+            if s.clock.le(clk) {
+                hb_floor = i;
+            }
+        }
+        let obs = self.threads[me].obs.get(&addr).copied().unwrap_or(0);
+        hb_floor.max(obs)
+    }
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub ctl: Arc<Controller>,
+    pub tid: usize,
+}
+
+/// The model-run context of the calling OS thread, if it is a virtual
+/// thread of an in-progress schedule. Shims use this to decide between
+/// instrumented and delegated execution.
+pub(crate) fn current() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+pub(crate) struct Controller {
+    mx: RawMutex<ExecState>,
+    cv: RawCondvar,
+}
+
+pub(crate) struct RunCfg {
+    pub tape: Vec<usize>,
+    pub random_seed: Option<u64>,
+    pub spurious: bool,
+    pub max_steps: u64,
+}
+
+pub(crate) struct RunOutcome {
+    pub record: Vec<Choice>,
+    pub trace: Vec<Event>,
+    pub failure: Option<String>,
+}
+
+impl Controller {
+    /// Park until this thread holds the token (active + runnable);
+    /// unwind immediately if the run is aborting.
+    fn wait_for_token<'a>(
+        &'a self,
+        mut st: MutexGuard<'a, ExecState>,
+        me: usize,
+    ) -> MutexGuard<'a, ExecState> {
+        loop {
+            if st.abort {
+                drop(st);
+                bail();
+            }
+            if st.active == Some(me) && st.runnable(me) {
+                return st;
+            }
+            st = self.cv.wait(st);
+        }
+    }
+
+    fn guard(&self, _me: usize) -> MutexGuard<'_, ExecState> {
+        let st = self.mx.lock();
+        if st.abort {
+            drop(st);
+            bail();
+        }
+        st
+    }
+
+    /// A scheduling boundary: the token holder offers the token to any
+    /// runnable thread (keeping it is always option 0, so exploring an
+    /// alternative here is exactly one preemption).
+    fn boundary(&self, me: usize) {
+        let mut st = self.guard(me);
+        st.pick_next(me);
+        self.cv.notify_all();
+        let st = self.wait_for_token(st, me);
+        drop(st);
+    }
+
+    // ---- visible operations (called from the shims) -----------------
+
+    /// A generic visible no-op: record an event and offer the token.
+    /// Backs `yield_now`, virtual `sleep`, and `OnceLock` touches.
+    pub(crate) fn visible(&self, me: usize, desc: String, loc: &'static Location<'static>) {
+        {
+            let mut st = self.guard(me);
+            st.event(me, desc, loc);
+        }
+        self.boundary(me);
+    }
+
+    pub(crate) fn mutex_lock(&self, me: usize, addr: usize, loc: &'static Location<'static>) {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        let lbl = st.label("mutex", addr);
+        st.event(me, format!("lock {lbl}"), loc);
+        loop {
+            if st.abort {
+                drop(st);
+                bail();
+            }
+            let obj = st.mutexes.entry(addr).or_default();
+            if obj.holder.is_none() {
+                obj.holder = Some(me);
+                let edge = obj.edge.clone();
+                st.threads[me].clock.join(&edge);
+                drop(st);
+                return;
+            }
+            st.threads[me].status = Status::Blocked(Block::Mutex(addr));
+            st.pick_next(me);
+            self.cv.notify_all();
+            st = self.wait_for_token(st, me);
+        }
+    }
+
+    /// `try_lock`-style acquisition: never blocks; returns whether the
+    /// virtual lock was taken.
+    pub(crate) fn mutex_try_lock(
+        &self,
+        me: usize,
+        addr: usize,
+        loc: &'static Location<'static>,
+    ) -> bool {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        let lbl = st.label("mutex", addr);
+        let obj = st.mutexes.entry(addr).or_default();
+        let free = obj.holder.is_none();
+        if free {
+            obj.holder = Some(me);
+            let edge = obj.edge.clone();
+            st.threads[me].clock.join(&edge);
+        }
+        st.event(me, format!("try_lock {lbl} -> {free}"), loc);
+        free
+    }
+
+    pub(crate) fn mutex_unlock(&self, me: usize, addr: usize) {
+        // Non-yielding and abort-tolerant: runs from guard Drops during
+        // unwinding, so it must neither panic nor reschedule.
+        let mut st = self.mx.lock();
+        st.mutex_release(me, addr);
+        self.cv.notify_all();
+    }
+
+    /// Atomically release the mutex, register as a condvar waiter, and
+    /// yield. Returns `true` if the wait ended via the timeout branch.
+    /// The mutex is re-acquired (possibly blocking) before returning.
+    pub(crate) fn condvar_wait(
+        &self,
+        me: usize,
+        cv_addr: usize,
+        mx_addr: usize,
+        can_timeout: bool,
+        loc: &'static Location<'static>,
+    ) -> bool {
+        self.boundary(me);
+        {
+            let mut st = self.guard(me);
+            let cl = st.label("condvar", cv_addr);
+            let ml = st.label("mutex", mx_addr);
+            let kind = if can_timeout { "wait_timeout" } else { "wait" };
+            st.event(me, format!("{kind} on {cl} (releases {ml})"), loc);
+            st.mutex_release(me, mx_addr);
+            st.threads[me].wake = None;
+            st.threads[me].status = Status::Blocked(Block::CondWait {
+                cv: cv_addr,
+                timeout: can_timeout,
+            });
+            st.pick_next(me);
+            self.cv.notify_all();
+            let mut st = self.wait_for_token(st, me);
+            let wake = st.threads[me].wake.take();
+            if wake == Some(Wake::Notified) {
+                let edge = st.condvars.entry(cv_addr).or_default().edge.clone();
+                st.threads[me].clock.join(&edge);
+            }
+            let how = match wake {
+                Some(Wake::Notified) => "notified",
+                Some(Wake::TimedOut) => "timed out",
+                Some(Wake::Spurious) => "spurious wakeup",
+                None => "resumed",
+            };
+            st.event(me, format!("woke from {cl}: {how}"), loc);
+            if wake == Some(Wake::TimedOut) {
+                drop(st);
+                self.relock(me, mx_addr);
+                return true;
+            }
+        }
+        self.relock(me, mx_addr);
+        false
+    }
+
+    /// Re-acquire a mutex after a condvar wait (no fresh boundary: the
+    /// wakeup scheduling decision already happened).
+    fn relock(&self, me: usize, addr: usize) {
+        let mut st = self.guard(me);
+        loop {
+            if st.abort {
+                drop(st);
+                bail();
+            }
+            let obj = st.mutexes.entry(addr).or_default();
+            if obj.holder.is_none() {
+                obj.holder = Some(me);
+                let edge = obj.edge.clone();
+                st.threads[me].clock.join(&edge);
+                return;
+            }
+            st.threads[me].status = Status::Blocked(Block::Mutex(addr));
+            st.pick_next(me);
+            self.cv.notify_all();
+            st = self.wait_for_token(st, me);
+        }
+    }
+
+    pub(crate) fn condvar_notify(
+        &self,
+        me: usize,
+        cv_addr: usize,
+        all: bool,
+        loc: &'static Location<'static>,
+    ) {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        let lbl = st.label("condvar", cv_addr);
+        let kind = if all { "notify_all" } else { "notify_one" };
+        st.event(me, format!("{kind} {lbl}"), loc);
+        let clk = st.threads[me].clock.clone();
+        st.condvars.entry(cv_addr).or_default().edge.join(&clk);
+        let waiters: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter(|(_, th)| {
+                matches!(&th.status, Status::Blocked(Block::CondWait { cv, .. }) if *cv == cv_addr)
+            })
+            .map(|(t, _)| t)
+            .collect();
+        if waiters.is_empty() {
+            return;
+        }
+        let chosen: Vec<usize> = if all || waiters.len() == 1 {
+            waiters
+        } else {
+            // Which waiter receives the single notification is itself a
+            // scheduling decision.
+            let k = st.choose(vec![false; waiters.len()]);
+            vec![waiters[k]]
+        };
+        for t in chosen {
+            st.threads[t].wake = Some(Wake::Notified);
+            st.threads[t].status = Status::Runnable;
+        }
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn atomic_load(
+        &self,
+        me: usize,
+        addr: usize,
+        init: u64,
+        ord: Ord8,
+        loc: &'static Location<'static>,
+    ) -> u64 {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        st.ensure_atomic(addr, init);
+        let n = st.atomics[&addr].stores.len();
+        let idx = if ord == Ord8::SeqCst {
+            // Sound simplification: model SeqCst loads as reading the
+            // newest store (a legal subset of C11's total order).
+            n - 1
+        } else {
+            let floor = st.eligible_floor(me, addr);
+            if n - floor > 1 {
+                // Which eligible store a weak load observes is a
+                // recorded decision the explorer branches over.
+                floor + st.choose(vec![false; n - floor])
+            } else {
+                floor
+            }
+        };
+        let (val, release) = {
+            let s = &st.atomics[&addr].stores[idx];
+            (s.val, s.release.clone())
+        };
+        let lbl = st.label("atomic", addr);
+        st.event(me, format!("load {lbl} ({ord:?}) -> {val}"), loc);
+        st.threads[me].obs.insert(addr, idx);
+        if ord.acquires() {
+            if let Some(rc) = release {
+                st.threads[me].clock.join(&rc);
+            }
+        }
+        val
+    }
+
+    pub(crate) fn atomic_store(
+        &self,
+        me: usize,
+        addr: usize,
+        init: u64,
+        val: u64,
+        ord: Ord8,
+        loc: &'static Location<'static>,
+    ) {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        st.ensure_atomic(addr, init);
+        let lbl = st.label("atomic", addr);
+        st.event(me, format!("store {lbl} ({ord:?}) = {val}"), loc);
+        let clock = st.threads[me].clock.clone();
+        let release = ord.releases().then(|| clock.clone());
+        let obj = st.atomics.get_mut(&addr).expect("ensured");
+        obj.stores.push(StoreElem {
+            val,
+            clock,
+            release,
+        });
+        let idx = obj.stores.len() - 1;
+        st.threads[me].obs.insert(addr, idx);
+    }
+
+    /// Read-modify-write. Always reads the newest store (the C11
+    /// guarantee for RMWs); a relaxed RMW continues its predecessor's
+    /// release sequence.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn atomic_rmw(
+        &self,
+        me: usize,
+        addr: usize,
+        init: u64,
+        ord: Ord8,
+        loc: &'static Location<'static>,
+        what: &str,
+        f: &mut dyn FnMut(u64) -> u64,
+    ) -> u64 {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        st.ensure_atomic(addr, init);
+        let (old, prev_release) = {
+            let s = st.atomics[&addr].stores.last().expect("non-empty");
+            (s.val, s.release.clone())
+        };
+        let new = f(old);
+        let lbl = st.label("atomic", addr);
+        st.event(me, format!("{what} {lbl} ({ord:?}) {old} -> {new}"), loc);
+        if ord.acquires() {
+            if let Some(rc) = &prev_release {
+                st.threads[me].clock.join(rc);
+            }
+        }
+        let clock = st.threads[me].clock.clone();
+        let release = if ord.releases() {
+            Some(clock.clone())
+        } else {
+            prev_release
+        };
+        let obj = st.atomics.get_mut(&addr).expect("ensured");
+        obj.stores.push(StoreElem {
+            val: new,
+            clock,
+            release,
+        });
+        let idx = obj.stores.len() - 1;
+        st.threads[me].obs.insert(addr, idx);
+        old
+    }
+
+    /// Compare-exchange (weak and strong modeled identically; a weak
+    /// CAS that spuriously fails only re-runs its caller's retry loop,
+    /// adding schedules without new behavior).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn atomic_cas(
+        &self,
+        me: usize,
+        addr: usize,
+        init: u64,
+        current: u64,
+        new: u64,
+        success: Ord8,
+        failure: Ord8,
+        loc: &'static Location<'static>,
+    ) -> Result<u64, u64> {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        st.ensure_atomic(addr, init);
+        let (old, prev_release) = {
+            let s = st.atomics[&addr].stores.last().expect("non-empty");
+            (s.val, s.release.clone())
+        };
+        let lbl = st.label("atomic", addr);
+        if old != current {
+            st.event(
+                me,
+                format!("cas {lbl} expect {current} -> failed, saw {old}"),
+                loc,
+            );
+            let n = st.atomics[&addr].stores.len() - 1;
+            st.threads[me].obs.insert(addr, n);
+            if failure.acquires() {
+                if let Some(rc) = &prev_release {
+                    st.threads[me].clock.join(rc);
+                }
+            }
+            return Err(old);
+        }
+        st.event(me, format!("cas {lbl} ({success:?}) {old} -> {new}"), loc);
+        if success.acquires() {
+            if let Some(rc) = &prev_release {
+                st.threads[me].clock.join(rc);
+            }
+        }
+        let clock = st.threads[me].clock.clone();
+        let release = if success.releases() {
+            Some(clock.clone())
+        } else {
+            prev_release
+        };
+        let obj = st.atomics.get_mut(&addr).expect("ensured");
+        obj.stores.push(StoreElem {
+            val: new,
+            clock,
+            release,
+        });
+        let idx = obj.stores.len() - 1;
+        st.threads[me].obs.insert(addr, idx);
+        Ok(old)
+    }
+
+    /// Spawn a virtual thread carried by a fresh OS thread. The child
+    /// inherits the parent's clock (the spawn edge).
+    pub(crate) fn spawn(
+        self: &Arc<Self>,
+        parent: usize,
+        name: String,
+        f: Box<dyn FnOnce() + Send>,
+        loc: &'static Location<'static>,
+    ) -> usize {
+        self.boundary(parent);
+        let tid = {
+            let mut st = self.guard(parent);
+            let tid = st.threads.len();
+            st.event(parent, format!("spawn t{tid} '{name}'"), loc);
+            let mut clock = st.threads[parent].clock.clone();
+            clock.tick(tid);
+            st.threads.push(ThreadSt {
+                name,
+                status: Status::Runnable,
+                clock,
+                wake: None,
+                obs: HashMap::new(),
+            });
+            st.os_live += 1;
+            tid
+        };
+        let ctl = Arc::clone(self);
+        raw::spawn_os_thread(Some(format!("kraken-check-t{tid}")), move || {
+            Controller::os_main(ctl, tid, f);
+        })
+        .expect("spawn model-checker carrier thread");
+        tid
+    }
+
+    pub(crate) fn join(&self, me: usize, target: usize, loc: &'static Location<'static>) {
+        self.boundary(me);
+        let mut st = self.guard(me);
+        st.event(me, format!("join t{target}"), loc);
+        loop {
+            if st.abort {
+                drop(st);
+                bail();
+            }
+            if st.threads[target].status == Status::Finished {
+                let clk = st.threads[target].clock.clone();
+                st.threads[me].clock.join(&clk);
+                return;
+            }
+            st.threads[me].status = Status::Blocked(Block::Join(target));
+            st.pick_next(me);
+            self.cv.notify_all();
+            st = self.wait_for_token(st, me);
+        }
+    }
+
+    /// Body of every carrier OS thread: install the TLS context, wait
+    /// for the token, run the virtual thread, then hand the token on.
+    fn os_main(ctl: Arc<Controller>, tid: usize, f: Box<dyn FnOnce() + Send>) {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(Ctx {
+                ctl: Arc::clone(&ctl),
+                tid,
+            })
+        });
+        let res = panic::catch_unwind(AssertUnwindSafe(|| {
+            let st = ctl.mx.lock();
+            let st = ctl.wait_for_token(st, tid);
+            drop(st);
+            f();
+        }));
+        let mut st = ctl.mx.lock();
+        if let Err(payload) = res {
+            if !payload.is::<Abort>() {
+                let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = payload.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                let name = st.threads[tid].name.clone();
+                st.fail(format!("thread t{tid} '{name}' panicked: {msg}"));
+            }
+        }
+        st.threads[tid].status = Status::Finished;
+        for th in &mut st.threads {
+            if th.status == Status::Blocked(Block::Join(tid)) {
+                th.status = Status::Runnable;
+            }
+        }
+        if !st.abort && st.active == Some(tid) {
+            st.pick_next(tid);
+        }
+        st.os_live -= 1;
+        ctl.cv.notify_all();
+        drop(st);
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+}
+
+/// Execute one complete schedule of `f` under the controller and return
+/// the decision record, trace, and failure (if any).
+pub(crate) fn run_schedule(cfg: RunCfg, f: Arc<dyn Fn() + Send + Sync>) -> RunOutcome {
+    let ctl = Arc::new(Controller {
+        mx: RawMutex::new(ExecState {
+            threads: vec![ThreadSt {
+                name: "main".into(),
+                status: Status::Runnable,
+                clock: {
+                    let mut c = VClock::new();
+                    c.tick(0);
+                    c
+                },
+                wake: None,
+                obs: HashMap::new(),
+            }],
+            active: Some(0),
+            tape: cfg.tape,
+            cursor: 0,
+            rng: cfg.random_seed,
+            spurious_enabled: cfg.spurious,
+            record: Vec::new(),
+            trace: Vec::new(),
+            steps: 0,
+            max_steps: cfg.max_steps,
+            mutexes: HashMap::new(),
+            condvars: HashMap::new(),
+            atomics: HashMap::new(),
+            labels: HashMap::new(),
+            failure: None,
+            abort: false,
+            os_live: 1,
+        }),
+        cv: RawCondvar::new(),
+    });
+    let root = Arc::clone(&ctl);
+    let run_f = move || f();
+    raw::spawn_os_thread(Some("kraken-check-t0".into()), move || {
+        Controller::os_main(root, 0, Box::new(run_f));
+    })
+    .expect("spawn model-checker root thread");
+    let mut st = ctl.mx.lock();
+    while st.os_live > 0 {
+        st = ctl.cv.wait(st);
+    }
+    RunOutcome {
+        record: std::mem::take(&mut st.record),
+        trace: std::mem::take(&mut st.trace),
+        failure: st.failure.take(),
+    }
+}

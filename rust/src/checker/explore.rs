@@ -1,0 +1,424 @@
+//! Schedule exploration: bounded-exhaustive DFS with a preemption
+//! budget, seeded-random fallback, and exact replay.
+//!
+//! Each run of the checked closure produces a *decision record* (every
+//! scheduling/value/notify/timeout choice the controller made, with the
+//! per-option preemption cost). The explorer backtracks over that
+//! record depth-first: the deepest choice point with an unexplored
+//! alternative whose cumulative preemption count stays within the bound
+//! becomes the next run's tape prefix. Because "keep running the
+//! current thread" is always option 0, a run's default suffix costs no
+//! preemptions, so the DFS enumerates exactly the schedules with at
+//! most `preemption_bound` preemptions — the context-bounded search of
+//! Musuvathi & Qadeer's iterative context bounding, which finds the
+//! overwhelming majority of real schedule bugs at tiny bounds.
+//!
+//! Past the bound, [`Opts::random_schedules`] seeded-random runs sample
+//! the unbounded space as a cheap safety net.
+
+use super::controller::{run_schedule, Choice, RunCfg, RunOutcome};
+use std::fmt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Exploration options. `Default` is tuned for small harness scenarios:
+/// preemption bound 2, ≤20k schedules, ≤20k visible ops per schedule,
+/// 64 random fallback schedules, 10 s wall budget.
+#[derive(Clone, Debug)]
+pub struct Opts {
+    /// Maximum number of preemptions (context switches away from a
+    /// still-runnable thread) per explored schedule.
+    pub preemption_bound: usize,
+    /// Hard cap on exhaustively explored schedules.
+    pub max_schedules: u64,
+    /// Per-schedule visible-operation budget (livelock guard).
+    pub max_steps: u64,
+    /// Seeded-random schedules run after (or instead of the tail of)
+    /// the bounded-exhaustive phase; these ignore the preemption bound.
+    pub random_schedules: u64,
+    /// Seed for the random fallback phase.
+    pub seed: u64,
+    /// Model spurious condvar wakeups as an explorable branch.
+    pub spurious_wakeups: bool,
+    /// Run exactly one schedule: the given decision tape (as printed by
+    /// a failure report). Overrides exploration.
+    pub replay: Option<Vec<usize>>,
+    /// Wall-clock budget for the whole exploration.
+    pub wall_budget: Duration,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Self {
+            preemption_bound: 2,
+            max_schedules: 20_000,
+            max_steps: 20_000,
+            random_schedules: 64,
+            seed: 0x6b72_616b_656e_2131,
+            spurious_wakeups: false,
+            replay: None,
+            wall_budget: Duration::from_secs(10),
+        }
+    }
+}
+
+impl Opts {
+    pub fn with_preemption_bound(bound: usize) -> Self {
+        Self {
+            preemption_bound: bound,
+            ..Self::default()
+        }
+    }
+}
+
+/// What an exploration covered.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Schedules explored in the bounded-exhaustive phase.
+    pub schedules: u64,
+    /// Schedules run in the random fallback phase.
+    pub random_schedules: u64,
+    /// Whether the bounded-exhaustive phase visited *every* schedule
+    /// within the preemption bound (false if a schedule/wall cap hit,
+    /// or if a replay was requested).
+    pub complete: bool,
+    pub preemption_bound: usize,
+}
+
+/// A failing schedule: the panic/deadlock message, the decision tape to
+/// replay it, and the interleaving listing.
+#[derive(Clone, Debug)]
+pub struct Failure {
+    pub message: String,
+    pub schedule: Vec<usize>,
+    pub trace: String,
+}
+
+impl fmt::Display for Failure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.message)?;
+        writeln!(f, "failing schedule (Opts::replay): {:?}", self.schedule)?;
+        writeln!(f, "interleaving:")?;
+        write!(f, "{}", self.trace)
+    }
+}
+
+fn render_failure(message: String, out: &RunOutcome) -> Failure {
+    let mut trace = String::new();
+    for (i, e) in out.trace.iter().enumerate() {
+        trace.push_str(&format!(
+            "  {:3}. [t{} {}] {}  ({})\n",
+            i + 1,
+            e.tid,
+            e.thread,
+            e.desc,
+            e.loc
+        ));
+    }
+    Failure {
+        message,
+        schedule: out.record.iter().map(|c| c.chosen).collect(),
+        trace,
+    }
+}
+
+/// Next tape in DFS order, or `None` when the bounded space is
+/// exhausted: deepest choice point with an untried alternative whose
+/// cumulative preemption count fits the bound.
+fn next_tape(record: &[Choice], bound: usize) -> Option<Vec<usize>> {
+    let mut cum = Vec::with_capacity(record.len());
+    let mut used = 0usize;
+    for c in record {
+        cum.push(used);
+        if c.preempt[c.chosen] {
+            used += 1;
+        }
+    }
+    for i in (0..record.len()).rev() {
+        let c = &record[i];
+        for alt in c.chosen + 1..c.preempt.len() {
+            if cum[i] + usize::from(c.preempt[alt]) <= bound {
+                let mut tape: Vec<usize> = record[..i].iter().map(|p| p.chosen).collect();
+                tape.push(alt);
+                return Some(tape);
+            }
+        }
+    }
+    None
+}
+
+fn cfg(opts: &Opts, tape: Vec<usize>, random_seed: Option<u64>) -> RunCfg {
+    RunCfg {
+        tape,
+        random_seed,
+        spurious: opts.spurious_wakeups,
+        max_steps: opts.max_steps,
+    }
+}
+
+/// Explore `f` under the model checker; `Err` carries the first failing
+/// schedule found (with its replayable tape and interleaving listing).
+pub fn try_check<F>(opts: Opts, f: F) -> Result<Report, Failure>
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+    let start = Instant::now();
+    if let Some(tape) = opts.replay.clone() {
+        let out = run_schedule(cfg(&opts, tape, None), Arc::clone(&f));
+        if let Some(msg) = out.failure {
+            return Err(render_failure(msg, &out));
+        }
+        return Ok(Report {
+            schedules: 1,
+            random_schedules: 0,
+            complete: false,
+            preemption_bound: opts.preemption_bound,
+        });
+    }
+
+    let mut tape = Vec::new();
+    let mut schedules = 0u64;
+    let mut complete = true;
+    loop {
+        let out = run_schedule(cfg(&opts, tape.clone(), None), Arc::clone(&f));
+        schedules += 1;
+        if let Some(msg) = out.failure {
+            return Err(render_failure(msg, &out));
+        }
+        let next = next_tape(&out.record, opts.preemption_bound);
+        if next.is_none() {
+            break;
+        }
+        if schedules >= opts.max_schedules || start.elapsed() >= opts.wall_budget {
+            complete = false;
+            break;
+        }
+        tape = next.expect("checked above");
+    }
+
+    let mut random_done = 0u64;
+    for i in 0..opts.random_schedules {
+        if start.elapsed() >= opts.wall_budget {
+            break;
+        }
+        let seed = opts.seed ^ (i + 1).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let out = run_schedule(cfg(&opts, Vec::new(), Some(seed)), Arc::clone(&f));
+        random_done += 1;
+        if let Some(msg) = out.failure {
+            return Err(render_failure(msg, &out));
+        }
+    }
+
+    Ok(Report {
+        schedules,
+        random_schedules: random_done,
+        complete,
+        preemption_bound: opts.preemption_bound,
+    })
+}
+
+/// Like [`try_check`], but panics with the rendered failure — the form
+/// harness tests use so a concurrency bug fails the test with the full
+/// interleaving listing.
+pub fn check<F>(opts: Opts, f: F) -> Report
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    match try_check(opts, f) {
+        Ok(report) => report,
+        Err(failure) => panic!("model check failed: {failure}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checker::shim::atomic::{AtomicU64, Ordering};
+    use crate::checker::shim::{thread, Condvar, Mutex};
+    use std::collections::HashSet;
+
+    /// DFS completeness on the canonical toy: two threads, two visible
+    /// steps each ⇒ exactly C(4,2) = 6 distinct step interleavings.
+    #[test]
+    fn dfs_enumerates_all_six_interleavings() {
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let b = Arc::new(AtomicU64::new(0));
+            let t1 = {
+                let a = Arc::clone(&a);
+                thread::spawn(move || {
+                    a.store(1, Ordering::SeqCst);
+                    a.store(2, Ordering::SeqCst);
+                })
+            };
+            let t2 = {
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    b.store(1, Ordering::SeqCst);
+                    b.store(2, Ordering::SeqCst);
+                })
+            };
+            t1.join().unwrap();
+            t2.join().unwrap();
+        });
+
+        let mut tape = Vec::new();
+        let mut seen: HashSet<Vec<usize>> = HashSet::new();
+        let mut schedules = 0u64;
+        loop {
+            let out = run_schedule(
+                RunCfg {
+                    tape: tape.clone(),
+                    random_seed: None,
+                    spurious: false,
+                    max_steps: 10_000,
+                },
+                Arc::clone(&f),
+            );
+            assert!(out.failure.is_none(), "toy must not fail: {:?}", out.failure);
+            let order: Vec<usize> = out
+                .trace
+                .iter()
+                .filter(|e| e.desc.starts_with("store"))
+                .map(|e| e.tid)
+                .collect();
+            assert_eq!(order.len(), 4, "expected 4 store events: {order:?}");
+            seen.insert(order);
+            schedules += 1;
+            assert!(schedules < 50_000, "DFS failed to terminate");
+            match next_tape(&out.record, 4) {
+                Some(t) => tape = t,
+                None => break,
+            }
+        }
+        assert_eq!(
+            seen.len(),
+            6,
+            "bounded DFS must enumerate all 6 interleavings, got {seen:?}"
+        );
+    }
+
+    /// An `if`-guarded condvar wait is correct without spurious wakeups
+    /// and broken with them; a `while`-guarded wait survives both.
+    #[test]
+    fn condvar_spurious_wakeup_modeling() {
+        fn scenario(use_while: bool) -> impl Fn() + Send + Sync + 'static {
+            move || {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let waiter = {
+                    let pair = Arc::clone(&pair);
+                    thread::spawn(move || {
+                        let (m, cv) = &*pair;
+                        let mut g = m.lock().unwrap();
+                        if use_while {
+                            while !*g {
+                                g = cv.wait(g).unwrap();
+                            }
+                        } else if !*g {
+                            g = cv.wait(g).unwrap();
+                        }
+                        assert!(*g, "woke with flag unset");
+                    })
+                };
+                let (m, cv) = &*pair;
+                *m.lock().unwrap() = true;
+                cv.notify_one();
+                waiter.join().unwrap();
+            }
+        }
+
+        // Clean without spurious wakeups, even for the `if` version.
+        let r = try_check(Opts::default(), scenario(false));
+        assert!(r.is_ok(), "if-wait must pass without spurious: {r:?}");
+        // The `if` version breaks once spurious wakeups are modeled.
+        let opts = Opts {
+            spurious_wakeups: true,
+            ..Opts::default()
+        };
+        let r = try_check(opts.clone(), scenario(false));
+        let failure = r.expect_err("if-wait must fail under spurious wakeups");
+        assert!(
+            failure.message.contains("woke with flag unset"),
+            "unexpected failure: {failure}"
+        );
+        // The `while` version survives spurious wakeups.
+        let r = try_check(opts, scenario(true));
+        assert!(r.is_ok(), "while-wait must pass under spurious: {r:?}");
+    }
+
+    /// Same decision tape ⇒ identical execution, event for event — the
+    /// property that makes failure schedules replayable.
+    #[test]
+    fn schedule_replay_is_deterministic() {
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(|| {
+            let x = Arc::new(AtomicU64::new(0));
+            let t = {
+                let x = Arc::clone(&x);
+                thread::spawn(move || {
+                    x.store(7, Ordering::Relaxed);
+                    x.fetch_add(1, Ordering::Relaxed);
+                })
+            };
+            let _ = x.load(Ordering::Relaxed);
+            let _ = x.load(Ordering::Relaxed);
+            t.join().unwrap();
+        });
+
+        let seeded = run_schedule(
+            RunCfg {
+                tape: Vec::new(),
+                random_seed: Some(0xdead_beef),
+                spurious: false,
+                max_steps: 10_000,
+            },
+            Arc::clone(&f),
+        );
+        assert!(seeded.failure.is_none());
+        let tape: Vec<usize> = seeded.record.iter().map(|c| c.chosen).collect();
+        let replay = |tape: Vec<usize>| {
+            run_schedule(
+                RunCfg {
+                    tape,
+                    random_seed: None,
+                    spurious: false,
+                    max_steps: 10_000,
+                },
+                Arc::clone(&f),
+            )
+        };
+        let a = replay(tape.clone());
+        let b = replay(tape);
+        assert!(a.failure.is_none() && b.failure.is_none());
+        assert_eq!(a.trace, seeded.trace, "replay must reproduce the seeded run");
+        assert_eq!(a.trace, b.trace, "replays of one tape must be identical");
+    }
+
+    /// Classic ABBA lock inversion: the checker must find and report
+    /// the deadlock.
+    #[test]
+    fn detects_abba_deadlock() {
+        let failure = try_check(Opts::default(), || {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let t = {
+                let a = Arc::clone(&a);
+                let b = Arc::clone(&b);
+                thread::spawn(move || {
+                    let _gb = b.lock().unwrap();
+                    let _ga = a.lock().unwrap();
+                })
+            };
+            let _ga = a.lock().unwrap();
+            let _gb = b.lock().unwrap();
+            drop(_gb);
+            drop(_ga);
+            t.join().unwrap();
+        })
+        .expect_err("ABBA must deadlock under some schedule");
+        assert!(
+            failure.message.contains("deadlock"),
+            "expected deadlock diagnosis, got: {failure}"
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Deterministic concurrency model checker (loom-style, dependency-free).
+//!
+//! [`check`] runs a closure many times, once per *schedule*: virtual
+//! threads spawned through the shimmed `crate::sync` surface are carried
+//! by real OS threads but only ever run one at a time, handing a token
+//! between them at each visible operation (lock, unlock, condvar
+//! wait/notify, atomic access, spawn, join, yield). At every boundary
+//! the scheduler consults a decision tape; the explorer enumerates
+//! tapes depth-first, bounded by a preemption budget
+//! ([`Opts::preemption_bound`]), then samples seeded-random schedules
+//! past the bound. The same machinery records every decision, so any
+//! failing schedule can be replayed exactly ([`Opts::replay`]) and is
+//! printed as a human-readable interleaving.
+//!
+//! What it detects:
+//!
+//! - **Assertion failures** in any explored interleaving — the closure's
+//!   own invariants are the spec.
+//! - **Deadlocks**: no runnable thread while some are blocked, with a
+//!   per-thread wait report; condvar waiters with no live notifier are
+//!   diagnosed as missed wakeups.
+//! - **Weak-memory bugs**: shimmed atomics honor their declared
+//!   `Ordering`s. A `Relaxed`/`Acquire` load may return *any* store not
+//!   yet ordered before the reader by happens-before — so code that
+//!   relies on an ordering it didn't ask for fails here even though x86
+//!   hardware would never show it.
+//!
+//! The production crate opts in via `--cfg kraken_check_sync`, which
+//! swaps `crate::sync` re-exports to the shims in [`shim`]. Outside a
+//! model run the shims delegate to `std`, so the instrumented build
+//! still behaves normally; inside `check` the scheduler takes over.
+//!
+//! ```no_run
+//! use kraken::checker::{check, Opts};
+//! use kraken::sync::{Arc, Mutex};
+//!
+//! let report = check(Opts::default(), || {
+//!     let m = Arc::new(Mutex::new(0u32));
+//!     let m2 = Arc::clone(&m);
+//!     let t = kraken::sync::thread::spawn(move || *m2.lock().unwrap() += 1);
+//!     *m.lock().unwrap() += 1;
+//!     t.join().unwrap();
+//!     assert_eq!(*m.lock().unwrap(), 2);
+//! });
+//! assert!(report.complete);
+//! ```
+
+pub mod clock;
+pub(crate) mod controller;
+pub mod explore;
+#[doc(hidden)]
+pub mod shim;
+
+pub use explore::{check, try_check, Failure, Opts, Report};

@@ -1,0 +1,1197 @@
+//! Instrumented drop-in replacements for the `std::sync` / `std::thread`
+//! surface the crate uses, swapped in by `crate::sync` under
+//! `--cfg kraken_check_sync`.
+//!
+//! Every shim type works in **two modes**, decided per call by whether
+//! the calling OS thread is a virtual thread of an in-progress model
+//! run ([`controller::current`]):
+//!
+//! - **Delegated** (no model context): forward to the real `std`
+//!   primitive with identical semantics, including poisoning. A crate
+//!   built with `--cfg kraken_check_sync` therefore still runs its
+//!   binaries, benches and ordinary tests normally.
+//! - **Instrumented** (inside [`crate::checker::check`]): route the
+//!   operation through the deterministic scheduler — virtual blocking,
+//!   vector-clock happens-before, per-store atomic histories, and
+//!   recorded decisions the explorer can branch over.
+//!
+//! Atomics keep their *real* value as the per-run seed only; model-run
+//! writes never propagate back, so repeated schedules of one scenario
+//! stay hermetic even for atomics reachable through globals (e.g. the
+//! telemetry registry).
+
+use super::controller::{self, Ord8};
+use crate::sync::raw::{self, LockResult, PoisonError, RawCondvar, RawMutex, RawRwLock};
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::panic::Location;
+use std::time::Duration;
+
+fn ord8(o: atomic::Ordering) -> Ord8 {
+    match o {
+        atomic::Ordering::Relaxed => Ord8::Relaxed,
+        atomic::Ordering::Acquire => Ord8::Acquire,
+        atomic::Ordering::Release => Ord8::Release,
+        atomic::Ordering::AcqRel => Ord8::AcqRel,
+        _ => Ord8::SeqCst,
+    }
+}
+
+// ---------------------------------------------------------------- Mutex
+
+pub struct Mutex<T> {
+    cell: RawMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub const fn new(t: T) -> Self {
+        Self {
+            cell: RawMutex::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    #[track_caller]
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match controller::current() {
+            Some(ctx) => {
+                ctx.ctl.mutex_lock(ctx.tid, self.addr(), Location::caller());
+                // The raw lock is uncontended: virtual ownership is the
+                // real exclusion, this just yields `&mut T` safely.
+                let g = self.cell.lock();
+                Ok(MutexGuard {
+                    lock: self,
+                    raw: Some(g),
+                    model: Some(ctx),
+                })
+            }
+            None => match self.cell.lock_std() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    raw: Some(g),
+                    model: None,
+                }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    raw: Some(p.into_inner()),
+                    model: None,
+                })),
+            },
+        }
+    }
+
+    #[track_caller]
+    pub fn try_lock(&self) -> std::sync::TryLockResult<MutexGuard<'_, T>> {
+        match controller::current() {
+            Some(ctx) => {
+                if ctx.ctl.mutex_try_lock(ctx.tid, self.addr(), Location::caller()) {
+                    Ok(MutexGuard {
+                        lock: self,
+                        raw: Some(self.cell.lock()),
+                        model: Some(ctx),
+                    })
+                } else {
+                    Err(std::sync::TryLockError::WouldBlock)
+                }
+            }
+            None => match self.cell.try_lock_std() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    raw: Some(g),
+                    model: None,
+                }),
+                Err(std::sync::TryLockError::WouldBlock) => {
+                    Err(std::sync::TryLockError::WouldBlock)
+                }
+                Err(std::sync::TryLockError::Poisoned(p)) => {
+                    Err(std::sync::TryLockError::Poisoned(PoisonError::new(
+                        MutexGuard {
+                            lock: self,
+                            raw: Some(p.into_inner()),
+                            model: None,
+                        },
+                    )))
+                }
+            },
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.cell.into_inner_std()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.cell.get_mut_std()
+    }
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    raw: Option<raw::MutexGuard<'a, T>>,
+    model: Option<controller::Ctx>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    /// Take a guard apart without running its virtual unlock — condvar
+    /// waits release the lock through the controller instead.
+    #[allow(clippy::type_complexity)]
+    fn dismantle(
+        mut self,
+    ) -> (
+        &'a Mutex<T>,
+        Option<raw::MutexGuard<'a, T>>,
+        Option<controller::Ctx>,
+    ) {
+        let lock = self.lock;
+        let raw = self.raw.take();
+        let model = self.model.take();
+        std::mem::forget(self);
+        (lock, raw, model)
+    }
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.raw.as_ref().expect("guard holds raw lock")
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.raw.as_mut().expect("guard holds raw lock")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // Release the raw lock first, then the virtual one. Both are
+        // non-yielding and panic-free, so unwinding through a held
+        // guard (an assertion inside a critical section) stays safe.
+        self.raw = None;
+        if let Some(ctx) = self.model.take() {
+            ctx.ctl.mutex_unlock(ctx.tid, self.lock.addr());
+        }
+    }
+}
+
+// -------------------------------------------------------------- Condvar
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+#[derive(Default, Debug)]
+pub struct Condvar {
+    cv: RawCondvar,
+}
+
+impl Condvar {
+    pub const fn new() -> Self {
+        Self {
+            cv: RawCondvar::new(),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    #[track_caller]
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let loc = Location::caller();
+        let (lock, raw_g, model) = guard.dismantle();
+        match model {
+            Some(ctx) => {
+                drop(raw_g);
+                ctx.ctl
+                    .condvar_wait(ctx.tid, self.addr(), lock.addr(), false, loc);
+                Ok(MutexGuard {
+                    lock,
+                    raw: Some(lock.cell.lock()),
+                    model: Some(ctx),
+                })
+            }
+            None => {
+                let g = raw_g.expect("guard holds raw lock");
+                match self.cv.wait_std(g) {
+                    Ok(g) => Ok(MutexGuard {
+                        lock,
+                        raw: Some(g),
+                        model: None,
+                    }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        raw: Some(p.into_inner()),
+                        model: None,
+                    })),
+                }
+            }
+        }
+    }
+
+    #[track_caller]
+    #[allow(clippy::type_complexity)]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let loc = Location::caller();
+        let (lock, raw_g, model) = guard.dismantle();
+        match model {
+            Some(ctx) => {
+                drop(raw_g);
+                // Virtual time: whether the timeout fires is a recorded
+                // scheduling decision, not a wall-clock race.
+                let timed_out =
+                    ctx.ctl
+                        .condvar_wait(ctx.tid, self.addr(), lock.addr(), true, loc);
+                Ok((
+                    MutexGuard {
+                        lock,
+                        raw: Some(lock.cell.lock()),
+                        model: Some(ctx),
+                    },
+                    WaitTimeoutResult(timed_out),
+                ))
+            }
+            None => {
+                let g = raw_g.expect("guard holds raw lock");
+                match self.cv.wait_timeout_std(g, dur) {
+                    Ok((g, r)) => Ok((
+                        MutexGuard {
+                            lock,
+                            raw: Some(g),
+                            model: None,
+                        },
+                        WaitTimeoutResult(r.timed_out()),
+                    )),
+                    Err(p) => {
+                        let (g, r) = p.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard {
+                                lock,
+                                raw: Some(g),
+                                model: None,
+                            },
+                            WaitTimeoutResult(r.timed_out()),
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    #[track_caller]
+    pub fn notify_one(&self) {
+        match controller::current() {
+            Some(ctx) => ctx
+                .ctl
+                .condvar_notify(ctx.tid, self.addr(), false, Location::caller()),
+            None => self.cv.notify_one(),
+        }
+    }
+
+    #[track_caller]
+    pub fn notify_all(&self) {
+        match controller::current() {
+            Some(ctx) => ctx
+                .ctl
+                .condvar_notify(ctx.tid, self.addr(), true, Location::caller()),
+            None => self.cv.notify_all(),
+        }
+    }
+}
+
+// --------------------------------------------------------------- RwLock
+
+/// Reader-writer lock. Under the model checker both `read` and `write`
+/// take the lock exclusively: a sound (if less concurrent) model, since
+/// co-resident readers have no observable interaction the checker
+/// tracks. Delegated mode keeps real shared-read semantics.
+pub struct RwLock<T> {
+    cell: RawRwLock<T>,
+}
+
+impl<T> RwLock<T> {
+    pub const fn new(t: T) -> Self {
+        Self {
+            cell: RawRwLock::new(t),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    #[track_caller]
+    pub fn read(&self) -> LockResult<RwLockReadGuard<'_, T>> {
+        match controller::current() {
+            Some(ctx) => {
+                ctx.ctl.mutex_lock(ctx.tid, self.addr(), Location::caller());
+                let g = self.cell.read_std().unwrap_or_else(PoisonError::into_inner);
+                Ok(RwLockReadGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(g),
+                    model: Some(ctx),
+                })
+            }
+            None => match self.cell.read_std() {
+                Ok(g) => Ok(RwLockReadGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(g),
+                    model: None,
+                }),
+                Err(p) => Err(PoisonError::new(RwLockReadGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(p.into_inner()),
+                    model: None,
+                })),
+            },
+        }
+    }
+
+    #[track_caller]
+    pub fn write(&self) -> LockResult<RwLockWriteGuard<'_, T>> {
+        match controller::current() {
+            Some(ctx) => {
+                ctx.ctl.mutex_lock(ctx.tid, self.addr(), Location::caller());
+                let g = self
+                    .cell
+                    .write_std()
+                    .unwrap_or_else(PoisonError::into_inner);
+                Ok(RwLockWriteGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(g),
+                    model: Some(ctx),
+                })
+            }
+            None => match self.cell.write_std() {
+                Ok(g) => Ok(RwLockWriteGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(g),
+                    model: None,
+                }),
+                Err(p) => Err(PoisonError::new(RwLockWriteGuard {
+                    lock_addr: self.addr(),
+                    raw: Some(p.into_inner()),
+                    model: None,
+                })),
+            },
+        }
+    }
+}
+
+impl<T: Default> Default for RwLock<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+macro_rules! rw_guard {
+    ($Name:ident, $Std:ident, $mut:ident) => {
+        pub struct $Name<'a, T> {
+            lock_addr: usize,
+            raw: Option<std::sync::$Std<'a, T>>,
+            model: Option<controller::Ctx>,
+        }
+
+        impl<T> Deref for $Name<'_, T> {
+            type Target = T;
+            fn deref(&self) -> &T {
+                self.raw.as_ref().expect("guard holds raw lock")
+            }
+        }
+
+        impl<T> Drop for $Name<'_, T> {
+            fn drop(&mut self) {
+                self.raw = None;
+                if let Some(ctx) = self.model.take() {
+                    ctx.ctl.mutex_unlock(ctx.tid, self.lock_addr);
+                }
+            }
+        }
+    };
+}
+
+rw_guard!(RwLockReadGuard, RwLockReadGuard, no);
+rw_guard!(RwLockWriteGuard, RwLockWriteGuard, yes);
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.raw.as_mut().expect("guard holds raw lock")
+    }
+}
+
+// ------------------------------------------------------------- OnceLock
+
+/// One-shot cell. Delegates storage to the real `std::sync::OnceLock`
+/// (a single immutable value cannot be read stale), but marks each
+/// access as a visible op so init/get orderings are still explored.
+/// Init closures must not block on shimmed primitives.
+pub struct OnceLock<T> {
+    inner: std::sync::OnceLock<T>,
+}
+
+impl<T> OnceLock<T> {
+    pub const fn new() -> Self {
+        Self {
+            inner: std::sync::OnceLock::new(),
+        }
+    }
+
+    #[track_caller]
+    fn note(&self, what: &str) {
+        if let Some(ctx) = controller::current() {
+            ctx.ctl
+                .visible(ctx.tid, format!("oncelock {what}"), Location::caller());
+        }
+    }
+
+    #[track_caller]
+    pub fn get(&self) -> Option<&T> {
+        self.note("get");
+        self.inner.get()
+    }
+
+    #[track_caller]
+    pub fn set(&self, value: T) -> Result<(), T> {
+        self.note("set");
+        self.inner.set(value)
+    }
+
+    #[track_caller]
+    pub fn get_or_init<F: FnOnce() -> T>(&self, f: F) -> &T {
+        self.note("get_or_init");
+        self.inner.get_or_init(f)
+    }
+}
+
+impl<T> Default for OnceLock<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// -------------------------------------------------------------- atomics
+
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    use super::{controller, ord8};
+    use std::panic::Location;
+
+    macro_rules! int_atomic {
+        ($Name:ident, $Std:ident, $Prim:ty) => {
+            #[derive(Debug, Default)]
+            pub struct $Name {
+                raw: std::sync::atomic::$Std,
+            }
+
+            impl $Name {
+                pub const fn new(v: $Prim) -> Self {
+                    Self {
+                        raw: std::sync::atomic::$Std::new(v),
+                    }
+                }
+
+                fn addr(&self) -> usize {
+                    self as *const Self as *const () as usize
+                }
+
+                /// Pre-model value, used to seed the per-run history.
+                fn seed(&self) -> u64 {
+                    self.raw.load(Ordering::Relaxed) as u64
+                }
+
+                #[track_caller]
+                pub fn load(&self, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_load(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                        ) as $Prim,
+                        None => self.raw.load(ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn store(&self, v: $Prim, ord: Ordering) {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_store(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            v as u64,
+                            ord8(ord),
+                            Location::caller(),
+                        ),
+                        None => self.raw.store(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn swap(&self, v: $Prim, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_rmw(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                            "swap",
+                            &mut |_| v as u64,
+                        ) as $Prim,
+                        None => self.raw.swap(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn fetch_add(&self, v: $Prim, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_rmw(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                            "fetch_add",
+                            &mut |old| (old as $Prim).wrapping_add(v) as u64,
+                        ) as $Prim,
+                        None => self.raw.fetch_add(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn fetch_sub(&self, v: $Prim, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_rmw(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                            "fetch_sub",
+                            &mut |old| (old as $Prim).wrapping_sub(v) as u64,
+                        ) as $Prim,
+                        None => self.raw.fetch_sub(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn fetch_max(&self, v: $Prim, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_rmw(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                            "fetch_max",
+                            &mut |old| (old as $Prim).max(v) as u64,
+                        ) as $Prim,
+                        None => self.raw.fetch_max(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn fetch_min(&self, v: $Prim, ord: Ordering) -> $Prim {
+                    match controller::current() {
+                        Some(ctx) => ctx.ctl.atomic_rmw(
+                            ctx.tid,
+                            self.addr(),
+                            self.seed(),
+                            ord8(ord),
+                            Location::caller(),
+                            "fetch_min",
+                            &mut |old| (old as $Prim).min(v) as u64,
+                        ) as $Prim,
+                        None => self.raw.fetch_min(v, ord),
+                    }
+                }
+
+                #[track_caller]
+                pub fn compare_exchange(
+                    &self,
+                    current: $Prim,
+                    new: $Prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$Prim, $Prim> {
+                    match controller::current() {
+                        Some(ctx) => ctx
+                            .ctl
+                            .atomic_cas(
+                                ctx.tid,
+                                self.addr(),
+                                self.seed(),
+                                current as u64,
+                                new as u64,
+                                ord8(success),
+                                ord8(failure),
+                                Location::caller(),
+                            )
+                            .map(|v| v as $Prim)
+                            .map_err(|v| v as $Prim),
+                        None => self.raw.compare_exchange(current, new, success, failure),
+                    }
+                }
+
+                /// Modeled identically to [`Self::compare_exchange`]:
+                /// spurious weak-CAS failures only re-run the caller's
+                /// retry loop without new observable behavior.
+                #[track_caller]
+                pub fn compare_exchange_weak(
+                    &self,
+                    current: $Prim,
+                    new: $Prim,
+                    success: Ordering,
+                    failure: Ordering,
+                ) -> Result<$Prim, $Prim> {
+                    match controller::current() {
+                        Some(_) => self.compare_exchange(current, new, success, failure),
+                        None => self
+                            .raw
+                            .compare_exchange_weak(current, new, success, failure),
+                    }
+                }
+
+                /// Non-atomic read through exclusive access; no model
+                /// interaction needed.
+                pub fn get_mut(&mut self) -> &mut $Prim {
+                    self.raw.get_mut()
+                }
+            }
+        };
+    }
+
+    int_atomic!(AtomicU64, AtomicU64, u64);
+    int_atomic!(AtomicUsize, AtomicUsize, usize);
+    int_atomic!(AtomicI64, AtomicI64, i64);
+    int_atomic!(AtomicU32, AtomicU32, u32);
+
+    #[derive(Debug, Default)]
+    pub struct AtomicBool {
+        raw: std::sync::atomic::AtomicBool,
+    }
+
+    impl AtomicBool {
+        pub const fn new(v: bool) -> Self {
+            Self {
+                raw: std::sync::atomic::AtomicBool::new(v),
+            }
+        }
+
+        fn addr(&self) -> usize {
+            self as *const Self as *const () as usize
+        }
+
+        fn seed(&self) -> u64 {
+            u64::from(self.raw.load(Ordering::Relaxed))
+        }
+
+        #[track_caller]
+        pub fn load(&self, ord: Ordering) -> bool {
+            match controller::current() {
+                Some(ctx) => {
+                    ctx.ctl.atomic_load(
+                        ctx.tid,
+                        self.addr(),
+                        self.seed(),
+                        ord8(ord),
+                        Location::caller(),
+                    ) != 0
+                }
+                None => self.raw.load(ord),
+            }
+        }
+
+        #[track_caller]
+        pub fn store(&self, v: bool, ord: Ordering) {
+            match controller::current() {
+                Some(ctx) => ctx.ctl.atomic_store(
+                    ctx.tid,
+                    self.addr(),
+                    self.seed(),
+                    u64::from(v),
+                    ord8(ord),
+                    Location::caller(),
+                ),
+                None => self.raw.store(v, ord),
+            }
+        }
+
+        #[track_caller]
+        pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+            match controller::current() {
+                Some(ctx) => {
+                    ctx.ctl.atomic_rmw(
+                        ctx.tid,
+                        self.addr(),
+                        self.seed(),
+                        ord8(ord),
+                        Location::caller(),
+                        "swap",
+                        &mut |_| u64::from(v),
+                    ) != 0
+                }
+                None => self.raw.swap(v, ord),
+            }
+        }
+
+        #[track_caller]
+        pub fn compare_exchange(
+            &self,
+            current: bool,
+            new: bool,
+            success: Ordering,
+            failure: Ordering,
+        ) -> Result<bool, bool> {
+            match controller::current() {
+                Some(ctx) => ctx
+                    .ctl
+                    .atomic_cas(
+                        ctx.tid,
+                        self.addr(),
+                        self.seed(),
+                        u64::from(current),
+                        u64::from(new),
+                        ord8(success),
+                        ord8(failure),
+                        Location::caller(),
+                    )
+                    .map(|v| v != 0)
+                    .map_err(|v| v != 0),
+                None => self.raw.compare_exchange(current, new, success, failure),
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- mpsc
+
+/// Multi-producer single-consumer channels rebuilt on the shimmed
+/// [`Mutex`]/[`Condvar`], so sends, receives, timeouts and disconnects
+/// are all explored by the scheduler. Error types are re-exported from
+/// `std`, so call-site pattern matches stay unchanged.
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+    };
+
+    use super::{Condvar, Mutex};
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    struct Inner<T> {
+        q: VecDeque<T>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        inner: Mutex<Inner<T>>,
+        not_empty: Condvar,
+        not_full: Condvar,
+        cap: Option<usize>,
+    }
+
+    impl<T> Chan<T> {
+        fn new(cap: Option<usize>) -> Arc<Self> {
+            Arc::new(Chan {
+                inner: Mutex::new(Inner {
+                    q: VecDeque::new(),
+                    senders: 1,
+                    rx_alive: true,
+                }),
+                not_empty: Condvar::new(),
+                not_full: Condvar::new(),
+                cap,
+            })
+        }
+    }
+
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let ch = Chan::new(None);
+        (Sender(Arc::clone(&ch)), Receiver(ch))
+    }
+
+    pub fn sync_channel<T>(bound: usize) -> (SyncSender<T>, Receiver<T>) {
+        let ch = Chan::new(Some(bound));
+        (SyncSender(Arc::clone(&ch)), Receiver(ch))
+    }
+
+    fn clone_sender<T>(ch: &Arc<Chan<T>>) -> Arc<Chan<T>> {
+        ch.inner.lock().expect("channel state").senders += 1;
+        Arc::clone(ch)
+    }
+
+    fn drop_sender<T>(ch: &Arc<Chan<T>>) {
+        let mut g = ch.inner.lock().expect("channel state");
+        g.senders -= 1;
+        if g.senders == 0 {
+            drop(g);
+            // Wake a receiver blocked on an empty queue so it can
+            // observe the disconnect.
+            ch.not_empty.notify_all();
+        }
+    }
+
+    pub struct Sender<T>(Arc<Chan<T>>);
+
+    impl<T> Sender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut g = self.0.inner.lock().expect("channel state");
+            if !g.rx_alive {
+                return Err(SendError(t));
+            }
+            g.q.push_back(t);
+            drop(g);
+            self.0.not_empty.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            Sender(clone_sender(&self.0))
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    pub struct SyncSender<T>(Arc<Chan<T>>);
+
+    impl<T> SyncSender<T> {
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let cap = self.0.cap.expect("sync channel has a bound");
+            let mut g = self.0.inner.lock().expect("channel state");
+            loop {
+                if !g.rx_alive {
+                    return Err(SendError(t));
+                }
+                if g.q.len() < cap {
+                    g.q.push_back(t);
+                    drop(g);
+                    self.0.not_empty.notify_one();
+                    return Ok(());
+                }
+                g = self.0.not_full.wait(g).expect("channel state");
+            }
+        }
+
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            let cap = self.0.cap.expect("sync channel has a bound");
+            let mut g = self.0.inner.lock().expect("channel state");
+            if !g.rx_alive {
+                return Err(TrySendError::Disconnected(t));
+            }
+            if g.q.len() >= cap {
+                return Err(TrySendError::Full(t));
+            }
+            g.q.push_back(t);
+            drop(g);
+            self.0.not_empty.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            SyncSender(clone_sender(&self.0))
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            drop_sender(&self.0);
+        }
+    }
+
+    pub struct Receiver<T>(Arc<Chan<T>>);
+
+    impl<T> Receiver<T> {
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut g = self.0.inner.lock().expect("channel state");
+            loop {
+                if let Some(v) = g.q.pop_front() {
+                    drop(g);
+                    self.0.not_full.notify_one();
+                    return Ok(v);
+                }
+                if g.senders == 0 {
+                    return Err(RecvError);
+                }
+                g = self.0.not_empty.wait(g).expect("channel state");
+            }
+        }
+
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut g = self.0.inner.lock().expect("channel state");
+            if let Some(v) = g.q.pop_front() {
+                drop(g);
+                self.0.not_full.notify_one();
+                return Ok(v);
+            }
+            if g.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            Err(TryRecvError::Empty)
+        }
+
+        pub fn recv_timeout(&self, dur: Duration) -> Result<T, RecvTimeoutError> {
+            let in_model = crate::checker::controller::current().is_some();
+            let deadline = Instant::now() + dur;
+            let mut g = self.0.inner.lock().expect("channel state");
+            loop {
+                if let Some(v) = g.q.pop_front() {
+                    drop(g);
+                    self.0.not_full.notify_one();
+                    return Ok(v);
+                }
+                if g.senders == 0 {
+                    return Err(RecvTimeoutError::Disconnected);
+                }
+                // Under the model the duration is ignored (the timeout
+                // branch is a scheduling decision); outside it, honor
+                // the real deadline.
+                let wait_for = if in_model {
+                    dur
+                } else {
+                    let left = deadline.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(RecvTimeoutError::Timeout);
+                    }
+                    left
+                };
+                let (g2, res) = self
+                    .0
+                    .not_empty
+                    .wait_timeout(g, wait_for)
+                    .expect("channel state");
+                g = g2;
+                if res.timed_out() {
+                    if let Some(v) = g.q.pop_front() {
+                        drop(g);
+                        self.0.not_full.notify_one();
+                        return Ok(v);
+                    }
+                    if g.senders == 0 {
+                        return Err(RecvTimeoutError::Disconnected);
+                    }
+                    return Err(RecvTimeoutError::Timeout);
+                }
+            }
+        }
+
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+
+        pub fn try_iter(&self) -> TryIter<'_, T> {
+            TryIter { rx: self }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut g = self.0.inner.lock().expect("channel state");
+            g.rx_alive = false;
+            drop(g);
+            // Senders blocked on a full bounded queue must observe the
+            // disconnect.
+            self.0.not_full.notify_all();
+        }
+    }
+
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    pub struct TryIter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for TryIter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.try_recv().ok()
+        }
+    }
+
+    impl<'a, T> IntoIterator for &'a Receiver<T> {
+        type Item = T;
+        type IntoIter = Iter<'a, T>;
+        fn into_iter(self) -> Iter<'a, T> {
+            self.iter()
+        }
+    }
+}
+
+// --------------------------------------------------------------- thread
+
+/// `std::thread` surface. `spawn`/`Builder::spawn` create virtual
+/// threads inside a model run and real OS threads otherwise; `sleep`
+/// and `yield_now` become visible no-ops under the model. `scope` and
+/// `available_parallelism` are re-exported un-instrumented (the model
+/// harness does not use scoped threads; `perf::sweep` does, outside
+/// model runs).
+pub mod thread {
+    pub use std::thread::{available_parallelism, scope, Result, Scope, ScopedJoinHandle};
+
+    use super::controller::{self, Controller};
+    use crate::sync::raw::{self, RawMutex};
+    use std::panic::Location;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    enum Inner<T> {
+        Os(std::thread::JoinHandle<T>),
+        Virtual {
+            ctl: Arc<Controller>,
+            tid: usize,
+            slot: Arc<RawMutex<Option<T>>>,
+        },
+    }
+
+    pub struct JoinHandle<T>(Inner<T>);
+
+    impl<T> JoinHandle<T> {
+        #[track_caller]
+        pub fn join(self) -> Result<T> {
+            match self.0 {
+                Inner::Os(h) => h.join(),
+                Inner::Virtual { ctl, tid, slot } => {
+                    // A panicking virtual thread aborts the whole run,
+                    // so reaching this point means the child completed.
+                    ctl.join(current_tid(), tid, Location::caller());
+                    Ok(slot.lock().take().expect("virtual thread result"))
+                }
+            }
+        }
+
+        pub fn is_finished(&self) -> bool {
+            match &self.0 {
+                Inner::Os(h) => h.is_finished(),
+                Inner::Virtual { slot, .. } => slot.lock().is_some(),
+            }
+        }
+    }
+
+    fn current_tid() -> usize {
+        controller::current()
+            .map(|c| c.tid)
+            .expect("virtual JoinHandle joined outside its model run")
+    }
+
+    #[derive(Default, Debug)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        #[track_caller]
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match controller::current() {
+                Some(ctx) => {
+                    let slot = Arc::new(RawMutex::new(None));
+                    let slot2 = Arc::clone(&slot);
+                    let name = self.name.unwrap_or_else(|| "thread".to_string());
+                    let tid = ctx.ctl.spawn(
+                        ctx.tid,
+                        name,
+                        Box::new(move || {
+                            let v = f();
+                            *slot2.lock() = Some(v);
+                        }),
+                        Location::caller(),
+                    );
+                    Ok(JoinHandle(Inner::Virtual {
+                        ctl: ctx.ctl,
+                        tid,
+                        slot,
+                    }))
+                }
+                None => raw::spawn_os_thread(self.name, f).map(|h| JoinHandle(Inner::Os(h))),
+            }
+        }
+    }
+
+    #[track_caller]
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    #[track_caller]
+    pub fn yield_now() {
+        match controller::current() {
+            Some(ctx) => ctx.ctl.visible(ctx.tid, "yield".to_string(), Location::caller()),
+            None => std::thread::yield_now(),
+        }
+    }
+
+    #[track_caller]
+    pub fn sleep(dur: Duration) {
+        match controller::current() {
+            Some(ctx) => ctx.ctl.visible(
+                ctx.tid,
+                format!("sleep {dur:?} (virtual no-op)"),
+                Location::caller(),
+            ),
+            None => std::thread::sleep(dur),
+        }
+    }
+}

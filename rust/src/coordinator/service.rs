@@ -47,8 +47,8 @@
 
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
-use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use crate::sync::thread::JoinHandle;
+use crate::sync::{mpsc, thread, Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::arch::KrakenConfig;
@@ -166,6 +166,15 @@ impl<T> Ticket<T> {
                 reason: "service stopped before responding".into(),
             })),
         }
+    }
+
+    /// Model-check seam: a raw (sender, ticket) pair, so the checker
+    /// harness can race delivery against `wait_timeout` without standing
+    /// up a whole service. Not part of the public API.
+    #[cfg(kraken_check_sync)]
+    #[doc(hidden)]
+    pub fn test_pair() -> (mpsc::Sender<Result<T, RunError>>, Self) {
+        Self::channel()
     }
 }
 
@@ -612,7 +621,7 @@ impl ServiceBuilder {
         });
         let flusher = self.window.map(|_| {
             let inner = Arc::clone(&inner);
-            std::thread::spawn(move || flusher_loop(&inner))
+            thread::spawn(move || flusher_loop(&inner))
         });
         KrakenService { inner: Some(inner), flusher }
     }
@@ -715,6 +724,124 @@ impl FlushSignal {
     fn kick(&self) {
         let _guard = self.state.lock().expect("flush state");
         self.cv.notify_all();
+    }
+
+    /// Ask the flusher to exit and wake it.
+    fn stop(&self) {
+        let mut state = self.state.lock().expect("flush state");
+        state.shutdown = true;
+        drop(state);
+        self.cv.notify_all();
+    }
+
+    /// The deadline-tick loop, generic over the lane scan so both the
+    /// real service and the model-check harness ([`FlushProbe`]) drive
+    /// the *same* wait/notify protocol: sleep until the earliest
+    /// pending deadline (or a kick), flush expired lanes, repeat until
+    /// [`FlushSignal::stop`]. `earliest_due` runs under the state lock
+    /// — that is what makes a concurrent kick impossible to miss.
+    fn run(&self, earliest_due: impl Fn() -> Option<Instant>, flush: impl Fn(Instant)) {
+        let mut guard = self.state.lock().expect("flush state");
+        loop {
+            if guard.shutdown {
+                return;
+            }
+            let now = Instant::now();
+            match earliest_due() {
+                None => {
+                    guard = self.cv.wait(guard).expect("flush state");
+                }
+                Some(due) if due <= now => {
+                    drop(guard);
+                    flush(now);
+                    guard = self.state.lock().expect("flush state");
+                }
+                Some(due) => {
+                    let (g, _timeout) =
+                        self.cv.wait_timeout(guard, due - now).expect("flush state");
+                    guard = g;
+                }
+            }
+        }
+    }
+}
+
+/// Model-check seam: the real [`FlushSignal`] protocol over a miniature
+/// one-lane service, so `tests/sync_check.rs` can explore every
+/// interleaving of submit/kick against the flusher's scan-then-wait
+/// without standing up backends. Not part of the public API.
+#[cfg(kraken_check_sync)]
+#[doc(hidden)]
+pub struct FlushProbe {
+    signal: FlushSignal,
+    lane: Mutex<Vec<Instant>>,
+    flushed: crate::sync::atomic::AtomicUsize,
+}
+
+#[cfg(kraken_check_sync)]
+impl Default for FlushProbe {
+    fn default() -> Self {
+        Self {
+            signal: FlushSignal::default(),
+            lane: Mutex::new(Vec::new()),
+            flushed: crate::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+}
+
+#[cfg(kraken_check_sync)]
+impl FlushProbe {
+    /// Submit one already-expired row, kicking the flusher exactly when
+    /// the real submit path does: only when the row arms the lane (is
+    /// its new first row).
+    pub fn submit_expired(&self) {
+        let due = Instant::now();
+        let newly_armed = {
+            let mut lane = self.lane.lock().expect("dense lane");
+            lane.push(due);
+            lane.len() == 1
+        };
+        if newly_armed {
+            self.signal.kick();
+        }
+    }
+
+    /// The flusher thread body: the real scan-then-wait loop.
+    pub fn run_flusher(&self) {
+        self.signal.run(
+            || self.lane.lock().expect("dense lane").first().copied(),
+            |now| {
+                let expired = {
+                    let mut lane = self.lane.lock().expect("dense lane");
+                    let n = lane.iter().filter(|&&due| due <= now).count();
+                    lane.drain(..n);
+                    n
+                };
+                self.flushed
+                    .fetch_add(expired, crate::sync::atomic::Ordering::SeqCst);
+            },
+        );
+    }
+
+    /// Shutdown: stop the tick, then the final drain (`flush_all` in
+    /// the real service) so no accepted row is stranded.
+    pub fn stop_and_drain(&self) {
+        self.signal.stop();
+    }
+
+    pub fn final_drain(&self) {
+        let remaining = {
+            let mut lane = self.lane.lock().expect("dense lane");
+            let n = lane.len();
+            lane.clear();
+            n
+        };
+        self.flushed
+            .fetch_add(remaining, crate::sync::atomic::Ordering::SeqCst);
+    }
+
+    pub fn flushed(&self) -> usize {
+        self.flushed.load(crate::sync::atomic::Ordering::SeqCst)
     }
 }
 
@@ -826,31 +953,9 @@ impl ServiceInner {
 /// The background deadline tick: sleeps until the earliest pending
 /// row's deadline (or a kick), then flushes every expired lane.
 fn flusher_loop(inner: &ServiceInner) {
-    let mut guard = inner.flush.state.lock().expect("flush state");
-    loop {
-        if guard.shutdown {
-            return;
-        }
-        let now = Instant::now();
-        match inner.earliest_due() {
-            None => {
-                guard = inner.flush.cv.wait(guard).expect("flush state");
-            }
-            Some(due) if due <= now => {
-                drop(guard);
-                inner.flush_due(now);
-                guard = inner.flush.state.lock().expect("flush state");
-            }
-            Some(due) => {
-                let (g, _timeout) = inner
-                    .flush
-                    .cv
-                    .wait_timeout(guard, due - now)
-                    .expect("flush state");
-                guard = g;
-            }
-        }
-    }
+    inner
+        .flush
+        .run(|| inner.earliest_due(), |now| inner.flush_due(now));
 }
 
 /// Process one job on a worker, isolating panics per request. `fanout`
@@ -1159,11 +1264,7 @@ impl KrakenService {
     /// their tickets resolve instead of hanging.
     fn finish(&mut self) {
         if let Some(inner) = self.inner.as_ref() {
-            {
-                let mut state = inner.flush.state.lock().expect("flush state");
-                state.shutdown = true;
-            }
-            inner.flush.cv.notify_all();
+            inner.flush.stop();
         }
         if let Some(handle) = self.flusher.take() {
             let _ = handle.join();

@@ -30,8 +30,8 @@
 //! `ingress_shed_deadline_total`), so sheds are visible in `/metrics`,
 //! `/stats` and `kraken stats` the moment they start happening.
 
+use crate::sync::atomic::{AtomicUsize, Ordering};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::telemetry::{self, Counter};
@@ -205,16 +205,20 @@ impl Admission {
             });
         }
         let slot = &self.inflight[model][lane as usize];
-        // Optimistic increment, undone on shed: two concurrent admits
-        // can never both observe a free last slot.
+        // Optimistic increment, with the RAII permit constructed
+        // *before* the cap check: whether the request sheds here or any
+        // later code panics, the permit's Drop gives the slot back — at
+        // no point is the count raised without an owner responsible for
+        // lowering it. (Two concurrent admits still can never both
+        // observe a free last slot: the increment is the reservation.)
         let was = slot.fetch_add(1, Ordering::Relaxed);
+        let permit = Permit { slot, counters };
         if was >= self.cfg.queue_cap {
-            slot.fetch_sub(1, Ordering::Relaxed);
             counters.shed_queue_full.inc();
             return Err(Shed::QueueFull { inflight: was, cap: self.cfg.queue_cap });
         }
         counters.admitted.inc();
-        Ok(Permit { slot, counters })
+        Ok(permit)
     }
 
     /// Current in-flight count for one (model, lane) — surfaced in
@@ -345,6 +349,26 @@ mod tests {
             Some(Duration::from_millis(7))
         );
         assert_eq!(a.effective_deadline(None), Some(Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn shed_path_releases_its_optimistic_increment() {
+        // Regression: the shed branch used to decrement by hand after
+        // the cap check; the count is now owned by the RAII permit from
+        // the instant it is raised, so repeated sheds at the cap must
+        // leave the in-flight count exactly at the cap — and releasing
+        // the real holders must restore full capacity.
+        let a = admission(2, 8);
+        let p1 = a.try_admit("m", Lane::Interactive, 0).expect("slot 1");
+        let p2 = a.try_admit("m", Lane::Interactive, 0).expect("slot 2");
+        for _ in 0..10 {
+            a.try_admit("m", Lane::Interactive, 0).expect_err("at cap");
+            assert_eq!(a.inflight("m", Lane::Interactive), 2, "shed leaked a slot");
+        }
+        drop(p1);
+        drop(p2);
+        assert_eq!(a.inflight("m", Lane::Interactive), 0);
+        let _p = a.try_admit("m", Lane::Interactive, 0).expect("capacity restored");
     }
 
     #[test]

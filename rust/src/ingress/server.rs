@@ -17,11 +17,11 @@
 //! `Connection: close`), then consume the service's own
 //! [`crate::coordinator::KrakenService::shutdown`] for the final stats.
 
+use crate::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::thread::{self, JoinHandle};
+use crate::sync::{mpsc, Arc, Mutex};
 use std::io::{self, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::thread::{self, JoinHandle};
 use std::time::Duration;
 
 use crate::coordinator::{KrakenService, ServiceStats};

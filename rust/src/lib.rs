@@ -77,6 +77,16 @@
 //!   timelines.
 //! * [`report`] — regenerates every table and figure of the paper's
 //!   evaluation section, with the paper's reported values alongside.
+//! * [`sync`] — the crate-wide synchronization facade: `std::sync` /
+//!   `std::thread` re-exports by default, swapped for instrumented
+//!   shims under `--cfg kraken_check_sync` so the model checker can
+//!   drive every interleaving. Production code imports from here, never
+//!   from `std::sync` directly (enforced by `clippy.toml`).
+//! * [`checker`] — a dependency-free loom-style deterministic
+//!   concurrency model checker: bounded-exhaustive schedule exploration
+//!   with preemption budgets, vector-clock weak-memory modeling of the
+//!   shimmed atomics, deadlock and missed-wakeup detection, and
+//!   replayable failing interleavings (see `tests/sync_check.rs`).
 
 // The crate is `unsafe`-free except for one FFI cast in the PJRT bridge,
 // which only compiles under `--cfg pjrt_native` (see `runtime::pjrt`).
@@ -86,6 +96,7 @@
 pub mod arch;
 pub mod backend;
 pub mod baselines;
+pub mod checker;
 pub mod coordinator;
 pub mod dataflow;
 pub mod ingress;
@@ -99,6 +110,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sync;
 pub mod telemetry;
 pub mod tensor;
 

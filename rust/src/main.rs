@@ -706,7 +706,7 @@ fn trace_cmd(net: &str, workers: usize) {
     };
     let shape = graph.input_shape();
     let x = Tensor4::random(shape, X_SEED);
-    let graph = std::sync::Arc::new(graph);
+    let graph = kraken::sync::Arc::new(graph);
     let pool = kraken::model::spawn_node_pool(workers, |_| Functional::new(KrakenConfig::paper()));
 
     trace::enable(1 << 16);

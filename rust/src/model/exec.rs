@@ -11,7 +11,7 @@
 //! consumer has read it — peak memory is the live frontier, not the
 //! whole network.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use crate::backend::{Accelerator, LayerData, LayerOutput};
 use crate::metrics::Counters;

@@ -23,8 +23,8 @@
 //! running on a sibling (finishes in finite time — node evals never
 //! block), or done; drivers never wait on each other.
 
+use crate::sync::{mpsc, Arc};
 use std::panic::AssertUnwindSafe;
-use std::sync::{mpsc, Arc};
 
 use crate::backend::pool::{panic_reason, PoolHandle, ShardedPool};
 use crate::backend::Accelerator;

@@ -14,7 +14,7 @@
 //! pool turns from a request-parallel device into a latency-cutting
 //! multi-chip machine.
 
-use std::sync::mpsc;
+use crate::sync::{mpsc, Mutex};
 
 use crate::arch::KrakenConfig;
 use crate::backend::pool::{panic_reason, ShardedPool};
@@ -225,7 +225,7 @@ impl PartitionedPool {
         // discarding) an extra backend.
         let probe = make_backend(0);
         let label = format!("partitioned {shards}×[{}]", probe.name());
-        let probe = std::sync::Mutex::new(Some(probe));
+        let probe = Mutex::new(Some(probe));
         let pool = ShardedPool::spawn(
             shards,
             move |i| {

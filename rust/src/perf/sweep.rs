@@ -106,9 +106,10 @@ pub fn sweep_design_space(
             area_mm2: model.tech.core_area_mm2,
         })
     };
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let threads =
+        crate::sync::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     let chunk = combos.len().div_ceil(threads).max(1);
-    let mut points: Vec<DesignPoint> = std::thread::scope(|s| {
+    let mut points: Vec<DesignPoint> = crate::sync::thread::scope(|s| {
         let handles: Vec<_> = combos
             .chunks(chunk)
             .map(|part| s.spawn(move || part.iter().filter_map(eval).collect::<Vec<_>>()))

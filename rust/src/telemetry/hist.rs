@@ -12,7 +12,7 @@
 //! Snapshots merge bucket-wise, which is what makes per-shard
 //! histograms recombinable into a whole.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of buckets: one for zero plus one per power-of-two range.
 pub const BUCKETS: usize = 65;

@@ -7,10 +7,10 @@
 //! Prometheus labels directly — `requests_total{model="resnet50"}` —
 //! and the renderer groups label variants under one `# TYPE` line.
 
+use crate::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex, OnceLock};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
 
 use super::hist::{HistogramCore, HistogramSnapshot};
 

@@ -16,10 +16,10 @@
 //! Perfetto. Request ids let a single run be filtered out of a ring
 //! that several concurrent requests share.
 
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Mutex, OnceLock};
 use std::collections::VecDeque;
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 /// Sentinel worker index for spans executed on the driving thread

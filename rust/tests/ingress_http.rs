@@ -9,8 +9,7 @@
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread;
+use kraken::sync::{thread, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use kraken::arch::KrakenConfig;

@@ -1,0 +1,390 @@
+//! Model-check harness: the deterministic concurrency checker
+//! ([`kraken::checker`]) run over seeded mutants and over the real
+//! production state machines.
+//!
+//! Two layers:
+//!
+//! * **Mutant self-tests** (always compiled) — known-bad concurrency
+//!   patterns the checker *must* flag, each next to its fixed twin the
+//!   checker must pass. These drive the instrumented shim types
+//!   directly, so they run under plain `cargo test` too: the ordinary
+//!   CI test job proves the checker still catches bugs.
+//! * **Production scenarios** (`--cfg kraken_check_sync` only) — the
+//!   pool, coordinator, and ingress state machines explored through
+//!   the crate-wide `kraken::sync` facade, which that cfg swaps for
+//!   the instrumented shims. Run with:
+//!
+//!   ```text
+//!   RUSTFLAGS="--cfg kraken_check_sync" cargo test --test sync_check -- --nocapture
+//!   ```
+//!
+//! Every test prints its exploration [`Report`] (schedule count and
+//! preemption bound) so CI logs show what was actually covered.
+
+use kraken::checker::{try_check, Opts, Report};
+use std::time::Duration;
+
+/// Shared exploration budget: exhaustive within `bound` preemptions,
+/// capped so the whole suite stays inside a CI-friendly wall budget,
+/// with a small seeded-random tail sampling beyond the bound.
+fn opts(bound: usize) -> Opts {
+    Opts {
+        preemption_bound: bound,
+        max_schedules: 5_000,
+        random_schedules: 32,
+        wall_budget: Duration::from_secs(5),
+        ..Opts::default()
+    }
+}
+
+fn print_report(name: &str, r: &Report) {
+    eprintln!(
+        "[sync_check] {name}: {} schedules (+{} random), preemption bound {}, complete: {}",
+        r.schedules, r.random_schedules, r.preemption_bound, r.complete
+    );
+}
+
+/// Seeded mutants: the checker's own regression suite. Each bad
+/// pattern is a deliberate re-introduction of a bug class the
+/// production code avoids; the fixed twin is the production pattern.
+mod mutants {
+    use super::{opts, print_report};
+    use kraken::checker::shim::atomic::{AtomicU64, Ordering};
+    use kraken::checker::shim::thread;
+    use kraken::checker::{try_check, Opts};
+    use std::sync::Arc;
+
+    /// The pool's peak-depth gauge pattern: a writer publishes a
+    /// payload, then raises a watermark with `fetch_max`; a reader
+    /// that observes the watermark expects the payload. Sound only
+    /// when the `fetch_max` is `Release` and the read is `Acquire`
+    /// (the production pair in `backend/pool.rs`).
+    fn peak_gauge(peak_ord: Ordering, read_ord: Ordering) {
+        let published = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        let writer = {
+            let published = Arc::clone(&published);
+            let peak = Arc::clone(&peak);
+            thread::spawn(move || {
+                published.store(1, Ordering::Relaxed);
+                peak.fetch_max(5, peak_ord);
+            })
+        };
+        if peak.load(read_ord) == 5 {
+            assert_eq!(
+                published.load(Ordering::Relaxed),
+                1,
+                "watermark visible before the payload it advertises"
+            );
+        }
+        writer.join().expect("writer");
+    }
+
+    /// Mutant: both sides `Relaxed` — the watermark can become visible
+    /// before the payload, and the checker must produce a schedule
+    /// that proves it.
+    #[test]
+    fn flags_relaxed_peak_gauge_mutant() {
+        let failure = try_check(opts(2), || peak_gauge(Ordering::Relaxed, Ordering::Relaxed))
+            .expect_err("relaxed gauge publication must be flagged");
+        eprintln!("[sync_check] flags_relaxed_peak_gauge_mutant caught:\n{failure}");
+        assert!(
+            failure.message.contains("watermark visible"),
+            "failure should be the reader assertion, got: {}",
+            failure.message
+        );
+    }
+
+    /// Fixed twin: `Release` max / `Acquire` load — the production
+    /// ordering. No schedule may fail.
+    #[test]
+    fn passes_release_acquire_peak_gauge() {
+        let report = try_check(opts(2), || peak_gauge(Ordering::Release, Ordering::Acquire))
+            .unwrap_or_else(|f| panic!("release/acquire gauge wrongly flagged:\n{f}"));
+        print_report("passes_release_acquire_peak_gauge", &report);
+    }
+
+    const CAP: u64 = 1;
+
+    /// The admission gate's in-flight counter. `check_then_act` is the
+    /// classic TOCTOU mutant (load, test, then increment); the fixed
+    /// twin is the production pattern from `ingress/admission.rs`:
+    /// increment *first* — the increment is the reservation — and back
+    /// out on overflow.
+    fn admission_counter(check_then_act: bool) {
+        let inflight = Arc::new(AtomicU64::new(0));
+        let admitted = Arc::new(AtomicU64::new(0));
+        let gates: Vec<_> = (0..2)
+            .map(|_| {
+                let inflight = Arc::clone(&inflight);
+                let admitted = Arc::clone(&admitted);
+                thread::spawn(move || {
+                    if check_then_act {
+                        if inflight.load(Ordering::SeqCst) < CAP {
+                            inflight.fetch_add(1, Ordering::SeqCst);
+                            admitted.fetch_add(1, Ordering::SeqCst);
+                        }
+                    } else {
+                        let was = inflight.fetch_add(1, Ordering::SeqCst);
+                        if was < CAP {
+                            admitted.fetch_add(1, Ordering::SeqCst);
+                        } else {
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for g in gates {
+            g.join().expect("gate thread");
+        }
+        let n = admitted.load(Ordering::SeqCst);
+        assert!(n <= CAP, "cap breached: {n} admitted at cap {CAP}");
+    }
+
+    fn admission_mutant() {
+        admission_counter(true);
+    }
+
+    /// Mutant: check-then-act lets two concurrent admits both pass the
+    /// cap test. Also exercises replay end-to-end: the failing tape
+    /// from exploration must reproduce the same failure verbatim.
+    #[test]
+    fn flags_check_then_act_admission_mutant() {
+        let failure = try_check(opts(2), admission_mutant)
+            .expect_err("check-then-act admission must be flagged");
+        eprintln!("[sync_check] flags_check_then_act_admission_mutant caught:\n{failure}");
+        assert!(failure.message.contains("cap breached"), "got: {}", failure.message);
+
+        let replayed = try_check(
+            Opts { replay: Some(failure.schedule.clone()), ..opts(2) },
+            admission_mutant,
+        )
+        .expect_err("replaying the failing tape must fail again");
+        assert_eq!(
+            replayed.message, failure.message,
+            "replay reproduced a different failure"
+        );
+    }
+
+    /// Fixed twin: increment-as-reservation admits at most `CAP` in
+    /// every interleaving.
+    #[test]
+    fn passes_reservation_admission() {
+        let report = try_check(opts(2), || admission_counter(false))
+            .unwrap_or_else(|f| panic!("reservation admission wrongly flagged:\n{f}"));
+        print_report("passes_reservation_admission", &report);
+    }
+}
+
+/// Trivial smoke that the explorer itself terminates and reports under
+/// the default cfg (production scenarios below need the facade cfg).
+#[test]
+fn explorer_reports_coverage() {
+    let report = try_check(opts(2), || {}).expect("empty scenario cannot fail");
+    assert!(report.schedules >= 1);
+    print_report("explorer_reports_coverage", &report);
+}
+
+/// Production state machines, explored through the instrumented
+/// `kraken::sync` facade. Compiled only under `--cfg kraken_check_sync`
+/// because the facade must route the *production* types' locks and
+/// atomics through the controller.
+#[cfg(kraken_check_sync)]
+mod production {
+    use super::{opts, print_report};
+    use kraken::backend::ShardedPool;
+    use kraken::checker::check;
+    use kraken::coordinator::service::FlushProbe;
+    use kraken::coordinator::Ticket;
+    use kraken::ingress::{Admission, AdmissionConfig, Lane};
+    use kraken::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+    use kraken::sync::{mpsc, thread, Arc, Mutex};
+    use std::time::Duration;
+
+    /// `PoolHandle::take_matching` reclaim racing a shutdown drain:
+    /// every submitted job must be completed by a worker XOR reclaimed
+    /// by the waiting driver — never lost, never run twice.
+    #[test]
+    fn pool_reclaim_races_shutdown_drain() {
+        let report = check(opts(2), || {
+            let sum = Arc::new(AtomicU64::new(0));
+            let pool = {
+                let sum = Arc::clone(&sum);
+                ShardedPool::spawn(
+                    2,
+                    |_| (),
+                    move |_i, _s: &mut (), j: u64| {
+                        sum.fetch_add(j, Ordering::SeqCst);
+                    },
+                )
+            };
+            pool.submit_batch([1u64, 2]);
+            let handle = pool.handle();
+            let reclaimer =
+                thread::spawn(move || handle.take_matching(|&j| j == 2).unwrap_or(0));
+            let stats = pool.shutdown();
+            let reclaimed = reclaimer.join().expect("reclaimer");
+            assert_eq!(
+                sum.load(Ordering::SeqCst) + reclaimed,
+                3,
+                "a job was lost or ran twice across drain + reclaim"
+            );
+            let completed: u64 = stats.iter().map(|s| s.completed).sum();
+            assert_eq!(completed, 2 - u64::from(reclaimed != 0));
+        });
+        print_report("pool_reclaim_races_shutdown_drain", &report);
+    }
+
+    /// `Ticket::wait_timeout` racing result delivery: either the value
+    /// arrives intact or the timeout hands the ticket back, and a late
+    /// send to the dropped ticket is discarded without stranding the
+    /// sender.
+    #[test]
+    fn ticket_wait_timeout_races_delivery() {
+        let report = check(opts(2), || {
+            let (tx, ticket) = Ticket::<u32>::test_pair();
+            let sender = thread::spawn(move || {
+                let _ = tx.send(Ok(7));
+            });
+            match ticket.wait_timeout(Duration::from_millis(1)) {
+                Ok(Ok(v)) => assert_eq!(v, 7, "delivered result corrupted"),
+                Ok(Err(_)) => panic!("sender cannot disconnect before sending"),
+                // Timed out: dropping the ticket closes the channel and
+                // the worker's late send is silently discarded.
+                Err(ticket) => drop(ticket),
+            }
+            sender.join().expect("sender");
+        });
+        print_report("ticket_wait_timeout_races_delivery", &report);
+    }
+
+    /// The dense-lane window flush: submits racing the deadline-tick
+    /// thread through the real `FlushSignal` protocol. Exactly-once:
+    /// every accepted row is flushed by the tick or by the shutdown
+    /// drain, never dropped, never double-counted.
+    #[test]
+    fn window_flush_races_submit() {
+        let report = check(opts(2), || {
+            let probe = Arc::new(FlushProbe::default());
+            let flusher = {
+                let probe = Arc::clone(&probe);
+                thread::spawn(move || probe.run_flusher())
+            };
+            let submitter = {
+                let probe = Arc::clone(&probe);
+                thread::spawn(move || {
+                    probe.submit_expired();
+                    probe.submit_expired();
+                })
+            };
+            submitter.join().expect("submitter");
+            probe.stop_and_drain();
+            flusher.join().expect("flusher");
+            probe.final_drain();
+            assert_eq!(probe.flushed(), 2, "a row was lost or double-flushed");
+        });
+        print_report("window_flush_races_submit", &report);
+    }
+
+    /// Two concurrent `try_admit`s against a cap-1 gate: at most one
+    /// permit may be live at a time, the loser's optimistic increment
+    /// is always returned, and dropping permits restores the gauge.
+    #[test]
+    fn admission_cap_boundary() {
+        let report = check(opts(2), || {
+            let adm = Arc::new(Admission::new(
+                AdmissionConfig { queue_cap: 1, ..AdmissionConfig::default() },
+                ["m".to_string()],
+            ));
+            let holders = Arc::new(AtomicUsize::new(0));
+            let gates: Vec<_> = (0..2)
+                .map(|_| {
+                    let adm = Arc::clone(&adm);
+                    let holders = Arc::clone(&holders);
+                    thread::spawn(move || match adm.try_admit("m", Lane::Interactive, 0) {
+                        Ok(permit) => {
+                            let live = holders.fetch_add(1, Ordering::SeqCst) + 1;
+                            assert!(live <= 1, "{live} permits live at cap 1");
+                            holders.fetch_sub(1, Ordering::SeqCst);
+                            drop(permit);
+                            true
+                        }
+                        Err(_) => false,
+                    })
+                })
+                .collect();
+            let admitted =
+                gates.into_iter().filter(|g| g.join().expect("gate")).count();
+            assert!(admitted >= 1, "the first arrival at an empty gate must be admitted");
+            assert_eq!(
+                adm.inflight("m", Lane::Interactive),
+                0,
+                "a dropped permit leaked its in-flight slot"
+            );
+        });
+        print_report("admission_cap_boundary", &report);
+    }
+
+    /// The ingress shutdown protocol (minus sockets): an acceptor
+    /// feeding a bounded handoff channel, handlers that own the
+    /// receiver behind a mutex exactly like `ingress/server.rs`, and a
+    /// stop flag racing the accept loop. Every accepted connection
+    /// must be handled before the handlers exit.
+    #[test]
+    fn ingress_shutdown_drains_accepted_connections() {
+        let report = check(opts(2), || {
+            let stop = Arc::new(AtomicBool::new(false));
+            let accepted = Arc::new(AtomicUsize::new(0));
+            let handled = Arc::new(AtomicUsize::new(0));
+            let (tx, rx) = mpsc::sync_channel::<u32>(1);
+            let rx = Arc::new(Mutex::new(rx));
+            let handlers: Vec<_> = (0..2)
+                .map(|_| {
+                    let rx = Arc::clone(&rx);
+                    let handled = Arc::clone(&handled);
+                    thread::spawn(move || loop {
+                        let next = rx.lock().expect("handler queue").recv();
+                        match next {
+                            Ok(_conn) => {
+                                handled.fetch_add(1, Ordering::SeqCst);
+                            }
+                            // Acceptor gone and queue drained.
+                            Err(mpsc::RecvError) => break,
+                        }
+                    })
+                })
+                .collect();
+            let acceptor = {
+                let stop = Arc::clone(&stop);
+                let accepted = Arc::clone(&accepted);
+                thread::spawn(move || {
+                    for conn in 0..2u32 {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match tx.try_send(conn) {
+                            Ok(()) => {
+                                accepted.fetch_add(1, Ordering::SeqCst);
+                            }
+                            // Pool saturated: shed at the door.
+                            Err(mpsc::TrySendError::Full(_)) => {}
+                            Err(mpsc::TrySendError::Disconnected(_)) => break,
+                        }
+                    }
+                })
+            };
+            stop.store(true, Ordering::SeqCst);
+            acceptor.join().expect("acceptor");
+            for h in handlers {
+                h.join().expect("handler");
+            }
+            assert_eq!(
+                handled.load(Ordering::SeqCst),
+                accepted.load(Ordering::SeqCst),
+                "an accepted connection was stranded at shutdown"
+            );
+        });
+        print_report("ingress_shutdown_drains_accepted_connections", &report);
+    }
+}

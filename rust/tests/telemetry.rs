@@ -4,8 +4,8 @@
 //! check on the Chrome export — no serde in the offline build), and
 //! live `stats_snapshot` consistency under concurrent submitters.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use kraken::sync::atomic::{AtomicBool, Ordering};
+use kraken::sync::{thread, Arc};
 
 use kraken::arch::KrakenConfig;
 use kraken::backend::Functional;
@@ -91,7 +91,7 @@ fn concurrent_recording_loses_nothing() {
     let handles: Vec<_> = (0..threads)
         .map(|t| {
             let h = Arc::clone(&h);
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 for i in 0..per_thread {
                     h.record((t as u64 + i) % 7);
                 }
@@ -391,7 +391,7 @@ fn stats_snapshot_is_consistent_under_concurrent_submits() {
     let watcher = {
         let service = Arc::clone(&service);
         let done = Arc::clone(&done);
-        std::thread::spawn(move || {
+        thread::spawn(move || {
             let mut last_completed = 0u64;
             let mut taken = 0usize;
             while !done.load(Ordering::Acquire) {
@@ -413,7 +413,7 @@ fn stats_snapshot_is_consistent_under_concurrent_submits() {
                 );
                 last_completed = snap.stats.completed;
                 taken += 1;
-                std::thread::yield_now();
+                thread::yield_now();
             }
             taken
         })
@@ -422,7 +422,7 @@ fn stats_snapshot_is_consistent_under_concurrent_submits() {
     let handles: Vec<_> = (0..submitters)
         .map(|t| {
             let service = Arc::clone(&service);
-            std::thread::spawn(move || {
+            thread::spawn(move || {
                 for g in 0..graphs_each {
                     let x = Tensor4::random([1, 28, 28, 3], (t * 100 + g) as u64);
                     service.submit("tiny_cnn", x).wait().expect("graph served");
